@@ -1,0 +1,49 @@
+//! Distributed learners (§3.2, experiment E8): quantify how much
+//! sending outputs *as they are generated* (Postmaster's design point)
+//! beats aggregating them until the end of a time step.
+//!
+//! ```bash
+//! cargo run --release --example learners_overlap
+//! ```
+
+use inc_sim::network::Network;
+use inc_sim::workload::learners::{overlap_advantage, LearnerConfig, SendStrategy};
+
+fn main() {
+    println!("distributed learners over Postmaster DMA (paper §3.2)\n");
+    println!(
+        "{:>8} {:>8} {:>14} {:>14} {:>10}",
+        "outputs", "bytes", "streamed µs", "aggregated µs", "advantage"
+    );
+    for outputs in [4, 16, 64] {
+        for bytes in [32, 256] {
+            let cfg = LearnerConfig {
+                learners: 27,
+                outputs_per_step: outputs,
+                record_bytes: bytes,
+                compute_ns: 50_000,
+                steps: 3,
+            };
+            let (s, a) = overlap_advantage(Network::card, cfg);
+            println!(
+                "{:>8} {:>8} {:>14.1} {:>14.1} {:>9.2}x",
+                outputs,
+                bytes,
+                s / 1000.0,
+                a / 1000.0,
+                a / s
+            );
+        }
+    }
+
+    // One detailed run for the curious.
+    let cfg = LearnerConfig::default();
+    let mut net = Network::card();
+    let stats = inc_sim::workload::learners::run(&mut net, cfg, SendStrategy::Streamed);
+    println!(
+        "\nstreamed, per step: {:?} µs ({} records/step)",
+        stats.iter().map(|s| s.makespan / 1000).collect::<Vec<_>>(),
+        stats[0].records
+    );
+    println!("\n{}", net.metrics.report());
+}

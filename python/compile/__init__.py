@@ -1,0 +1,5 @@
+"""Build-time-only package: JAX/Pallas model + AOT lowering to HLO text.
+
+Never imported at simulation time — the Rust binary consumes only the
+``artifacts/`` this package emits (see ``aot.py``).
+"""

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+results through PJRT and Python never appears on the simulation path.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowering uses ``return_tuple=True``; the
+Rust side untuples.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import CFG, PARAM_NAMES
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, shape):
+    return {"name": name, "shape": list(shape), "dtype": "f32"}
+
+
+def build_entries(cfg=CFG):
+    """(name, lowered, input specs, output specs) for every entry point."""
+    shapes = dict(model.param_shapes(cfg))
+    p_specs = [spec(f"p:{n}", shapes[n]) for n in PARAM_NAMES]
+    g_specs = [spec(f"g:{n}", shapes[n]) for n in PARAM_NAMES]
+    x_spec = spec("x", (cfg.batch, cfg.seq))
+    y_spec = spec("y", (cfg.batch, cfg.seq))
+
+    p_args = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in PARAM_NAMES]
+    xy = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.float32)
+    lr = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    entries = []
+
+    # init: () -> params
+    init_fn = lambda: model.init(cfg)
+    entries.append(
+        ("init", jax.jit(init_fn).lower(), [], p_specs)
+    )
+
+    # grad: (params..., x, y) -> (loss, grads...)
+    def grad_fn(*args):
+        params, x, y = args[: len(PARAM_NAMES)], args[-2], args[-1]
+        return model.grad(tuple(params), x, y, cfg)
+
+    entries.append(
+        (
+            "grad",
+            jax.jit(grad_fn).lower(*p_args, xy, xy),
+            p_specs + [x_spec, y_spec],
+            [spec("loss", (1,))] + g_specs,
+        )
+    )
+
+    # apply: (params..., grads..., lr) -> params'
+    def apply_fn(*args):
+        return model.apply(args, cfg)
+
+    entries.append(
+        (
+            "apply",
+            jax.jit(apply_fn).lower(*p_args, *p_args, lr),
+            p_specs + g_specs + [spec("lr", (1,))],
+            p_specs,
+        )
+    )
+
+    # fwd: (params..., x) -> logits   (serving/inspection path)
+    def fwd_fn(*args):
+        return (model.forward(tuple(args[:-1]), args[-1], cfg),)
+
+    entries.append(
+        (
+            "fwd",
+            jax.jit(fwd_fn).lower(*p_args, xy),
+            p_specs + [x_spec],
+            [spec("logits", (cfg.batch, cfg.seq, cfg.vocab))],
+        )
+    )
+
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"model": CFG.name, "entries": []}
+    for name, lowered, inputs, outputs in build_entries():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {"name": name, "file": fname, "inputs": inputs, "outputs": outputs}
+        )
+        print(f"wrote {fname} ({len(text) / 1e6:.2f} MB, "
+              f"{len(inputs)} in / {len(outputs)} out)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json (model {CFG.name})")
+
+
+if __name__ == "__main__":
+    main()

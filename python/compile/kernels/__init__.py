@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the per-node compute hot-spots + jnp oracles."""
+
+from .attention import causal_attention
+from .fused_dense import fused_dense
+from .learner_update import learner_update
+
+__all__ = ["causal_attention", "fused_dense", "learner_update"]

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused causal attention.
+
+One grid step processes one (batch, head) pair entirely in VMEM:
+``softmax(mask(q @ k^T / sqrt(d))) @ v``. Sequence lengths in this repo
+are small (<= 128), so the whole [T, T] score tile fits comfortably —
+the BlockSpec keeps q/k/v for the (b, h) pair resident, the TPU analog
+of keeping the working set in FPGA BRAM.
+
+``pallas_call`` has no reverse-mode rule; the public entry point is a
+``jax.custom_vjp`` whose backward uses the standard softmax-attention
+gradients (einsum form — they are matmul-bound and XLA fuses them).
+``interpret=True`` (see fused_dense.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    # Blocks arrive as [1, 1, T, Dh] — drop the leading grid dims.
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    t, dh = q.shape
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(col <= row, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_ref[0, 0] = jnp.dot(probs, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _pallas_attention(q, k, v):
+    b, h, t, dh = q.shape
+    assert k.shape == v.shape == (b, h, t, dh)
+    spec = pl.BlockSpec((1, 1, t, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _attention_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(q, k, v)
+
+
+def _probs(q, k):
+    b, h, t, dh = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    )
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """Fused causal attention. q/k/v: [B, H, T, Dh] -> [B, H, T, Dh]."""
+    return _pallas_attention(q, k, v)
+
+
+def _fwd(q, k, v):
+    return _pallas_attention(q, k, v), (q, k, v)
+
+
+def _bwd(res, do):
+    q, k, v = res
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    p = _probs(q, k)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do, v)
+    # Softmax jacobian: ds = p * (dp - sum(dp * p)).
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q) * scale
+    return dq, dk, dv
+
+
+causal_attention.defvjp(_fwd, _bwd)

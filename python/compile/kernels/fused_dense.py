@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: fused dense layer — ``act(x @ w + b)``.
+
+The compute hot-spot of the per-node workload (the transformer MLP and
+the attention projections). On the real INC this is the kind of operator
+one would offload to the Zynq FPGA fabric; here it is re-thought for a
+TPU-style target per the hardware-adaptation rule:
+
+* the grid walks row tiles of ``x`` (``TILE_M`` rows at a time) — the
+  BlockSpec expresses the HBM->VMEM staging the FPGA design would do
+  with BRAM;
+* the weight block is kept whole per grid step (model dims in this repo
+  are <= 256, well inside VMEM);
+* matmul shapes are padded by the caller to multiples of the MXU tile
+  where it matters (see DESIGN.md §Hardware-Adaptation).
+
+``pallas_call`` has no reverse-mode rule, so the public entry point is a
+``jax.custom_vjp``: the backward pass recomputes the pre-activation and
+routes all three backward matmuls (dx, dw and the recompute) through the
+same Pallas kernel — the hot path stays on the kernel in both
+directions. ``interpret=True`` everywhere: the CPU PJRT client cannot
+execute Mosaic custom-calls; correctness is validated against ``ref.py``
+by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size: one MXU-aligned stripe of activations per grid step.
+TILE_M = 128
+
+
+def _act(z, activation: str):
+    if activation == "gelu":
+        return jax.nn.gelu(z)
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "none":
+        return z
+    raise ValueError(f"unknown activation {activation}")
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = _act(acc, activation).astype(o_ref.dtype)
+
+
+def _pallas_dense(x, w, b, activation: str):
+    """The raw row-tiled pallas_call (no AD)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    tile_m = min(TILE_M, m)
+    pad = (-m) % tile_m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = ((m + pad) // tile_m,)
+    out = pl.pallas_call(
+        functools.partial(_fused_dense_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((m + pad, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, b)
+    return out[:m]
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fused_dense(activation: str):
+    @jax.custom_vjp
+    def f(x, w, b):
+        return _pallas_dense(x, w, b, activation)
+
+    def fwd(x, w, b):
+        return _pallas_dense(x, w, b, activation), (x, w, b)
+
+    def bwd(res, dy):
+        x, w, b = res
+        if activation == "none":
+            dz = dy
+        else:
+            # Recompute the pre-activation through the kernel, then chain
+            # through the activation.
+            z = _pallas_dense(x, w, b, "none")
+            _, act_vjp = jax.vjp(lambda t: _act(t, activation), z)
+            (dz,) = act_vjp(dy)
+        n = w.shape[1]
+        k = w.shape[0]
+        zeros_k = jnp.zeros((k,), x.dtype)
+        zeros_n = jnp.zeros((n,), x.dtype)
+        dx = _pallas_dense(dz, w.T, zeros_k, "none")
+        dw = _pallas_dense(x.T, dz, zeros_n, "none")
+        db = jnp.sum(dz, axis=0)
+        return dx, dw, db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fused_dense(x, w, b, activation: str = "gelu"):
+    """``act(x @ w + b)`` with a row-tiled Pallas kernel (differentiable).
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N].
+    """
+    if activation not in ("gelu", "relu", "none"):
+        raise ValueError(f"unknown activation {activation}")
+    return _make_fused_dense(activation)(x, w, b)

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: distributed-learner state update (§3.2 workload).
+
+Each learner keeps a leaky-integrator state updated from the small
+records its peers sent last time step:
+
+    state' = decay * state + (1 - decay) * tanh(inputs @ w)
+
+The grid dimension walks learner tiles — the direct analog of the paper
+distributing learners across mesh nodes. ``interpret=True`` (see
+fused_dense.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 8  # learners per grid step
+
+
+def _learner_kernel(state_ref, inputs_ref, w_ref, o_ref, *, decay: float):
+    s = state_ref[...]
+    x = inputs_ref[...]
+    w = w_ref[...]
+    drive = jnp.tanh(jnp.dot(x, w, preferred_element_type=jnp.float32))
+    o_ref[...] = (decay * s + (1.0 - decay) * drive).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("decay",))
+def learner_update(state, inputs, w, decay: float = 0.9):
+    """state: [L, D], inputs: [L, K], w: [K, D] -> [L, D]."""
+    l, d = state.shape
+    l2, k = inputs.shape
+    assert l == l2 and w.shape == (k, d)
+    tile = min(TILE_L, l)
+    pad = (-l) % tile
+    if pad:
+        state = jnp.pad(state, ((0, pad), (0, 0)))
+        inputs = jnp.pad(inputs, ((0, pad), (0, 0)))
+    grid = ((l + pad) // tile,)
+    out = pl.pallas_call(
+        functools.partial(_learner_kernel, decay=decay),
+        out_shape=jax.ShapeDtypeStruct((l + pad, d), state.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        interpret=True,
+    )(state, inputs, w)
+    return out[:l]

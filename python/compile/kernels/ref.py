@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the shape/dtype sweeps in ``python/tests/`` — this is the L1
+correctness signal the AOT artifacts inherit.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_dense_ref(x, w, b, activation: str = "gelu"):
+    acc = x @ w + b[None, :]
+    if activation == "gelu":
+        return jax.nn.gelu(acc)
+    if activation == "relu":
+        return jnp.maximum(acc, 0.0)
+    if activation == "none":
+        return acc
+    raise ValueError(f"unknown activation {activation}")
+
+
+def causal_attention_ref(q, k, v):
+    b, h, t, dh = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32)
+    )
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def learner_update_ref(state, inputs, w, decay: float = 0.9):
+    return decay * state + (1.0 - decay) * jnp.tanh(inputs @ w)

@@ -1,0 +1,183 @@
+"""L2: the per-node JAX model — a tiny transformer LM.
+
+This is the "machine intelligence application" running on the simulated
+INC: each mesh node holds a replica and trains data-parallel, with
+gradients exchanged over the simulated fabric (Rust side). The forward
+pass routes its hot-spots through the L1 Pallas kernels
+(``kernels.fused_dense`` for projections/MLP, ``kernels.causal_attention``
+for attention), so the AOT artifacts exercise all three layers.
+
+Entry points AOT-compiled by ``aot.py`` (the contract with
+``rust/src/workload/training.rs``):
+
+* ``init()  -> params``                      (deterministic)
+* ``grad(params, x, y) -> (loss, grads)``    (x/y are f32 token ids)
+* ``apply(params, grads, lr) -> params'``    (plain SGD)
+
+Parameters are an ordered list of named tensors (see ``PARAM_NAMES``);
+ordering is part of the contract and is recorded in the manifest.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import causal_attention, fused_dense
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 64
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    seq: int = 16
+    batch: int = 8
+    d_ff: int = 256
+
+    @property
+    def name(self) -> str:
+        return (
+            f"tiny-lm-d{self.d_model}-l{self.n_layers}-h{self.n_heads}"
+            f"-t{self.seq}-b{self.batch}-v{self.vocab}"
+        )
+
+
+CFG = ModelConfig()
+
+
+def param_shapes(cfg: ModelConfig = CFG):
+    """Ordered (name, shape) list — the AOT tensor contract."""
+    shapes = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.bo", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.b1", (cfg.d_ff,)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.b2", (cfg.d_model,)),
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+        ]
+    shapes += [
+        ("lnf", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+        ("head_b", (cfg.vocab,)),
+    ]
+    return shapes
+
+
+PARAM_NAMES = [n for n, _ in param_shapes()]
+
+
+def init(cfg: ModelConfig = CFG):
+    """Deterministic parameter init (seeded; scaled normals, ones for LN)."""
+    key = jax.random.PRNGKey(20200417)  # the paper's arXiv year+month :-)
+    params = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "lnf":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("b1", "b2", "bo", "head_b")) or name == "head_b":
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 0.5 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(params)
+
+
+def _rms_norm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def forward(params, x_tokens, cfg: ModelConfig = CFG):
+    """Logits for next-token prediction. x_tokens: f32 [B, T] token ids."""
+    p = dict(zip(PARAM_NAMES, params))
+    b, t = x_tokens.shape
+    ids = x_tokens.astype(jnp.int32)
+    h = p["tok_emb"][ids] + p["pos_emb"][None, :t, :]
+    dh = cfg.d_model // cfg.n_heads
+    for i in range(cfg.n_layers):
+        hn = _rms_norm(h, p[f"l{i}.ln1"])
+        flat = hn.reshape(b * t, cfg.d_model)
+        # Q/K/V projections through the fused-dense Pallas kernel.
+        q = fused_dense(flat, p[f"l{i}.wq"], jnp.zeros(cfg.d_model), "none")
+        k = fused_dense(flat, p[f"l{i}.wk"], jnp.zeros(cfg.d_model), "none")
+        v = fused_dense(flat, p[f"l{i}.wv"], jnp.zeros(cfg.d_model), "none")
+        split = lambda z: z.reshape(b, t, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+        att = causal_attention(split(q), split(k), split(v))
+        att = att.transpose(0, 2, 1, 3).reshape(b * t, cfg.d_model)
+        att = fused_dense(att, p[f"l{i}.wo"], p[f"l{i}.bo"], "none")
+        h = h + att.reshape(b, t, cfg.d_model)
+        # MLP through the fused-dense kernel (gelu inside the kernel).
+        hn = _rms_norm(h, p[f"l{i}.ln2"]).reshape(b * t, cfg.d_model)
+        up = fused_dense(hn, p[f"l{i}.w1"], p[f"l{i}.b1"], "gelu")
+        down = fused_dense(up, p[f"l{i}.w2"], p[f"l{i}.b2"], "none")
+        h = h + down.reshape(b, t, cfg.d_model)
+    h = _rms_norm(h, p["lnf"])
+    logits = h.reshape(b * t, cfg.d_model) @ p["head"] + p["head_b"]
+    return logits.reshape(b, t, cfg.vocab)
+
+
+def loss_fn(params, x, y, cfg: ModelConfig = CFG):
+    """Mean next-token cross-entropy. x/y: f32 [B, T]."""
+    logits = forward(params, x, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = y.astype(jnp.int32)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def grad(params, x, y, cfg: ModelConfig = CFG):
+    """(loss, grads) — the per-rank training step body."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+    return (jnp.reshape(loss, (1,)), *grads)
+
+
+def apply(params_and_grads_and_lr, cfg: ModelConfig = CFG):
+    """SGD update. Input: params..., grads..., lr[1]. Output: params'."""
+    n = len(PARAM_NAMES)
+    params = params_and_grads_and_lr[:n]
+    grads = params_and_grads_and_lr[n : 2 * n]
+    lr = params_and_grads_and_lr[2 * n][0]
+    return tuple(p - lr * g for p, g in zip(params, grads))
+
+
+def pure_jnp_forward(params, x_tokens, cfg: ModelConfig = CFG):
+    """Oracle forward: same math with jnp ops only (no Pallas). Used by
+    tests to validate the kernel-routed forward end to end."""
+    from .kernels.ref import causal_attention_ref, fused_dense_ref
+
+    p = dict(zip(PARAM_NAMES, params))
+    b, t = x_tokens.shape
+    ids = x_tokens.astype(jnp.int32)
+    h = p["tok_emb"][ids] + p["pos_emb"][None, :t, :]
+    dh = cfg.d_model // cfg.n_heads
+    for i in range(cfg.n_layers):
+        hn = _rms_norm(h, p[f"l{i}.ln1"])
+        flat = hn.reshape(b * t, cfg.d_model)
+        q = fused_dense_ref(flat, p[f"l{i}.wq"], jnp.zeros(cfg.d_model), "none")
+        k = fused_dense_ref(flat, p[f"l{i}.wk"], jnp.zeros(cfg.d_model), "none")
+        v = fused_dense_ref(flat, p[f"l{i}.wv"], jnp.zeros(cfg.d_model), "none")
+        split = lambda z: z.reshape(b, t, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+        att = causal_attention_ref(split(q), split(k), split(v))
+        att = att.transpose(0, 2, 1, 3).reshape(b * t, cfg.d_model)
+        att = fused_dense_ref(att, p[f"l{i}.wo"], p[f"l{i}.bo"], "none")
+        h = h + att.reshape(b, t, cfg.d_model)
+        hn = _rms_norm(h, p[f"l{i}.ln2"]).reshape(b * t, cfg.d_model)
+        up = fused_dense_ref(hn, p[f"l{i}.w1"], p[f"l{i}.b1"], "gelu")
+        down = fused_dense_ref(up, p[f"l{i}.w2"], p[f"l{i}.b2"], "none")
+        h = h + down.reshape(b, t, cfg.d_model)
+    h = _rms_norm(h, p["lnf"])
+    logits = h.reshape(b * t, cfg.d_model) @ p["head"] + p["head_b"]
+    return logits.reshape(b, t, cfg.vocab)

@@ -1,0 +1,55 @@
+"""AOT pipeline checks: HLO text emission + manifest integrity."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.model import CFG, PARAM_NAMES
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_roundtrips_a_small_function():
+    f = lambda a, b: (a @ b + 2.0,)
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(f).lower(s, s))
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_build_entries_contract(tmp_path):
+    entries = aot.build_entries()
+    names = [e[0] for e in entries]
+    assert names == ["init", "grad", "apply", "fwd"]
+    by_name = {e[0]: e for e in entries}
+
+    _, _, g_in, g_out = by_name["grad"]
+    assert len(g_in) == len(PARAM_NAMES) + 2
+    assert g_in[-2]["name"] == "x" and g_in[-1]["name"] == "y"
+    assert g_out[0]["name"] == "loss" and g_out[0]["shape"] == [1]
+    assert len(g_out) == 1 + len(PARAM_NAMES)
+
+    _, _, a_in, a_out = by_name["apply"]
+    assert len(a_in) == 2 * len(PARAM_NAMES) + 1
+    assert a_in[-1]["name"] == "lr"
+    assert len(a_out) == len(PARAM_NAMES)
+
+    _, _, i_in, i_out = by_name["init"]
+    assert i_in == [] and len(i_out) == len(PARAM_NAMES)
+
+    # Every entry lowers to parseable HLO text.
+    for name, lowered, _, _ in entries:
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+
+
+def test_manifest_specs_match_param_shapes():
+    shapes = dict(model.param_shapes())
+    entries = aot.build_entries()
+    _, _, g_in, _ = [e for e in entries if e[0] == "grad"][0]
+    for s in g_in[: len(PARAM_NAMES)]:
+        name = s["name"].removeprefix("p:")
+        assert tuple(s["shape"]) == shapes[name]
+    assert g_in[len(PARAM_NAMES)]["shape"] == [CFG.batch, CFG.seq]

@@ -1,0 +1,119 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the kernels' static knobs); numerics are
+checked with float32 tolerances. These tests are the contract the AOT
+artifacts inherit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import causal_attention, fused_dense, learner_update
+from compile.kernels.ref import (
+    causal_attention_ref,
+    fused_dense_ref,
+    learner_update_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- fused_dense
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    act=st.sampled_from(["gelu", "relu", "none"]),
+)
+def test_fused_dense_matches_ref(m, k, n, act):
+    x, w, b = rand(1, m, k), rand(2, k, n), rand(3, n)
+    got = fused_dense(x, w, b, act)
+    want = fused_dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_dense_exact_tile_boundary():
+    # m exactly a multiple of the tile and m = tile ± 1.
+    for m in (128, 127, 129, 256):
+        x, w, b = rand(4, m, 64), rand(5, 64, 64), rand(6, 64)
+        np.testing.assert_allclose(
+            fused_dense(x, w, b, "gelu"),
+            fused_dense_ref(x, w, b, "gelu"),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+
+def test_fused_dense_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        fused_dense(rand(1, 4, 8), rand(2, 9, 3), rand(3, 3))
+    with pytest.raises(AssertionError):
+        fused_dense(rand(1, 4, 8), rand(2, 8, 3), rand(3, 4))
+
+
+def test_fused_dense_unknown_activation():
+    with pytest.raises(ValueError):
+        fused_dense(rand(1, 4, 8), rand(2, 8, 3), rand(3, 3), "swish")
+
+
+# ----------------------------------------------------------------- attention
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.integers(1, 32),
+    dh=st.sampled_from([8, 16, 32]),
+)
+def test_attention_matches_ref(b, h, t, dh):
+    q, k, v = rand(7, b, h, t, dh), rand(8, b, h, t, dh), rand(9, b, h, t, dh)
+    got = causal_attention(q, k, v)
+    want = causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_is_causal():
+    # Changing a future key/value must not change earlier outputs.
+    b, h, t, dh = 1, 1, 8, 16
+    q, k, v = rand(10, b, h, t, dh), rand(11, b, h, t, dh), rand(12, b, h, t, dh)
+    base = causal_attention(q, k, v)
+    k2 = k.at[0, 0, -1].add(100.0)
+    v2 = v.at[0, 0, -1].add(-50.0)
+    pert = causal_attention(q, k2, v2)
+    np.testing.assert_allclose(base[0, 0, :-1], pert[0, 0, :-1], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[0, 0, -1], pert[0, 0, -1])
+
+
+# ------------------------------------------------------------- learner update
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(1, 40),
+    d=st.integers(1, 48),
+    k=st.integers(1, 48),
+    decay=st.floats(0.0, 1.0),
+)
+def test_learner_update_matches_ref(l, d, k, decay):
+    s, x, w = rand(13, l, d), rand(14, l, k), rand(15, k, d)
+    got = learner_update(s, x, w, decay)
+    want = learner_update_ref(s, x, w, decay)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_learner_update_decay_extremes():
+    s, x, w = rand(16, 8, 8), rand(17, 8, 8), rand(18, 8, 8)
+    # decay=1: state unchanged.
+    np.testing.assert_allclose(learner_update(s, x, w, 1.0), s, rtol=1e-6)
+    # decay=0: pure drive.
+    np.testing.assert_allclose(
+        learner_update(s, x, w, 0.0), jnp.tanh(x @ w), rtol=2e-5, atol=2e-5
+    )

@@ -1,0 +1,82 @@
+"""L2 correctness: the kernel-routed model vs the pure-jnp oracle model,
+plus shape/contract checks for the AOT entry points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.model import CFG, PARAM_NAMES
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tokens(key, b, t):
+    return jax.random.randint(
+        jax.random.PRNGKey(key), (b, t), 0, CFG.vocab
+    ).astype(jnp.float32)
+
+
+def test_param_shapes_cover_names():
+    shapes = model.param_shapes()
+    assert [n for n, _ in shapes] == PARAM_NAMES
+    params = model.init()
+    assert len(params) == len(PARAM_NAMES)
+    for (name, shape), p in zip(shapes, params):
+        assert p.shape == shape, name
+
+
+def test_init_is_deterministic():
+    a, b = model.init(), model.init()
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_forward_matches_pure_jnp_oracle():
+    params = model.init()
+    x = tokens(1, CFG.batch, CFG.seq)
+    got = model.forward(params, x)
+    want = model.pure_jnp_forward(params, x)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_loss_is_scalar_and_near_uniform_at_init():
+    params = model.init()
+    x, y = tokens(2, CFG.batch, CFG.seq), tokens(3, CFG.batch, CFG.seq)
+    loss = model.loss_fn(params, x, y)
+    assert loss.shape == ()
+    # Near-uniform predictions at init: loss ≈ ln(vocab).
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_grad_output_layout():
+    params = model.init()
+    x, y = tokens(4, CFG.batch, CFG.seq), tokens(5, CFG.batch, CFG.seq)
+    out = model.grad(params, x, y)
+    assert len(out) == 1 + len(PARAM_NAMES)
+    assert out[0].shape == (1,)
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+
+
+def test_apply_is_sgd():
+    params = model.init()
+    grads = tuple(jnp.ones_like(p) for p in params)
+    lr = jnp.asarray([0.5], jnp.float32)
+    new = model.apply(params + grads + (lr,))
+    for p, n in zip(params, new):
+        np.testing.assert_allclose(n, p - 0.5, rtol=1e-6, atol=1e-6)
+
+
+def test_three_sgd_steps_reduce_loss():
+    # The whole L2 training contract, in miniature.
+    params = model.init()
+    x = tokens(6, CFG.batch, CFG.seq)
+    y = jnp.roll(x, -1, axis=1)  # learnable shift task
+    lr = jnp.asarray([0.5], jnp.float32)
+    losses = []
+    for _ in range(3):
+        out = model.grad(params, x, y)
+        losses.append(float(out[0][0]))
+        params = model.apply(tuple(params) + tuple(out[1:]) + (lr,))
+    assert losses[-1] < losses[0], losses

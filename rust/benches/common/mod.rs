@@ -1,0 +1,27 @@
+//! Shared mini-bench harness (offline environment: no criterion). Each
+//! bench binary prints the paper's rows next to the measured ones and a
+//! wall-clock timing of the simulation itself.
+
+use std::time::Instant;
+
+/// Run `f` once, returning (result, wall seconds).
+#[allow(dead_code)]
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Print a standard bench header.
+#[allow(dead_code)]
+pub fn header(exp: &str, title: &str) {
+    println!("==============================================================");
+    println!("{exp}: {title}");
+    println!("==============================================================");
+}
+
+/// Relative error in percent.
+#[allow(dead_code)]
+pub fn err_pct(measured: f64, paper: f64) -> f64 {
+    (measured - paper) / paper * 100.0
+}

@@ -1,0 +1,49 @@
+//! E8 — §3.2 claim: Postmaster's send-as-generated pattern overlaps
+//! computation and communication for distributed learners, vs
+//! aggregate-then-send. Sweeps output count, record size and compute
+//! window; the advantage should grow as communication grows relative to
+//! compute.
+
+mod common;
+
+use inc_sim::network::Network;
+use inc_sim::workload::learners::{overlap_advantage, LearnerConfig};
+
+fn main() {
+    common::header("E8 / §3.2", "compute/communication overlap for distributed learners");
+    println!(
+        "{:>8} {:>8} {:>12} {:>14} {:>14} {:>10}",
+        "outputs", "bytes", "compute µs", "streamed µs", "aggregated µs", "advantage"
+    );
+    let ((), wall) = common::timed(|| {
+        for outputs in [4usize, 16, 64] {
+            for bytes in [32usize, 256] {
+                for compute_us in [20u64, 50, 200] {
+                    let cfg = LearnerConfig {
+                        learners: 27,
+                        outputs_per_step: outputs,
+                        record_bytes: bytes,
+                        compute_ns: compute_us * 1000,
+                        steps: 3,
+                    };
+                    let (s, a) = overlap_advantage(Network::card, cfg);
+                    println!(
+                        "{:>8} {:>8} {:>12} {:>14.1} {:>14.1} {:>9.2}x",
+                        outputs,
+                        bytes,
+                        compute_us,
+                        s / 1000.0,
+                        a / 1000.0,
+                        a / s
+                    );
+                }
+            }
+        }
+    });
+    println!(
+        "\nexpected shape: advantage ≥ 1 everywhere and largest when the \
+         communication tail is long relative to compute (many/large outputs, \
+         short compute window) — the paper's motivation for Postmaster."
+    );
+    println!("\n[bench wall time {wall:.3} s]");
+}

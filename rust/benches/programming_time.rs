@@ -1,0 +1,87 @@
+//! E7 — §4.3 programming-time comparison: JTAG vs PCIe+broadcast for
+//! FPGA configuration and FLASH programming, at 1-card and 16-card
+//! scale. The paper's numbers: 27 FPGAs ≈ 15 min over JTAG vs "a couple
+//! of seconds" over PCIe; 27 FLASH chips > 5 h over JTAG vs ≈ 2 min;
+//! 432 over PCIe ≈ identical to 27.
+
+mod common;
+
+use std::sync::Arc;
+
+use inc_sim::network::Network;
+use inc_sim::router::MemTarget;
+
+fn main() {
+    common::header("E7 / §4.3", "JTAG vs PCIe programming time (4 MiB images)");
+    let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+
+    println!(
+        "{:<28} {:>14} {:>18}",
+        "operation", "measured", "paper"
+    );
+
+    let ((), wall) = common::timed(|| {
+        let mut net = Network::card();
+        let t = net.jtag_program_fpgas((0, 0, 0), img.clone(), 1);
+        println!(
+            "{:<28} {:>10.1} min {:>18}",
+            "JTAG  FPGA   x27 (1 card)",
+            t as f64 / 60e9,
+            "≈ 15 min"
+        );
+
+        let mut net = Network::card();
+        let t = net.jtag_program_flash((0, 0, 0), img.clone());
+        println!(
+            "{:<28} {:>10.1} h   {:>18}",
+            "JTAG  FLASH  x27 (1 card)",
+            t as f64 / 3600e9,
+            "> 5 h"
+        );
+
+        let mut net = Network::card();
+        let t27 = net.pcie_broadcast_program(MemTarget::Fpga, img.clone(), 1);
+        println!(
+            "{:<28} {:>10.2} s   {:>18}",
+            "PCIe  FPGA   x27 (1 card)",
+            t27 as f64 / 1e9,
+            "couple of seconds"
+        );
+
+        let mut net = Network::inc3000();
+        let t432 = net.pcie_broadcast_program(MemTarget::Fpga, img.clone(), 1);
+        println!(
+            "{:<28} {:>10.2} s   {:>18}",
+            "PCIe  FPGA   x432 (16 cards)",
+            t432 as f64 / 1e9,
+            "≈ same as 1 card"
+        );
+        println!(
+            "{:<28} {:>10.3}x",
+            "  432-vs-27 ratio",
+            t432 as f64 / t27 as f64
+        );
+
+        for (label, preset) in [("x27", true), ("x432", false)] {
+            let mut net = if preset { Network::card() } else { Network::inc3000() };
+            let t = net.pcie_broadcast_program(MemTarget::Flash, img.clone(), 0);
+            println!(
+                "{:<28} {:>10.1} min {:>18}",
+                format!("PCIe  FLASH  {label}"),
+                t as f64 / 60e9,
+                "≈ 2 min"
+            );
+        }
+
+        // Speedup table.
+        let mut net = Network::card();
+        let jt = net.jtag_program_fpgas((0, 0, 0), img.clone(), 1);
+        let mut net = Network::card();
+        let pc = net.pcie_broadcast_program(MemTarget::Fpga, img.clone(), 1);
+        println!(
+            "\nPCIe-vs-JTAG speedup (FPGA, 1 card): {:.0}x (paper: ~15 min vs ~2 s ≈ 450x)",
+            jt as f64 / pc as f64
+        );
+    });
+    println!("\n[bench wall time {wall:.3} s]");
+}

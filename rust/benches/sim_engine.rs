@@ -1,0 +1,83 @@
+//! Perf harness for the simulator itself (EXPERIMENTS.md §Perf): event
+//! throughput of the discrete-event core and end-to-end packet rates on
+//! the three presets. This is the L3 hot path.
+
+mod common;
+
+use inc_sim::network::{Network, NullApp};
+use inc_sim::router::{Payload, Proto};
+use inc_sim::sim::Sim;
+use inc_sim::topology::NodeId;
+use inc_sim::util::SplitMix64;
+
+fn main() {
+    common::header("Perf", "simulator hot-path throughput");
+
+    // Raw event queue: schedule/dispatch cycles at two steady-state
+    // depths (a card's working set vs a pathological backlog).
+    for depth in [10_000u64, 500_000] {
+        let n = 2_000_000u64;
+        let ((), secs) = common::timed(|| {
+            let mut sim: Sim<u64> = Sim::new();
+            let mut rng = SplitMix64::new(1);
+            for i in 0..depth {
+                sim.at(rng.next_u64() % 1_000_000, i);
+            }
+            let mut popped = 0u64;
+            while let Some((t, _)) = sim.pop() {
+                popped += 1;
+                if popped < n {
+                    // Reschedule ahead: steady-state heap churn.
+                    sim.at(t + 1 + (popped % 97), popped);
+                }
+            }
+        });
+        println!(
+            "event queue (depth {depth:>6}): {:.1} M events/s (schedule+dispatch)",
+            n as f64 / secs / 1e6
+        );
+    }
+
+    // End-to-end packet simulation rate, uniform random traffic.
+    for (label, mut net, packets) in [
+        ("card (27)", Network::card(), 20_000u32),
+        ("inc3000 (432)", Network::inc3000(), 20_000),
+    ] {
+        let nn = net.topo.node_count();
+        let mut rng = SplitMix64::new(7);
+        let ((), secs) = common::timed(|| {
+            for _ in 0..packets {
+                let src = NodeId(rng.gen_range(nn) as u32);
+                let mut dst = NodeId(rng.gen_range(nn) as u32);
+                if dst == src {
+                    dst = NodeId((dst.0 + 1) % nn as u32);
+                }
+                net.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::Synthetic(256));
+            }
+            net.run_to_quiescence(&mut NullApp);
+        });
+        let events = net.sim.dispatched();
+        println!(
+            "{label:<14} {} pkts -> {} events in {:.3} s = {:.2} M events/s, {:.0} kpkt/s",
+            packets,
+            events,
+            secs,
+            events as f64 / secs / 1e6,
+            packets as f64 / secs / 1e3
+        );
+    }
+
+    // Broadcast storm at INC 3000 scale (the §4.3 boot path shape).
+    let mut net = Network::inc3000();
+    let ((), secs) = common::timed(|| {
+        for i in 0..200u32 {
+            net.send_broadcast(NodeId(i % 432), Proto::Raw { tag: 1 }, Payload::Synthetic(2040));
+        }
+        net.run_to_quiescence(&mut NullApp);
+    });
+    println!(
+        "broadcast storm: 200 × 432-node broadcasts in {:.3} s ({:.2} M events/s)",
+        secs,
+        net.sim.dispatched() as f64 / secs / 1e6
+    );
+}

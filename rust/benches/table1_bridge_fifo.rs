@@ -1,0 +1,66 @@
+//! E1 — Table 1: Bridge FIFO latency between two nodes vs hop count.
+//!
+//! Paper (single 27-node card): 0 hops → 0.25 µs, 1 → 1.1 µs,
+//! 3 → 2.5 µs (average case), 6 → 4.7 µs (worst case).
+
+mod common;
+
+use inc_sim::network::{Network, NullApp};
+use inc_sim::topology::Coord;
+
+fn measure(dst: Coord) -> f64 {
+    let mut net = Network::card();
+    let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+    let d = net.topo.id(dst);
+    net.fifo_connect(src, d, 0, 64);
+    net.fifo_send(src, 0, &[0xBEEF]);
+    net.run_to_quiescence(&mut NullApp);
+    net.metrics.latency("bridge_fifo").unwrap().max() as f64 / 1000.0
+}
+
+fn main() {
+    common::header("E1 / Table 1", "Bridge FIFO latency vs hops (single card)");
+    let rows = [
+        (0u32, 0.25f64, Coord { x: 0, y: 0, z: 0 }),
+        (1, 1.1, Coord { x: 1, y: 0, z: 0 }),
+        (3, 2.5, Coord { x: 1, y: 1, z: 1 }),
+        (6, 4.7, Coord { x: 2, y: 2, z: 2 }),
+    ];
+    println!("{:<6} {:>10} {:>12} {:>8}", "hops", "paper µs", "measured µs", "err");
+    let (_, wall) = common::timed(|| {
+        for (hops, paper, dst) in rows {
+            let got = measure(dst);
+            println!(
+                "{:<6} {:>10.2} {:>12.2} {:>7.1}%",
+                hops,
+                paper,
+                got,
+                common::err_pct(got, paper)
+            );
+        }
+    });
+
+    // Sweep every destination on the card: best/avg/worst per hop count,
+    // mirroring the paper's "best, average and worst case" framing.
+    println!("\nfull-card sweep (all 26 destinations from (000)):");
+    let mut by_hops: std::collections::BTreeMap<u32, Vec<f64>> = Default::default();
+    for z in 0..3 {
+        for y in 0..3 {
+            for x in 0..3 {
+                if (x, y, z) == (0, 0, 0) {
+                    continue;
+                }
+                let hops = x + y + z;
+                by_hops.entry(hops).or_default().push(measure(Coord { x, y, z }));
+            }
+        }
+    }
+    println!("{:<6} {:>6} {:>10} {:>10} {:>10}", "hops", "n", "min µs", "mean µs", "max µs");
+    for (hops, v) in by_hops {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let min = v.iter().cloned().fold(f64::MAX, f64::min);
+        let max = v.iter().cloned().fold(0.0, f64::max);
+        println!("{:<6} {:>6} {:>10.2} {:>10.2} {:>10.2}", hops, v.len(), min, mean, max);
+    }
+    println!("\n[bench wall time {wall:.3} s]");
+}

@@ -1,0 +1,346 @@
+//! Bridge FIFO (§3.3, Fig 5): hardware-to-hardware FIFO channels.
+//!
+//! A channel is a (transmit, receive) module pair: the write port lives
+//! on the source node, the read port on the destination node. The
+//! transmit unit converts words into network packets; up to 32 transmit
+//! units share one Bridge FIFO Mux (more channels ⇒ more muxes, which the
+//! fabric instantiates transparently: mux index = channel / 32). Widths
+//! of 7..=64 bits are supported; wider data needs parallel FIFOs.
+//!
+//! The underlying network does not guarantee ordering (§2.4), so packets
+//! carry a per-channel sequence number and the receive unit holds a
+//! reorder buffer, releasing words strictly in FIFO order.
+//!
+//! Latency calibration (Table 1): the FIFO logic costs
+//! [`crate::config::SystemConfig::bridge_fifo_logic`] ns end to end,
+//! split evenly between transmit and receive halves; see config docs.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::network::{App, Event, Network};
+use crate::router::{Packet, Payload, Proto, RouteKind};
+use crate::topology::NodeId;
+
+/// Max transmit/receive units per Bridge FIFO Mux/Demux (§3.3).
+pub const CHANNELS_PER_MUX: u8 = 32;
+/// Supported FIFO widths, bits (§3.3).
+pub const MIN_WIDTH: u8 = 7;
+pub const MAX_WIDTH: u8 = 64;
+
+/// Transmit-unit state.
+#[derive(Debug)]
+pub struct TxUnit {
+    pub dst: NodeId,
+    pub width_bits: u8,
+    next_seq: u64,
+    pub words_sent: u64,
+}
+
+/// Receive-unit state.
+#[derive(Debug)]
+pub struct RxUnit {
+    pub src: NodeId,
+    pub width_bits: u8,
+    expected_seq: u64,
+    reorder: BTreeMap<u64, Vec<u64>>,
+    /// The read port: words readable by FPGA logic / software.
+    pub inbox: VecDeque<u64>,
+    pub words_received: u64,
+    /// Packets that arrived out of order (diagnostics).
+    pub ooo_packets: u64,
+}
+
+/// All Bridge-FIFO endpoints in the system.
+#[derive(Debug, Default)]
+pub struct BridgeFifoFabric {
+    tx: HashMap<(u32, u8), TxUnit>,
+    rx: HashMap<(u32, u8), RxUnit>,
+}
+
+impl BridgeFifoFabric {
+    pub fn new(_nodes: usize) -> Self {
+        BridgeFifoFabric::default()
+    }
+
+    pub fn rx_unit(&self, node: NodeId, channel: u8) -> Option<&RxUnit> {
+        self.rx.get(&(node.0, channel))
+    }
+
+    pub fn rx_unit_mut(&mut self, node: NodeId, channel: u8) -> Option<&mut RxUnit> {
+        self.rx.get_mut(&(node.0, channel))
+    }
+
+    pub fn tx_unit(&self, node: NodeId, channel: u8) -> Option<&TxUnit> {
+        self.tx.get(&(node.0, channel))
+    }
+
+    /// Number of muxes a node needs for its transmit units.
+    pub fn mux_count(&self, node: NodeId) -> usize {
+        let max_ch = self
+            .tx
+            .keys()
+            .filter(|(n, _)| *n == node.0)
+            .map(|(_, c)| *c)
+            .max();
+        match max_ch {
+            None => 0,
+            Some(c) => c as usize / CHANNELS_PER_MUX as usize + 1,
+        }
+    }
+}
+
+impl Network {
+    /// Instantiate a Bridge FIFO channel: write port on `src`, read port
+    /// on `dst` (§3.3: "always implemented in pairs").
+    pub fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {
+        assert!(
+            (MIN_WIDTH..=MAX_WIDTH).contains(&width_bits),
+            "Bridge FIFO width must be 7..=64 bits, got {width_bits}"
+        );
+        let prev_tx = self.fifos.tx.insert(
+            (src.0, channel),
+            TxUnit { dst, width_bits, next_seq: 0, words_sent: 0 },
+        );
+        assert!(prev_tx.is_none(), "channel {channel} already connected at {src}");
+        let prev_rx = self.fifos.rx.insert(
+            (dst.0, channel),
+            RxUnit {
+                src,
+                width_bits,
+                expected_seq: 0,
+                reorder: BTreeMap::new(),
+                inbox: VecDeque::new(),
+                words_received: 0,
+                ooo_packets: 0,
+            },
+        );
+        assert!(prev_rx.is_none(), "channel {channel} already connected at {dst}");
+    }
+
+    /// Write words into the channel's transmit port. Words are masked to
+    /// the configured width; the transmit unit packetizes (chunking at
+    /// the network MTU) and hands packets to the Packet Mux.
+    pub fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
+        let (dst, width, seq0) = {
+            let tx = self
+                .fifos
+                .tx
+                .get_mut(&(src.0, channel))
+                .unwrap_or_else(|| panic!("no Bridge FIFO tx {channel} at {src}"));
+            tx.words_sent += words.len() as u64;
+            let s = tx.next_seq;
+            (tx.dst, tx.width_bits, s)
+        };
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let tx_logic = self.cfg.bridge_fifo_logic / 2;
+
+        if dst == src {
+            // Hop-0 (Table 1 first column): transmit and receive units on
+            // the same node; the full FIFO logic delay applies, nothing
+            // touches the network.
+            let masked: Vec<u64> = words.iter().map(|w| w & mask).collect();
+            let logic = self.cfg.bridge_fifo_logic;
+            self.sim.after(logic, Event::FifoLocal { node: src, channel, words: masked });
+            return;
+        }
+
+        // Chunk words so each packet fits the MTU.
+        let max_words = ((self.cfg.link.mtu - crate::router::HEADER_BYTES) / 8) as usize;
+        let mut seq = seq0;
+        for chunk in words.chunks(max_words.max(1)) {
+            let masked: Vec<u64> = chunk.iter().map(|w| w & mask).collect();
+            let id = self.next_packet_id();
+            let mut pkt = Packet::new(
+                id,
+                src,
+                dst,
+                RouteKind::Directed,
+                Proto::BridgeFifo { channel },
+                Payload::Words(std::sync::Arc::new(masked)),
+                self.now(),
+            );
+            pkt.seq = seq;
+            seq += 1;
+            // Transmit-unit logic runs before the packet reaches the
+            // Packet Mux / router (injection overhead accounts for those).
+            let sim_pkt = pkt;
+            let delay = tx_logic + self.cfg.link.inject_latency;
+            self.metrics.packets_injected += 1;
+            self.sim.after(delay, Event::Inject { packet: sim_pkt });
+        }
+        self.fifos.tx.get_mut(&(src.0, channel)).unwrap().next_seq = seq;
+    }
+
+    /// Receive-unit logic completed for `packet` (scheduled by the Packet
+    /// Demux on delivery): reorder and release words in FIFO order.
+    pub(crate) fn fifo_rx(&mut self, node: NodeId, packet: Packet, app: &mut dyn App) {
+        let channel = match packet.proto {
+            Proto::BridgeFifo { channel } => channel,
+            _ => unreachable!(),
+        };
+        let words = match &packet.payload {
+            Payload::Words(w) => w.as_ref().clone(),
+            _ => unreachable!("Bridge FIFO packet without words"),
+        };
+        let latency = self.now() - packet.injected_at;
+        self.metrics.record_delivery("bridge_fifo", latency, packet.wire_bytes);
+        let released: Vec<u64> = {
+            let rx = self
+                .fifos
+                .rx
+                .get_mut(&(node.0, channel))
+                .unwrap_or_else(|| panic!("no Bridge FIFO rx {channel} at {node}"));
+            if packet.seq != rx.expected_seq {
+                rx.ooo_packets += 1;
+                rx.reorder.insert(packet.seq, words);
+                Vec::new()
+            } else {
+                let mut rel = words;
+                rx.expected_seq += 1;
+                while let Some(w) = rx.reorder.remove(&rx.expected_seq) {
+                    rel.extend_from_slice(&w);
+                    rx.expected_seq += 1;
+                }
+                rx.words_received += rel.len() as u64;
+                rx.inbox.extend(rel.iter().copied());
+                rel
+            }
+        };
+        if !released.is_empty() {
+            app.on_fifo(self, node, channel, &released);
+        }
+    }
+
+    /// Same-node delivery (see [`Network::fifo_send`]).
+    pub(crate) fn fifo_local_rx(
+        &mut self,
+        node: NodeId,
+        channel: u8,
+        words: Vec<u64>,
+        app: &mut dyn App,
+    ) {
+        {
+            let rx = self
+                .fifos
+                .rx
+                .get_mut(&(node.0, channel))
+                .unwrap_or_else(|| panic!("no Bridge FIFO rx {channel} at {node}"));
+            rx.words_received += words.len() as u64;
+            rx.inbox.extend(words.iter().copied());
+        }
+        self.metrics.record_delivery("bridge_fifo", self.cfg.bridge_fifo_logic, 0);
+        app.on_fifo(self, node, channel, &words);
+    }
+
+    /// Read up to `max` words from a channel's read port.
+    pub fn fifo_read(&mut self, node: NodeId, channel: u8, max: usize) -> Vec<u64> {
+        let rx = match self.fifos.rx.get_mut(&(node.0, channel)) {
+            Some(rx) => rx,
+            None => return Vec::new(),
+        };
+        let take = max.min(rx.inbox.len());
+        rx.inbox.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NullApp;
+    use crate::topology::Coord;
+
+    #[test]
+    fn table1_latencies_exact() {
+        // The headline reproduction: Table 1 of the paper.
+        // hops: 0 → 0.25 µs, 1 → 1.1 µs, 3 → 2.5 µs, 6 → 4.6 µs (paper 4.7).
+        let cases = [
+            (Coord { x: 0, y: 0, z: 0 }, 250u64),
+            (Coord { x: 1, y: 0, z: 0 }, 1_100),
+            (Coord { x: 1, y: 1, z: 1 }, 2_500),
+            (Coord { x: 2, y: 2, z: 2 }, 4_600),
+        ];
+        for (dstc, expect_ns) in cases {
+            let mut net = Network::card();
+            let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+            let dst = net.topo.id(dstc);
+            net.fifo_connect(src, dst, 0, 64);
+            net.fifo_send(src, 0, &[0xDEADBEEF]);
+            net.run_to_quiescence(&mut NullApp);
+            let words = net.fifo_read(dst, 0, 16);
+            assert_eq!(words, vec![0xDEADBEEF]);
+            let lat = net.metrics.latency("bridge_fifo").unwrap().max();
+            assert_eq!(lat, expect_ns, "dst {dstc}");
+        }
+    }
+
+    #[test]
+    fn width_masking() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(1));
+        net.fifo_connect(a, b, 3, 7);
+        net.fifo_send(a, 3, &[0x1FF]); // 9 bits set, 7-bit channel
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.fifo_read(b, 3, 1), vec![0x7F]);
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be 7..=64")]
+    fn width_out_of_range_rejected() {
+        let mut net = Network::card();
+        net.fifo_connect(NodeId(0), NodeId(1), 0, 6);
+    }
+
+    #[test]
+    fn fifo_order_preserved_across_many_packets() {
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = net.topo.id(Coord { x: 2, y: 2, z: 2 });
+        net.fifo_connect(src, dst, 0, 64);
+        let words: Vec<u64> = (0..2000).collect();
+        // Send in small bursts to get many packets in flight (adaptive
+        // routing may reorder them).
+        for chunk in words.chunks(37) {
+            net.fifo_send(src, 0, chunk);
+        }
+        net.run_to_quiescence(&mut NullApp);
+        let got = net.fifo_read(dst, 0, 4000);
+        assert_eq!(got, words, "FIFO order must survive out-of-order routing");
+    }
+
+    #[test]
+    fn multiple_channels_do_not_cross() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(13));
+        net.fifo_connect(a, b, 0, 64);
+        net.fifo_connect(a, b, 1, 64);
+        net.fifo_send(a, 0, &[111]);
+        net.fifo_send(a, 1, &[222]);
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.fifo_read(b, 0, 8), vec![111]);
+        assert_eq!(net.fifo_read(b, 1, 8), vec![222]);
+    }
+
+    #[test]
+    fn mux_count_grows_past_32_channels() {
+        let mut net = Network::card();
+        for ch in 0..40u8 {
+            net.fifo_connect(NodeId(0), NodeId(1), ch, 64);
+        }
+        assert_eq!(net.fifos.mux_count(NodeId(0)), 2);
+        assert_eq!(net.fifos.mux_count(NodeId(2)), 0);
+    }
+
+    #[test]
+    fn bidirectional_needs_two_channels() {
+        // tx/rx are a pair per direction; the reverse direction is its
+        // own channel pair.
+        let mut net = Network::card();
+        net.fifo_connect(NodeId(0), NodeId(1), 0, 64);
+        net.fifo_connect(NodeId(1), NodeId(0), 1, 64);
+        net.fifo_send(NodeId(0), 0, &[1]);
+        net.fifo_send(NodeId(1), 1, &[2]);
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.fifo_read(NodeId(1), 0, 8), vec![1]);
+        assert_eq!(net.fifo_read(NodeId(0), 1, 8), vec![2]);
+    }
+}

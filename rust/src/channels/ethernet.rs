@@ -1,0 +1,471 @@
+//! Internal (virtual) Ethernet (§3.1, Fig 3).
+//!
+//! A hardware Ethernet-lookalike implemented on the FPGA fabric so that
+//! unmodified IP software (ssh, MPI, NFS, iperf…) runs node-to-node. The
+//! price is the full software path: kernel network stack + device driver
+//! + DMA descriptor management on transmit, and on receive either a
+//! hardware interrupt per frame or a polling loop that is "far more
+//! efficient under high traffic conditions" (§3.1) — both are modeled,
+//! with per-node CPU-time accounting so the efficiency claim is
+//! measurable (bench E4).
+//!
+//! Node (100) of each card owns a *physical* Ethernet port and can act as
+//! a gateway to the external world with NAT + port forwarding; an NFS
+//! flavoured file service on the external host is included because the
+//! paper calls it out as the immediate use ("save application data …
+//! to a non-volatile external storage medium").
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::network::{App, Event, Network};
+use crate::router::{Packet, Payload, Proto, RouteKind};
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// Maximum Ethernet frame payload (standard MTU).
+pub const ETH_MTU: u32 = 1500;
+/// Frame overhead (MAC header + FCS, rounded).
+pub const ETH_OVERHEAD: u32 = 18;
+
+/// An internal-Ethernet frame (content is modeled, not carried).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EthFrame {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Payload bytes (≤ [`ETH_MTU`]).
+    pub bytes: u32,
+    /// Application tag (models port numbers / message ids).
+    pub tag: u64,
+    pub t_created: Time,
+}
+
+/// Receive notification mechanism (§3.1: interrupt or polling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RxMode {
+    Interrupt,
+    /// Poll every `interval` ns while traffic is pending (NAPI-style:
+    /// idle ports schedule no ticks).
+    Polling { interval: Time },
+}
+
+/// Per-node virtual NIC (ethX owned by the device driver).
+#[derive(Debug)]
+pub struct EthPort {
+    pub mode: RxMode,
+    /// Frames handed to the kernel, readable by the application.
+    pub inbox: VecDeque<EthFrame>,
+    /// Frames DMA'd to DRAM, awaiting a poll tick.
+    pending_rx: VecDeque<EthFrame>,
+    poll_scheduled: bool,
+    /// Transmit DMA engine occupancy.
+    tx_busy_until: Time,
+    pub irqs_taken: u64,
+    pub polls_taken: u64,
+    pub frames_tx: u64,
+    pub frames_rx: u64,
+}
+
+impl EthPort {
+    fn new() -> Self {
+        EthPort {
+            mode: RxMode::Interrupt,
+            inbox: VecDeque::new(),
+            pending_rx: VecDeque::new(),
+            poll_scheduled: false,
+            tx_busy_until: 0,
+            irqs_taken: 0,
+            polls_taken: 0,
+            frames_tx: 0,
+            frames_rx: 0,
+        }
+    }
+}
+
+/// The external world behind the card's physical Ethernet port: an
+/// NFS-flavoured file host plus the gateway's NAT state.
+#[derive(Debug, Default)]
+pub struct ExternalWorld {
+    /// name → size of files saved over NFS.
+    pub files: HashMap<String, u64>,
+    /// Physical 1 GbE link occupancy (0.125 B/ns).
+    pub ext_busy_until: Time,
+    /// NAT port-forwarding table: external port → (node, internal port).
+    pub nat: HashMap<u16, (NodeId, u16)>,
+    /// Frames delivered to external observers (for tests).
+    pub ext_rx_frames: u64,
+    pub ext_rx_bytes: u64,
+    /// In-flight NFS transfers: (node, tag) → (name, remaining, total).
+    puts: HashMap<(u32, u64), (String, u64, u64)>,
+}
+
+/// Physical 1 GbE serialization: 8 ns per byte (125 MB/s).
+const EXT_NS_PER_BYTE: u64 = 8;
+
+/// All virtual NICs plus the (single) external world.
+#[derive(Debug)]
+pub struct EthernetFabric {
+    pub ports: Vec<EthPort>,
+    pub external: ExternalWorld,
+}
+
+impl EthernetFabric {
+    pub fn new(nodes: usize, _cfg: &crate::config::SystemConfig) -> Self {
+        EthernetFabric {
+            ports: (0..nodes).map(|_| EthPort::new()).collect(),
+            external: ExternalWorld::default(),
+        }
+    }
+
+    pub fn port(&self, n: NodeId) -> &EthPort {
+        &self.ports[n.0 as usize]
+    }
+
+    pub fn port_mut(&mut self, n: NodeId) -> &mut EthPort {
+        &mut self.ports[n.0 as usize]
+    }
+}
+
+impl Network {
+    /// Configure the receive notification mechanism of a node's NIC.
+    pub fn eth_set_mode(&mut self, node: NodeId, mode: RxMode) {
+        self.eth.port_mut(node).mode = mode;
+    }
+
+    /// Transmit one frame (≤ MTU payload) from `src` to `dst` over the
+    /// internal Ethernet. Models Fig 3's transmit operation: kernel stack
+    /// → driver/descriptors → AXI-HP DMA into the fabric → router.
+    pub fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64) {
+        assert!(bytes <= ETH_MTU, "frame payload {bytes} exceeds MTU {ETH_MTU}");
+        let arm = self.cfg.arm;
+        let sw = arm.kernel_stack + arm.driver + arm.dma_setup;
+        let now = self.now();
+        // The transmit software path runs on the ARM: it serializes with
+        // any other software work the node is doing (this is what makes
+        // internal Ethernet the slow path — §3.1 vs §3.2).
+        let node = &mut self.nodes[src.0 as usize];
+        let cpu_start = now.max(node.cpu_free_at);
+        node.cpu_free_at = cpu_start + sw;
+        node.cpu_busy_ns += sw;
+        let port = self.eth.port_mut(src);
+        port.frames_tx += 1;
+        let dma_start = (cpu_start + sw).max(port.tx_busy_until);
+        let wire = bytes + ETH_OVERHEAD;
+        let dma = (wire as f64 / arm.axi_bytes_per_ns).ceil() as Time;
+        port.tx_busy_until = dma_start + dma;
+        let frame = EthFrame { src, dst, bytes, tag, t_created: now };
+        self.sim.at(dma_start + dma, Event::EthTx { frame });
+    }
+
+    /// Send an arbitrary-size message: the kernel segments it into
+    /// MTU-sized frames (models TCP segmentation).
+    pub fn eth_send_message(&mut self, src: NodeId, dst: NodeId, bytes: u64, tag: u64) -> u32 {
+        let mut left = bytes;
+        let mut frames = 0;
+        while left > 0 {
+            let take = left.min(ETH_MTU as u64) as u32;
+            self.eth_send(src, dst, take, tag);
+            left -= take as u64;
+            frames += 1;
+        }
+        frames
+    }
+
+    /// Frame DMA into the fabric finished: inject as a network packet.
+    pub(crate) fn eth_tx_inject(&mut self, frame: EthFrame) {
+        let id = self.next_packet_id();
+        let wire = frame.bytes + ETH_OVERHEAD;
+        let mut pkt = Packet::new(
+            id,
+            frame.src,
+            frame.dst,
+            RouteKind::Directed,
+            Proto::Ethernet,
+            Payload::Synthetic(wire),
+            frame.t_created,
+        );
+        pkt.seq = frame.tag;
+        // Stash the frame so the receive side can reconstruct it.
+        self.eth_inflight.insert(id, frame);
+        self.inject(pkt);
+    }
+
+    /// Packet Demux: an Ethernet packet reached its destination NIC. The
+    /// device DMAs it into a DRAM buffer described by a buffer
+    /// descriptor, then notifies the driver (interrupt or polling).
+    pub(crate) fn eth_deliver(&mut self, node: NodeId, packet: Packet) {
+        let frame = self
+            .eth_inflight
+            .remove(&packet.id)
+            .expect("ethernet packet without in-flight frame");
+        let arm = self.cfg.arm;
+        let wire = frame.bytes + ETH_OVERHEAD;
+        let dma = (wire as f64 / arm.axi_bytes_per_ns).ceil() as Time;
+        match self.eth.port(node).mode {
+            RxMode::Interrupt => {
+                // IRQ → driver → kernel stack, all on the ARM.
+                let cost = arm.irq_cost + arm.driver + arm.kernel_stack;
+                self.nodes[node.0 as usize].cpu_busy_ns += cost;
+                self.eth.port_mut(node).irqs_taken += 1;
+                self.sim.after(dma + cost, Event::EthRx { node, frame });
+            }
+            RxMode::Polling { interval } => {
+                let deliver_at = self.now() + dma;
+                let port = self.eth.port_mut(node);
+                port.pending_rx.push_back(frame);
+                if !port.poll_scheduled {
+                    port.poll_scheduled = true;
+                    let tick = deliver_at.div_ceil(interval).max(1) * interval;
+                    self.sim.at(tick.max(deliver_at), Event::EthPoll { node });
+                }
+            }
+        }
+    }
+
+    /// Interrupt-path completion (or poll-path per-frame handoff): the
+    /// frame is in the kernel; hand it to the application.
+    pub(crate) fn eth_rx(&mut self, node: NodeId, frame: EthFrame, app: &mut dyn App) {
+        let lat = self.now() - frame.t_created;
+        self.metrics
+            .packet_latency
+            .entry("eth_frame")
+            .or_insert_with(crate::metrics::LatencyHist::new)
+            .record(lat);
+        self.eth.port_mut(node).frames_rx += 1;
+        self.eth.port_mut(node).inbox.push_back(frame.clone());
+        if node == self.gateway() && frame.tag & (1 << 63) != 0 {
+            self.nfs_progress(&frame);
+        }
+        app.on_eth(self, node, &frame);
+    }
+
+    /// Polling tick: drain everything that has been DMA'd so far. One
+    /// poll amortizes the notification cost over all pending frames —
+    /// this is why polling wins under high traffic (§3.1).
+    pub(crate) fn eth_poll(&mut self, node: NodeId, app: &mut dyn App) {
+        let arm = self.cfg.arm;
+        let drained: Vec<EthFrame> = {
+            let port = self.eth.port_mut(node);
+            port.polls_taken += 1;
+            port.poll_scheduled = false;
+            port.pending_rx.drain(..).collect()
+        };
+        let cost = arm.poll_cost + drained.len() as Time * (arm.driver + arm.kernel_stack);
+        self.nodes[node.0 as usize].cpu_busy_ns += cost;
+        for frame in drained {
+            self.eth_rx(node, frame, app);
+        }
+        // NAPI-style: if more frames raced in, keep polling.
+        let more = !self.eth.port(node).pending_rx.is_empty();
+        if more {
+            if let RxMode::Polling { interval } = self.eth.port(node).mode {
+                self.eth.port_mut(node).poll_scheduled = true;
+                self.sim.after(interval, Event::EthPoll { node });
+            }
+        }
+    }
+
+    /// Read received frames at a node.
+    pub fn eth_read(&mut self, node: NodeId) -> Vec<EthFrame> {
+        self.eth.port_mut(node).inbox.drain(..).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Gateway / NAT / NFS (§3.1 last paragraph)
+    // ------------------------------------------------------------------
+
+    /// The gateway node — (100) of card (0,0,0) — carries the physical
+    /// Ethernet port.
+    pub fn gateway(&self) -> NodeId {
+        self.topo.gateway_node((0, 0, 0))
+    }
+
+    /// Install a NAT port-forwarding entry at the gateway.
+    pub fn nat_forward(&mut self, external_port: u16, node: NodeId, internal_port: u16) {
+        self.eth.external.nat.insert(external_port, (node, internal_port));
+    }
+
+    /// Save `size` bytes from `node` to the external NFS host as `name`.
+    /// The data travels over the internal Ethernet to the gateway, then
+    /// over the physical 1 GbE port. Completion is visible when
+    /// `external.files` contains the name (after quiescence).
+    pub fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
+        let gw = self.gateway();
+        let tag = nfs_tag(name);
+        self.eth
+            .external
+            .puts
+            .insert((node.0, tag), (name.to_string(), size, size));
+        if node == gw {
+            // Local: straight out of the physical port, no fabric hops.
+            let mut left = size;
+            while left > 0 {
+                let take = left.min(ETH_MTU as u64) as u32;
+                self.gateway_egress(node, take + ETH_OVERHEAD, tag);
+                left -= take as u64;
+            }
+            self.eth.external.puts.remove(&(node.0, tag));
+            self.eth.external.files.insert(name.to_string(), size);
+            return;
+        }
+        self.eth_send_message(node, gw, size, tag);
+    }
+
+    /// Gateway-side handling of a frame destined for the external world:
+    /// NAT translation + physical-port serialization.
+    pub(crate) fn gateway_egress(&mut self, _from: NodeId, wire_bytes: u32, _tag: u64) {
+        let now = self.now();
+        let ext = &mut self.eth.external;
+        let start = now.max(ext.ext_busy_until);
+        ext.ext_busy_until = start + wire_bytes as u64 * EXT_NS_PER_BYTE;
+        ext.ext_rx_frames += 1;
+        ext.ext_rx_bytes += wire_bytes as u64;
+    }
+
+    /// Progress NFS transfers: invoked at the gateway for every arriving
+    /// frame whose tag marks it as NFS traffic.
+    pub(crate) fn nfs_progress(&mut self, frame: &EthFrame) {
+        let key = (frame.src.0, frame.tag);
+        if !self.eth.external.puts.contains_key(&key) {
+            return;
+        }
+        self.gateway_egress(frame.src, frame.bytes + ETH_OVERHEAD, frame.tag);
+        let (name, left, total) = self.eth.external.puts.get_mut(&key).unwrap();
+        *left = left.saturating_sub(frame.bytes as u64);
+        if *left == 0 {
+            let (name, total) = (name.clone(), *total);
+            self.eth.external.puts.remove(&key);
+            self.eth.external.files.insert(name, total);
+        }
+    }
+
+    /// Deliver an external frame to an internal node through NAT.
+    pub fn external_ingress(&mut self, external_port: u16, bytes: u32, tag: u64) -> bool {
+        let Some(&(node, _iport)) = self.eth.external.nat.get(&external_port) else {
+            return false; // no forwarding entry: dropped at the gateway
+        };
+        let gw = self.gateway();
+        // Physical-port serialization first.
+        let wire = bytes + ETH_OVERHEAD;
+        let now = self.now();
+        let ext = &mut self.eth.external;
+        let start = now.max(ext.ext_busy_until);
+        ext.ext_busy_until = start + wire as u64 * EXT_NS_PER_BYTE;
+        // Then the gateway forwards over the internal fabric.
+        let frame = EthFrame { src: gw, dst: node, bytes, tag, t_created: now };
+        let at = ext.ext_busy_until;
+        self.sim.at(at, Event::EthTx { frame });
+        true
+    }
+}
+
+/// Deterministic tag for an NFS transfer name.
+pub fn nfs_tag(name: &str) -> u64 {
+    // FNV-1a, stable across runs.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h | 1 << 63
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NullApp;
+    use crate::topology::Coord;
+
+    #[test]
+    fn frame_roundtrip_interrupt_mode() {
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = net.topo.id(Coord { x: 2, y: 0, z: 0 });
+        net.eth_send(src, dst, 1000, 42);
+        net.run_to_quiescence(&mut NullApp);
+        let frames = net.eth_read(dst);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].bytes, 1000);
+        assert_eq!(frames[0].tag, 42);
+        assert_eq!(net.eth.port(dst).irqs_taken, 1);
+        // CPU was charged on both sides.
+        assert!(net.nodes[src.0 as usize].cpu_busy_ns > 0);
+        assert!(net.nodes[dst.0 as usize].cpu_busy_ns > 0);
+    }
+
+    #[test]
+    fn message_segmentation() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(3));
+        let frames = net.eth_send_message(a, b, 4000, 7);
+        assert_eq!(frames, 3); // 1500+1500+1000
+        net.run_to_quiescence(&mut NullApp);
+        let got = net.eth_read(b);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got.iter().map(|f| f.bytes as u64).sum::<u64>(), 4000);
+    }
+
+    #[test]
+    fn polling_beats_interrupts_on_cpu_under_load() {
+        // §3.1: polling "is far more efficient under high traffic".
+        let run = |mode: RxMode| {
+            let mut net = Network::card();
+            let dst = net.topo.id(Coord { x: 1, y: 1, z: 1 });
+            net.eth_set_mode(dst, mode);
+            for i in 0..26u32 {
+                let src = NodeId(if i >= dst.0 { i + 1 } else { i });
+                for _ in 0..8 {
+                    net.eth_send(src, dst, 1400, 0);
+                }
+            }
+            net.run_to_quiescence(&mut NullApp);
+            assert_eq!(net.eth.port(dst).frames_rx, 26 * 8);
+            net.nodes[dst.0 as usize].cpu_busy_ns
+        };
+        let irq_cpu = run(RxMode::Interrupt);
+        let poll_cpu = run(RxMode::Polling { interval: 20_000 });
+        assert!(
+            poll_cpu < irq_cpu,
+            "polling rx CPU {poll_cpu} should beat interrupt rx CPU {irq_cpu}"
+        );
+    }
+
+    #[test]
+    fn polling_adds_latency_under_light_load() {
+        let one = |mode: RxMode| {
+            let mut net = Network::card();
+            let (a, b) = (NodeId(0), NodeId(1));
+            net.eth_set_mode(b, mode);
+            net.eth_send(a, b, 64, 0);
+            net.run_to_quiescence(&mut NullApp);
+            net.now()
+        };
+        let t_irq = one(RxMode::Interrupt);
+        let t_poll = one(RxMode::Polling { interval: 100_000 });
+        assert!(t_poll > t_irq, "poll {t_poll} vs irq {t_irq}");
+    }
+
+    #[test]
+    fn nat_ingress_reaches_forwarded_node() {
+        let mut net = Network::card();
+        let inner = net.topo.id(Coord { x: 2, y: 2, z: 1 });
+        net.nat_forward(2222, inner, 22);
+        assert!(net.external_ingress(2222, 512, 99));
+        assert!(!net.external_ingress(8080, 512, 99), "unmapped port must drop");
+        net.run_to_quiescence(&mut NullApp);
+        let frames = net.eth_read(inner);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].bytes, 512);
+        assert_eq!(frames[0].src, net.gateway());
+    }
+
+    #[test]
+    fn nfs_put_drains_to_external_host() {
+        let mut net = Network::card();
+        let node = net.topo.id(Coord { x: 2, y: 2, z: 2 });
+        net.nfs_put(node, "checkpoint.bin", 6000);
+        net.run_to_quiescence(&mut NullApp);
+        // All frames crossed the physical port.
+        assert!(net.eth.external.ext_rx_bytes >= 6000);
+        assert!(net.eth.external.ext_rx_frames >= 4);
+    }
+}

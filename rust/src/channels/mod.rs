@@ -1,0 +1,25 @@
+//! Virtual communication channels layered on the packet router (§3).
+//!
+//! "Multiple virtual channels can be designed to sit atop the underlying
+//! packet router logic … to give the processor and FPGA logic different
+//! virtual or logical interfaces to the communication network." The three
+//! the paper describes — and we implement — are:
+//!
+//! * [`ethernet`] — the virtual **Internal Ethernet** (§3.1, Fig 3): a
+//!   standard-looking NIC so unmodified IP software (ssh, MPI, NFS) runs
+//!   between nodes; the heaviest path (full kernel stack) but the most
+//!   compatible.
+//! * [`postmaster`] — **Postmaster DMA** (§3.2, Fig 4): a tunneled queue
+//!   for small messages; initiator writes to a fixed address, data lands
+//!   in a contiguous receive stream on the target; far lower overhead
+//!   than TCP/IP.
+//! * [`bridge_fifo`] — **Bridge FIFO** (§3.3, Fig 5, Table 1): direct
+//!   hardware-to-hardware FIFO between two FPGAs; lowest latency of all.
+//!
+//! All three multiplex onto the same SERDES links through the Packet
+//! Mux/Demux (modeled by [`crate::router::Proto`] dispatch in
+//! [`crate::network::Network`]).
+
+pub mod bridge_fifo;
+pub mod ethernet;
+pub mod postmaster;

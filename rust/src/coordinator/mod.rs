@@ -1,0 +1,19 @@
+//! Workload coordination: placement, collectives, timestep scheduling.
+//!
+//! The INC has no MPI runtime of its own — the paper's position is that
+//! communication layers are *designed per application* on top of the
+//! packet router. This module provides the coordination layer our
+//! machine-intelligence workloads (`crate::workload`) share:
+//!
+//! * [`placement`] — mapping jobs onto mesh nodes (blocks, scattered,
+//!   whole cards).
+//! * [`collectives`] — ring all-reduce, tree reduce and broadcast built
+//!   from `Proto::Raw` packets, with the traffic simulated on the fabric
+//!   (the real numerics live in XLA artifacts; the fabric carries
+//!   modeled bytes).
+
+pub mod collectives;
+pub mod placement;
+
+pub use collectives::{CollectiveStats, RingAllreduce};
+pub use placement::Placement;

@@ -1,0 +1,80 @@
+//! Job placement onto mesh nodes.
+
+use crate::topology::{NodeId, Topology};
+
+/// How a job's ranks map to nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// A compact axis-ordered block starting at the origin: best for
+    /// neighbor-heavy traffic.
+    Block,
+    /// One whole card (27 nodes) by card coordinate.
+    Card(u32, u32, u32),
+    /// Maximally spread out (stride over the node list): worst-case
+    /// communication placement, used by ablation benches.
+    Scattered,
+}
+
+impl Placement {
+    /// Pick `k` nodes for a job.
+    pub fn select(self, topo: &Topology, k: usize) -> Vec<NodeId> {
+        match self {
+            Placement::Block => topo.nodes().take(k).collect(),
+            Placement::Card(x, y, z) => {
+                let nodes = topo.card_nodes((x, y, z));
+                assert!(k <= nodes.len(), "a card has 27 nodes, requested {k}");
+                nodes.into_iter().take(k).collect()
+            }
+            Placement::Scattered => {
+                let n = topo.node_count();
+                assert!(k <= n);
+                let stride = (n / k).max(1);
+                (0..k).map(|i| NodeId((i * stride) as u32)).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemPreset;
+
+    #[test]
+    fn block_takes_prefix() {
+        let t = Topology::preset(SystemPreset::Card);
+        let v = Placement::Block.select(&t, 4);
+        assert_eq!(v, vec![NodeId(0), NodeId(1), NodeId(2), NodeId(3)]);
+    }
+
+    #[test]
+    fn card_selects_card_nodes() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let v = Placement::Card(1, 0, 0).select(&t, 27);
+        assert_eq!(v.len(), 27);
+        for n in &v {
+            assert_eq!(t.card_of(*n), (1, 0, 0));
+        }
+    }
+
+    #[test]
+    fn scattered_spreads() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let v = Placement::Scattered.select(&t, 4);
+        assert_eq!(v.len(), 4);
+        // Average pairwise hops must exceed the block placement's.
+        let avg = |v: &[NodeId]| {
+            let mut s = 0u32;
+            let mut c = 0u32;
+            for i in 0..v.len() {
+                for j in i + 1..v.len() {
+                    s += t.min_hops(v[i], v[j]);
+                    c += 1;
+                }
+            }
+            s as f64 / c as f64
+        };
+        let b = Placement::Block.select(&t, 4);
+        assert!(avg(&v) > avg(&b));
+    }
+}

@@ -1,0 +1,195 @@
+//! JTAG (§4.1): one daisy chain through all 27 Zynqs of a card.
+//!
+//! Both the ARM (via its Debug Access Port) and the FPGA appear as
+//! devices on the chain, so JTAG can configure FPGAs, load code, drive
+//! ChipScope and debug ARM software — but serially, through a single
+//! slow chain, and **only on one card** (§4.3). The programming-time
+//! model is calibrated to the paper's reported numbers: ≈15 min to
+//! configure 27 FPGAs, >5 h to program 27 FLASH chips.
+
+use std::sync::Arc;
+
+use crate::network::Network;
+use crate::router::MemTarget;
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// A device on the JTAG chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JtagDevice {
+    ArmDap(NodeId),
+    Fpga(NodeId),
+}
+
+impl Network {
+    /// Devices on a card's chain, in daisy-chain order: each Zynq
+    /// contributes its ARM DAP and its FPGA.
+    pub fn jtag_chain(&self, card: (u32, u32, u32)) -> Vec<JtagDevice> {
+        let mut v = Vec::with_capacity(54);
+        for n in self.topo.card_nodes(card) {
+            v.push(JtagDevice::ArmDap(n));
+            v.push(JtagDevice::Fpga(n));
+        }
+        v
+    }
+
+    /// Configure every FPGA on `card` over JTAG with `image` (build id
+    /// `build_id`). Programming is strictly sequential down the chain.
+    /// Returns the total wall time.
+    pub fn jtag_program_fpgas(
+        &mut self,
+        card: (u32, u32, u32),
+        image: Arc<Vec<u8>>,
+        build_id: u64,
+    ) -> Time {
+        let per_device =
+            (image.len() as f64 * 8.0 / self.cfg.programming.jtag_fpga_bits_per_s * 1e9) as Time;
+        let now = self.now();
+        let mut t = now;
+        for n in self.topo.card_nodes(card) {
+            t += per_device;
+            let st = &mut self.nodes[n.0 as usize];
+            st.fpga_image = Some((build_id, image.clone()));
+            st.fpga_done_at = t;
+        }
+        t - now
+    }
+
+    /// Program every FLASH chip on `card` over JTAG (indirect, very
+    /// slow — §4.3 reports it once took more than 5 hours).
+    pub fn jtag_program_flash(&mut self, card: (u32, u32, u32), image: Arc<Vec<u8>>) -> Time {
+        let per_device =
+            (image.len() as f64 * 8.0 / self.cfg.programming.jtag_flash_bits_per_s * 1e9) as Time;
+        let now = self.now();
+        let mut t = now;
+        for n in self.topo.card_nodes(card) {
+            t += per_device;
+            let st = &mut self.nodes[n.0 as usize];
+            st.flash_image = Some(image.clone());
+            st.flash_done_at = t;
+        }
+        t - now
+    }
+
+    /// Read a word through a node's ARM DAP (debug access; bit-banged,
+    /// so orders of magnitude slower than the Ring Bus).
+    pub fn jtag_read(&mut self, node: NodeId, addr: u64) -> (u64, Time) {
+        // One DAP transaction ≈ 100 TCK cycles at the effective rate.
+        let t =
+            (100.0 * 8.0 / self.cfg.programming.jtag_fpga_bits_per_s * 1e9) as Time;
+        let v = self.nodes[node.0 as usize].read_addr(addr, self.now());
+        (v, t)
+    }
+
+    /// Equivalent programming over the PCIe + broadcast path (§4.3): the
+    /// host pushes the image once over PCIe; node (000) broadcasts it;
+    /// all nodes program their FPGAs (or FLASH) in parallel. Returns the
+    /// modeled wall time and applies the images. This is the fast path
+    /// the paper contrasts with JTAG ("a couple of seconds, including
+    /// the data transfer").
+    pub fn pcie_broadcast_program(
+        &mut self,
+        target: MemTarget,
+        image: Arc<Vec<u8>>,
+        build_id: u64,
+    ) -> Time {
+        let p = self.cfg.programming;
+        let pcie = (image.len() as f64 / p.pcie_bytes_per_s * 1e9) as Time;
+        // Broadcast through the fabric: the image is chunked at the MTU;
+        // the dominant term is serialization of the whole image on the
+        // first link (pipelined across hops), plus the flood depth.
+        let ser = (image.len() as f64 / self.cfg.link.bytes_per_ns) as Time;
+        let depth = {
+            let (dx, dy, dz) = self.topo.dims();
+            (dx + dy + dz) as Time * self.cfg.link.hop(self.cfg.link.mtu)
+        };
+        let local = match target {
+            MemTarget::Fpga => (image.len() as f64 / p.fpga_config_bytes_per_s * 1e9) as Time,
+            MemTarget::Flash => (image.len() as f64 / p.flash_write_bytes_per_s * 1e9) as Time,
+            MemTarget::Dram => 0,
+        };
+        let now = self.now();
+        let done = now + p.host_overhead_ns + pcie + ser + depth + local;
+        self.sim.advance_to(done);
+        for n in self.topo.nodes() {
+            let st = &mut self.nodes[n.0 as usize];
+            match target {
+                MemTarget::Fpga => {
+                    st.fpga_image = Some((build_id, image.clone()));
+                    st.fpga_done_at = done;
+                }
+                MemTarget::Flash => {
+                    st.flash_image = Some(image.clone());
+                    st.flash_done_at = done;
+                }
+                MemTarget::Dram => st.dram.write_region(0, image.clone()),
+            }
+        }
+        done - now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+
+    #[test]
+    fn chain_has_54_devices() {
+        let net = Network::card();
+        let chain = net.jtag_chain((0, 0, 0));
+        assert_eq!(chain.len(), 54);
+        assert!(matches!(chain[0], JtagDevice::ArmDap(_)));
+        assert!(matches!(chain[1], JtagDevice::Fpga(_)));
+    }
+
+    #[test]
+    fn jtag_fpga_programming_takes_about_15_minutes() {
+        let mut net = Network::card();
+        let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+        let t = net.jtag_program_fpgas((0, 0, 0), img, 1);
+        let minutes = t as f64 / (60.0 * SEC as f64);
+        assert!((minutes - 15.0).abs() < 1.5, "took {minutes} min, paper says ≈15");
+        // Sequential: node 0 done long before node 26.
+        assert!(net.nodes[0].fpga_done_at * 2 < net.nodes[26].fpga_done_at);
+    }
+
+    #[test]
+    fn jtag_flash_programming_exceeds_5_hours() {
+        let mut net = Network::card();
+        let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+        let t = net.jtag_program_flash((0, 0, 0), img);
+        assert!(t as f64 / SEC as f64 > 5.0 * 3600.0, "paper: more than 5 hours");
+    }
+
+    #[test]
+    fn pcie_fpga_programming_takes_seconds_not_minutes() {
+        let mut net = Network::card();
+        let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+        let t = net.pcie_broadcast_program(MemTarget::Fpga, img, 2);
+        let secs = t as f64 / SEC as f64;
+        assert!(secs < 5.0, "PCIe path took {secs} s, paper says a couple of seconds");
+        assert_eq!(net.nodes[13].fpga_image.as_ref().unwrap().0, 2);
+    }
+
+    #[test]
+    fn pcie_flash_programming_takes_about_2_minutes() {
+        let mut net = Network::inc3000();
+        let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+        let t = net.pcie_broadcast_program(MemTarget::Flash, img, 0);
+        let minutes = t as f64 / (60.0 * SEC as f64);
+        // "about 2 minutes to program 1, 16, or 432" — parallel local writes.
+        assert!((minutes - 2.0).abs() < 0.3, "took {minutes} min");
+    }
+
+    #[test]
+    fn programming_432_over_pcie_nearly_identical_to_27() {
+        let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+        let mut card = Network::card();
+        let t27 = card.pcie_broadcast_program(MemTarget::Fpga, img.clone(), 1);
+        let mut big = Network::inc3000();
+        let t432 = big.pcie_broadcast_program(MemTarget::Fpga, img, 1);
+        let ratio = t432 as f64 / t27 as f64;
+        assert!(ratio < 1.05, "432-node programming should cost ≈ the same (ratio {ratio})");
+    }
+}

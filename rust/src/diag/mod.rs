@@ -1,0 +1,25 @@
+//! Diagnostic capabilities (§4): JTAG, Ring Bus, NetTunnel, PCIe Sandbox.
+//!
+//! A development platform needs visibility while the reconfigurable
+//! hardware, system software and application software all evolve
+//! concurrently. INC layers four mechanisms, from most primitive to most
+//! convenient:
+//!
+//! * [`jtag`] — a per-card daisy chain through all 27 Zynqs: always
+//!   works, painfully slow (15 min to configure a card's FPGAs, >5 h for
+//!   its FLASH chips — §4.3's numbers, reproduced by bench E7).
+//! * [`ringbus`] — a dedicated 27-link sideband ring on each card, with
+//!   read/write/broadcast-write to any address on any node, routed
+//!   entirely in hardware.
+//! * [`nettunnel`] — the same semantics carried over the main packet
+//!   fabric, so it spans the whole system (but depends on the very
+//!   router logic one may be debugging — which is why the Ring Bus is
+//!   not superfluous, as the paper notes).
+//! * [`sandbox`] — the host-side interactive utility speaking PCIe to
+//!   node (000): read/write/read-all, boot broadcast, FPGA/FLASH
+//!   programming, UART attach, EEPROM/temperature queries.
+
+pub mod jtag;
+pub mod nettunnel;
+pub mod ringbus;
+pub mod sandbox;

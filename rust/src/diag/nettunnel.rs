@@ -1,0 +1,186 @@
+//! NetTunnel (§4.2): Ring-Bus semantics over the main packet fabric.
+//!
+//! Reads and writes to the full 4 GB address space of any node in the
+//! system, carried as `Proto::NetTunnel` packets through the ordinary
+//! router (directed or broadcast). Read requests generate a reply packet
+//! routed back to the requester; results are collected in
+//! [`crate::network::Network::tunnel_results`] keyed by request id.
+//!
+//! Also the home of the Boot protocol handler (bulk image loads pushed
+//! by the PCIe Sandbox, §4.3).
+
+use std::sync::Arc;
+
+use crate::network::Network;
+use crate::router::{MemTarget, Packet, Payload, Proto};
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+impl Network {
+    /// Write a word to `addr` on `dst` through the fabric.
+    pub fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
+        let payload =
+            Payload::RegAccess { addr, value, write: true, reply: false, req_id: 0 };
+        self.send_directed(src, dst, Proto::NetTunnel, payload);
+    }
+
+    /// Broadcast-write a word to the same `addr` on every node.
+    pub fn tunnel_broadcast_write(&mut self, src: NodeId, addr: u64, value: u64) {
+        let payload =
+            Payload::RegAccess { addr, value, write: true, reply: false, req_id: 0 };
+        self.send_broadcast(src, Proto::NetTunnel, payload);
+    }
+
+    /// Issue a read of `addr` on `dst`; the result appears in
+    /// `tunnel_results[req_id]` once the reply packet lands.
+    pub fn tunnel_read(&mut self, src: NodeId, dst: NodeId, addr: u64) -> u64 {
+        let req_id = self.next_packet_id() | 1 << 62;
+        let payload =
+            Payload::RegAccess { addr, value: 0, write: false, reply: false, req_id };
+        self.send_directed(src, dst, Proto::NetTunnel, payload);
+        req_id
+    }
+
+    /// Execute a tunnel access at `node` (scheduled by the Packet Demux).
+    pub(crate) fn tunnel_exec(&mut self, node: NodeId, packet: Packet) {
+        let now = self.now();
+        match packet.payload {
+            Payload::RegAccess { addr, value, write, reply, req_id } => {
+                if reply {
+                    // Read response arriving back at the requester.
+                    self.tunnel_results.insert(req_id, value);
+                } else if write {
+                    let n = &mut self.nodes[node.0 as usize];
+                    n.write_addr(addr, value, now);
+                    n.tick_boot(now);
+                } else {
+                    let v = self.nodes[node.0 as usize].read_addr(addr, now);
+                    let payload = Payload::RegAccess {
+                        addr,
+                        value: v,
+                        write: false,
+                        reply: true,
+                        req_id,
+                    };
+                    self.send_directed(node, packet.src, Proto::NetTunnel, payload);
+                }
+            }
+            _ => unreachable!("tunnel packet without RegAccess payload"),
+        }
+    }
+
+    /// Boot-protocol delivery (§4.3): bulk image chunk at a node.
+    pub(crate) fn boot_deliver(&mut self, node: NodeId, packet: Packet) {
+        let now = self.now();
+        match &packet.payload {
+            Payload::Region { target, offset, data } => {
+                self.apply_region(node, *target, *offset, data.clone(), now)
+            }
+            _ => unreachable!("boot packet without Region payload"),
+        }
+    }
+
+    /// Apply one image chunk to a node's DRAM / FPGA / FLASH, modelling
+    /// the local programming time for the latter two.
+    pub(crate) fn apply_region(
+        &mut self,
+        node: NodeId,
+        target: MemTarget,
+        offset: u64,
+        data: Arc<Vec<u8>>,
+        now: Time,
+    ) {
+        let p = self.cfg.programming;
+        let n = &mut self.nodes[node.0 as usize];
+        match target {
+            MemTarget::Dram => n.dram.write_region(offset, data),
+            MemTarget::Fpga => {
+                // `offset` carries the bitstream build id (configuration
+                // is whole-image; there is no meaningful offset).
+                let t = (data.len() as f64 / p.fpga_config_bytes_per_s * 1e9) as Time;
+                let start = now.max(n.fpga_done_at);
+                n.fpga_done_at = start + t;
+                n.fpga_image = Some((offset, data));
+            }
+            MemTarget::Flash => {
+                let t = (data.len() as f64 / p.flash_write_bytes_per_s * 1e9) as Time;
+                let start = now.max(n.flash_done_at);
+                n.flash_done_at = start + t;
+                n.flash_image = Some(data);
+            }
+        }
+    }
+
+    /// Convenience: fetch a completed tunnel read result.
+    pub fn tunnel_result(&self, req_id: u64) -> Option<u64> {
+        self.tunnel_results.get(&req_id).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::NullApp;
+    use crate::node::regs;
+    use crate::topology::Coord;
+
+    #[test]
+    fn remote_write_then_read_roundtrip() {
+        let mut net = Network::card();
+        let host = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let target = net.topo.id(Coord { x: 2, y: 2, z: 2 });
+        net.tunnel_write(host, target, regs::SCRATCH0, 0xFEED);
+        net.run_to_quiescence(&mut NullApp);
+        let req = net.tunnel_read(host, target, regs::SCRATCH0);
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.tunnel_result(req), Some(0xFEED));
+    }
+
+    #[test]
+    fn reads_reach_hardware_registers() {
+        let mut net = Network::card();
+        let host = NodeId(0);
+        let target = NodeId(13);
+        let req = net.tunnel_read(host, target, regs::TEMP);
+        net.run_to_quiescence(&mut NullApp);
+        let expected = net.nodes[13].read_addr(regs::TEMP, 0);
+        assert_eq!(net.tunnel_result(req), Some(expected));
+    }
+
+    #[test]
+    fn broadcast_write_hits_every_node() {
+        let mut net = Network::card();
+        let host = NodeId(0);
+        net.tunnel_broadcast_write(host, regs::SCRATCH0 + 8, 0xAA);
+        net.run_to_quiescence(&mut NullApp);
+        for n in 0..27 {
+            assert_eq!(
+                net.nodes[n].read_addr(regs::SCRATCH0 + 8, net.now()),
+                0xAA,
+                "node {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn boot_broadcast_boots_all_nodes() {
+        let mut net = Network::card();
+        net.tunnel_broadcast_write(NodeId(0), regs::BOOT_CMD, 1);
+        net.run_to_quiescence(&mut NullApp);
+        let t = net.now() + 3 * crate::sim::SEC;
+        for n in 0..27 {
+            assert_eq!(net.nodes[n].read_addr(regs::BOOT_STATUS, t), 2, "node {n}");
+        }
+    }
+
+    #[test]
+    fn region_applies_with_programming_delay() {
+        let mut net = Network::card();
+        let img = Arc::new(vec![0u8; 1024 * 1024]);
+        net.apply_region(NodeId(3), MemTarget::Fpga, 0x99, img.clone(), 0);
+        let n = &net.nodes[3];
+        assert!(n.fpga_done_at > 0);
+        assert_eq!(n.read_addr(regs::BUILD_ID, n.fpga_done_at), 0x99);
+        assert_eq!(n.read_addr(regs::BUILD_ID, n.fpga_done_at - 1), 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Ring Bus (§4.2): dedicated per-card sideband channel.
+//!
+//! 27 unidirectional point-to-point links form a ring through all nodes
+//! of a card. Requests (and read responses) forward through intervening
+//! nodes with no processor involvement; broadcast writes forward a write
+//! command all the way around the ring. Because it is independent of the
+//! (possibly-under-development) main router logic, it stays usable when
+//! the network fabric is broken — the reason it coexists with NetTunnel.
+//!
+//! Operations here are synchronous model functions: they touch node
+//! state directly and *return* the bus latency, which callers (the PCIe
+//! Sandbox, mainly) accumulate onto their own clocks.
+
+use crate::network::Network;
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// Position of a node in its card's ring (ring order = Fig 1 node-number
+/// order, cyclic).
+fn ring_index(nodes: &[NodeId], n: NodeId) -> usize {
+    nodes.iter().position(|&x| x == n).expect("node not on card")
+}
+
+/// Hops along the unidirectional ring from `from` to `to`.
+fn ring_hops(len: usize, from: usize, to: usize) -> u32 {
+    ((to + len - from) % len) as u32
+}
+
+impl Network {
+    /// Read `addr` on `target` via the Ring Bus, requested by
+    /// `requester` (both must be on `card`). Returns (value, latency):
+    /// request forwards to the target, response continues around the
+    /// ring back to the requester — a full loop of 27 hops in total,
+    /// regardless of positions.
+    pub fn ring_read(
+        &mut self,
+        card: (u32, u32, u32),
+        requester: NodeId,
+        target: NodeId,
+        addr: u64,
+    ) -> (u64, Time) {
+        let nodes = self.topo.card_nodes(card);
+        let from = ring_index(&nodes, requester);
+        let to = ring_index(&nodes, target);
+        let now = self.now();
+        let value = self.nodes[target.0 as usize].read_addr(addr, now);
+        let hops = ring_hops(nodes.len(), from, to) + ring_hops(nodes.len(), to, from);
+        (value, hops as Time * self.cfg.ringbus.hop)
+    }
+
+    /// Write via the Ring Bus. Latency is the forward path only (posted
+    /// write).
+    pub fn ring_write(
+        &mut self,
+        card: (u32, u32, u32),
+        requester: NodeId,
+        target: NodeId,
+        addr: u64,
+        value: u64,
+    ) -> Time {
+        let nodes = self.topo.card_nodes(card);
+        let from = ring_index(&nodes, requester);
+        let to = ring_index(&nodes, target);
+        let now = self.now();
+        let n = &mut self.nodes[target.0 as usize];
+        n.write_addr(addr, value, now);
+        n.tick_boot(now);
+        ring_hops(nodes.len(), from, to) as Time * self.cfg.ringbus.hop
+    }
+
+    /// Broadcast write: the command forwards all the way around the
+    /// ring, writing at every node.
+    pub fn ring_broadcast_write(
+        &mut self,
+        card: (u32, u32, u32),
+        _requester: NodeId,
+        addr: u64,
+        value: u64,
+    ) -> Time {
+        let nodes = self.topo.card_nodes(card);
+        let now = self.now();
+        for &n in &nodes {
+            let st = &mut self.nodes[n.0 as usize];
+            st.write_addr(addr, value, now);
+            st.tick_boot(now);
+        }
+        nodes.len() as Time * self.cfg.ringbus.hop
+    }
+
+    /// The Sandbox's 'read all' (§4.3): same address on every node of
+    /// the card, collected in ring order in a single loop.
+    pub fn ring_read_all(
+        &mut self,
+        card: (u32, u32, u32),
+        requester: NodeId,
+        addr: u64,
+    ) -> (Vec<(NodeId, u64)>, Time) {
+        let nodes = self.topo.card_nodes(card);
+        let now = self.now();
+        let mut out = Vec::with_capacity(nodes.len());
+        let start = ring_index(&nodes, requester);
+        for k in 0..nodes.len() {
+            let n = nodes[(start + k) % nodes.len()];
+            out.push((n, self.nodes[n.0 as usize].read_addr(addr, now)));
+        }
+        out.sort_by_key(|(n, _)| n.0);
+        (out, nodes.len() as Time * self.cfg.ringbus.hop)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::regs;
+
+    #[test]
+    fn ring_hops_wraps() {
+        assert_eq!(ring_hops(27, 0, 5), 5);
+        assert_eq!(ring_hops(27, 5, 0), 22);
+        assert_eq!(ring_hops(27, 13, 13), 0);
+    }
+
+    #[test]
+    fn read_write_roundtrip_with_latency() {
+        let mut net = Network::card();
+        let card = (0, 0, 0);
+        let (a, b) = (NodeId(0), NodeId(9));
+        let wl = net.ring_write(card, a, b, regs::SCRATCH0, 123);
+        assert_eq!(wl, 9 * net.cfg.ringbus.hop);
+        let (v, rl) = net.ring_read(card, a, b, regs::SCRATCH0);
+        assert_eq!(v, 123);
+        // Full loop for read: request + response = 27 hops.
+        assert_eq!(rl, 27 * net.cfg.ringbus.hop);
+    }
+
+    #[test]
+    fn broadcast_write_all_nodes() {
+        let mut net = Network::card();
+        net.ring_broadcast_write((0, 0, 0), NodeId(0), regs::SCRATCH0, 7);
+        for n in 0..27 {
+            assert_eq!(net.nodes[n].read_addr(regs::SCRATCH0, 0), 7);
+        }
+    }
+
+    #[test]
+    fn read_all_returns_every_node_sorted() {
+        let mut net = Network::card();
+        let (vals, lat) = net.ring_read_all((0, 0, 0), NodeId(0), regs::EEPROM_SERIAL);
+        assert_eq!(vals.len(), 27);
+        assert_eq!(lat, 27 * net.cfg.ringbus.hop);
+        for (i, (n, v)) in vals.iter().enumerate() {
+            assert_eq!(n.0 as usize, i);
+            assert_eq!(*v, 0x1BC0_0000 + i as u64);
+        }
+    }
+
+    #[test]
+    fn ring_is_per_card_on_inc3000() {
+        let mut net = Network::inc3000();
+        // Card (1,0,0) nodes are 27..54 in x-major terms; use card_nodes.
+        let card = (1, 0, 0);
+        let nodes = net.topo.card_nodes(card);
+        let lat = net.ring_write(card, nodes[0], nodes[26], regs::SCRATCH0, 1);
+        assert_eq!(lat, 26 * net.cfg.ringbus.hop);
+        // Only that card's node got the write.
+        assert_eq!(net.nodes[nodes[26].0 as usize].read_addr(regs::SCRATCH0, 0), 1);
+        assert_eq!(net.nodes[0].read_addr(regs::SCRATCH0, 0), 0);
+    }
+}

@@ -1,0 +1,341 @@
+//! PCIe Sandbox (§4.3): the host-side interactive utility.
+//!
+//! Runs on an x86 host attached over 4-lane PCIe 2.0 to node (000) of a
+//! card. Simple commands read/write any address on any node ('translated'
+//! underneath into Ring Bus accesses on the attached card and NetTunnel
+//! accesses beyond it), retrieve the same address from all nodes
+//! ('read all', via the Ring Bus), attach the UART console, dump EEPROM /
+//! temperature / bitstream build ids / system configuration, load data
+//! into node DRAM, broadcast kernel images and initiate boot, and
+//! program FPGAs or FLASH — the preferred, fast path the paper compares
+//! against JTAG.
+//!
+//! `PcieSandbox` keeps its own wall-clock accumulator (`elapsed`), since
+//! host-side interaction is not part of the fabric's event timeline;
+//! commands that need fabric traffic run the network to quiescence.
+
+use std::sync::Arc;
+
+use crate::network::{Network, NullApp};
+use crate::node::regs;
+use crate::router::MemTarget;
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// PCIe 2.0 x4 round-trip for one word access (host → (000) → host).
+const PCIE_WORD_RTT: Time = 1_200;
+
+/// The sandbox session state.
+#[derive(Debug)]
+pub struct PcieSandbox {
+    /// Card whose node (000) the host cable is plugged into.
+    pub card: (u32, u32, u32),
+    /// Accumulated host-visible time spent executing commands.
+    pub elapsed: Time,
+    /// Node whose UART console is currently forwarded, if any.
+    pub uart_attached: Option<NodeId>,
+}
+
+/// Result of one sandbox command.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CmdOutput {
+    pub text: String,
+    pub elapsed: Time,
+}
+
+impl PcieSandbox {
+    pub fn attach(card: (u32, u32, u32)) -> Self {
+        PcieSandbox { card, elapsed: 0, uart_attached: None }
+    }
+
+    fn controller(&self, net: &Network) -> NodeId {
+        net.topo.controller_node(self.card)
+    }
+
+    /// Execute one textual command. Grammar (all numbers hex or decimal):
+    ///
+    /// ```text
+    /// read <node> <addr>          write <node> <addr> <value>
+    /// readall <addr>              temps | eeprom | buildids | config
+    /// load <node> <addr> <len>    loadall <addr> <len>
+    /// boot                        program fpga <build_id> <len>
+    /// program flash <len>         uart <node> | uart detach
+    /// help
+    /// ```
+    pub fn exec(&mut self, net: &mut Network, line: &str) -> CmdOutput {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let t0 = self.elapsed;
+        let text = match toks.as_slice() {
+            ["read", node, addr] => {
+                let (n, a) = (parse_node(net, node), parse_num(addr));
+                let v = self.read_any(net, n, a);
+                format!("{} @{a:#x} = {v:#x}", n)
+            }
+            ["write", node, addr, value] => {
+                let (n, a, v) = (parse_node(net, node), parse_num(addr), parse_num(value));
+                self.write_any(net, n, a, v);
+                format!("{} @{a:#x} <- {v:#x}", n)
+            }
+            ["readall", addr] => self.readall_fmt(net, parse_num(addr), |v| format!("{v:#x}")),
+            ["temps"] => self.readall_fmt(net, regs::TEMP, |v| {
+                format!("{:.1}C", v as f64 / 1000.0)
+            }),
+            ["eeprom"] => self.readall_fmt(net, regs::EEPROM_SERIAL, |v| format!("{v:#x}")),
+            ["buildids"] => self.readall_fmt(net, regs::BUILD_ID, |v| format!("{v:#x}")),
+            ["config"] => {
+                let ctrl = self.controller(net);
+                let (v, lat) = net.ring_read(self.card, ctrl, ctrl, regs::SYS_CARDS);
+                self.elapsed += PCIE_WORD_RTT + lat;
+                format!("system: {v} card(s), {} nodes", v * 27)
+            }
+            ["load", node, addr, len] => {
+                let (n, a, l) = (parse_node(net, node), parse_num(addr), parse_num(len));
+                self.load(net, Some(n), a, l as usize);
+                format!("loaded {l} bytes at {a:#x} on {n}")
+            }
+            ["loadall", addr, len] => {
+                let (a, l) = (parse_num(addr), parse_num(len));
+                self.load(net, None, a, l as usize);
+                format!("loaded {l} bytes at {a:#x} on all {} nodes", net.topo.node_count())
+            }
+            ["boot"] => {
+                let ctrl = self.controller(net);
+                net.tunnel_broadcast_write(ctrl, regs::BOOT_CMD, 1);
+                net.run_to_quiescence(&mut NullApp);
+                self.elapsed += PCIE_WORD_RTT + net.now();
+                "boot initiated on all nodes".to_string()
+            }
+            ["program", "fpga", build_id, len] => {
+                let (b, l) = (parse_num(build_id), parse_num(len));
+                let img = Arc::new(vec![0u8; l as usize]);
+                let t = net.pcie_broadcast_program(MemTarget::Fpga, img, b);
+                self.elapsed += t;
+                format!(
+                    "programmed {} FPGAs (build {b:#x}) in {:.2} s",
+                    net.topo.node_count(),
+                    t as f64 / 1e9
+                )
+            }
+            ["program", "flash", len] => {
+                let l = parse_num(len);
+                let img = Arc::new(vec![0u8; l as usize]);
+                let t = net.pcie_broadcast_program(MemTarget::Flash, img, 0);
+                self.elapsed += t;
+                format!(
+                    "programmed {} FLASH chips in {:.1} min",
+                    net.topo.node_count(),
+                    t as f64 / 60e9
+                )
+            }
+            ["uart", "detach"] => {
+                if let Some(n) = self.uart_attached.take() {
+                    let now = net.now();
+                    net.nodes[n.0 as usize].write_addr(regs::UART_ATTACH, 0, now);
+                }
+                "uart detached".to_string()
+            }
+            ["uart", node] => {
+                let n = parse_node(net, node);
+                self.uart_attached = Some(n);
+                self.write_any(net, n, regs::UART_ATTACH, 1);
+                let lines = net.nodes[n.0 as usize].uart.join("\n");
+                format!("uart attached to {n}\n{lines}")
+            }
+            ["help"] | [] => "commands: read write readall temps eeprom buildids config \
+                              load loadall boot program uart help"
+                .to_string(),
+            other => format!("unknown command: {other:?}"),
+        };
+        CmdOutput { text, elapsed: self.elapsed - t0 }
+    }
+
+    /// Read any node: Ring Bus on the attached card, NetTunnel beyond.
+    fn read_any(&mut self, net: &mut Network, n: NodeId, addr: u64) -> u64 {
+        self.elapsed += PCIE_WORD_RTT;
+        let ctrl = self.controller(net);
+        if net.topo.card_of(n) == self.card {
+            let (v, lat) = net.ring_read(self.card, ctrl, n, addr);
+            self.elapsed += lat;
+            v
+        } else {
+            let t0 = net.now();
+            let req = net.tunnel_read(ctrl, n, addr);
+            net.run_to_quiescence(&mut NullApp);
+            self.elapsed += net.now() - t0;
+            net.tunnel_result(req).expect("tunnel read lost")
+        }
+    }
+
+    fn write_any(&mut self, net: &mut Network, n: NodeId, addr: u64, value: u64) {
+        self.elapsed += PCIE_WORD_RTT;
+        let ctrl = self.controller(net);
+        if net.topo.card_of(n) == self.card {
+            self.elapsed += net.ring_write(self.card, ctrl, n, addr, value);
+        } else {
+            let t0 = net.now();
+            net.tunnel_write(ctrl, n, addr, value);
+            net.run_to_quiescence(&mut NullApp);
+            self.elapsed += net.now() - t0;
+        }
+    }
+
+    fn readall_fmt(
+        &mut self,
+        net: &mut Network,
+        addr: u64,
+        fmt: impl Fn(u64) -> String,
+    ) -> String {
+        let ctrl = self.controller(net);
+        let (vals, lat) = net.ring_read_all(self.card, ctrl, addr);
+        self.elapsed += PCIE_WORD_RTT + lat;
+        let mut s = String::new();
+        for (n, v) in vals {
+            let c = net.topo.coord(n);
+            s.push_str(&format!("({}) {}\n", c.card_label(), fmt(v)));
+        }
+        s
+    }
+
+    /// Load `len` synthetic bytes to `node` (or broadcast to all when
+    /// `None`) at `addr`: the §4.3 boot-image path. PCIe transfer +
+    /// fabric traffic are both modeled.
+    fn load(&mut self, net: &mut Network, node: Option<NodeId>, addr: u64, len: usize) {
+        let p = net.cfg.programming;
+        self.elapsed += (len as f64 / p.pcie_bytes_per_s * 1e9) as Time;
+        let ctrl = self.controller(net);
+        let data = Arc::new(vec![0u8; len]);
+        let t0 = net.now();
+        let chunk = (net.cfg.link.mtu - crate::router::HEADER_BYTES - 9) as usize;
+        let mut off = 0usize;
+        while off < len {
+            let take = chunk.min(len - off);
+            let part = Arc::new(data[off..off + take].to_vec());
+            let payload = crate::router::Payload::Region {
+                target: MemTarget::Dram,
+                offset: addr + off as u64,
+                data: part,
+            };
+            match node {
+                Some(n) if n != ctrl => {
+                    net.send_directed(ctrl, n, crate::router::Proto::Boot, payload);
+                }
+                Some(n) => {
+                    // Local to the controller: no fabric traffic.
+                    let d = match payload {
+                        crate::router::Payload::Region { data, .. } => data,
+                        _ => unreachable!(),
+                    };
+                    net.apply_region(n, MemTarget::Dram, addr + off as u64, d, net.now());
+                }
+                None => {
+                    net.send_broadcast(ctrl, crate::router::Proto::Boot, payload);
+                }
+            }
+            off += take;
+        }
+        net.run_to_quiescence(&mut NullApp);
+        self.elapsed += net.now() - t0;
+    }
+}
+
+fn parse_num(s: &str) -> u64 {
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).expect("bad hex number")
+    } else {
+        s.parse().expect("bad number")
+    }
+}
+
+/// Node syntax: either a flat id (`n17` / `17`) or a Fig 1 label on the
+/// attached card's coordinates (`(120)` style as `120`, 3 digits).
+fn parse_node(net: &Network, s: &str) -> NodeId {
+    let s = s.trim_start_matches('n');
+    if s.len() == 3 && s.chars().all(|c| ('0'..='2').contains(&c)) {
+        let d: Vec<u32> = s.chars().map(|c| c.to_digit(10).unwrap()).collect();
+        return net.topo.id(crate::topology::Coord { x: d[0], y: d[1], z: d[2] });
+    }
+    NodeId(s.parse().expect("bad node id"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip_same_card() {
+        let mut net = Network::card();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        let out = sb.exec(&mut net, "write 222 0xF0000100 0xBEEF");
+        assert!(out.elapsed > 0);
+        let out = sb.exec(&mut net, "read 222 0xF0000100");
+        assert!(out.text.contains("0xbeef"), "{}", out.text);
+    }
+
+    #[test]
+    fn readall_and_temps() {
+        let mut net = Network::card();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        let out = sb.exec(&mut net, "temps");
+        assert_eq!(out.text.lines().count(), 27);
+        assert!(out.text.contains("C"));
+        let out = sb.exec(&mut net, "readall 0xF0000020");
+        assert!(out.text.contains("0x1bc00000"));
+    }
+
+    #[test]
+    fn cross_card_access_uses_tunnel() {
+        let mut net = Network::inc3000();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        // Node on a different card (card (3,3,0) controller).
+        let far = net.topo.controller_node((3, 3, 0));
+        let cmd = format!("write {} 0xF0000100 0x77", far.0);
+        sb.exec(&mut net, &cmd);
+        let out = sb.exec(&mut net, &format!("read {} 0xF0000100", far.0));
+        assert!(out.text.contains("0x77"), "{}", out.text);
+    }
+
+    #[test]
+    fn boot_command_boots_system() {
+        let mut net = Network::card();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        sb.exec(&mut net, "loadall 0x8000 4096");
+        let out = sb.exec(&mut net, "boot");
+        assert!(out.text.contains("boot initiated"));
+        let t = net.now() + 3 * crate::sim::SEC;
+        for n in 0..27 {
+            net.nodes[n].tick_boot(t);
+            assert_eq!(net.nodes[n].read_addr(regs::BOOT_STATUS, t), 2);
+        }
+        // The kernel image actually landed in DRAM.
+        assert!(net.nodes[13].dram.bytes_written >= 4096);
+    }
+
+    #[test]
+    fn program_fpga_fast_path() {
+        let mut net = Network::card();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        let out = sb.exec(&mut net, "program fpga 0xAB 4194304");
+        assert!(out.text.contains("27 FPGAs"));
+        // "a couple of seconds".
+        assert!(out.elapsed < 5 * crate::sim::SEC, "{}", out.elapsed);
+        let out = sb.exec(&mut net, "buildids");
+        assert!(out.text.contains("0xab"));
+    }
+
+    #[test]
+    fn config_reports_card_count() {
+        let mut net = Network::inc3000();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        let out = sb.exec(&mut net, "config");
+        assert!(out.text.contains("16 card(s)"), "{}", out.text);
+        assert!(out.text.contains("432 nodes"));
+    }
+
+    #[test]
+    fn unknown_command_is_reported() {
+        let mut net = Network::card();
+        let mut sb = PcieSandbox::attach((0, 0, 0));
+        let out = sb.exec(&mut net, "frobnicate 1 2");
+        assert!(out.text.contains("unknown command"));
+    }
+}

@@ -1,0 +1,52 @@
+//! # INC-Sim
+//!
+//! A reproduction of the **IBM Neural Computer** (INC) architecture
+//! (Narayanan et al., *Overview of the IBM Neural Computer Architecture*,
+//! CS.DC 2020) as a deterministic, nanosecond-resolution discrete-event
+//! simulation, together with the machine-intelligence workload stack the
+//! paper motivates (Rust coordinator + JAX/Pallas compute AOT-compiled to
+//! XLA and executed through PJRT).
+//!
+//! The INC is a 3D mesh of up to 1728 Zynq (ARM + FPGA) nodes connected by
+//! 1 GB/s SERDES links with hardware credit flow control. On top of the
+//! packet router, three virtual channels are provided — Internal Ethernet,
+//! Postmaster DMA and Bridge FIFO — plus a family of diagnostic fabrics
+//! (JTAG, Ring Bus, NetTunnel, PCIe Sandbox). This crate models all of
+//! them; see `DESIGN.md` for the subsystem inventory and the calibration
+//! of simulated time against the paper's measurements (Table 1 etc.).
+//!
+//! ## Layering
+//!
+//! * [`sim`] — deterministic discrete-event engine (virtual time).
+//! * [`topology`] — cards, cages, systems; single-span and multi-span links.
+//! * [`link`] — SERDES link model with byte-credit flow control.
+//! * [`router`] — adaptive directed routing + exactly-once broadcast.
+//! * [`network`] — the assembled fabric: nodes × routers × links.
+//! * [`channels`] — Internal Ethernet, Postmaster DMA, Bridge FIFO.
+//! * [`diag`] — JTAG, Ring Bus, NetTunnel, PCIe Sandbox.
+//! * [`node`] — per-node model: ARM costs, DRAM, registers, boot.
+//! * [`runtime`] — PJRT executable loading (AOT artifacts from JAX).
+//! * [`coordinator`] — job placement, collectives, timestep scheduling.
+//! * [`workload`] — distributed training, MCTS, distributed learners.
+//! * [`metrics`] — counters and latency histograms.
+//! * [`config`] — calibrated timing/size constants and system presets.
+
+pub mod channels;
+pub mod config;
+pub mod coordinator;
+pub mod diag;
+pub mod link;
+pub mod metrics;
+pub mod network;
+pub mod node;
+pub mod router;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod workload;
+
+pub use config::{LinkTiming, SystemConfig, SystemPreset};
+pub use network::Network;
+pub use sim::{Sim, Time};
+pub use topology::{Coord, NodeId, Topology};

@@ -1,0 +1,188 @@
+//! Dynamic SERDES link state: occupancy + credit-based flow control.
+//!
+//! §2.3: links are pairs of unidirectional serial connections with no
+//! sideband handshake wires. A receiver grants byte credits (sent over
+//! the paired reverse connection); a transmitter decrements its credit
+//! balance as it sends and never exceeds it, so overruns cannot occur and
+//! no data is lost. The protocol runs entirely in the hardware fabric —
+//! in the model, entirely inside the event handlers, with no involvement
+//! of the simulated ARM.
+
+use std::collections::VecDeque;
+
+use crate::config::LinkTiming;
+use crate::router::Packet;
+use crate::sim::Time;
+
+/// Transmit-side dynamic state of one unidirectional link.
+#[derive(Debug)]
+pub struct LinkState {
+    /// Credits (bytes) currently held by the transmitter.
+    credits: u32,
+    /// Time at which the link finishes serializing the current packet.
+    busy_until: Time,
+    /// Packets waiting for the link (either busy or out of credits).
+    queue: VecDeque<Packet>,
+    /// Lifetime counters.
+    pub sent_packets: u64,
+    pub sent_bytes: u64,
+    /// High-water mark of the output queue (backpressure diagnostics).
+    pub max_queue: usize,
+}
+
+impl LinkState {
+    pub fn new(timing: &LinkTiming) -> Self {
+        LinkState {
+            credits: timing.credit_buffer_bytes,
+            busy_until: 0,
+            queue: VecDeque::new(),
+            sent_packets: 0,
+            sent_bytes: 0,
+            max_queue: 0,
+        }
+    }
+
+    #[inline]
+    pub fn credits(&self) -> u32 {
+        self.credits
+    }
+
+    #[inline]
+    pub fn busy_until(&self) -> Time {
+        self.busy_until
+    }
+
+    #[inline]
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Is the link able to take `bytes` right now?
+    #[inline]
+    pub fn ready(&self, now: Time, bytes: u32) -> bool {
+        self.queue.is_empty() && self.busy_until <= now && self.credits >= bytes
+    }
+
+    /// Idle (for adaptive routing's "which links happen to be idle").
+    #[inline]
+    pub fn idle(&self, now: Time) -> bool {
+        self.busy_until <= now && self.queue.is_empty()
+    }
+
+    /// Begin transmitting `pkt` (caller checked credits + idleness; the
+    /// queue may still hold packets behind this one on the drain path).
+    pub fn start_tx(&mut self, now: Time, pkt: &Packet, timing: &LinkTiming) -> Time {
+        debug_assert!(self.busy_until <= now && self.credits >= pkt.wire_bytes);
+        self.credits -= pkt.wire_bytes;
+        self.busy_until = now + timing.ser(pkt.wire_bytes);
+        self.sent_packets += 1;
+        self.sent_bytes += pkt.wire_bytes as u64;
+        self.busy_until
+    }
+
+    /// Queue a packet that could not be sent immediately.
+    pub fn enqueue(&mut self, pkt: Packet) {
+        self.queue.push_back(pkt);
+        self.max_queue = self.max_queue.max(self.queue.len());
+    }
+
+    /// Return credits granted by the receiver (it freed buffer space).
+    pub fn grant(&mut self, bytes: u32, cap: u32) {
+        self.credits = (self.credits + bytes).min(cap);
+    }
+
+    /// Pop the head-of-line packet if the link can send it now.
+    pub fn pop_sendable(&mut self, now: Time) -> Option<Packet> {
+        if self.busy_until > now {
+            return None;
+        }
+        let head_bytes = self.queue.front()?.wire_bytes;
+        if self.credits < head_bytes {
+            return None;
+        }
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{Payload, Proto, RouteKind};
+    use crate::topology::NodeId;
+
+    fn pkt(bytes: usize) -> Packet {
+        Packet::new(
+            0,
+            NodeId(0),
+            NodeId(1),
+            RouteKind::Directed,
+            Proto::Raw { tag: 0 },
+            Payload::bytes(vec![0u8; bytes]),
+            0,
+        )
+    }
+
+    #[test]
+    fn credits_decrease_on_tx_and_recover_on_grant() {
+        let timing = LinkTiming::default();
+        let mut l = LinkState::new(&timing);
+        let p = pkt(1000);
+        assert!(l.ready(0, p.wire_bytes));
+        let done = l.start_tx(0, &p, &timing);
+        assert_eq!(done, 1008);
+        assert_eq!(l.credits(), 4096 - 1008);
+        l.grant(1008, timing.credit_buffer_bytes);
+        assert_eq!(l.credits(), 4096);
+    }
+
+    #[test]
+    fn grant_never_exceeds_cap() {
+        let timing = LinkTiming::default();
+        let mut l = LinkState::new(&timing);
+        l.grant(10_000, timing.credit_buffer_bytes);
+        assert_eq!(l.credits(), timing.credit_buffer_bytes);
+    }
+
+    #[test]
+    fn out_of_credit_blocks_tx() {
+        let timing = LinkTiming::default();
+        let mut l = LinkState::new(&timing);
+        // Drain credits with 1400-byte packets (3×1408 > 4096).
+        let p = pkt(1400);
+        l.start_tx(0, &p, &timing);
+        l.grant(0, timing.credit_buffer_bytes);
+        let mut now = l.busy_until();
+        l.start_tx(now, &p, &timing);
+        now = l.busy_until();
+        assert!(!l.ready(now, p.wire_bytes), "should be out of credits");
+        l.enqueue(p.clone());
+        assert!(l.pop_sendable(now).is_none());
+        l.grant(2 * 1408, timing.credit_buffer_bytes);
+        assert!(l.pop_sendable(now).is_some());
+    }
+
+    #[test]
+    fn busy_link_blocks_until_serialization_done() {
+        let timing = LinkTiming::default();
+        let mut l = LinkState::new(&timing);
+        let p = pkt(500);
+        l.start_tx(0, &p, &timing);
+        assert!(!l.ready(100, p.wire_bytes));
+        assert!(l.ready(508, p.wire_bytes));
+    }
+
+    #[test]
+    fn queue_is_fifo_and_tracks_high_water() {
+        let timing = LinkTiming::default();
+        let mut l = LinkState::new(&timing);
+        let mut a = pkt(10);
+        a.id = 1;
+        let mut b = pkt(10);
+        b.id = 2;
+        l.enqueue(a);
+        l.enqueue(b);
+        assert_eq!(l.max_queue, 2);
+        assert_eq!(l.pop_sendable(0).unwrap().id, 1);
+        assert_eq!(l.pop_sendable(0).unwrap().id, 2);
+    }
+}

@@ -1,0 +1,302 @@
+//! `repro` — the INC-Sim launcher.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts (DESIGN.md §4):
+//! `topo` (Fig 1/2), `table1` (Table 1), `bisection` (§2.3), `programming`
+//! (§4.3), `channels` (Figs 3–5), `sandbox` (§4.3 interactive utility),
+//! `train` / `mcts` / `learners` (the machine-intelligence workloads).
+//! Argument parsing is hand-rolled (offline build, no clap).
+
+use anyhow::Result;
+
+use inc_sim::config::{SystemConfig, SystemPreset};
+use inc_sim::diag::sandbox::PcieSandbox;
+use inc_sim::network::{Network, NullApp};
+use inc_sim::topology::{Coord, NodeId, Topology};
+use inc_sim::workload::{learners, mcts, training};
+
+const USAGE: &str = "\
+repro — INC-Sim: IBM Neural Computer reproduction
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  topo        [--preset card|inc3000|inc9000]   topology census (Fig 1/2)
+  table1                                        Bridge FIFO latency vs hops (Table 1)
+  bisection                                     bandwidth census (§2.3)
+  programming                                   JTAG vs PCIe programming times (§4.3)
+  channels                                      virtual-channel comparison (Figs 3-5)
+  sandbox     [--preset P] [--script FILE]      PCIe Sandbox session (§4.3)
+  train       [--ranks N] [--steps N] [--lr F]  data-parallel LM training (E10)
+  mcts        [--workers N] [--rollouts N]      distributed MCTS (E9)
+  learners                                      learner-overlap experiment (E8)
+";
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            } else {
+                eprintln!("unexpected argument {:?}", args[i]);
+                std::process::exit(2);
+            }
+        }
+        Args { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.flags.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value for --{key}: {v:?}");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+
+    fn get_opt(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    fn preset(&self, default: SystemPreset) -> SystemPreset {
+        match self.flags.get("preset") {
+            Some(s) => SystemPreset::parse(s).unwrap_or_else(|| {
+                eprintln!("unknown preset {s}; use card | inc3000 | inc9000");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "topo" => topo(args.preset(SystemPreset::Inc3000)),
+        "table1" => table1(),
+        "bisection" => bisection(),
+        "programming" => programming(),
+        "channels" => channels(),
+        "sandbox" => sandbox(args.preset(SystemPreset::Card), args.get_opt("script")),
+        "train" => train(
+            args.get("ranks", 4usize),
+            args.get("steps", 200u32),
+            args.get("lr", 0.25f32),
+        )?,
+        "mcts" => run_mcts(args.get("workers", 8usize), args.get("rollouts", 3000u64)),
+        "learners" => run_learners(),
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn topo(p: SystemPreset) {
+    let t = Topology::preset(p);
+    let (x, y, z) = t.dims();
+    println!(
+        "preset: {p:?} — {x}x{y}x{z} mesh, {} nodes, {} cards",
+        t.node_count(),
+        t.cards().len()
+    );
+    println!("unidirectional links: {}", t.link_count());
+    println!(
+        "card port capacity: {} links = {} GB/s (paper: 432)",
+        Topology::card_port_capacity(),
+        Topology::card_port_capacity()
+    );
+    if t.dims().0 % 2 == 0 {
+        println!("bisection: {} GB/s", t.bisection_gbps());
+    }
+    let card = (0, 0, 0);
+    println!(
+        "card {:?}: controller {} (000), gateway {} (100), pcie2 {} (200)",
+        card,
+        t.controller_node(card),
+        t.gateway_node(card),
+        t.pcie2_node(card)
+    );
+}
+
+fn table1() {
+    println!("Table 1 — Bridge FIFO latency between two nodes (single card)");
+    println!("{:<10} {:>9} {:>12} {:>8}", "hops", "paper µs", "measured µs", "error");
+    let paper = [(0u32, 0.25f64), (1, 1.1), (3, 2.5), (6, 4.7)];
+    let dsts = [
+        Coord { x: 0, y: 0, z: 0 },
+        Coord { x: 1, y: 0, z: 0 },
+        Coord { x: 1, y: 1, z: 1 },
+        Coord { x: 2, y: 2, z: 2 },
+    ];
+    for ((hops, us), dst) in paper.iter().zip(dsts) {
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let d = net.topo.id(dst);
+        net.fifo_connect(src, d, 0, 64);
+        net.fifo_send(src, 0, &[1]);
+        net.run_to_quiescence(&mut NullApp);
+        let got = net.now() as f64 / 1000.0;
+        println!("{:<10} {:>9.2} {:>12.2} {:>7.1}%", hops, us, got, (got - us) / us * 100.0);
+    }
+}
+
+fn bisection() {
+    println!("§2.3 bandwidth census");
+    println!(
+        "card port capacity: {} unidirectional links = {} GB/s (paper: 432 GB/s)",
+        Topology::card_port_capacity(),
+        Topology::card_port_capacity()
+    );
+    for p in [SystemPreset::Inc3000, SystemPreset::Inc9000] {
+        let t = Topology::preset(p);
+        println!(
+            "{p:?}: bisection {} GB/s (paper: {})",
+            t.bisection_gbps(),
+            if p == SystemPreset::Inc3000 { 288 } else { 864 }
+        );
+    }
+}
+
+fn programming() {
+    use inc_sim::router::MemTarget;
+    use std::sync::Arc;
+    let img = Arc::new(vec![0u8; 4 * 1024 * 1024]);
+    println!("§4.3 programming-time comparison (4 MiB bitstream)");
+    let mut net = Network::card();
+    let t = net.jtag_program_fpgas((0, 0, 0), img.clone(), 1);
+    println!("JTAG,  27 FPGAs:  {:>9.1} min (paper ≈ 15 min)", t as f64 / 60e9);
+    let mut net = Network::card();
+    let t = net.jtag_program_flash((0, 0, 0), img.clone());
+    println!("JTAG,  27 FLASH:  {:>9.1} h   (paper > 5 h)", t as f64 / 3600e9);
+    let mut net = Network::card();
+    let t = net.pcie_broadcast_program(MemTarget::Fpga, img.clone(), 1);
+    println!("PCIe,  27 FPGAs:  {:>9.2} s   (paper: a couple of seconds)", t as f64 / 1e9);
+    let mut net = Network::inc3000();
+    let t = net.pcie_broadcast_program(MemTarget::Fpga, img.clone(), 1);
+    println!(
+        "PCIe, 432 FPGAs:  {:>9.2} s   (paper: nearly identical to one card)",
+        t as f64 / 1e9
+    );
+    let mut net = Network::inc3000();
+    let t = net.pcie_broadcast_program(MemTarget::Flash, img, 1);
+    println!("PCIe, 432 FLASH:  {:>9.1} min (paper ≈ 2 min)", t as f64 / 60e9);
+}
+
+fn channels() {
+    println!("one 64-byte transfer, adjacent nodes, per virtual channel:");
+    let (src, dst) = (NodeId(0), NodeId(1));
+    let mut net = Network::card();
+    net.fifo_connect(src, dst, 0, 64);
+    net.fifo_send(src, 0, &(0..8u64).collect::<Vec<_>>());
+    net.run_to_quiescence(&mut NullApp);
+    println!("  bridge fifo : {:>8.2} µs", net.now() as f64 / 1000.0);
+    let mut net = Network::card();
+    net.pm_open(dst, 0);
+    net.pm_send(src, dst, 0, vec![0; 64]);
+    net.run_to_quiescence(&mut NullApp);
+    println!("  postmaster  : {:>8.2} µs", net.now() as f64 / 1000.0);
+    let mut net = Network::card();
+    net.eth_send(src, dst, 64, 0);
+    net.run_to_quiescence(&mut NullApp);
+    println!("  ethernet    : {:>8.2} µs", net.now() as f64 / 1000.0);
+}
+
+fn sandbox(p: SystemPreset, script: Option<String>) {
+    let mut net = Network::new(SystemConfig::new(p));
+    let mut sb = PcieSandbox::attach((0, 0, 0));
+    let exec_line = |net: &mut Network, sb: &mut PcieSandbox, line: &str| {
+        let out = sb.exec(net, line);
+        println!("{}", out.text);
+        println!("  [{} µs]", out.elapsed / 1000);
+    };
+    match script {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path).expect("read script");
+            for line in text.lines().filter(|l| !l.trim().is_empty() && !l.starts_with('#')) {
+                println!("> {line}");
+                exec_line(&mut net, &mut sb, line);
+            }
+        }
+        None => {
+            use std::io::BufRead;
+            println!("PCIe Sandbox (node (000), card (0,0,0)); 'help' for commands, 'quit' to exit");
+            for line in std::io::stdin().lock().lines() {
+                let line = line.unwrap();
+                if line.trim() == "quit" {
+                    break;
+                }
+                exec_line(&mut net, &mut sb, &line);
+            }
+        }
+    }
+}
+
+fn train(ranks: usize, steps: u32, lr: f32) -> Result<()> {
+    let rt = inc_sim::runtime::load_default()?;
+    let mut net = Network::card();
+    let cfg = training::TrainConfig { ranks, steps, lr, ..Default::default() };
+    let report = training::train(&mut net, &rt, &cfg)?;
+    println!(
+        "model {} — {} params, {} ranks, {} steps",
+        rt.manifest.model, report.params, ranks, steps
+    );
+    println!("{:>6} {:>10} {:>12}", "step", "loss", "vtime ms");
+    for p in &report.curve {
+        println!("{:>6} {:>10.4} {:>12.3}", p.step, p.loss, p.vtime as f64 / 1e6);
+    }
+    println!(
+        "loss {:.4} -> {:.4}; vtime {:.3} ms ({:.1}% compute / {:.1}% comm)",
+        report.first_loss,
+        report.final_loss,
+        report.vtime_total as f64 / 1e6,
+        report.vtime_compute as f64 / report.vtime_total as f64 * 100.0,
+        report.vtime_comm as f64 / report.vtime_total as f64 * 100.0,
+    );
+    Ok(())
+}
+
+fn run_mcts(workers: usize, rollouts: u64) {
+    let r = mcts::run_card_search(workers, rollouts);
+    println!(
+        "mcts: {} rollouts on {} workers -> best path {:?} (value {:.3})",
+        r.rollouts, workers, r.best_path, r.best_value
+    );
+    println!(
+        "makespan {:.3} ms, throughput {:.0} rollouts/s (virtual)",
+        r.makespan as f64 / 1e6,
+        r.throughput
+    );
+}
+
+fn run_learners() {
+    let cfg = learners::LearnerConfig::default();
+    let (streamed, aggregated) = learners::overlap_advantage(Network::card, cfg);
+    println!(
+        "distributed learners, {} outputs/step/node of {} B:",
+        cfg.outputs_per_step, cfg.record_bytes
+    );
+    println!("  send-as-generated (postmaster): {:>9.1} µs/step", streamed / 1000.0);
+    println!("  aggregate-then-send           : {:>9.1} µs/step", aggregated / 1000.0);
+    println!("  overlap advantage             : {:>9.2}x", aggregated / streamed);
+}

@@ -1,0 +1,179 @@
+//! Counters and latency histograms for the fabric and channels.
+
+use std::collections::BTreeMap;
+
+use crate::sim::Time;
+
+/// Log-scaled latency histogram (ns), plus exact min/max/mean.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    count: u64,
+    sum: u128,
+    min: Time,
+    max: Time,
+    /// Power-of-two buckets: bucket i counts samples in [2^i, 2^(i+1)).
+    buckets: [u64; 48],
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { count: 0, sum: 0, min: Time::MAX, max: 0, buckets: [0; 48] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, ns: Time) {
+        self.count += 1;
+        self.sum += ns as u128;
+        self.min = self.min.min(ns);
+        self.max = self.max.max(ns);
+        let b = (64 - ns.max(1).leading_zeros() - 1).min(47) as usize;
+        self.buckets[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> Time {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> Time {
+        self.max
+    }
+
+    /// Approximate percentile from the log buckets (upper bound of the
+    /// bucket containing the p-quantile sample).
+    pub fn percentile(&self, p: f64) -> Time {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max
+    }
+}
+
+/// Fabric-wide metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// End-to-end packet latency by protocol name.
+    pub packet_latency: BTreeMap<&'static str, LatencyHist>,
+    pub packets_delivered: u64,
+    pub packets_injected: u64,
+    pub broadcast_copies: u64,
+    pub bytes_delivered: u64,
+    /// Events where a packet had to queue on a busy/credit-blocked link.
+    pub link_stalls: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_delivery(&mut self, proto: &'static str, latency: Time, bytes: u32) {
+        self.packets_delivered += 1;
+        self.bytes_delivered += bytes as u64;
+        self.packet_latency.entry(proto).or_insert_with(LatencyHist::new).record(latency);
+    }
+
+    pub fn latency(&self, proto: &'static str) -> Option<&LatencyHist> {
+        self.packet_latency.get(proto)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "packets: injected={} delivered={} (broadcast copies={}), bytes={}, link stalls={}\n",
+            self.packets_injected,
+            self.packets_delivered,
+            self.broadcast_copies,
+            self.bytes_delivered,
+            self.link_stalls
+        ));
+        for (proto, h) in &self.packet_latency {
+            s.push_str(&format!(
+                "  {:<12} n={:<8} mean={:.2}µs min={:.2}µs max={:.2}µs p99≈{:.2}µs\n",
+                proto,
+                h.count(),
+                h.mean() / 1000.0,
+                h.min() as f64 / 1000.0,
+                h.max() as f64 / 1000.0,
+                h.percentile(0.99) as f64 / 1000.0,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_basic_stats() {
+        let mut h = LatencyHist::new();
+        for v in [100, 200, 300, 400] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 400);
+        assert!((h.mean() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_hist_is_sane() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(0.5), 0);
+    }
+
+    #[test]
+    fn percentile_upper_bounds() {
+        let mut h = LatencyHist::new();
+        for _ in 0..99 {
+            h.record(1000);
+        }
+        h.record(1_000_000);
+        assert!(h.percentile(0.5) <= 2048);
+        assert!(h.percentile(1.0) >= 1_000_000 / 2);
+    }
+
+    #[test]
+    fn metrics_report_contains_protocols() {
+        let mut m = Metrics::new();
+        m.record_delivery("fifo", 1100, 16);
+        m.record_delivery("eth", 20_000, 1500);
+        let r = m.report();
+        assert!(r.contains("fifo"));
+        assert!(r.contains("eth"));
+    }
+}

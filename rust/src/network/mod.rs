@@ -1,0 +1,549 @@
+//! The assembled INC fabric: nodes × routers × links + virtual channels.
+//!
+//! [`Network`] owns all dynamic state (link occupancy/credits, per-node
+//! registers and DRAM, channel endpoints) plus the event queue, and is
+//! driven by [`Network::run_until`] / [`Network::run_to_quiescence`].
+//! Workloads react to traffic through the [`App`] trait; every channel
+//! also buffers delivered data in inboxes that can be read after a run,
+//! so simple drivers need no callbacks at all.
+
+use crate::channels::bridge_fifo::BridgeFifoFabric;
+use crate::channels::ethernet::{EthFrame, EthernetFabric};
+use crate::channels::postmaster::{PmRecord, PostmasterFabric};
+use crate::config::SystemConfig;
+use crate::link::LinkState;
+use crate::metrics::Metrics;
+use crate::node::NodeState;
+use crate::router::{
+    broadcast_forwards, pick_adaptive, productive_links_buf, Packet, Payload, Proto, RouteKind,
+    ZMode,
+};
+use crate::sim::{Sim, Time};
+use crate::topology::{LinkId, NodeId, Topology};
+
+/// Events dispatched by the fabric.
+#[derive(Debug)]
+pub enum Event {
+    /// Packet enters the source node's router (after injection overhead).
+    Inject { packet: Packet },
+    /// Packet fully received at the downstream end of `link`.
+    Arrive { link: LinkId, packet: Packet },
+    /// `link` may be able to transmit a queued packet now.
+    Drain { link: LinkId },
+    /// Receiver of `link` freed buffer space; credits return to its tx.
+    Credit { link: LinkId, bytes: u32 },
+    /// Bridge-FIFO receive logic finished for a packet (§3.3).
+    FifoRx { node: NodeId, packet: Packet },
+    /// Local (same-node) Bridge-FIFO delivery, bypassing the network.
+    FifoLocal { node: NodeId, channel: u8, words: Vec<u64> },
+    /// Postmaster target DMA completed for one record (§3.2).
+    PmRx { node: NodeId, queue: u8, record: PmRecord },
+    /// Ethernet frame DMA'd into destination DRAM; notify driver (§3.1).
+    EthRx { node: NodeId, frame: EthFrame },
+    /// Ethernet driver polling tick.
+    EthPoll { node: NodeId },
+    /// Ethernet frame ready for injection after tx-side software costs.
+    EthTx { frame: EthFrame },
+    /// NetTunnel / diagnostic register access executed at `node`.
+    TunnelExec { node: NodeId, packet: Packet },
+    /// Application timer.
+    Timer { node: NodeId, tag: u64 },
+}
+
+/// Workload hook points. All methods have default empty bodies; override
+/// the ones the workload cares about. Delivered data is *also* available
+/// from channel inboxes after a run.
+#[allow(unused_variables)]
+pub trait App {
+    /// A directed/broadcast `Proto::Raw` packet arrived at `node`.
+    fn on_raw(&mut self, net: &mut Network, node: NodeId, packet: &Packet) {}
+    /// Words became readable on a Bridge-FIFO read port.
+    fn on_fifo(&mut self, net: &mut Network, node: NodeId, channel: u8, words: &[u64]) {}
+    /// A Postmaster record landed in `node`'s receive stream.
+    fn on_postmaster(&mut self, net: &mut Network, node: NodeId, queue: u8, rec: &PmRecord) {}
+    /// An internal-Ethernet frame was handed to the kernel at `node`.
+    fn on_eth(&mut self, net: &mut Network, node: NodeId, frame: &EthFrame) {}
+    /// An application timer fired.
+    fn on_timer(&mut self, net: &mut Network, node: NodeId, tag: u64) {}
+}
+
+/// An [`App`] that does nothing (inbox-driven workloads).
+pub struct NullApp;
+impl App for NullApp {}
+
+/// The assembled system.
+pub struct Network {
+    pub cfg: SystemConfig,
+    pub topo: Topology,
+    pub links: Vec<LinkState>,
+    pub sim: Sim<Event>,
+    pub rng: crate::util::SplitMix64,
+    pub metrics: Metrics,
+    pub nodes: Vec<NodeState>,
+    pub fifos: BridgeFifoFabric,
+    pub postmaster: PostmasterFabric,
+    pub eth: EthernetFabric,
+    /// Ethernet frames whose packet is in flight, keyed by packet id.
+    pub(crate) eth_inflight: std::collections::HashMap<u64, EthFrame>,
+    /// NetTunnel read results, keyed by request id.
+    pub tunnel_results: std::collections::HashMap<u64, u64>,
+    /// Links marked defective (§2.4 "network defect avoidance").
+    pub failed_links: Vec<bool>,
+    next_packet_id: u64,
+}
+
+impl Network {
+    pub fn new(cfg: SystemConfig) -> Self {
+        let topo = Topology::preset(cfg.preset);
+        let topo_link_count = topo.link_count();
+        let links = (0..topo_link_count).map(|_| LinkState::new(&cfg.link)).collect();
+        let n = topo.node_count();
+        let nodes = (0..n).map(|i| NodeState::new(NodeId(i as u32), &cfg)).collect();
+        Network {
+            rng: crate::util::SplitMix64::new(cfg.seed),
+            topo,
+            links,
+            sim: Sim::new(),
+            metrics: Metrics::new(),
+            nodes,
+            fifos: BridgeFifoFabric::new(n),
+            postmaster: PostmasterFabric::new(n),
+            eth: EthernetFabric::new(n, &cfg),
+            eth_inflight: std::collections::HashMap::new(),
+            tunnel_results: std::collections::HashMap::new(),
+            failed_links: vec![false; topo_link_count],
+            cfg,
+            next_packet_id: 0,
+        }
+    }
+
+    pub fn card() -> Self {
+        Self::new(SystemConfig::card())
+    }
+
+    pub fn inc3000() -> Self {
+        Self::new(SystemConfig::inc3000())
+    }
+
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.sim.now()
+    }
+
+    pub fn next_packet_id(&mut self) -> u64 {
+        let id = self.next_packet_id;
+        self.next_packet_id += 1;
+        id
+    }
+
+    /// Build and inject a directed packet from `src` (paying injection
+    /// overhead). Returns the packet id.
+    pub fn send_directed(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        let id = self.next_packet_id();
+        let pkt = Packet::new(id, src, dst, RouteKind::Directed, proto, payload, self.now());
+        self.inject(pkt);
+        id
+    }
+
+    /// Build and inject a broadcast packet from `src`.
+    pub fn send_broadcast(&mut self, src: NodeId, proto: Proto, payload: Payload) -> u64 {
+        let id = self.next_packet_id();
+        let pkt = Packet::new(
+            id,
+            src,
+            src,
+            RouteKind::Broadcast { zmode: ZMode::Line },
+            proto,
+            payload,
+            self.now(),
+        );
+        self.inject(pkt);
+        id
+    }
+
+    /// Mark a link defective: directed/multicast routing avoids it
+    /// (§2.4's "network defect avoidance" extension).
+    pub fn fail_link(&mut self, l: LinkId) {
+        self.failed_links[l.0 as usize] = true;
+    }
+
+    /// Bring a failed link back into service.
+    pub fn repair_link(&mut self, l: LinkId) {
+        self.failed_links[l.0 as usize] = false;
+    }
+
+    /// Spanning-tree multicast to `dsts` (§2.4 extension): shared path
+    /// prefixes carry one copy. Returns the packet id.
+    pub fn send_multicast(
+        &mut self,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        assert!(!dsts.is_empty(), "multicast needs destinations");
+        let id = self.next_packet_id();
+        let mut pkt =
+            Packet::new(id, src, src, RouteKind::Multicast, proto, payload, self.now());
+        pkt.mcast = Some(std::sync::Arc::new(dsts.to_vec()));
+        self.inject(pkt);
+        id
+    }
+
+    /// Inject an already-built packet at its source node.
+    pub fn inject(&mut self, packet: Packet) {
+        self.metrics.packets_injected += 1;
+        let delay = self.cfg.link.inject_latency;
+        self.sim.after(delay, Event::Inject { packet });
+    }
+
+    /// Run until the event queue empties or `deadline` passes. Returns
+    /// the number of events dispatched.
+    pub fn run_until(&mut self, app: &mut dyn App, deadline: Time) -> u64 {
+        let start = self.sim.dispatched();
+        while let Some((_, ev)) = self.sim.pop_until(deadline) {
+            self.handle(ev, app);
+        }
+        if self.sim.peek_time().map_or(true, |t| t > deadline) && self.sim.now() < deadline {
+            self.sim.advance_to(deadline);
+        }
+        self.sim.dispatched() - start
+    }
+
+    /// Run until no events remain.
+    pub fn run_to_quiescence(&mut self, app: &mut dyn App) -> u64 {
+        let start = self.sim.dispatched();
+        while let Some((_, ev)) = self.sim.pop() {
+            self.handle(ev, app);
+        }
+        self.sim.dispatched() - start
+    }
+
+    fn handle(&mut self, ev: Event, app: &mut dyn App) {
+        match ev {
+            Event::Inject { packet } => self.route_from(packet.src, packet, None, app),
+            Event::Arrive { link, packet } => self.arrive(link, packet, app),
+            Event::Drain { link } => self.drain(link),
+            Event::Credit { link, bytes } => {
+                self.links[link.0 as usize].grant(bytes, self.cfg.link.credit_buffer_bytes);
+                self.drain(link);
+            }
+            Event::FifoRx { node, packet } => self.fifo_rx(node, packet, app),
+            Event::FifoLocal { node, channel, words } => {
+                self.fifo_local_rx(node, channel, words, app)
+            }
+            Event::PmRx { node, queue, record } => self.pm_rx(node, queue, record, app),
+            Event::EthRx { node, frame } => self.eth_rx(node, frame, app),
+            Event::EthPoll { node } => self.eth_poll(node, app),
+            Event::EthTx { frame } => self.eth_tx_inject(frame),
+            Event::TunnelExec { node, packet } => self.tunnel_exec(node, packet),
+            Event::Timer { node, tag } => app.on_timer(self, node, tag),
+        }
+    }
+
+    /// A packet is at `here`'s router; forward it (or deliver).
+    ///
+    /// `arrived_via` is the link it came in on (None right after
+    /// injection at the source).
+    fn route_from(
+        &mut self,
+        here: NodeId,
+        packet: Packet,
+        arrived_via: Option<LinkId>,
+        app: &mut dyn App,
+    ) {
+        match packet.route {
+            RouteKind::Directed => {
+                if here == packet.dst {
+                    self.deliver(here, packet, app);
+                    return;
+                }
+                let mut buf = [crate::topology::LinkId(0); 6];
+                let n = productive_links_buf(&self.topo, here, packet.dst, &mut buf);
+                // Defect avoidance: drop failed links from the set.
+                let failed = &self.failed_links;
+                let mut live = [crate::topology::LinkId(0); 6];
+                let mut m = 0;
+                for &l in &buf[..n] {
+                    if !failed[l.0 as usize] {
+                        live[m] = l;
+                        m += 1;
+                    }
+                }
+                let now = self.now();
+                let links = &self.links;
+                let bytes = packet.wire_bytes;
+                let chosen = if m > 0 {
+                    pick_adaptive(
+                        &live[..m],
+                        |l| links[l.0 as usize].ready(now, bytes),
+                        |l| links[l.0 as usize].busy_until(),
+                        &mut self.rng,
+                    )
+                } else {
+                    // Every minimal link is dead: lateral escape over any
+                    // live link that gets closest to the destination.
+                    self.topo
+                        .out_links(here)
+                        .iter()
+                        .copied()
+                        .filter(|&l| !failed[l.0 as usize])
+                        .min_by_key(|&l| self.topo.min_hops(self.topo.link(l).dst, packet.dst))
+                };
+                // Livelock guard (misrouting around defects is bounded).
+                let budget = 4 * self.topo.min_hops(packet.src, packet.dst) + 64;
+                if packet.hops > budget {
+                    panic!("packet {} exceeded hop budget (defect livelock?)", packet.id);
+                }
+                if let Some(l) = chosen {
+                    self.link_send(l, packet);
+                } else {
+                    panic!("node {here} fully disconnected; cannot route {}", packet.id);
+                }
+            }
+            RouteKind::Multicast => {
+                let dsts = packet.mcast.clone().expect("multicast without targets");
+                let (local, groups) = crate::router::multicast::multicast_partition(
+                    &self.topo,
+                    here,
+                    &dsts,
+                    &self.failed_links,
+                );
+                for (link, subset) in groups {
+                    let mut copy = packet.clone();
+                    copy.mcast = Some(std::sync::Arc::new(subset));
+                    self.link_send(link, copy);
+                }
+                if local {
+                    self.deliver(here, packet, app);
+                }
+            }
+            RouteKind::Broadcast { .. } => {
+                let arrived = arrived_via.map(|l| {
+                    let info = self.topo.link(l);
+                    let zmode = match packet.route {
+                        RouteKind::Broadcast { zmode } => zmode,
+                        _ => unreachable!(),
+                    };
+                    (info.dir, info.span, zmode)
+                });
+                let fwd = broadcast_forwards(&self.topo, here, arrived);
+                for (lid, rk) in fwd {
+                    let mut copy = packet.clone();
+                    copy.route = rk;
+                    copy.hops = packet.hops;
+                    self.link_send(lid, copy);
+                }
+                // Every node (including the source) receives one copy.
+                self.metrics.broadcast_copies += 1;
+                self.deliver(here, packet, app);
+            }
+        }
+    }
+
+    /// Transmit `packet` on `link` now, or queue it if busy/out of credit.
+    fn link_send(&mut self, link: LinkId, packet: Packet) {
+        let now = self.now();
+        let st = &mut self.links[link.0 as usize];
+        if st.ready(now, packet.wire_bytes) {
+            let busy_until = st.start_tx(now, &packet, &self.cfg.link);
+            let arrive_at = now + self.cfg.link.hop(packet.wire_bytes);
+            self.sim.at(busy_until, Event::Drain { link });
+            self.sim.at(arrive_at, Event::Arrive { link, packet });
+        } else {
+            st.enqueue(packet);
+            self.metrics.link_stalls += 1;
+        }
+    }
+
+    /// Serialization of a queued packet becomes possible.
+    fn drain(&mut self, link: LinkId) {
+        let now = self.now();
+        if let Some(packet) = self.links[link.0 as usize].pop_sendable(now) {
+            let busy_until = self.links[link.0 as usize].start_tx(now, &packet, &self.cfg.link);
+            let arrive_at = now + self.cfg.link.hop(packet.wire_bytes);
+            self.sim.at(busy_until, Event::Drain { link });
+            self.sim.at(arrive_at, Event::Arrive { link, packet });
+        }
+    }
+
+    fn arrive(&mut self, link: LinkId, mut packet: Packet, app: &mut dyn App) {
+        packet.hops += 1;
+        // Receiver frees its input buffer once the packet moves on; the
+        // credit flight back to the transmitter takes one router latency.
+        self.sim.after(
+            self.cfg.link.router_latency,
+            Event::Credit { link, bytes: packet.wire_bytes },
+        );
+        let here = self.topo.link(link).dst;
+        self.route_from(here, packet, Some(link), app);
+    }
+
+    /// Packet reached its destination node: hand to the Packet Demux
+    /// (Fig 5) which dispatches per protocol.
+    fn deliver(&mut self, node: NodeId, packet: Packet, app: &mut dyn App) {
+        if !matches!(packet.proto, Proto::BridgeFifo { .. }) {
+            let latency = self.now() - packet.injected_at;
+            self.metrics.record_delivery(proto_name(packet.proto), latency, packet.wire_bytes);
+        }
+        match packet.proto {
+            Proto::BridgeFifo { .. } => {
+                // Bridge-FIFO receive logic (half of the hop-0 FIFO
+                // latency budget; see config::SystemConfig docs); the
+                // end-to-end latency metric is recorded there, once the
+                // words become readable.
+                let d = self.cfg.bridge_fifo_logic / 2;
+                self.sim.after(d, Event::FifoRx { node, packet });
+                return;
+            }
+            Proto::Postmaster { queue } => self.pm_deliver(node, queue, packet),
+            Proto::Ethernet => self.eth_deliver(node, packet),
+            Proto::NetTunnel => {
+                // Tunnel logic executes the access in fabric hardware.
+                self.sim.after(100, Event::TunnelExec { node, packet });
+            }
+            Proto::Boot => self.boot_deliver(node, packet),
+            Proto::Raw { .. } => app.on_raw(self, node, &packet),
+        }
+    }
+}
+
+pub(crate) fn proto_name(p: Proto) -> &'static str {
+    match p {
+        Proto::Ethernet => "ethernet",
+        Proto::Postmaster { .. } => "postmaster",
+        Proto::BridgeFifo { .. } => "bridge_fifo",
+        Proto::NetTunnel => "net_tunnel",
+        Proto::Boot => "boot",
+        Proto::Raw { .. } => "raw",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Coord;
+
+    #[test]
+    fn event_size_budget() {
+        // The event queue moves these by value O(log n) times per event;
+        // keep them small (see benches/sim_engine.rs).
+        eprintln!("size Event = {}", std::mem::size_of::<Event>());
+        eprintln!("size Packet = {}", std::mem::size_of::<Packet>());
+        assert!(std::mem::size_of::<Event>() <= 136);
+    }
+
+    struct Collect {
+        raw: Vec<(NodeId, u64)>,
+    }
+    impl App for Collect {
+        fn on_raw(&mut self, net: &mut Network, node: NodeId, packet: &Packet) {
+            self.raw.push((node, net.now() - packet.injected_at));
+        }
+    }
+
+    #[test]
+    fn directed_packet_latency_matches_calibration() {
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = net.topo.id(Coord { x: 2, y: 2, z: 2 });
+        // 6 hops; Raw payload U64s = 32B + 8B header = 40B wire.
+        net.send_directed(src, dst, Proto::Raw { tag: 1 }, Payload::U64s([1, 2, 3, 4]));
+        let mut app = Collect { raw: vec![] };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.raw.len(), 1);
+        let (node, lat) = app.raw[0];
+        assert_eq!(node, dst);
+        // inject 150 + 6 × (684 + 40) = 4494.
+        assert_eq!(lat, 150 + 6 * (684 + 40));
+    }
+
+    #[test]
+    fn broadcast_reaches_every_node_exactly_once() {
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 1, y: 1, z: 1 });
+        net.send_broadcast(src, Proto::Raw { tag: 7 }, Payload::Empty);
+        let mut app = Collect { raw: vec![] };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.raw.len(), 27);
+        let mut nodes: Vec<u32> = app.raw.iter().map(|(n, _)| n.0).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 27);
+    }
+
+    #[test]
+    fn broadcast_inc3000_all_nodes() {
+        let mut net = Network::inc3000();
+        let src = net.topo.id(Coord { x: 5, y: 7, z: 1 });
+        net.send_broadcast(src, Proto::Raw { tag: 7 }, Payload::Empty);
+        let mut app = Collect { raw: vec![] };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.raw.len(), 432);
+    }
+
+    #[test]
+    fn many_packets_conserve_count() {
+        let mut net = Network::card();
+        let n = net.topo.node_count() as u32;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    net.send_directed(
+                        NodeId(i),
+                        NodeId(j),
+                        Proto::Raw { tag: 0 },
+                        Payload::Empty,
+                    );
+                }
+            }
+        }
+        let mut app = Collect { raw: vec![] };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.raw.len(), (n * (n - 1)) as usize);
+        assert_eq!(net.metrics.packets_delivered as usize, app.raw.len());
+    }
+
+    #[test]
+    fn determinism_same_seed_same_trace() {
+        let run = || {
+            let mut net = Network::card();
+            for i in 0..27u32 {
+                net.send_directed(
+                    NodeId(i),
+                    NodeId(26 - i),
+                    Proto::Raw { tag: 0 },
+                    Payload::bytes(vec![0u8; 256]),
+                );
+            }
+            let mut app = Collect { raw: vec![] };
+            net.run_to_quiescence(&mut app);
+            (net.now(), app.raw)
+        };
+        let (t1, r1) = run();
+        let (t2, r2) = run();
+        assert_eq!(t1, t2);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn congestion_stalls_are_counted_and_resolved() {
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = net.topo.id(Coord { x: 1, y: 0, z: 0 });
+        // Hammer one link with more bytes than its credit buffer.
+        for _ in 0..64 {
+            net.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::bytes(vec![0u8; 1024]));
+        }
+        let mut app = Collect { raw: vec![] };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.raw.len(), 64);
+        assert!(net.metrics.link_stalls > 0, "expected credit/busy stalls");
+    }
+}

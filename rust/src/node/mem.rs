@@ -1,0 +1,124 @@
+//! Sparse memory: word overlay + bulk regions.
+//!
+//! Nodes have 1 GB of DRAM each and an INC 3000 has 432 of them; backing
+//! it all with real allocations would need hundreds of GB when the boot
+//! broadcast loads multi-MB images everywhere. Bulk loads therefore store
+//! `Arc` regions (shared across all nodes of a broadcast — O(1) per
+//! node), while word writes (NetTunnel/RingBus debug pokes, checkpoints)
+//! go to a sparse overlay that shadows the regions.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+#[derive(Debug)]
+pub struct SparseMem {
+    size: u64,
+    /// Word overlay (address → value); takes precedence over regions.
+    words: BTreeMap<u64, u64>,
+    /// Bulk regions: (offset, data), later entries shadow earlier ones.
+    regions: Vec<(u64, Arc<Vec<u8>>)>,
+    pub bytes_written: u64,
+}
+
+impl SparseMem {
+    pub fn new(size: u64) -> Self {
+        SparseMem { size, words: BTreeMap::new(), regions: Vec::new(), bytes_written: 0 }
+    }
+
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    /// Install a bulk region (e.g. a kernel image at its load address).
+    pub fn write_region(&mut self, offset: u64, data: Arc<Vec<u8>>) {
+        assert!(
+            offset + data.len() as u64 <= self.size,
+            "region [{offset}, +{}) exceeds memory size {}",
+            data.len(),
+            self.size
+        );
+        self.bytes_written += data.len() as u64;
+        self.regions.push((offset, data));
+    }
+
+    pub fn write_u64(&mut self, addr: u64, value: u64) {
+        assert!(addr + 8 <= self.size);
+        self.bytes_written += 8;
+        self.words.insert(addr, value);
+    }
+
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        if let Some(v) = self.words.get(&addr) {
+            return *v;
+        }
+        // Later regions shadow earlier ones.
+        for (off, data) in self.regions.iter().rev() {
+            if addr >= *off && addr + 8 <= *off + data.len() as u64 {
+                let i = (addr - off) as usize;
+                return u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+            }
+        }
+        0
+    }
+
+    pub fn read_byte(&self, addr: u64) -> u8 {
+        if let Some(v) = self.words.get(&(addr & !7)) {
+            return v.to_le_bytes()[(addr & 7) as usize];
+        }
+        for (off, data) in self.regions.iter().rev() {
+            if addr >= *off && addr < *off + data.len() as u64 {
+                return data[(addr - off) as usize];
+            }
+        }
+        0
+    }
+
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_roundtrip() {
+        let mut m = SparseMem::new(1 << 20);
+        m.write_u64(64, 0x1122334455667788);
+        assert_eq!(m.read_u64(64), 0x1122334455667788);
+        assert_eq!(m.read_byte(64), 0x88); // little-endian
+        assert_eq!(m.read_u64(128), 0);
+    }
+
+    #[test]
+    fn regions_shared_and_shadowed() {
+        let mut m = SparseMem::new(1 << 20);
+        let img = Arc::new((0..255u8).collect::<Vec<u8>>());
+        m.write_region(0x1000, img.clone());
+        assert_eq!(m.read_byte(0x1000), 0);
+        assert_eq!(m.read_byte(0x1005), 5);
+        // Word overlay shadows the region.
+        m.write_u64(0x1000, u64::MAX);
+        assert_eq!(m.read_byte(0x1000), 0xFF);
+        // Later region shadows earlier (outside the word overlay).
+        m.write_region(0x1009, Arc::new(vec![9, 9]));
+        assert_eq!(m.read_byte(0x1009), 9);
+        assert_eq!(m.read_byte(0x100B), 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds memory size")]
+    fn oversized_region_rejected() {
+        let mut m = SparseMem::new(1024);
+        m.write_region(1000, Arc::new(vec![0; 100]));
+    }
+
+    #[test]
+    fn read_u64_from_region() {
+        let mut m = SparseMem::new(1 << 20);
+        let bytes: Vec<u8> = 0x0102030405060708u64.to_le_bytes().to_vec();
+        m.write_region(0, Arc::new(bytes));
+        assert_eq!(m.read_u64(0), 0x0102030405060708);
+    }
+}

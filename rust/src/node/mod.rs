@@ -1,0 +1,222 @@
+//! Per-node model: ARM Cortex-A9 + FPGA fabric + 1 GB DRAM (§2, §4).
+//!
+//! We do not execute ARM instructions; the ARM is a *cost model*
+//! (`cpu_busy_ns`, charged by the software paths in
+//! [`crate::channels::ethernet`]) plus the register/memory state the
+//! diagnostics need: a 4 GB address space (1 GB DRAM + hardware register
+//! windows) reachable by Ring Bus / NetTunnel / PCIe Sandbox, a boot
+//! state machine driven by a boot command register, FPGA bitstream and
+//! FLASH images with programming-completion timestamps, a UART console
+//! buffer, EEPROM contents (serial, MAC) and a temperature sensor.
+
+mod mem;
+
+pub use mem::SparseMem;
+
+use std::sync::Arc;
+
+use crate::config::SystemConfig;
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// Hardware register addresses (the 0xF000_0000 window).
+pub mod regs {
+    /// Writing a nonzero value initiates boot from the DRAM-loaded image.
+    pub const BOOT_CMD: u64 = 0xF000_0000;
+    /// 0 = idle, 1 = booting, 2 = Linux up.
+    pub const BOOT_STATUS: u64 = 0xF000_0008;
+    /// FPGA bitstream build id (set when configuration completes).
+    pub const BUILD_ID: u64 = 0xF000_0010;
+    /// Die temperature, milli-°C.
+    pub const TEMP: u64 = 0xF000_0018;
+    /// EEPROM: USB-UART serial number.
+    pub const EEPROM_SERIAL: u64 = 0xF000_0020;
+    /// EEPROM: MAC id of the gateway Ethernet interface.
+    pub const EEPROM_MAC: u64 = 0xF000_0028;
+    /// System configuration: number of cards present.
+    pub const SYS_CARDS: u64 = 0xF000_0030;
+    /// Router status (live): packets forwarded by this node.
+    pub const ROUTER_PKTS: u64 = 0xF000_0038;
+    /// Attach/detach the shared UART console (1 = attached).
+    pub const UART_ATTACH: u64 = 0xF000_0040;
+    /// General scratch registers for application debug (§4.2).
+    pub const SCRATCH0: u64 = 0xF000_0100;
+    pub const SCRATCH_COUNT: u64 = 64;
+}
+
+/// DRAM occupies the low 1 GB of the 4 GB address space.
+pub const DRAM_BASE: u64 = 0x0000_0000;
+pub const DRAM_SIZE: u64 = 1 << 30;
+
+/// Boot state machine (driven through `regs::BOOT_CMD`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BootState {
+    /// Powered, no kernel loaded/running.
+    Idle,
+    /// Kernel decompress + init underway; done at the contained time.
+    Booting { done_at: Time },
+    /// Linux up; software paths (Ethernet driver etc.) available.
+    Linux,
+}
+
+/// Everything the simulator tracks per node.
+#[derive(Debug)]
+pub struct NodeState {
+    pub id: NodeId,
+    /// Program/data DRAM (sparse).
+    pub dram: SparseMem,
+    /// Hardware scratch/status registers (sparse overlay; addresses not
+    /// listed in [`regs`] read as 0).
+    regs: std::collections::BTreeMap<u64, u64>,
+    pub boot: BootState,
+    /// Cumulative ARM busy time (software-path cost accounting).
+    pub cpu_busy_ns: Time,
+    /// Next instant the ARM is free: software paths (kernel stack,
+    /// driver work) serialize on the CPU, unlike the hardware fabric.
+    pub cpu_free_at: Time,
+    /// FPGA configuration: (build id, image), plus completion time of the
+    /// most recent programming operation.
+    pub fpga_image: Option<(u64, Arc<Vec<u8>>)>,
+    pub fpga_done_at: Time,
+    /// FLASH chip contents + programming completion time.
+    pub flash_image: Option<Arc<Vec<u8>>>,
+    pub flash_done_at: Time,
+    /// UART console ring (visible when attached via the sandbox).
+    pub uart: Vec<String>,
+    /// Packets this node's router forwarded (diagnostics).
+    pub forwarded: u64,
+    temp_milli_c: u64,
+    eeprom_serial: u64,
+    eeprom_mac: u64,
+    sys_cards: u64,
+}
+
+impl NodeState {
+    pub fn new(id: NodeId, cfg: &SystemConfig) -> Self {
+        NodeState {
+            id,
+            dram: SparseMem::new(DRAM_SIZE),
+            regs: std::collections::BTreeMap::new(),
+            boot: BootState::Idle,
+            cpu_busy_ns: 0,
+            cpu_free_at: 0,
+            fpga_image: None,
+            fpga_done_at: 0,
+            flash_image: None,
+            flash_done_at: 0,
+            uart: Vec::new(),
+            forwarded: 0,
+            // Deterministic per-node "sensor" values.
+            temp_milli_c: 42_000 + (id.0 as u64 * 137) % 8_000,
+            eeprom_serial: 0x1BC0_0000 + id.0 as u64,
+            eeprom_mac: 0x02_00_00_00_00_00 | id.0 as u64,
+            sys_cards: cfg.preset.card_count() as u64,
+        }
+    }
+
+    /// Read a word from the 4 GB address space (registers or DRAM).
+    pub fn read_addr(&self, addr: u64, now: Time) -> u64 {
+        match addr {
+            regs::BOOT_STATUS => match self.boot {
+                BootState::Idle => 0,
+                BootState::Booting { done_at } if now < done_at => 1,
+                _ => 2,
+            },
+            regs::BUILD_ID => {
+                if now >= self.fpga_done_at {
+                    self.fpga_image.as_ref().map(|(b, _)| *b).unwrap_or(0)
+                } else {
+                    0
+                }
+            }
+            regs::TEMP => self.temp_milli_c,
+            regs::EEPROM_SERIAL => self.eeprom_serial,
+            regs::EEPROM_MAC => self.eeprom_mac,
+            regs::SYS_CARDS => self.sys_cards,
+            regs::ROUTER_PKTS => self.forwarded,
+            a if a < DRAM_SIZE => self.dram.read_u64(a),
+            a => self.regs.get(&a).copied().unwrap_or(0),
+        }
+    }
+
+    /// Write a word into the address space. Writing `regs::BOOT_CMD`
+    /// starts the boot state machine (`boot_latency` models kernel
+    /// decompress + init, ~2 s on the A9).
+    pub fn write_addr(&mut self, addr: u64, value: u64, now: Time) {
+        match addr {
+            regs::BOOT_CMD if value != 0 => {
+                if matches!(self.boot, BootState::Idle) {
+                    const BOOT_LATENCY: Time = 2 * crate::sim::SEC;
+                    self.boot = BootState::Booting { done_at: now + BOOT_LATENCY };
+                }
+            }
+            a if a < DRAM_SIZE => self.dram.write_u64(a, value),
+            a => {
+                self.regs.insert(a, value);
+            }
+        }
+    }
+
+    /// Promote `Booting` to `Linux` if the boot finished by `now`.
+    pub fn tick_boot(&mut self, now: Time) {
+        if let BootState::Booting { done_at } = self.boot {
+            if now >= done_at {
+                self.boot = BootState::Linux;
+            }
+        }
+    }
+
+    pub fn println(&mut self, line: impl Into<String>) {
+        self.uart.push(line.into());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> NodeState {
+        NodeState::new(NodeId(5), &SystemConfig::card())
+    }
+
+    #[test]
+    fn register_reads_are_deterministic() {
+        let a = node();
+        let b = node();
+        assert_eq!(a.read_addr(regs::TEMP, 0), b.read_addr(regs::TEMP, 0));
+        assert_eq!(a.read_addr(regs::EEPROM_SERIAL, 0), 0x1BC0_0005);
+        assert_eq!(a.read_addr(regs::SYS_CARDS, 0), 1);
+    }
+
+    #[test]
+    fn boot_state_machine() {
+        let mut n = node();
+        assert_eq!(n.read_addr(regs::BOOT_STATUS, 0), 0);
+        n.write_addr(regs::BOOT_CMD, 1, 1000);
+        assert_eq!(n.read_addr(regs::BOOT_STATUS, 1001), 1);
+        let after = 1000 + 2 * crate::sim::SEC;
+        assert_eq!(n.read_addr(regs::BOOT_STATUS, after), 2);
+        n.tick_boot(after);
+        assert_eq!(n.boot, BootState::Linux);
+    }
+
+    #[test]
+    fn dram_and_scratch_writes() {
+        let mut n = node();
+        n.write_addr(0x1000, 0xABCD, 0);
+        assert_eq!(n.read_addr(0x1000, 0), 0xABCD);
+        n.write_addr(regs::SCRATCH0, 7, 0);
+        assert_eq!(n.read_addr(regs::SCRATCH0, 0), 7);
+        // Unwritten addresses read 0.
+        assert_eq!(n.read_addr(0x2000, 0), 0);
+    }
+
+    #[test]
+    fn build_id_visible_only_after_programming_completes() {
+        let mut n = node();
+        n.fpga_image = Some((0x77, Arc::new(vec![])));
+        n.fpga_done_at = 500;
+        assert_eq!(n.read_addr(regs::BUILD_ID, 100), 0);
+        assert_eq!(n.read_addr(regs::BUILD_ID, 500), 0x77);
+    }
+}

@@ -1,0 +1,336 @@
+//! Packet formats and routing policy (paper §2.4).
+//!
+//! Two routing schemes are implemented, exactly as the paper describes:
+//!
+//! * **Directed**: a packet is routed to a single destination with a
+//!   minimal number of hops, using both single- and multi-span links.
+//!   The path is *not* deterministic — at every node, any productive
+//!   output link (one that reduces the remaining minimal hop count by
+//!   one) may be chosen based on which links happen to be idle, so
+//!   in-order delivery is not guaranteed (§2.4, footnote 1).
+//! * **Broadcast**: the packet radiates out from the source and every
+//!   node receives **exactly one copy**. Forwarding follows a
+//!   dimension-ordered flood (x-travellers spawn y and z branches,
+//!   y-travellers spawn z branches, z-travellers only continue), which
+//!   realizes the paper's "forward to all / a subset / stop" rule table.
+//!   Broadcast uses single-span links; crossing cage boundaries in the
+//!   z dimension (INC 9000 only — inter-cage connectors carry multi-span
+//!   links) uses a documented jump-then-fill extension (DESIGN.md §5).
+
+mod packet;
+pub mod multicast;
+
+pub use packet::{
+    MemTarget, Packet, PacketId, Payload, Proto, RouteKind, ZMode, HEADER_BYTES,
+};
+
+use crate::topology::{Dir, LinkId, NodeId, Span, Topology};
+use crate::util::SplitMix64;
+
+/// All productive output links for a directed packet at `here`:
+/// links whose traversal reduces `Topology::min_hops(here, dst)` by one.
+/// Allocation-free hot-path variant: fills `out` (a node has ≤ 12
+/// outgoing links, of which ≤ 6 can be productive) and returns the count.
+pub fn productive_links_buf(
+    topo: &Topology,
+    here: NodeId,
+    dst: NodeId,
+    out: &mut [LinkId; 6],
+) -> usize {
+    let hc = topo.coord(here);
+    let dc = topo.coord(dst);
+    let mut n = 0;
+    for &lid in topo.out_links(here) {
+        let l = topo.link(lid);
+        let axis = l.dir.axis();
+        let cur = hc.get(axis);
+        let tgt = dc.get(axis);
+        if cur == tgt {
+            continue;
+        }
+        let d = cur.abs_diff(tgt);
+        if l.dir != Dir::towards(axis, cur, tgt) {
+            continue;
+        }
+        let step = l.span.distance();
+        if step > d {
+            continue; // would overshoot
+        }
+        // Hop economy along this axis: cost(d) = d/3 + d%3.
+        let cost = |d: u32| d / 3 + d % 3;
+        if cost(d - step) + 1 == cost(d) {
+            out[n] = lid;
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Vec-returning convenience wrapper (tests / non-hot-path callers).
+pub fn productive_links(topo: &Topology, here: NodeId, dst: NodeId) -> Vec<LinkId> {
+    let mut buf = [LinkId(0); 6];
+    let n = productive_links_buf(topo, here, dst, &mut buf);
+    buf[..n].to_vec()
+}
+
+/// Pick one productive link adaptively: prefer an idle link with credits;
+/// break ties with the seeded RNG; if none is idle, pick the one that
+/// frees up earliest (falls back to queueing on it).
+pub fn pick_adaptive(
+    candidates: &[LinkId],
+    idle: impl Fn(LinkId) -> bool,
+    free_at: impl Fn(LinkId) -> u64,
+    rng: &mut SplitMix64,
+) -> Option<LinkId> {
+    if candidates.is_empty() {
+        return None;
+    }
+    // Allocation-free: count idle candidates, then pick the k-th.
+    let idle_count = candidates.iter().filter(|&&l| idle(l)).count();
+    if idle_count > 0 {
+        let k = rng.gen_range(idle_count);
+        return candidates.iter().copied().filter(|&l| idle(l)).nth(k);
+    }
+    candidates.iter().copied().min_by_key(|&l| free_at(l))
+}
+
+/// Where a broadcast packet must be forwarded from `here`.
+///
+/// `arrived` is `None` at the source. Returns (link, new RouteKind) pairs.
+pub fn broadcast_forwards(
+    topo: &Topology,
+    here: NodeId,
+    arrived: Option<(Dir, Span, ZMode)>,
+) -> Vec<(LinkId, RouteKind)> {
+    let mut out = Vec::new();
+    match arrived {
+        None => {
+            // Source: spawn ±x, ±y and ±z lines.
+            spawn_axis(topo, here, 0, &mut out);
+            spawn_axis(topo, here, 1, &mut out);
+            spawn_z(topo, here, 1, &mut out);
+            spawn_z(topo, here, -1, &mut out);
+        }
+        Some((dir, span, zmode)) => match dir.axis() {
+            0 => {
+                // x-traveller: continue x, spawn y and z.
+                continue_line(topo, here, dir, &mut out);
+                spawn_axis(topo, here, 1, &mut out);
+                spawn_z(topo, here, 1, &mut out);
+                spawn_z(topo, here, -1, &mut out);
+            }
+            1 => {
+                // y-traveller: continue y, spawn z.
+                continue_line(topo, here, dir, &mut out);
+                spawn_z(topo, here, 1, &mut out);
+                spawn_z(topo, here, -1, &mut out);
+            }
+            _ => {
+                // z-traveller.
+                let sign = dir.sign();
+                match (span, zmode) {
+                    (Span::Multi, _) => {
+                        // Just jumped a cage: fill backwards within this
+                        // cage, and continue jumping forwards.
+                        fill_z(topo, here, -sign, &mut out);
+                        jump_z(topo, here, sign, &mut out);
+                    }
+                    (Span::Single, ZMode::Fill) => {
+                        fill_z(topo, here, sign, &mut out);
+                    }
+                    (Span::Single, ZMode::Line) => {
+                        continue_z(topo, here, sign, &mut out);
+                    }
+                }
+            }
+        },
+    }
+    out
+}
+
+fn single_link(topo: &Topology, here: NodeId, dir: Dir) -> Option<LinkId> {
+    topo.out_links(here)
+        .iter()
+        .copied()
+        .find(|&l| topo.link(l).dir == dir && topo.link(l).span == Span::Single)
+}
+
+fn multi_link(topo: &Topology, here: NodeId, dir: Dir) -> Option<LinkId> {
+    topo.out_links(here)
+        .iter()
+        .copied()
+        .find(|&l| topo.link(l).dir == dir && topo.link(l).span == Span::Multi)
+}
+
+fn spawn_axis(topo: &Topology, here: NodeId, axis: usize, out: &mut Vec<(LinkId, RouteKind)>) {
+    for sign in [1i32, -1] {
+        let dir = dir_of(axis, sign);
+        if let Some(l) = single_link(topo, here, dir) {
+            out.push((l, RouteKind::Broadcast { zmode: ZMode::Line }));
+        }
+    }
+}
+
+fn continue_line(topo: &Topology, here: NodeId, dir: Dir, out: &mut Vec<(LinkId, RouteKind)>) {
+    if let Some(l) = single_link(topo, here, dir) {
+        out.push((l, RouteKind::Broadcast { zmode: ZMode::Line }));
+    }
+}
+
+/// Start or continue a z line in direction `sign` from `here`.
+fn spawn_z(topo: &Topology, here: NodeId, sign: i32, out: &mut Vec<(LinkId, RouteKind)>) {
+    continue_z(topo, here, sign, out)
+}
+
+fn continue_z(topo: &Topology, here: NodeId, sign: i32, out: &mut Vec<(LinkId, RouteKind)>) {
+    let dir = dir_of(2, sign);
+    if let Some(l) = single_link(topo, here, dir) {
+        out.push((l, RouteKind::Broadcast { zmode: ZMode::Line }));
+    } else {
+        // Cage boundary (or mesh edge): jump if a multi-span exists.
+        jump_z(topo, here, sign, out);
+    }
+}
+
+fn jump_z(topo: &Topology, here: NodeId, sign: i32, out: &mut Vec<(LinkId, RouteKind)>) {
+    let dir = dir_of(2, sign);
+    // Only jump from a cage-boundary row so the fill pattern tiles cages
+    // exactly (see module docs); multi-span z always crosses cages.
+    if let Some(l) = multi_link(topo, here, dir) {
+        let c = topo.coord(here);
+        let at_boundary = if sign > 0 { c.z % 3 == 2 } else { c.z % 3 == 0 };
+        if at_boundary {
+            out.push((l, RouteKind::Broadcast { zmode: ZMode::Line }));
+        }
+    }
+}
+
+fn fill_z(topo: &Topology, here: NodeId, sign: i32, out: &mut Vec<(LinkId, RouteKind)>) {
+    let c = topo.coord(here);
+    let within_cage = if sign > 0 { c.z % 3 != 2 } else { c.z % 3 != 0 };
+    if !within_cage {
+        return;
+    }
+    let dir = dir_of(2, sign);
+    if let Some(l) = single_link(topo, here, dir) {
+        out.push((l, RouteKind::Broadcast { zmode: ZMode::Fill }));
+    }
+}
+
+fn dir_of(axis: usize, sign: i32) -> Dir {
+    match (axis, sign > 0) {
+        (0, true) => Dir::XPlus,
+        (0, false) => Dir::XMinus,
+        (1, true) => Dir::YPlus,
+        (1, false) => Dir::YMinus,
+        (2, true) => Dir::ZPlus,
+        _ => Dir::ZMinus,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemPreset;
+
+    fn topo3000() -> Topology {
+        Topology::preset(SystemPreset::Inc3000)
+    }
+
+    #[test]
+    fn productive_links_reduce_min_hops() {
+        let t = topo3000();
+        let src = t.id(crate::topology::Coord { x: 0, y: 0, z: 0 });
+        let dst = t.id(crate::topology::Coord { x: 7, y: 2, z: 2 });
+        let cands = productive_links(&t, src, dst);
+        assert!(!cands.is_empty());
+        let h0 = t.min_hops(src, dst);
+        for l in cands {
+            let nxt = t.link(l).dst;
+            assert_eq!(t.min_hops(nxt, dst), h0 - 1, "link {l} not productive");
+        }
+    }
+
+    #[test]
+    fn directed_walk_always_terminates_in_min_hops() {
+        let t = topo3000();
+        let mut rng = SplitMix64::new(7);
+        for (a, b) in [(0u32, 431u32), (5, 211), (100, 101), (17, 17)] {
+            let (src, dst) = (NodeId(a), NodeId(b));
+            let mut here = src;
+            let mut hops = 0;
+            while here != dst {
+                let cands = productive_links(&t, here, dst);
+                let l = pick_adaptive(&cands, |_| true, |_| 0, &mut rng).unwrap();
+                here = t.link(l).dst;
+                hops += 1;
+                assert!(hops <= t.min_hops(src, dst));
+            }
+            assert_eq!(hops, t.min_hops(src, dst));
+        }
+    }
+
+    /// Simulate the broadcast forwarding rules abstractly (no timing) and
+    /// check the exactly-once property the paper claims (§2.4).
+    fn check_exactly_once(t: &Topology, src: NodeId) {
+        let mut copies = vec![0u32; t.node_count()];
+        // (node, arrived)
+        let mut frontier: Vec<(NodeId, Option<(Dir, Span, ZMode)>)> = vec![(src, None)];
+        while let Some((here, arrived)) = frontier.pop() {
+            copies[here.0 as usize] += 1;
+            for (lid, rk) in broadcast_forwards(t, here, arrived) {
+                let l = t.link(lid);
+                let zmode = match rk {
+                    RouteKind::Broadcast { zmode } => zmode,
+                    _ => unreachable!(),
+                };
+                frontier.push((l.dst, Some((l.dir, l.span, zmode))));
+            }
+        }
+        for n in t.nodes() {
+            assert_eq!(
+                copies[n.0 as usize], 1,
+                "node {} got {} copies (src {})",
+                n, copies[n.0 as usize], src
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_exactly_once_card() {
+        let t = Topology::preset(SystemPreset::Card);
+        for n in t.nodes() {
+            check_exactly_once(&t, n);
+        }
+    }
+
+    #[test]
+    fn broadcast_exactly_once_inc3000_sample() {
+        let t = topo3000();
+        for n in [0u32, 1, 100, 215, 431, 300, 77] {
+            check_exactly_once(&t, NodeId(n));
+        }
+    }
+
+    #[test]
+    fn broadcast_exactly_once_inc9000_crosses_cages() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        for n in [0u32, 860, 1727, 432, 1000] {
+            check_exactly_once(&t, NodeId(n));
+        }
+    }
+
+    #[test]
+    fn adaptive_prefers_idle_links() {
+        let mut rng = SplitMix64::new(1);
+        let cands = vec![LinkId(0), LinkId(1), LinkId(2)];
+        // Only link 1 idle.
+        let got = pick_adaptive(&cands, |l| l == LinkId(1), |_| 0, &mut rng);
+        assert_eq!(got, Some(LinkId(1)));
+        // None idle: earliest-free wins.
+        let got = pick_adaptive(&cands, |_| false, |l| 10 - l.0 as u64, &mut rng);
+        assert_eq!(got, Some(LinkId(2)));
+        // Empty.
+        assert_eq!(pick_adaptive(&[], |_| true, |_| 0, &mut rng), None);
+    }
+}

@@ -1,0 +1,157 @@
+//! Multicast + network-defect avoidance — the two §2.4 extensions the
+//! paper lists as "being considered at the time of writing … can be
+//! included based on application or hardware needs". We include both.
+//!
+//! **Multicast**: one packet, a set of destinations, delivered along a
+//! spanning tree: at every node the remaining destination set is
+//! partitioned by each target's *deterministic dimension-ordered* next
+//! hop (x, then y, then z; multi-span preferred), and one copy forwards
+//! per occupied output link. Each destination receives exactly one copy
+//! and shared path prefixes are traversed once — the bandwidth win over
+//! repeated directed sends (tested below).
+//!
+//! **Defect avoidance**: links can be marked failed
+//! ([`crate::network::Network::fail_link`]). Directed routing drops
+//! failed links from its productive set; when *every* productive link is
+//! dead the packet takes a lateral escape (any live link) and re-routes
+//! from there, with a hop budget guarding against livelock. Multicast
+//! partitioning likewise avoids failed links when a sibling productive
+//! link survives.
+
+use crate::topology::{Dir, LinkId, NodeId, Span, Topology};
+
+/// The deterministic dimension-ordered next link towards `dst` from
+/// `here`: correct the x distance first (multi-span when ≥ 3), then y,
+/// then z. Unlike the adaptive chooser this is path-stable, which is
+/// what makes the multicast partition a tree. Failed links are skipped
+/// where a productive alternative exists on the same axis.
+pub fn dimension_ordered_next(
+    topo: &Topology,
+    here: NodeId,
+    dst: NodeId,
+    failed: &[bool],
+) -> Option<LinkId> {
+    let hc = topo.coord(here);
+    let dc = topo.coord(dst);
+    for axis in 0..3 {
+        let cur = hc.get(axis);
+        let tgt = dc.get(axis);
+        if cur == tgt {
+            continue;
+        }
+        let d = cur.abs_diff(tgt);
+        let dir = Dir::towards(axis, cur, tgt);
+        let want_span = if d >= 3 { Span::Multi } else { Span::Single };
+        // Preferred span first, then the other as a live fallback.
+        for span in [want_span, other(want_span)] {
+            if span == Span::Multi && d < 3 {
+                continue; // would overshoot
+            }
+            if let Some(l) = topo
+                .out_links(here)
+                .iter()
+                .copied()
+                .find(|&l| {
+                    let info = topo.link(l);
+                    info.dir == dir && info.span == span && !failed[l.0 as usize]
+                })
+            {
+                return Some(l);
+            }
+        }
+    }
+    None
+}
+
+fn other(s: Span) -> Span {
+    match s {
+        Span::Single => Span::Multi,
+        Span::Multi => Span::Single,
+    }
+}
+
+/// Partition `dsts` (excluding `here` itself) by their next link from
+/// `here`. Returns (link, destinations routed through it) groups plus
+/// whether `here` is itself a destination.
+pub fn multicast_partition(
+    topo: &Topology,
+    here: NodeId,
+    dsts: &[NodeId],
+    failed: &[bool],
+) -> (bool, Vec<(LinkId, Vec<NodeId>)>) {
+    let mut local = false;
+    let mut groups: Vec<(LinkId, Vec<NodeId>)> = Vec::new();
+    for &d in dsts {
+        if d == here {
+            local = true;
+            continue;
+        }
+        let l = dimension_ordered_next(topo, here, d, failed)
+            .expect("multicast destination unreachable (all axis links failed)");
+        match groups.iter_mut().find(|(g, _)| *g == l) {
+            Some((_, v)) => v.push(d),
+            None => groups.push((l, vec![d])),
+        }
+    }
+    (local, groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemPreset;
+    use crate::topology::Coord;
+
+    fn no_fail(t: &Topology) -> Vec<bool> {
+        vec![false; t.link_count()]
+    }
+
+    #[test]
+    fn dimension_order_is_x_then_y_then_z() {
+        let t = Topology::preset(SystemPreset::Card);
+        let here = t.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = t.id(Coord { x: 1, y: 2, z: 1 });
+        let failed = no_fail(&t);
+        let l = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        assert_eq!(t.link(l).dir, Dir::XPlus, "x corrected first");
+    }
+
+    #[test]
+    fn prefers_multispan_for_long_hauls() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let here = t.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = t.id(Coord { x: 7, y: 0, z: 0 });
+        let failed = no_fail(&t);
+        let l = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        assert_eq!(t.link(l).span, Span::Multi);
+    }
+
+    #[test]
+    fn partition_shares_prefixes() {
+        let t = Topology::preset(SystemPreset::Card);
+        let here = t.id(Coord { x: 0, y: 0, z: 0 });
+        // Two destinations both east: one copy on the +x link.
+        let d1 = t.id(Coord { x: 2, y: 0, z: 0 });
+        let d2 = t.id(Coord { x: 2, y: 1, z: 0 });
+        let failed = no_fail(&t);
+        let (local, groups) = multicast_partition(&t, here, &[d1, d2], &failed);
+        assert!(!local);
+        assert_eq!(groups.len(), 1, "shared prefix must use one copy");
+        assert_eq!(groups[0].1.len(), 2);
+    }
+
+    #[test]
+    fn failed_link_falls_back_to_surviving_span() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let here = t.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = t.id(Coord { x: 6, y: 0, z: 0 });
+        let mut failed = no_fail(&t);
+        let pref = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        assert_eq!(t.link(pref).span, Span::Multi);
+        failed[pref.0 as usize] = true;
+        let alt = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        assert_ne!(alt, pref);
+        assert_eq!(t.link(alt).dir, Dir::XPlus);
+        assert_eq!(t.link(alt).span, Span::Single);
+    }
+}

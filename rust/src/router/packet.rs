@@ -1,0 +1,207 @@
+//! Network packet representation.
+//!
+//! Packets are the unit the router moves. Real INC packets are byte
+//! streams on the SERDES links; we carry a structured payload plus an
+//! explicit `wire_bytes` so that serialization/credit accounting is
+//! byte-accurate without byte-level marshalling on the hot path.
+
+use std::sync::Arc;
+
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// Unique packet id (for tracing/metrics; also used by in-order channels
+/// to reorder out-of-order arrivals).
+pub type PacketId = u64;
+
+/// How the packet is routed (§2.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteKind {
+    /// Minimal-hop adaptive routing to `Packet::dst`.
+    Directed,
+    /// Flood to every node; `zmode` is the z-dimension sub-state of the
+    /// dimension-ordered flood (see [`crate::router::broadcast_forwards`]).
+    Broadcast { zmode: ZMode },
+    /// Spanning-tree delivery to `Packet::mcast` (§2.4's "multi-cast"
+    /// extension; see [`crate::router::multicast`]).
+    Multicast,
+}
+
+/// z-dimension broadcast sub-mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZMode {
+    /// Normal line propagation along z.
+    Line,
+    /// Post-cage-jump backfill within a cage (never jumps again).
+    Fill,
+}
+
+/// Which virtual channel / protocol a packet belongs to: the Packet
+/// Demux unit (Fig 5) dispatches on this at the destination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Proto {
+    /// Internal (virtual) Ethernet frames (§3.1).
+    Ethernet,
+    /// Postmaster DMA writes (§3.2). `queue` selects the target queue.
+    Postmaster { queue: u8 },
+    /// Bridge FIFO words (§3.3). `channel` selects one of ≤32 FIFOs
+    /// behind a Bridge FIFO Mux/Demux pair.
+    BridgeFifo { channel: u8 },
+    /// NetTunnel diagnostic reads/writes (§4.2).
+    NetTunnel,
+    /// Boot / programming traffic pushed by the PCIe Sandbox (§4.3).
+    Boot,
+    /// Raw application packets (workloads built directly on the router).
+    Raw { tag: u16 },
+}
+
+/// Structured payload. `Bytes` is reference-counted so broadcast clones
+/// are O(1); the other variants are small.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Empty,
+    Bytes(Arc<Vec<u8>>),
+    /// Modeled bulk data: occupies wire/buffer space but carries no
+    /// content (used for traffic generators and Ethernet frame bodies).
+    Synthetic(u32),
+    /// Bridge-FIFO words (already width-masked by the transmit unit).
+    Words(Arc<Vec<u64>>),
+    /// NetTunnel / RingBus style register access. `reply` marks the
+    /// read-response leg travelling back to the requester.
+    RegAccess { addr: u64, value: u64, write: bool, reply: bool, req_id: u64 },
+    /// Bulk memory image write (Boot protocol, §4.3): `data` lands at
+    /// `offset` in the destination's `target` memory.
+    Region { target: MemTarget, offset: u64, data: Arc<Vec<u8>> },
+    /// Small structured application message.
+    U64s([u64; 4]),
+}
+
+/// Which per-node memory a Boot region write targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemTarget {
+    /// 1 GB program/data DRAM (§2).
+    Dram,
+    /// FPGA configuration port (bitstream load).
+    Fpga,
+    /// On-card FLASH chip (persistent bitstream store).
+    Flash,
+}
+
+impl Payload {
+    pub fn bytes(data: Vec<u8>) -> Self {
+        Payload::Bytes(Arc::new(data))
+    }
+
+    /// Payload length in bytes as it would appear on the wire.
+    pub fn wire_len(&self) -> u32 {
+        match self {
+            Payload::Empty => 0,
+            Payload::Bytes(b) => b.len() as u32,
+            Payload::Synthetic(n) => *n,
+            Payload::Words(w) => (w.len() * 8) as u32,
+            Payload::RegAccess { .. } => 18,
+            Payload::Region { data, .. } => 9 + data.len() as u32,
+            Payload::U64s(_) => 32,
+        }
+    }
+}
+
+/// Fixed per-packet header size on the wire (routing + protocol + length
+/// + sequence fields). INC's real header format is not published; 8 bytes
+/// is consistent with the Table 1 latency fit (DESIGN.md §3).
+pub const HEADER_BYTES: u32 = 8;
+
+/// A packet in flight.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub id: PacketId,
+    pub src: NodeId,
+    /// Destination (ignored for broadcast).
+    pub dst: NodeId,
+    pub route: RouteKind,
+    pub proto: Proto,
+    pub payload: Payload,
+    /// Total bytes this packet occupies on a link (header + payload).
+    pub wire_bytes: u32,
+    /// Injection timestamp (for latency metrics).
+    pub injected_at: Time,
+    /// Per-(src, proto) sequence number, for channels that reorder.
+    pub seq: u64,
+    /// Hops traversed so far (metrics / TTL safety).
+    pub hops: u32,
+    /// Remaining multicast destinations (None for unicast/broadcast).
+    pub mcast: Option<std::sync::Arc<Vec<NodeId>>>,
+}
+
+impl Packet {
+    pub fn new(
+        id: PacketId,
+        src: NodeId,
+        dst: NodeId,
+        route: RouteKind,
+        proto: Proto,
+        payload: Payload,
+        now: Time,
+    ) -> Self {
+        let wire_bytes = HEADER_BYTES + payload.wire_len();
+        Packet {
+            id,
+            src,
+            dst,
+            route,
+            proto,
+            payload,
+            wire_bytes,
+            injected_at: now,
+            seq: 0,
+            hops: 0,
+            mcast: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_size_includes_header() {
+        let p = Packet::new(
+            1,
+            NodeId(0),
+            NodeId(1),
+            RouteKind::Directed,
+            Proto::Raw { tag: 0 },
+            Payload::bytes(vec![0u8; 100]),
+            0,
+        );
+        assert_eq!(p.wire_bytes, 108);
+    }
+
+    #[test]
+    fn one_word_bridge_fifo_packet_is_16_bytes() {
+        // This is the packet size the Table 1 calibration assumes.
+        let p = Packet::new(
+            1,
+            NodeId(0),
+            NodeId(1),
+            RouteKind::Directed,
+            Proto::BridgeFifo { channel: 0 },
+            Payload::Words(Arc::new(vec![42])),
+            0,
+        );
+        assert_eq!(p.wire_bytes, 16);
+    }
+
+    #[test]
+    fn payload_wire_lengths() {
+        assert_eq!(Payload::Empty.wire_len(), 0);
+        assert_eq!(Payload::U64s([0; 4]).wire_len(), 32);
+        assert_eq!(Payload::Synthetic(1500).wire_len(), 1500);
+        assert_eq!(
+            Payload::RegAccess { addr: 0, value: 0, write: true, reply: false, req_id: 0 }
+                .wire_len(),
+            18
+        );
+    }
+}

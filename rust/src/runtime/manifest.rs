@@ -1,0 +1,141 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. JSON (parsed with the in-crate subset parser) so
+//! both sides stay dependency-light in an offline build environment.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape/dtype of one tensor crossing the AOT boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_count(&self) -> usize {
+        let elem = match self.dtype.as_str() {
+            "f32" | "i32" | "u32" => 4,
+            "f64" | "i64" | "u64" => 8,
+            "bf16" | "f16" | "i16" => 2,
+            "i8" | "u8" | "bool" => 1,
+            other => panic!("unknown dtype {other}"),
+        };
+        self.element_count() * elem
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled entry point (an `*.hlo.txt` file).
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Model identifier (e.g. "tiny-lm-d64-l2-v64").
+    pub model: String,
+    pub entries: Vec<EntryPoint>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let model = j.get("model")?.as_str()?.to_string();
+        let mut entries = Vec::new();
+        for e in j.get("entries")?.as_arr()? {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+            };
+            entries.push(EntryPoint {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+            });
+        }
+        if entries.is_empty() {
+            return Err(anyhow!("manifest has no entry points"));
+        }
+        Ok(Manifest { model, entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parse {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": "tiny-lm-d64-l2-v64",
+        "entries": [
+            {"name": "grad", "file": "grad.hlo.txt",
+             "inputs": [
+                {"name": "p:emb", "shape": [64, 64], "dtype": "f32"},
+                {"name": "x", "shape": [8, 16], "dtype": "f32"}],
+             "outputs": [
+                {"name": "loss", "shape": [1], "dtype": "f32"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "tiny-lm-d64-l2-v64");
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.inputs[0].element_count(), 4096);
+        assert_eq!(e.inputs[0].byte_count(), 16384);
+        assert_eq!(e.outputs[0].shape, vec![1]);
+    }
+
+    #[test]
+    fn spec_sizes() {
+        let s = TensorSpec { name: "x".into(), shape: vec![4, 8], dtype: "f32".into() };
+        assert_eq!(s.element_count(), 32);
+        assert_eq!(s.byte_count(), 128);
+        let b = TensorSpec { name: "m".into(), shape: vec![3], dtype: "bf16".into() };
+        assert_eq!(b.byte_count(), 6);
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        assert!(Manifest::parse(r#"{"model": "m", "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Manifest::load("/nonexistent/manifest.json").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Node coordinates, ids and mesh directions.
+
+
+/// Dense node index (row-major over (z, y, x)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// A position in the global 3D mesh. The paper labels nodes on a card by
+/// the digit string XYZ (Fig 1), e.g. node (100) is x=1, y=0, z=0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+}
+
+impl std::fmt::Display for Coord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{},{})", self.x, self.y, self.z)
+    }
+}
+
+impl Coord {
+    #[inline]
+    pub fn id(self, dims: (u32, u32, u32)) -> NodeId {
+        debug_assert!(self.x < dims.0 && self.y < dims.1 && self.z < dims.2);
+        NodeId((self.z * dims.1 + self.y) * dims.0 + self.x)
+    }
+
+    #[inline]
+    pub fn from_id(id: NodeId, dims: (u32, u32, u32)) -> Coord {
+        let x = id.0 % dims.0;
+        let y = (id.0 / dims.0) % dims.1;
+        let z = id.0 / (dims.0 * dims.1);
+        Coord { x, y, z }
+    }
+
+    /// Component along `axis` (0 = x, 1 = y, 2 = z).
+    #[inline]
+    pub fn get(self, axis: usize) -> u32 {
+        match axis {
+            0 => self.x,
+            1 => self.y,
+            _ => self.z,
+        }
+    }
+
+    #[inline]
+    pub fn set(mut self, axis: usize, v: u32) -> Coord {
+        match axis {
+            0 => self.x = v,
+            1 => self.y = v,
+            _ => self.z = v,
+        }
+        self
+    }
+
+    /// Step `dist` nodes in `dir`; `None` if it leaves the mesh.
+    pub fn step(self, dir: Dir, dist: u32, dims: (u32, u32, u32)) -> Option<Coord> {
+        let axis = dir.axis();
+        let cur = self.get(axis) as i64;
+        let next = cur + dir.sign() as i64 * dist as i64;
+        let limit = [dims.0, dims.1, dims.2][axis] as i64;
+        if next < 0 || next >= limit {
+            None
+        } else {
+            Some(self.set(axis, next as u32))
+        }
+    }
+
+    /// The paper's per-card node label, e.g. "(100)" (Fig 1).
+    pub fn card_label(self) -> String {
+        format!("{}{}{}", self.x % 3, self.y % 3, self.z % 3)
+    }
+}
+
+/// One of the six mesh directions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    XPlus,
+    XMinus,
+    YPlus,
+    YMinus,
+    ZPlus,
+    ZMinus,
+}
+
+/// All six directions, in deterministic order.
+pub const ALL_DIRS: [Dir; 6] =
+    [Dir::XPlus, Dir::XMinus, Dir::YPlus, Dir::YMinus, Dir::ZPlus, Dir::ZMinus];
+
+impl Dir {
+    /// 0 = x, 1 = y, 2 = z.
+    #[inline]
+    pub fn axis(self) -> usize {
+        match self {
+            Dir::XPlus | Dir::XMinus => 0,
+            Dir::YPlus | Dir::YMinus => 1,
+            Dir::ZPlus | Dir::ZMinus => 2,
+        }
+    }
+
+    #[inline]
+    pub fn sign(self) -> i32 {
+        match self {
+            Dir::XPlus | Dir::YPlus | Dir::ZPlus => 1,
+            _ => -1,
+        }
+    }
+
+    #[inline]
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::XPlus => Dir::XMinus,
+            Dir::XMinus => Dir::XPlus,
+            Dir::YPlus => Dir::YMinus,
+            Dir::YMinus => Dir::YPlus,
+            Dir::ZPlus => Dir::ZMinus,
+            Dir::ZMinus => Dir::ZPlus,
+        }
+    }
+
+    /// Direction moving `from → to` along one axis (they must differ on
+    /// exactly that axis for the result to be meaningful).
+    pub fn towards(axis: usize, from: u32, to: u32) -> Dir {
+        match (axis, to > from) {
+            (0, true) => Dir::XPlus,
+            (0, false) => Dir::XMinus,
+            (1, true) => Dir::YPlus,
+            (1, false) => Dir::YMinus,
+            (2, true) => Dir::ZPlus,
+            (2, false) => Dir::ZMinus,
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: (u32, u32, u32) = (12, 12, 3);
+
+    #[test]
+    fn id_roundtrip() {
+        for z in 0..DIMS.2 {
+            for y in 0..DIMS.1 {
+                for x in 0..DIMS.0 {
+                    let c = Coord { x, y, z };
+                    assert_eq!(Coord::from_id(c.id(DIMS), DIMS), c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_bounds() {
+        let c = Coord { x: 0, y: 5, z: 2 };
+        assert_eq!(c.step(Dir::XMinus, 1, DIMS), None);
+        assert_eq!(c.step(Dir::XPlus, 3, DIMS), Some(Coord { x: 3, y: 5, z: 2 }));
+        assert_eq!(c.step(Dir::ZPlus, 1, DIMS), None);
+        assert_eq!(c.step(Dir::ZMinus, 1, DIMS), Some(Coord { x: 0, y: 5, z: 1 }));
+    }
+
+    #[test]
+    fn opposite_is_involution() {
+        for d in ALL_DIRS {
+            assert_eq!(d.opposite().opposite(), d);
+            assert_eq!(d.axis(), d.opposite().axis());
+            assert_eq!(d.sign(), -d.opposite().sign());
+        }
+    }
+
+    #[test]
+    fn card_labels_match_fig1() {
+        assert_eq!(Coord { x: 1, y: 0, z: 0 }.card_label(), "100");
+        assert_eq!(Coord { x: 4, y: 3, z: 0 }.card_label(), "100");
+        assert_eq!(Coord { x: 1, y: 1, z: 1 }.card_label(), "111");
+    }
+}

@@ -1,0 +1,63 @@
+//! Static link descriptions (dynamic state lives in [`crate::link`]).
+
+
+use super::{Dir, NodeId};
+
+/// Index into [`crate::topology::Topology::links`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub u32);
+
+impl std::fmt::Display for LinkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "l{}", self.0)
+    }
+}
+
+/// Single-span (nearest neighbor) vs multi-span (3 apart, inter-card).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Span {
+    Single,
+    Multi,
+}
+
+impl Span {
+    /// How many mesh positions the link covers along its axis.
+    #[inline]
+    pub fn distance(self) -> u32 {
+        match self {
+            Span::Single => 1,
+            Span::Multi => 3,
+        }
+    }
+}
+
+/// One unidirectional SERDES connection (§2.3: links are pairs of these;
+/// we model each direction separately, which is also how the credit
+/// protocol works — credits for a receiver travel on the paired reverse
+/// connection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkInfo {
+    pub id: LinkId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub span: Span,
+    /// Mesh direction of travel (src → dst).
+    pub dir: Dir,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_distance() {
+        assert_eq!(Span::Single.distance(), 1);
+        assert_eq!(Span::Multi.distance(), 3);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(LinkId(3).to_string(), "l3");
+        assert_eq!(NodeId(7).to_string(), "n7");
+    }
+}

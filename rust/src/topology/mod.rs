@@ -1,0 +1,404 @@
+//! 3D mesh topology: cards, backplanes, cages (paper §2.1–2.3, Figs 1–2).
+//!
+//! * A **card** is a 3×3×3 cube of 27 nodes. Node (100) carries the
+//!   external Ethernet gateway; (000) is the controller node with the
+//!   PCIe host interface and serial console; (200) can also carry PCIe.
+//! * A **backplane** arranges 16 cards into 12×12×3 (INC 3000). Cards
+//!   tile the x/y plane; each card occupies the full z extent of a cage.
+//! * Four **cages** stack vertically into 12×12×12 (INC 9000).
+//!
+//! Links (§2.3):
+//! * **Single-span** links join orthogonal nearest neighbors. In the
+//!   z direction they exist only within a cage (cards are one cage tall;
+//!   the inter-cage backplane connectors carry multi-span links).
+//! * **Multi-span** links join nodes exactly 3 apart in one orthogonal
+//!   direction and always begin and terminate on different cards (a card
+//!   is 3 nodes wide, so a span of 3 necessarily leaves it).
+//!
+//! This reproduces the paper's link censuses: 432 unidirectional SERDES
+//! connections leaving/entering a fully-connected card (⇒ 432 GB/s), a
+//! 288 GB/s bisection for INC 3000 and 864 GB/s for INC 9000 (see
+//! `bisection` and the tests below; EXPERIMENTS.md E2/E3).
+
+mod coord;
+mod links;
+
+pub use coord::{Coord, Dir, NodeId, ALL_DIRS};
+pub use links::{LinkId, LinkInfo, Span};
+
+use crate::config::SystemPreset;
+
+/// The assembled mesh: node coordinate maps plus the link tables used by
+/// the router ([`crate::network::Network`] owns the dynamic link state).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    dims: (u32, u32, u32),
+    /// Outgoing links per node, indexed by `NodeId`.
+    out_links: Vec<Vec<LinkId>>,
+    /// Incoming links per node, indexed by `NodeId`.
+    in_links: Vec<Vec<LinkId>>,
+    /// All unidirectional links.
+    links: Vec<LinkInfo>,
+}
+
+impl Topology {
+    /// Build a mesh of the given dimensions with INC link rules.
+    pub fn new(dims: (u32, u32, u32)) -> Self {
+        let n = (dims.0 * dims.1 * dims.2) as usize;
+        let mut links = Vec::new();
+        let mut out_links = vec![Vec::new(); n];
+        let mut in_links = vec![Vec::new(); n];
+
+        let add = |links: &mut Vec<LinkInfo>,
+                       out_links: &mut Vec<Vec<LinkId>>,
+                       in_links: &mut Vec<Vec<LinkId>>,
+                       src: Coord,
+                       dst: Coord,
+                       span: Span,
+                       dir: Dir| {
+            let id = LinkId(links.len() as u32);
+            let s = src.id(dims);
+            let d = dst.id(dims);
+            links.push(LinkInfo { id, src: s, dst: d, span, dir });
+            out_links[s.0 as usize].push(id);
+            in_links[d.0 as usize].push(id);
+        };
+
+        for z in 0..dims.2 {
+            for y in 0..dims.1 {
+                for x in 0..dims.0 {
+                    let c = Coord { x, y, z };
+                    for dir in ALL_DIRS {
+                        // Single-span: nearest orthogonal neighbor. In z,
+                        // only within a cage (see module docs).
+                        if let Some(nb) = c.step(dir, 1, dims) {
+                            let crosses_cage =
+                                dir.axis() == 2 && (c.z / 3) != (nb.z / 3);
+                            if !crosses_cage {
+                                add(
+                                    &mut links,
+                                    &mut out_links,
+                                    &mut in_links,
+                                    c,
+                                    nb,
+                                    Span::Single,
+                                    dir,
+                                );
+                            }
+                        }
+                        // Multi-span: exactly 3 apart; always inter-card.
+                        if let Some(nb) = c.step(dir, 3, dims) {
+                            add(
+                                &mut links,
+                                &mut out_links,
+                                &mut in_links,
+                                c,
+                                nb,
+                                Span::Multi,
+                                dir,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        Topology { dims, out_links, in_links, links }
+    }
+
+    pub fn preset(p: SystemPreset) -> Self {
+        Self::new(p.dims())
+    }
+
+    #[inline]
+    pub fn dims(&self) -> (u32, u32, u32) {
+        self.dims
+    }
+
+    #[inline]
+    pub fn node_count(&self) -> usize {
+        self.out_links.len()
+    }
+
+    #[inline]
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    #[inline]
+    pub fn link(&self, id: LinkId) -> &LinkInfo {
+        &self.links[id.0 as usize]
+    }
+
+    #[inline]
+    pub fn links(&self) -> &[LinkInfo] {
+        &self.links
+    }
+
+    #[inline]
+    pub fn out_links(&self, n: NodeId) -> &[LinkId] {
+        &self.out_links[n.0 as usize]
+    }
+
+    #[inline]
+    pub fn in_links(&self, n: NodeId) -> &[LinkId] {
+        &self.in_links[n.0 as usize]
+    }
+
+    #[inline]
+    pub fn coord(&self, n: NodeId) -> Coord {
+        Coord::from_id(n, self.dims)
+    }
+
+    #[inline]
+    pub fn id(&self, c: Coord) -> NodeId {
+        c.id(self.dims)
+    }
+
+    /// Iterate over all node ids.
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.node_count() as u32).map(NodeId)
+    }
+
+    /// The card (3×3×3 block) a node belongs to, as card coordinates.
+    pub fn card_of(&self, n: NodeId) -> (u32, u32, u32) {
+        let c = self.coord(n);
+        (c.x / 3, c.y / 3, c.z / 3)
+    }
+
+    /// All nodes of one card, in node-number order (Fig 1 numbering).
+    pub fn card_nodes(&self, card: (u32, u32, u32)) -> Vec<NodeId> {
+        let mut v = Vec::with_capacity(27);
+        for z in 0..3 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    v.push(self.id(Coord {
+                        x: card.0 * 3 + x,
+                        y: card.1 * 3 + y,
+                        z: card.2 * 3 + z,
+                    }));
+                }
+            }
+        }
+        v
+    }
+
+    /// All card coordinates in the system.
+    pub fn cards(&self) -> Vec<(u32, u32, u32)> {
+        let mut v = Vec::new();
+        for cz in 0..self.dims.2 / 3 {
+            for cy in 0..self.dims.1 / 3 {
+                for cx in 0..self.dims.0 / 3 {
+                    v.push((cx, cy, cz));
+                }
+            }
+        }
+        v
+    }
+
+    /// Gateway node (100) of a card: carries the external Ethernet port.
+    pub fn gateway_node(&self, card: (u32, u32, u32)) -> NodeId {
+        self.id(Coord { x: card.0 * 3 + 1, y: card.1 * 3, z: card.2 * 3 })
+    }
+
+    /// Controller node (000) of a card: PCIe host interface + console.
+    pub fn controller_node(&self, card: (u32, u32, u32)) -> NodeId {
+        self.id(Coord { x: card.0 * 3, y: card.1 * 3, z: card.2 * 3 })
+    }
+
+    /// Secondary PCIe-capable node (200) of a card.
+    pub fn pcie2_node(&self, card: (u32, u32, u32)) -> NodeId {
+        self.id(Coord { x: card.0 * 3 + 2, y: card.1 * 3, z: card.2 * 3 })
+    }
+
+    /// Minimal hop count between two nodes using single- and multi-span
+    /// links: per axis, distance `d` costs `d/3 + d%3` hops (multi-span
+    /// covers 3, single-span covers 1; z multi-span crosses cages and z
+    /// single-span does not, which the formula respects because any z
+    /// distance ≥ 3 is covered by multi-span first).
+    pub fn min_hops(&self, a: NodeId, b: NodeId) -> u32 {
+        let (ca, cb) = (self.coord(a), self.coord(b));
+        let mut hops = 0;
+        for axis in 0..3 {
+            let d = ca.get(axis).abs_diff(cb.get(axis));
+            hops += d / 3 + d % 3;
+        }
+        hops
+    }
+
+    /// Number of unidirectional links a card presents to the rest of the
+    /// system *by design* (its connector capacity): every node face link
+    /// plus every multi-span link, regardless of whether a neighbor card
+    /// is present. The paper: "a total of 432 links leaving or entering
+    /// the card" ⇒ 432 GB/s (§2.3).
+    pub fn card_port_capacity() -> u32 {
+        // Single-span: 6 faces × 9 nodes, two unidirectional each.
+        let single = 6 * 9 * 2;
+        // Multi-span: 27 nodes × 6 directions × 2 unidirectional / 2
+        // (each bidirectional link counted once per endpoint) — i.e. every
+        // node terminates 6 bidirectional multi-span links, all off-card.
+        let multi = 27 * 6 * 2;
+        single + multi
+    }
+
+    /// Count unidirectional links crossing the plane `axis = cut + 0.5`
+    /// (both directions). With 1 GB/s links this is the cut bandwidth in
+    /// GB/s; minimized over the middle cuts it is the bisection bandwidth.
+    pub fn cut_links(&self, axis: usize, cut: u32) -> u32 {
+        self.links
+            .iter()
+            .filter(|l| {
+                let (a, b) = (
+                    self.coord(l.src).get(axis),
+                    self.coord(l.dst).get(axis),
+                );
+                (a <= cut && b > cut) || (b <= cut && a > cut)
+            })
+            .count() as u32
+    }
+
+    /// Bisection bandwidth in GB/s (1 link = 1 GB/s): the minimum over
+    /// all axis-aligned mid-plane cuts that split the machine in half.
+    pub fn bisection_gbps(&self) -> u32 {
+        let dims = [self.dims.0, self.dims.1, self.dims.2];
+        let mut best = u32::MAX;
+        for axis in 0..3 {
+            if dims[axis] % 2 != 0 {
+                continue; // cannot split this axis evenly
+            }
+            let cut = dims[axis] / 2 - 1;
+            best = best.min(self.cut_links(axis, cut));
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_and_link_counts() {
+        let card = Topology::preset(SystemPreset::Card);
+        assert_eq!(card.node_count(), 27);
+        let inc3000 = Topology::preset(SystemPreset::Inc3000);
+        assert_eq!(inc3000.node_count(), 432);
+        let inc9000 = Topology::preset(SystemPreset::Inc9000);
+        assert_eq!(inc9000.node_count(), 1728);
+    }
+
+    #[test]
+    fn single_card_has_no_multispan_and_54_single_links() {
+        // On an isolated 3×3×3 card, multi-span links (span exactly 3)
+        // cannot exist; single-span: 3 axes × (2 planes of 9 adjacent
+        // pairs... ) = 54 bidirectional = 108 unidirectional.
+        let t = Topology::preset(SystemPreset::Card);
+        assert!(t.links().iter().all(|l| l.span == Span::Single));
+        assert_eq!(t.link_count(), 108);
+    }
+
+    #[test]
+    fn every_node_has_six_single_span_links_in_the_interior() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let center = t.id(Coord { x: 6, y: 6, z: 1 });
+        let singles = t
+            .out_links(center)
+            .iter()
+            .filter(|&&l| t.link(l).span == Span::Single)
+            .count();
+        assert_eq!(singles, 6);
+        let multis = t
+            .out_links(center)
+            .iter()
+            .filter(|&&l| t.link(l).span == Span::Multi)
+            .count();
+        // x: ±3 both exist (6±3 in 0..12); y same; z: 12.. only 3 tall, none.
+        assert_eq!(multis, 4);
+    }
+
+    #[test]
+    fn inc9000_interior_node_has_six_multispan() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let center = t.id(Coord { x: 6, y: 6, z: 6 });
+        let multis = t
+            .out_links(center)
+            .iter()
+            .filter(|&&l| t.link(l).span == Span::Multi)
+            .count();
+        assert_eq!(multis, 6);
+    }
+
+    #[test]
+    fn card_port_capacity_is_432() {
+        assert_eq!(Topology::card_port_capacity(), 432);
+    }
+
+    #[test]
+    fn bisection_matches_paper() {
+        // §2.3: 288 GB/s for INC 3000, 864 GB/s for INC 9000.
+        assert_eq!(Topology::preset(SystemPreset::Inc3000).bisection_gbps(), 288);
+        assert_eq!(Topology::preset(SystemPreset::Inc9000).bisection_gbps(), 864);
+    }
+
+    #[test]
+    fn z_single_span_does_not_cross_cages() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        for l in t.links() {
+            if l.span == Span::Single {
+                let (a, b) = (t.coord(l.src), t.coord(l.dst));
+                assert_eq!(a.z / 3, b.z / 3, "single-span z crossing cages");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_span_always_intercard() {
+        for preset in [SystemPreset::Inc3000, SystemPreset::Inc9000] {
+            let t = Topology::preset(preset);
+            for l in t.links() {
+                if l.span == Span::Multi {
+                    assert_ne!(
+                        t.card_of(l.src),
+                        t.card_of(l.dst),
+                        "multi-span link within one card"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn special_nodes_fig1() {
+        let t = Topology::preset(SystemPreset::Card);
+        assert_eq!(t.coord(t.controller_node((0, 0, 0))), Coord { x: 0, y: 0, z: 0 });
+        assert_eq!(t.coord(t.gateway_node((0, 0, 0))), Coord { x: 1, y: 0, z: 0 });
+        assert_eq!(t.coord(t.pcie2_node((0, 0, 0))), Coord { x: 2, y: 0, z: 0 });
+    }
+
+    #[test]
+    fn min_hops_examples() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let a = t.id(Coord { x: 0, y: 0, z: 0 });
+        // Distance 1.
+        assert_eq!(t.min_hops(a, t.id(Coord { x: 1, y: 0, z: 0 })), 1);
+        // Distance 3: one multi-span hop.
+        assert_eq!(t.min_hops(a, t.id(Coord { x: 3, y: 0, z: 0 })), 1);
+        // Distance 11 = 3×3 + 2: 3 multi + 2 single.
+        assert_eq!(t.min_hops(a, t.id(Coord { x: 11, y: 0, z: 0 })), 5);
+        // Mixed axes add up.
+        assert_eq!(t.min_hops(a, t.id(Coord { x: 4, y: 2, z: 1 })), 2 + 2 + 1);
+        // Same node.
+        assert_eq!(t.min_hops(a, a), 0);
+    }
+
+    #[test]
+    fn cards_enumeration() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        assert_eq!(t.cards().len(), 16);
+        let t9 = Topology::preset(SystemPreset::Inc9000);
+        assert_eq!(t9.cards().len(), 64);
+        for card in t.cards() {
+            assert_eq!(t.card_nodes(card).len(), 27);
+        }
+    }
+}

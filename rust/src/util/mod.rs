@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the build environment is offline, so
+//! these replace the usual crates.io dependencies).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::SplitMix64;

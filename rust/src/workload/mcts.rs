@@ -1,0 +1,353 @@
+//! Distributed Monte Carlo Tree Search (intro, experiment E9).
+//!
+//! The paper's introduction names MCTS (AlphaGo) as "one of the prime
+//! examples of an algorithm which is not well matched to SIMD
+//! architecture": control-heavy, latency-sensitive, trivially
+//! node-parallel. On INC it maps naturally: a leader node owns the tree
+//! (UCB1 selection/expansion/backup); worker nodes run rollouts on their
+//! FPGA fabric; tasks and results travel over Postmaster DMA — exactly
+//! the small-message pattern §3.2 is built for.
+//!
+//! The game is a synthetic but non-trivial bandit tree: depth-`d`,
+//! branching-`b`, with leaf payoffs from a seeded hash so every run is
+//! deterministic and the optimum is known — the search must actually
+//! find it (tested below).
+
+use crate::network::{App, Network};
+use crate::channels::postmaster::PmRecord;
+use crate::sim::Time;
+use crate::topology::NodeId;
+
+/// Synthetic game: payoff of a leaf = hash of its action path, with a
+/// planted optimum down the all-zeros path.
+#[derive(Debug, Clone, Copy)]
+pub struct Game {
+    pub depth: u32,
+    pub branching: u32,
+    pub seed: u64,
+}
+
+impl Game {
+    /// Expected payoff of the leaf reached by `path` (0..1): a noisy
+    /// hash base plus a leading-zeros gradient, with the all-zeros path
+    /// planted as the unique optimum (payoff 1.0). The gradient makes
+    /// the game *searchable* — UCB can climb it — while the hash noise
+    /// keeps every other branch non-trivial.
+    pub fn payoff(&self, path: &[u32]) -> f64 {
+        debug_assert_eq!(path.len() as u32, self.depth);
+        let lead = path.iter().take_while(|&&a| a == 0).count();
+        if lead as u32 == self.depth {
+            return 1.0;
+        }
+        let mut h = self.seed ^ 0x9E3779B97F4A7C15;
+        for &a in path {
+            h ^= a as u64;
+            h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+            h ^= h >> 27;
+        }
+        // Bonus ≤ 0.4 (strictly below it for non-planted paths) + noise ≤ 0.4.
+        0.4 * lead as f64 / self.depth as f64 + (h % 400) as f64 / 1000.0
+    }
+
+    /// A noisy rollout estimate from a partial path: complete the path
+    /// pseudo-randomly (seeded by `nonce`) and return the leaf payoff.
+    pub fn rollout(&self, prefix: &[u32], nonce: u64) -> f64 {
+        let mut path = prefix.to_vec();
+        let mut h = nonce.wrapping_mul(0x2545F4914F6CDD1D) ^ self.seed;
+        while (path.len() as u32) < self.depth {
+            h ^= h << 13;
+            h ^= h >> 7;
+            h ^= h << 17;
+            path.push((h % self.branching as u64) as u32);
+        }
+        self.payoff(&path)
+    }
+}
+
+/// UCB1 tree node.
+#[derive(Debug, Default, Clone)]
+struct TreeNode {
+    visits: u64,
+    value_sum: f64,
+    children: Vec<usize>, // indices into the arena; empty = unexpanded
+}
+
+/// Leader + worker state for the distributed search.
+pub struct DistributedMcts {
+    pub game: Game,
+    leader: NodeId,
+    workers: Vec<NodeId>,
+    arena: Vec<TreeNode>,
+    paths: Vec<Vec<u32>>, // action path of each arena node
+    /// Rollout tasks in flight per worker.
+    inflight: Vec<u32>,
+    /// Pending (arena index) for each outstanding task nonce.
+    pending: std::collections::HashMap<u64, usize>,
+    next_nonce: u64,
+    pub rollouts_done: u64,
+    rollouts_target: u64,
+    /// Rollout compute time on a worker's FPGA, ns.
+    pub rollout_ns: Time,
+    /// Max outstanding tasks per worker.
+    pub pipeline_depth: u32,
+}
+
+/// Result of a search run.
+#[derive(Debug, Clone)]
+pub struct MctsResult {
+    pub best_path: Vec<u32>,
+    pub best_value: f64,
+    pub rollouts: u64,
+    pub makespan: Time,
+    /// Rollouts per virtual second.
+    pub throughput: f64,
+}
+
+impl DistributedMcts {
+    pub fn new(net: &mut Network, game: Game, leader: NodeId, workers: Vec<NodeId>) -> Self {
+        assert!(!workers.is_empty());
+        net.pm_open(leader, PM_RESULT_Q);
+        for &w in &workers {
+            net.pm_open(w, PM_TASK_Q);
+        }
+        DistributedMcts {
+            game,
+            leader,
+            inflight: vec![0; workers.len()],
+            workers,
+            arena: vec![TreeNode::default()],
+            paths: vec![vec![]],
+            pending: std::collections::HashMap::new(),
+            next_nonce: 1,
+            rollouts_done: 0,
+            rollouts_target: 0,
+            rollout_ns: 20_000,
+            pipeline_depth: 4,
+        }
+    }
+
+    /// Run `rollouts` rollouts and return the best action path found.
+    pub fn search(mut self, net: &mut Network, rollouts: u64) -> MctsResult {
+        let t0 = net.now();
+        self.rollouts_target = rollouts;
+        // Prime every worker's pipeline.
+        for w in 0..self.workers.len() {
+            for _ in 0..self.pipeline_depth {
+                if self.issued() < self.rollouts_target {
+                    self.dispatch(net, w);
+                }
+            }
+        }
+        net.run_to_quiescence(&mut self);
+        assert_eq!(self.rollouts_done, rollouts, "lost rollouts");
+        // Extract the visit-greedy path.
+        let mut best_path = Vec::new();
+        let mut idx = 0usize;
+        while !self.arena[idx].children.is_empty() {
+            let (k, &c) = self.arena[idx]
+                .children
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| self.arena[c].visits)
+                .unwrap();
+            best_path.push(k as u32);
+            idx = c;
+        }
+        let makespan = net.now() - t0;
+        let root = &self.arena[0];
+        MctsResult {
+            best_value: root.value_sum / root.visits.max(1) as f64,
+            best_path,
+            rollouts,
+            makespan,
+            throughput: rollouts as f64 / (makespan as f64 / 1e9),
+        }
+    }
+
+    fn issued(&self) -> u64 {
+        self.rollouts_done + self.pending.len() as u64
+    }
+
+    /// UCB1 selection from the root, expanding one node; returns the
+    /// arena index whose prefix the rollout should start from.
+    fn select_expand(&mut self) -> usize {
+        let mut idx = 0usize;
+        loop {
+            if (self.paths[idx].len() as u32) == self.game.depth {
+                return idx;
+            }
+            if self.arena[idx].children.is_empty() {
+                // Expand all children at once.
+                for a in 0..self.game.branching {
+                    let mut p = self.paths[idx].clone();
+                    p.push(a);
+                    self.arena.push(TreeNode::default());
+                    self.paths.push(p);
+                    let c = self.arena.len() - 1;
+                    self.arena[idx].children.push(c);
+                }
+                let c = self.arena[idx].children[0];
+                return c;
+            }
+            let ln = (self.arena[idx].visits.max(1) as f64).ln();
+            idx = *self.arena[idx]
+                .children
+                .iter()
+                .max_by(|&&a, &&b| {
+                    let ucb = |n: &TreeNode| {
+                        if n.visits == 0 {
+                            f64::INFINITY
+                        } else {
+                            n.value_sum / n.visits as f64
+                                + 1.4 * (ln / n.visits as f64).sqrt()
+                        }
+                    };
+                    ucb(&self.arena[a]).partial_cmp(&ucb(&self.arena[b])).unwrap()
+                })
+                .unwrap();
+        }
+    }
+
+    /// Issue one rollout task to worker `w` over Postmaster.
+    fn dispatch(&mut self, net: &mut Network, w: usize) {
+        let idx = self.select_expand();
+        let nonce = self.next_nonce;
+        self.next_nonce += 1;
+        self.pending.insert(nonce, idx);
+        self.inflight[w] += 1;
+        // Task record: [nonce, arena idx, path...] — small by design.
+        let mut data = nonce.to_le_bytes().to_vec();
+        data.extend((w as u64).to_le_bytes());
+        data.extend(self.paths[idx].iter().flat_map(|a| a.to_le_bytes()));
+        net.pm_send(self.leader, self.workers[w], PM_TASK_Q, data);
+    }
+
+    fn backup(&mut self, idx: usize, value: f64) {
+        // Walk ancestors by path prefix (arena is a tree: recompute the
+        // chain from the root).
+        let path = self.paths[idx].clone();
+        let mut node = 0usize;
+        self.arena[0].visits += 1;
+        self.arena[0].value_sum += value;
+        for &a in &path {
+            node = self.arena[node].children[a as usize];
+            self.arena[node].visits += 1;
+            self.arena[node].value_sum += value;
+        }
+    }
+}
+
+/// Postmaster queue ids.
+const PM_TASK_Q: u8 = 1;
+const PM_RESULT_Q: u8 = 2;
+
+impl App for DistributedMcts {
+    fn on_postmaster(&mut self, net: &mut Network, node: NodeId, queue: u8, rec: &PmRecord) {
+        match queue {
+            PM_TASK_Q => {
+                // Worker: run the rollout on the FPGA (modeled compute
+                // time), then return the value.
+                let nonce = u64::from_le_bytes(rec.data[0..8].try_into().unwrap());
+                let widx = u64::from_le_bytes(rec.data[8..16].try_into().unwrap());
+                let path: Vec<u32> = rec.data[16..]
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let value = self.game.rollout(&path, nonce);
+                // Result record: [nonce, widx, value bits].
+                let mut data = nonce.to_le_bytes().to_vec();
+                data.extend(widx.to_le_bytes());
+                data.extend(value.to_bits().to_le_bytes());
+                // Reply after the rollout compute window.
+                let leader = self.leader;
+                let at = net.now() + self.rollout_ns;
+                schedule_pm_reply(net, at, node, leader, PM_RESULT_Q, data);
+            }
+            PM_RESULT_Q => {
+                // Leader: backup + keep the worker's pipeline full.
+                let nonce = u64::from_le_bytes(rec.data[0..8].try_into().unwrap());
+                let widx = u64::from_le_bytes(rec.data[8..16].try_into().unwrap()) as usize;
+                let value =
+                    f64::from_bits(u64::from_le_bytes(rec.data[16..24].try_into().unwrap()));
+                let idx = self.pending.remove(&nonce).expect("unknown rollout result");
+                self.inflight[widx] -= 1;
+                self.rollouts_done += 1;
+                self.backup(idx, value);
+                if self.issued() < self.rollouts_target {
+                    self.dispatch(net, widx);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn schedule_pm_reply(
+    net: &mut Network,
+    at: Time,
+    src: NodeId,
+    dst: NodeId,
+    queue: u8,
+    data: Vec<u8>,
+) {
+    let id = net.next_packet_id();
+    let mut pkt = crate::router::Packet::new(
+        id,
+        src,
+        dst,
+        crate::router::RouteKind::Directed,
+        crate::router::Proto::Postmaster { queue },
+        crate::router::Payload::bytes(data),
+        at,
+    );
+    pkt.injected_at = at;
+    let delay = net.cfg.arm.postmaster_enqueue + net.cfg.link.inject_latency;
+    net.metrics.packets_injected += 1;
+    net.sim.at(at + delay, crate::network::Event::Inject { packet: pkt });
+}
+
+/// Convenience: run a search with `k` workers on a fresh card.
+pub fn run_card_search(workers: usize, rollouts: u64) -> MctsResult {
+    let mut net = Network::card();
+    let leader = NodeId(0);
+    let ws: Vec<NodeId> = (1..=workers as u32).map(NodeId).collect();
+    let game = Game { depth: 6, branching: 3, seed: 42 };
+    let mcts = DistributedMcts::new(&mut net, game, leader, ws);
+    mcts.search(&mut net, rollouts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_planted_optimum() {
+        let r = run_card_search(8, 3000);
+        assert_eq!(r.rollouts, 3000);
+        assert_eq!(
+            r.best_path,
+            vec![0; 6],
+            "search should find the planted all-zeros optimum"
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_workers() {
+        let r2 = run_card_search(2, 600);
+        let r8 = run_card_search(8, 600);
+        assert!(
+            r8.throughput > r2.throughput * 2.0,
+            "8 workers ({:.0}/s) should beat 2 workers ({:.0}/s) by >2x",
+            r8.throughput,
+            r2.throughput
+        );
+    }
+
+    #[test]
+    fn game_is_deterministic() {
+        let g = Game { depth: 4, branching: 3, seed: 7 };
+        assert_eq!(g.payoff(&[0, 0, 0, 0]), 1.0);
+        assert_eq!(g.rollout(&[1], 5), g.rollout(&[1], 5));
+        assert!(g.payoff(&[1, 2, 0, 1]) < 1.0);
+    }
+}

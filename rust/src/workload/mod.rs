@@ -1,0 +1,23 @@
+//! The machine-intelligence workloads the paper motivates.
+//!
+//! * [`training`] — data-parallel training of the JAX/Pallas transformer
+//!   LM: real numerics through the PJRT runtime, gradient exchange as a
+//!   ring all-reduce whose traffic runs on the simulated fabric, and
+//!   per-node compute time from the FPGA-offload cost model. This is
+//!   the end-to-end driver (`examples/train_distributed.rs`, E10).
+//! * [`learners`] — the §3.2 distributed-learners pattern: every node
+//!   emits many small outputs per time step that are the next step's
+//!   inputs elsewhere; compares send-as-generated (Postmaster overlap)
+//!   against aggregate-then-send (E8).
+//! * [`mcts`] — distributed Monte Carlo Tree Search, the intro's example
+//!   of an algorithm ill-suited to SIMD hardware: a leader node expands
+//!   a UCB tree and farms rollouts to workers over Postmaster (E9).
+
+pub mod learners;
+pub mod mcts;
+pub mod training;
+
+/// FPGA-offload compute model: effective throughput of one node's fabric
+/// at dense f32 math, FLOP/ns. Zynq-7000 class fabric ≈ 20 GFLOP/s
+/// (DESIGN.md §5 substitution table).
+pub const NODE_FLOP_PER_NS: f64 = 20.0;

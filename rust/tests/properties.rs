@@ -1,0 +1,253 @@
+//! Property-style tests over randomized scenarios (seeded SplitMix64 —
+//! the offline environment has no proptest, so cases are generated
+//! explicitly; failures print the seed for reproduction).
+
+use inc_sim::config::SystemPreset;
+use inc_sim::network::{App, Network, NullApp};
+use inc_sim::router::{Packet, Payload, Proto};
+use inc_sim::topology::{NodeId, Span, Topology};
+use inc_sim::util::SplitMix64;
+
+const CASES: u64 = 40;
+
+/// Directed routing delivers every packet, and hop counts are minimal on
+/// an idle mesh (per-packet hops ≤ min_hops can't be beaten; equality on
+/// idle fabric).
+#[test]
+fn prop_directed_minimal_hops_idle() {
+    struct Check {
+        topo: Topology,
+        got: Vec<(NodeId, NodeId, u32)>,
+    }
+    impl App for Check {
+        fn on_raw(&mut self, _net: &mut Network, node: NodeId, packet: &Packet) {
+            self.got.push((packet.src, node, packet.hops));
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed);
+        let mut net = Network::inc3000();
+        let n = net.topo.node_count();
+        let src = NodeId(rng.gen_range(n) as u32);
+        let mut dst = NodeId(rng.gen_range(n) as u32);
+        if dst == src {
+            dst = NodeId((dst.0 + 1) % n as u32);
+        }
+        net.send_directed(src, dst, Proto::Raw { tag: 1 }, Payload::Empty);
+        let mut app = Check { topo: net.topo.clone(), got: vec![] };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.got.len(), 1, "seed {seed}");
+        let (s, d, hops) = app.got[0];
+        assert_eq!((s, d), (src, dst), "seed {seed}");
+        assert_eq!(hops, app.topo.min_hops(src, dst), "seed {seed}: non-minimal path");
+    }
+}
+
+/// Broadcast delivers exactly one copy everywhere from random sources on
+/// all three presets (the §2.4 guarantee).
+#[test]
+fn prop_broadcast_exactly_once() {
+    struct Count {
+        copies: Vec<u32>,
+    }
+    impl App for Count {
+        fn on_raw(&mut self, _net: &mut Network, node: NodeId, _p: &Packet) {
+            self.copies[node.0 as usize] += 1;
+        }
+    }
+    for preset in [SystemPreset::Card, SystemPreset::Inc3000, SystemPreset::Inc9000] {
+        for seed in 0..8 {
+            let mut rng = SplitMix64::new(seed ^ 0xB0);
+            let mut net = Network::new(inc_sim::config::SystemConfig::new(preset));
+            let n = net.topo.node_count();
+            let src = NodeId(rng.gen_range(n) as u32);
+            net.send_broadcast(src, Proto::Raw { tag: 2 }, Payload::Empty);
+            let mut app = Count { copies: vec![0; n] };
+            net.run_to_quiescence(&mut app);
+            for (i, &c) in app.copies.iter().enumerate() {
+                assert_eq!(c, 1, "{preset:?} seed {seed}: node {i} got {c} copies");
+            }
+        }
+    }
+}
+
+/// Credit conservation: after quiescence every link's credits return to
+/// the full buffer (no lost or duplicated credit), under random bursts.
+#[test]
+fn prop_credits_conserved() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xC4ED17);
+        let mut net = Network::card();
+        let n = net.topo.node_count();
+        for _ in 0..100 {
+            let src = NodeId(rng.gen_range(n) as u32);
+            let mut dst = NodeId(rng.gen_range(n) as u32);
+            if dst == src {
+                dst = NodeId((dst.0 + 1) % n as u32);
+            }
+            let len = 1 + rng.gen_range(2000);
+            net.send_directed(
+                src,
+                dst,
+                Proto::Raw { tag: 3 },
+                Payload::bytes(vec![0u8; len]),
+            );
+        }
+        net.run_to_quiescence(&mut NullApp);
+        let cap = net.cfg.link.credit_buffer_bytes;
+        for (i, l) in net.links.iter().enumerate() {
+            assert_eq!(l.credits(), cap, "seed {seed}: link {i} leaked credits");
+            assert_eq!(l.queue_len(), 0, "seed {seed}: link {i} stuck queue");
+        }
+    }
+}
+
+/// Bridge FIFO: words always arrive complete and in order, under random
+/// burst sizes and multiple channels.
+#[test]
+fn prop_fifo_order_and_completeness() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xF1F0);
+        let mut net = Network::card();
+        let n = net.topo.node_count();
+        let src = NodeId(rng.gen_range(n) as u32);
+        let mut dst = NodeId(rng.gen_range(n) as u32);
+        if dst == src {
+            dst = NodeId((dst.0 + 1) % n as u32);
+        }
+        let channels = 1 + rng.gen_range(4) as u8;
+        for ch in 0..channels {
+            net.fifo_connect(src, dst, ch, 64);
+        }
+        let mut sent: Vec<Vec<u64>> = vec![vec![]; channels as usize];
+        for _ in 0..30 {
+            let ch = rng.gen_range(channels as usize) as u8;
+            let burst = 1 + rng.gen_range(100);
+            let words: Vec<u64> = (0..burst)
+                .map(|i| sent[ch as usize].len() as u64 + i as u64)
+                .collect();
+            sent[ch as usize].extend(&words);
+            net.fifo_send(src, ch, &words);
+        }
+        net.run_to_quiescence(&mut NullApp);
+        for ch in 0..channels {
+            let got = net.fifo_read(dst, ch, usize::MAX);
+            assert_eq!(got, sent[ch as usize], "seed {seed} channel {ch}");
+        }
+    }
+}
+
+/// Postmaster contiguity under random many-to-one traffic: every stored
+/// record is byte-identical to a record its initiator sent (records are
+/// never torn or merged). NOTE: arrival *order* is deliberately NOT
+/// asserted per initiator — §2.4 says directed routing may deliver out
+/// of order, and Postmaster stores in DMA-completion order.
+#[test]
+fn prop_postmaster_contiguity_and_order() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x90057);
+        let mut net = Network::card();
+        let n = net.topo.node_count();
+        let target = NodeId(rng.gen_range(n) as u32);
+        net.pm_open(target, 0);
+        let mut sent: Vec<Vec<(u8, usize)>> = vec![vec![]; n]; // (tag, len)
+        for k in 0..120 {
+            let mut src = NodeId(rng.gen_range(n) as u32);
+            if src == target {
+                src = NodeId((src.0 + 1) % n as u32);
+            }
+            let len = 1 + rng.gen_range(200);
+            let tag = (k % 251) as u8;
+            sent[src.0 as usize].push((tag, len));
+            net.pm_send(src, target, 0, vec![tag; len]);
+        }
+        net.run_to_quiescence(&mut NullApp);
+        let recs = net.pm_read(target, 0);
+        assert_eq!(recs.len(), 120, "seed {seed}");
+        // Multiset match per initiator: every stored record is whole and
+        // corresponds to exactly one sent record.
+        let mut outstanding: Vec<Vec<(u8, usize)>> = sent.clone();
+        for r in &recs {
+            let idx = r.initiator.0 as usize;
+            assert!(
+                r.data.iter().all(|&b| b == r.data[0]),
+                "seed {seed}: torn record {:?}",
+                &r.data[..r.data.len().min(8)]
+            );
+            let key = (r.data[0], r.data.len());
+            let pos = outstanding[idx]
+                .iter()
+                .position(|&k| k == key)
+                .unwrap_or_else(|| panic!("seed {seed}: unknown record {key:?}"));
+            outstanding[idx].remove(pos);
+        }
+        assert!(outstanding.iter().all(|v| v.is_empty()), "seed {seed}: lost records");
+    }
+}
+
+/// Topology invariants under all presets: link symmetry (every link has
+/// a reverse twin), degree bounds, span correctness.
+#[test]
+fn prop_topology_invariants() {
+    for preset in [SystemPreset::Card, SystemPreset::Inc3000, SystemPreset::Inc9000] {
+        let t = Topology::preset(preset);
+        for l in t.links() {
+            // Reverse link exists.
+            assert!(
+                t.links()
+                    .iter()
+                    .any(|r| r.src == l.dst && r.dst == l.src && r.span == l.span),
+                "{preset:?}: link {l:?} has no reverse twin"
+            );
+            // Span matches geometric distance.
+            let (a, b) = (t.coord(l.src), t.coord(l.dst));
+            let d = a.x.abs_diff(b.x) + a.y.abs_diff(b.y) + a.z.abs_diff(b.z);
+            assert_eq!(d, l.span.distance(), "{preset:?}");
+        }
+        for n in t.nodes() {
+            let singles =
+                t.out_links(n).iter().filter(|&&l| t.link(l).span == Span::Single).count();
+            let multis =
+                t.out_links(n).iter().filter(|&&l| t.link(l).span == Span::Multi).count();
+            assert!(singles <= 6, "{preset:?}: {n} has {singles} single-span");
+            assert!(multis <= 6, "{preset:?}: {n} has {multis} multi-span");
+        }
+    }
+}
+
+/// Determinism: identical seeds give identical event counts and clocks
+/// across full random workloads.
+#[test]
+fn prop_deterministic_replay() {
+    let run = |seed: u64| {
+        let mut rng = SplitMix64::new(seed);
+        let mut net = Network::card();
+        let n = net.topo.node_count();
+        net.pm_open(NodeId(0), 0);
+        for _ in 0..200 {
+            let src = NodeId(rng.gen_range(n) as u32);
+            match rng.gen_range(3) {
+                0 => {
+                    let mut dst = NodeId(rng.gen_range(n) as u32);
+                    if dst == src {
+                        dst = NodeId((dst.0 + 1) % n as u32);
+                    }
+                    net.send_directed(src, dst, Proto::Raw { tag: 9 }, Payload::Empty);
+                }
+                1 => {
+                    net.send_broadcast(src, Proto::Raw { tag: 9 }, Payload::Empty);
+                }
+                _ => {
+                    if src != NodeId(0) {
+                        net.pm_send(src, NodeId(0), 0, vec![1, 2, 3]);
+                    }
+                }
+            }
+        }
+        let events = net.run_to_quiescence(&mut NullApp);
+        (events, net.now(), net.metrics.packets_delivered)
+    };
+    for seed in 0..10 {
+        assert_eq!(run(seed), run(seed), "seed {seed} not deterministic");
+    }
+}

@@ -1,0 +1,79 @@
+//! Integration: PJRT runtime loads the AOT artifacts and the numeric
+//! contract holds end to end (requires `make artifacts`).
+
+use inc_sim::runtime::{self, Runtime};
+
+fn rt() -> Runtime {
+    runtime::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn artifacts_load_and_compile() {
+    let rt = rt();
+    assert!(["cpu", "host"].contains(&rt.platform().to_lowercase().as_str()));
+    for name in ["init", "grad", "apply", "fwd"] {
+        assert!(rt.entry(name).is_ok(), "missing entry point {name}");
+    }
+}
+
+#[test]
+fn init_params_are_deterministic_and_shaped() {
+    let rt = rt();
+    let a = rt.execute_f32("init", &[]).unwrap();
+    let b = rt.execute_f32("init", &[]).unwrap();
+    assert_eq!(a.len(), rt.entry("init").unwrap().outputs.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x, y, "init must be deterministic");
+    }
+    // RMS-norm gains initialize to ones.
+    let specs = &rt.entry("init").unwrap().outputs;
+    let lnf_idx = specs.iter().position(|s| s.name == "p:lnf").unwrap();
+    assert!(a[lnf_idx].iter().all(|&v| v == 1.0));
+}
+
+#[test]
+fn grad_returns_loss_near_uniform_and_nonzero_grads() {
+    let rt = rt();
+    let params = rt.execute_f32("init", &[]).unwrap();
+    let ep = rt.entry("grad").unwrap().clone();
+    let x_spec = &ep.inputs[ep.inputs.len() - 2];
+    let (b, t) = (x_spec.shape[0], x_spec.shape[1]);
+    let (x, y) = inc_sim::workload::training::gen_batch(64, b, t, 42);
+    let mut inputs = params.clone();
+    inputs.push(x);
+    inputs.push(y);
+    let out = rt.execute_f32("grad", &inputs).unwrap();
+    let loss = out[0][0];
+    // ln(64) ≈ 4.16 at (near-uniform) init.
+    assert!((loss - 64f32.ln()).abs() < 0.5, "loss {loss}");
+    let grad_norm: f32 = out[1..].iter().flatten().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(grad_norm > 1e-3, "gradients should be nonzero, got {grad_norm}");
+    assert!(grad_norm.is_finite());
+}
+
+#[test]
+fn apply_moves_params_against_gradient() {
+    let rt = rt();
+    let params = rt.execute_f32("init", &[]).unwrap();
+    let n = params.len();
+    // grads = params (so p' = (1 - lr) p).
+    let mut inputs = params.clone();
+    inputs.extend(params.clone());
+    inputs.push(vec![0.5f32]);
+    let out = rt.execute_f32("apply", &inputs).unwrap();
+    assert_eq!(out.len(), n);
+    for (p, p2) in params.iter().zip(&out) {
+        for (a, b) in p.iter().zip(p2) {
+            assert!((b - 0.5 * a).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn input_validation_errors_are_helpful() {
+    let rt = rt();
+    let err = rt.execute_f32("grad", &[]).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+    let err = rt.execute_f32("nope", &[]).unwrap_err().to_string();
+    assert!(err.contains("no entry point"), "{err}");
+}
