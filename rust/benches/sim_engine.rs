@@ -1,47 +1,113 @@
 //! Perf harness for the simulator itself (EXPERIMENTS.md §Perf): event
 //! throughput of the discrete-event core and end-to-end packet rates on
-//! the three presets. This is the L3 hot path.
+//! the presets. This is the L3 hot path.
+//!
+//! The event-queue section benches the timing wheel against the old
+//! `BinaryHeap` core (`ReferenceQueue`) on the same schedule/dispatch
+//! pattern, so the speedup is printed from one binary. Alongside the
+//! human-readable output, a machine-readable `BENCH_sim.json` is
+//! written to the working directory so the perf trajectory can be
+//! tracked across PRs.
 
 mod common;
 
 use inc_sim::network::{Network, NullApp};
 use inc_sim::router::{Payload, Proto};
-use inc_sim::sim::Sim;
+use inc_sim::sim::{EventQueue, ReferenceQueue};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
+
+/// The two queue implementations share push/pop shapes but no trait;
+/// this local one lets the bench loop be written once.
+trait Queue {
+    fn push(&mut self, t: u64, e: u64);
+    fn pop(&mut self) -> Option<(u64, u64)>;
+}
+
+impl Queue for EventQueue<u64> {
+    fn push(&mut self, t: u64, e: u64) {
+        EventQueue::push(self, t, e)
+    }
+    fn pop(&mut self) -> Option<(u64, u64)> {
+        EventQueue::pop(self)
+    }
+}
+
+impl Queue for ReferenceQueue<u64> {
+    fn push(&mut self, t: u64, e: u64) {
+        ReferenceQueue::push(self, t, e)
+    }
+    fn pop(&mut self) -> Option<(u64, u64)> {
+        ReferenceQueue::pop(self)
+    }
+}
+
+/// Steady-state schedule/dispatch churn at a given queue depth; returns
+/// events per second.
+fn bench_queue<Q: Queue>(q: &mut Q, depth: u64, n: u64) -> f64 {
+    let mut rng = SplitMix64::new(1);
+    for i in 0..depth {
+        q.push(rng.next_u64() % 1_000_000, i);
+    }
+    let t0 = std::time::Instant::now();
+    let mut popped = 0u64;
+    while let Some((t, _)) = q.pop() {
+        popped += 1;
+        if popped < n {
+            // Reschedule ahead: steady-state churn at constant depth.
+            q.push(t + 1 + (popped % 97), popped);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    // depth initial entries + one reschedule per pop while popped < n.
+    assert_eq!(popped, depth + n - 1);
+    n as f64 / secs
+}
 
 fn main() {
     common::header("Perf", "simulator hot-path throughput");
 
-    // Raw event queue: schedule/dispatch cycles at two steady-state
-    // depths (a card's working set vs a pathological backlog).
+    let mut json = String::from("{\n  \"event_queue\": [\n");
+    let mut speedup_500k = 0.0;
+
+    // Raw event queue at two steady-state depths (a card's working set
+    // vs a pathological backlog), wheel vs BinaryHeap baseline.
     for depth in [10_000u64, 500_000] {
         let n = 2_000_000u64;
-        let ((), secs) = common::timed(|| {
-            let mut sim: Sim<u64> = Sim::new();
-            let mut rng = SplitMix64::new(1);
-            for i in 0..depth {
-                sim.at(rng.next_u64() % 1_000_000, i);
-            }
-            let mut popped = 0u64;
-            while let Some((t, _)) = sim.pop() {
-                popped += 1;
-                if popped < n {
-                    // Reschedule ahead: steady-state heap churn.
-                    sim.at(t + 1 + (popped % 97), popped);
-                }
-            }
-        });
+        let wheel_eps = {
+            let mut q: EventQueue<u64> = EventQueue::new();
+            bench_queue(&mut q, depth, n)
+        };
+        let heap_eps = {
+            let mut q: ReferenceQueue<u64> = ReferenceQueue::new();
+            bench_queue(&mut q, depth, n)
+        };
+        let speedup = wheel_eps / heap_eps;
+        if depth == 500_000 {
+            speedup_500k = speedup;
+        }
         println!(
-            "event queue (depth {depth:>6}): {:.1} M events/s (schedule+dispatch)",
-            n as f64 / secs / 1e6
+            "event queue (depth {depth:>6}): wheel {:.1} M events/s vs heap {:.1} M events/s ({speedup:.2}x)",
+            wheel_eps / 1e6,
+            heap_eps / 1e6,
         );
+        json.push_str(&format!(
+            "    {{\"depth\": {depth}, \"impl\": \"timing_wheel\", \"events_per_sec\": {wheel_eps:.0}}},\n"
+        ));
+        json.push_str(&format!(
+            "    {{\"depth\": {depth}, \"impl\": \"binary_heap\", \"events_per_sec\": {heap_eps:.0}}},\n"
+        ));
     }
+    // Trim the trailing ",\n" of the array.
+    json.truncate(json.len() - 2);
+    json.push_str("\n  ],\n");
+    json.push_str(&format!("  \"queue_speedup_500k\": {speedup_500k:.3},\n"));
+    json.push_str("  \"packets\": [\n");
 
     // End-to-end packet simulation rate, uniform random traffic.
-    for (label, mut net, packets) in [
-        ("card (27)", Network::card(), 20_000u32),
-        ("inc3000 (432)", Network::inc3000(), 20_000),
+    for (label, json_name, mut net, packets) in [
+        ("card (27)", "card", Network::card(), 20_000u32),
+        ("inc3000 (432)", "inc3000", Network::inc3000(), 20_000),
     ] {
         let nn = net.topo.node_count();
         let mut rng = SplitMix64::new(7);
@@ -57,15 +123,25 @@ fn main() {
             net.run_to_quiescence(&mut NullApp);
         });
         let events = net.sim.dispatched();
+        let eps = events as f64 / secs;
+        let pps = packets as f64 / secs;
         println!(
-            "{label:<14} {} pkts -> {} events in {:.3} s = {:.2} M events/s, {:.0} kpkt/s",
+            "{label:<14} {} pkts -> {} events in {:.3} s = {:.2} M events/s, {:.0} kpkt/s \
+             (arena high-water {})",
             packets,
             events,
             secs,
-            events as f64 / secs / 1e6,
-            packets as f64 / secs / 1e3
+            eps / 1e6,
+            pps / 1e3,
+            net.packets.high_water(),
         );
+        json.push_str(&format!(
+            "    {{\"preset\": \"{json_name}\", \"nodes\": {nn}, \"packets\": {packets}, \
+             \"events_per_sec\": {eps:.0}, \"packets_per_sec\": {pps:.0}}},\n"
+        ));
     }
+    json.truncate(json.len() - 2);
+    json.push_str("\n  ],\n");
 
     // Broadcast storm at INC 3000 scale (the §4.3 boot path shape).
     let mut net = Network::inc3000();
@@ -75,9 +151,17 @@ fn main() {
         }
         net.run_to_quiescence(&mut NullApp);
     });
+    let bc_eps = net.sim.dispatched() as f64 / secs;
     println!(
         "broadcast storm: 200 × 432-node broadcasts in {:.3} s ({:.2} M events/s)",
         secs,
-        net.sim.dispatched() as f64 / secs / 1e6
+        bc_eps / 1e6
     );
+    json.push_str(&format!(
+        "  \"broadcast_storm\": {{\"broadcasts\": 200, \"nodes\": 432, \
+         \"events_per_sec\": {bc_eps:.0}}}\n}}\n"
+    ));
+
+    std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
+    println!("wrote BENCH_sim.json");
 }

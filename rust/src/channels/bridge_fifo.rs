@@ -15,11 +15,13 @@
 //! [`crate::config::SystemConfig::bridge_fifo_logic`] ns end to end,
 //! split evenly between transmit and receive halves; see config docs.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 use crate::network::{App, Event, Network};
 use crate::router::{Packet, Payload, Proto, RouteKind};
 use crate::topology::NodeId;
+use crate::util::FxHashMap;
 
 /// Max transmit/receive units per Bridge FIFO Mux/Demux (§3.3).
 pub const CHANNELS_PER_MUX: u8 = 32;
@@ -50,11 +52,13 @@ pub struct RxUnit {
     pub ooo_packets: u64,
 }
 
-/// All Bridge-FIFO endpoints in the system.
+/// All Bridge-FIFO endpoints in the system. Endpoint lookup is on the
+/// per-packet path (`fifo_send` / `fifo_rx`), so the maps use
+/// deterministic Fx hashing.
 #[derive(Debug, Default)]
 pub struct BridgeFifoFabric {
-    tx: HashMap<(u32, u8), TxUnit>,
-    rx: HashMap<(u32, u8), RxUnit>,
+    tx: FxHashMap<(u32, u8), TxUnit>,
+    rx: FxHashMap<(u32, u8), RxUnit>,
 }
 
 impl BridgeFifoFabric {
@@ -140,7 +144,10 @@ impl Network {
             // touches the network.
             let masked: Vec<u64> = words.iter().map(|w| w & mask).collect();
             let logic = self.cfg.bridge_fifo_logic;
-            self.sim.after(logic, Event::FifoLocal { node: src, channel, words: masked });
+            self.sim.after(
+                logic,
+                Event::FifoLocal { node: src, channel, words: Arc::new(masked) },
+            );
             return;
         }
 
@@ -163,10 +170,10 @@ impl Network {
             seq += 1;
             // Transmit-unit logic runs before the packet reaches the
             // Packet Mux / router (injection overhead accounts for those).
-            let sim_pkt = pkt;
             let delay = tx_logic + self.cfg.link.inject_latency;
             self.metrics.packets_injected += 1;
-            self.sim.after(delay, Event::Inject { packet: sim_pkt });
+            let packet = self.packets.alloc(pkt);
+            self.sim.after(delay, Event::Inject { packet });
         }
         self.fifos.tx.get_mut(&(src.0, channel)).unwrap().next_seq = seq;
     }
@@ -178,8 +185,10 @@ impl Network {
             Proto::BridgeFifo { channel } => channel,
             _ => unreachable!(),
         };
-        let words = match &packet.payload {
-            Payload::Words(w) => w.as_ref().clone(),
+        // The packet owns its payload here, so the common (in-order,
+        // refcount 1) case takes the words without copying.
+        let words = match packet.payload {
+            Payload::Words(w) => Arc::try_unwrap(w).unwrap_or_else(|a| (*a).clone()),
             _ => unreachable!("Bridge FIFO packet without words"),
         };
         let latency = self.now() - packet.injected_at;
@@ -216,7 +225,7 @@ impl Network {
         &mut self,
         node: NodeId,
         channel: u8,
-        words: Vec<u64>,
+        words: &[u64],
         app: &mut dyn App,
     ) {
         {
@@ -229,7 +238,7 @@ impl Network {
             rx.inbox.extend(words.iter().copied());
         }
         self.metrics.record_delivery("bridge_fifo", self.cfg.bridge_fifo_logic, 0);
-        app.on_fifo(self, node, channel, &words);
+        app.on_fifo(self, node, channel, words);
     }
 
     /// Read up to `max` words from a channel's read port.

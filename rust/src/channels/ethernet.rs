@@ -152,7 +152,7 @@ impl Network {
         let wire = bytes + ETH_OVERHEAD;
         let dma = (wire as f64 / arm.axi_bytes_per_ns).ceil() as Time;
         port.tx_busy_until = dma_start + dma;
-        let frame = EthFrame { src, dst, bytes, tag, t_created: now };
+        let frame = Box::new(EthFrame { src, dst, bytes, tag, t_created: now });
         self.sim.at(dma_start + dma, Event::EthTx { frame });
     }
 
@@ -206,7 +206,7 @@ impl Network {
                 let cost = arm.irq_cost + arm.driver + arm.kernel_stack;
                 self.nodes[node.0 as usize].cpu_busy_ns += cost;
                 self.eth.port_mut(node).irqs_taken += 1;
-                self.sim.after(dma + cost, Event::EthRx { node, frame });
+                self.sim.after(dma + cost, Event::EthRx { node, frame: Box::new(frame) });
             }
             RxMode::Polling { interval } => {
                 let deliver_at = self.now() + dma;
@@ -351,7 +351,7 @@ impl Network {
         let start = now.max(ext.ext_busy_until);
         ext.ext_busy_until = start + wire as u64 * EXT_NS_PER_BYTE;
         // Then the gateway forwards over the internal fabric.
-        let frame = EthFrame { src: gw, dst: node, bytes, tag, t_created: now };
+        let frame = Box::new(EthFrame { src: gw, dst: node, bytes, tag, t_created: now });
         let at = ext.ext_busy_until;
         self.sim.at(at, Event::EthTx { frame });
         true

@@ -13,18 +13,23 @@
 //! than aggregated, so communication overlaps computation (benchmarked
 //! in `benches/overlap_learners.rs`, experiment E8).
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::network::{App, Event, Network};
 use crate::router::{Packet, Payload, Proto, RouteKind};
 use crate::sim::Time;
 use crate::topology::NodeId;
+use crate::util::FxHashMap;
 
 /// One record in a target's receive stream.
+///
+/// `data` is reference-counted: the bytes are shared with the in-flight
+/// packet payload and with every `pm_read` copy, so cloning a record is
+/// O(1) (indexing/iteration is unchanged via `Deref`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PmRecord {
     pub initiator: NodeId,
-    pub data: Vec<u8>,
+    pub data: Arc<Vec<u8>>,
     /// When the initiator wrote the transmit queue.
     pub t_enqueued: Time,
     /// When the target DMA finished storing it.
@@ -42,11 +47,12 @@ pub struct PmQueue {
 }
 
 /// All Postmaster queues in the system, keyed by (target node, queue id).
+/// Looked up per record on the delivery path, hence Fx hashing.
 #[derive(Debug, Default)]
 pub struct PostmasterFabric {
-    queues: HashMap<(u32, u8), PmQueue>,
+    queues: FxHashMap<(u32, u8), PmQueue>,
     /// Target-side DMA engine occupancy per node.
-    dma_busy_until: HashMap<u32, Time>,
+    dma_busy_until: FxHashMap<u32, Time>,
 }
 
 impl PostmasterFabric {
@@ -108,8 +114,9 @@ impl Network {
     /// concurrent arrivals serialize, which is exactly what keeps each
     /// record contiguous in the stream.
     pub(crate) fn pm_deliver(&mut self, node: NodeId, queue: u8, packet: Packet) {
-        let data = match &packet.payload {
-            Payload::Bytes(b) => b.as_ref().clone(),
+        // The record shares the packet payload's bytes — no copy.
+        let data = match packet.payload {
+            Payload::Bytes(b) => b,
             _ => unreachable!("postmaster packet without bytes"),
         };
         let now = self.now();
@@ -124,7 +131,7 @@ impl Network {
             t_enqueued: packet.injected_at,
             t_stored: done,
         };
-        self.sim.at(done, Event::PmRx { node, queue, record });
+        self.sim.at(done, Event::PmRx { node, queue, record: Box::new(record) });
     }
 
     /// DMA completion: append the record to the stream and notify.
@@ -170,7 +177,7 @@ mod tests {
         net.run_to_quiescence(&mut NullApp);
         let recs = net.pm_read(dst, 0);
         assert_eq!(recs.len(), 1);
-        assert_eq!(recs[0].data, vec![1, 2, 3, 4]);
+        assert_eq!(*recs[0].data, vec![1, 2, 3, 4]);
         assert_eq!(recs[0].initiator, src);
         assert!(recs[0].t_stored > recs[0].t_enqueued);
     }
@@ -266,6 +273,6 @@ mod tests {
         net.run_to_quiescence(&mut NullApp);
         let recs = net.pm_read(b, 0);
         assert_eq!(recs.len(), 1);
-        assert_eq!(recs[0].data, vec![2]);
+        assert_eq!(*recs[0].data, vec![2]);
     }
 }

@@ -7,11 +7,15 @@
 //! no data is lost. The protocol runs entirely in the hardware fabric —
 //! in the model, entirely inside the event handlers, with no involvement
 //! of the simulated ARM.
+//!
+//! Packets are held as arena handles ([`PacketRef`]) paired with their
+//! wire size, so a backed-up link queues 8 bytes per waiting packet
+//! instead of the whole ~100-byte `Packet`.
 
 use std::collections::VecDeque;
 
 use crate::config::LinkTiming;
-use crate::router::Packet;
+use crate::network::arena::PacketRef;
 use crate::sim::Time;
 
 /// Transmit-side dynamic state of one unidirectional link.
@@ -21,8 +25,9 @@ pub struct LinkState {
     credits: u32,
     /// Time at which the link finishes serializing the current packet.
     busy_until: Time,
-    /// Packets waiting for the link (either busy or out of credits).
-    queue: VecDeque<Packet>,
+    /// Packets waiting for the link (either busy or out of credits),
+    /// as (arena handle, wire bytes).
+    queue: VecDeque<(PacketRef, u32)>,
     /// Lifetime counters.
     pub sent_packets: u64,
     pub sent_bytes: u64,
@@ -69,20 +74,21 @@ impl LinkState {
         self.busy_until <= now && self.queue.is_empty()
     }
 
-    /// Begin transmitting `pkt` (caller checked credits + idleness; the
-    /// queue may still hold packets behind this one on the drain path).
-    pub fn start_tx(&mut self, now: Time, pkt: &Packet, timing: &LinkTiming) -> Time {
-        debug_assert!(self.busy_until <= now && self.credits >= pkt.wire_bytes);
-        self.credits -= pkt.wire_bytes;
-        self.busy_until = now + timing.ser(pkt.wire_bytes);
+    /// Begin transmitting a packet of `wire_bytes` (caller checked
+    /// credits + idleness; the queue may still hold packets behind this
+    /// one on the drain path). Returns when serialization finishes.
+    pub fn start_tx(&mut self, now: Time, wire_bytes: u32, timing: &LinkTiming) -> Time {
+        debug_assert!(self.busy_until <= now && self.credits >= wire_bytes);
+        self.credits -= wire_bytes;
+        self.busy_until = now + timing.ser(wire_bytes);
         self.sent_packets += 1;
-        self.sent_bytes += pkt.wire_bytes as u64;
+        self.sent_bytes += wire_bytes as u64;
         self.busy_until
     }
 
     /// Queue a packet that could not be sent immediately.
-    pub fn enqueue(&mut self, pkt: Packet) {
-        self.queue.push_back(pkt);
+    pub fn enqueue(&mut self, pkt: PacketRef, wire_bytes: u32) {
+        self.queue.push_back((pkt, wire_bytes));
         self.max_queue = self.max_queue.max(self.queue.len());
     }
 
@@ -92,11 +98,11 @@ impl LinkState {
     }
 
     /// Pop the head-of-line packet if the link can send it now.
-    pub fn pop_sendable(&mut self, now: Time) -> Option<Packet> {
+    pub fn pop_sendable(&mut self, now: Time) -> Option<(PacketRef, u32)> {
         if self.busy_until > now {
             return None;
         }
-        let head_bytes = self.queue.front()?.wire_bytes;
+        let (_, head_bytes) = *self.queue.front()?;
         if self.credits < head_bytes {
             return None;
         }
@@ -107,12 +113,13 @@ impl LinkState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::router::{Payload, Proto, RouteKind};
+    use crate::network::arena::PacketArena;
+    use crate::router::{Packet, Payload, Proto, RouteKind};
     use crate::topology::NodeId;
 
-    fn pkt(bytes: usize) -> Packet {
+    fn pkt(id: u64, bytes: usize) -> Packet {
         Packet::new(
-            0,
+            id,
             NodeId(0),
             NodeId(1),
             RouteKind::Directed,
@@ -126,9 +133,9 @@ mod tests {
     fn credits_decrease_on_tx_and_recover_on_grant() {
         let timing = LinkTiming::default();
         let mut l = LinkState::new(&timing);
-        let p = pkt(1000);
-        assert!(l.ready(0, p.wire_bytes));
-        let done = l.start_tx(0, &p, &timing);
+        let wire = pkt(0, 1000).wire_bytes;
+        assert!(l.ready(0, wire));
+        let done = l.start_tx(0, wire, &timing);
         assert_eq!(done, 1008);
         assert_eq!(l.credits(), 4096 - 1008);
         l.grant(1008, timing.credit_buffer_bytes);
@@ -147,42 +154,43 @@ mod tests {
     fn out_of_credit_blocks_tx() {
         let timing = LinkTiming::default();
         let mut l = LinkState::new(&timing);
+        let mut arena = PacketArena::new();
         // Drain credits with 1400-byte packets (3×1408 > 4096).
-        let p = pkt(1400);
-        l.start_tx(0, &p, &timing);
+        let wire = pkt(0, 1400).wire_bytes;
+        l.start_tx(0, wire, &timing);
         l.grant(0, timing.credit_buffer_bytes);
         let mut now = l.busy_until();
-        l.start_tx(now, &p, &timing);
+        l.start_tx(now, wire, &timing);
         now = l.busy_until();
-        assert!(!l.ready(now, p.wire_bytes), "should be out of credits");
-        l.enqueue(p.clone());
+        assert!(!l.ready(now, wire), "should be out of credits");
+        let r = arena.alloc(pkt(0, 1400));
+        l.enqueue(r, wire);
         assert!(l.pop_sendable(now).is_none());
         l.grant(2 * 1408, timing.credit_buffer_bytes);
-        assert!(l.pop_sendable(now).is_some());
+        assert_eq!(l.pop_sendable(now), Some((r, wire)));
     }
 
     #[test]
     fn busy_link_blocks_until_serialization_done() {
         let timing = LinkTiming::default();
         let mut l = LinkState::new(&timing);
-        let p = pkt(500);
-        l.start_tx(0, &p, &timing);
-        assert!(!l.ready(100, p.wire_bytes));
-        assert!(l.ready(508, p.wire_bytes));
+        let wire = pkt(0, 500).wire_bytes;
+        l.start_tx(0, wire, &timing);
+        assert!(!l.ready(100, wire));
+        assert!(l.ready(508, wire));
     }
 
     #[test]
     fn queue_is_fifo_and_tracks_high_water() {
         let timing = LinkTiming::default();
         let mut l = LinkState::new(&timing);
-        let mut a = pkt(10);
-        a.id = 1;
-        let mut b = pkt(10);
-        b.id = 2;
-        l.enqueue(a);
-        l.enqueue(b);
+        let mut arena = PacketArena::new();
+        let a = arena.alloc(pkt(1, 10));
+        let b = arena.alloc(pkt(2, 10));
+        l.enqueue(a, 18);
+        l.enqueue(b, 18);
         assert_eq!(l.max_queue, 2);
-        assert_eq!(l.pop_sendable(0).unwrap().id, 1);
-        assert_eq!(l.pop_sendable(0).unwrap().id, 2);
+        assert_eq!(l.pop_sendable(0).unwrap().0, a);
+        assert_eq!(l.pop_sendable(0).unwrap().0, b);
     }
 }

@@ -86,6 +86,9 @@ pub struct Metrics {
     pub packets_delivered: u64,
     pub packets_injected: u64,
     pub broadcast_copies: u64,
+    /// Header copies made at multicast tree branch points (payload
+    /// bytes are Arc-shared, never copied).
+    pub multicast_copies: u64,
     pub bytes_delivered: u64,
     /// Events where a packet had to queue on a busy/credit-blocked link.
     pub link_stalls: u64,
@@ -109,10 +112,12 @@ impl Metrics {
     pub fn report(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "packets: injected={} delivered={} (broadcast copies={}), bytes={}, link stalls={}\n",
+            "packets: injected={} delivered={} (broadcast copies={}, multicast copies={}), \
+             bytes={}, link stalls={}\n",
             self.packets_injected,
             self.packets_delivered,
             self.broadcast_copies,
+            self.multicast_copies,
             self.bytes_delivered,
             self.link_stalls
         ));

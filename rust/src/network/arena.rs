@@ -1,0 +1,161 @@
+//! Slab-backed packet arena: in-flight [`Packet`]s live here, events
+//! carry a 4-byte [`PacketRef`] handle.
+//!
+//! A `Packet` is ~100 bytes. The seed carried it *inside* every
+//! `Event`, so each heap sift (and every event move) copied the whole
+//! thing; with the timing wheel the event core moves events by value
+//! too, so the payload had to leave the event. The arena gives each
+//! in-flight packet a stable slot: `alloc` on injection (or per
+//! broadcast/multicast copy), `free` at the terminal delivery point,
+//! with freed slots recycled through a free list — steady-state traffic
+//! performs zero packet allocations after warm-up.
+//!
+//! Handles are deliberately *not* generation-checked: the fabric's
+//! event flow hands each ref to exactly one consumer (the type system
+//! can't prove it, but the event graph is linear — every `alloc` has
+//! one matching `free`). `get`/`free` panic on a stale ref, which turns
+//! a lifecycle bug into a loud failure instead of aliased state.
+
+use crate::router::Packet;
+
+/// Handle to a packet slot in the [`PacketArena`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PacketRef(u32);
+
+impl PacketRef {
+    /// Raw slot index (diagnostics only).
+    #[inline]
+    pub fn index(self) -> u32 {
+        self.0
+    }
+}
+
+/// Slab of in-flight packets with slot recycling.
+#[derive(Debug, Default)]
+pub struct PacketArena {
+    slots: Vec<Option<Packet>>,
+    free: Vec<u32>,
+    live: usize,
+    high_water: usize,
+}
+
+impl PacketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        PacketArena {
+            slots: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
+            live: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Store `packet`, returning its handle.
+    #[inline]
+    pub fn alloc(&mut self, packet: Packet) -> PacketRef {
+        self.live += 1;
+        self.high_water = self.high_water.max(self.live);
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i as usize].is_none());
+                self.slots[i as usize] = Some(packet);
+                PacketRef(i)
+            }
+            None => {
+                let i = self.slots.len() as u32;
+                self.slots.push(Some(packet));
+                PacketRef(i)
+            }
+        }
+    }
+
+    /// Borrow the packet behind `r`. Panics on a stale ref.
+    #[inline]
+    pub fn get(&self, r: PacketRef) -> &Packet {
+        self.slots[r.0 as usize].as_ref().expect("stale PacketRef")
+    }
+
+    /// Mutably borrow the packet behind `r`. Panics on a stale ref.
+    #[inline]
+    pub fn get_mut(&mut self, r: PacketRef) -> &mut Packet {
+        self.slots[r.0 as usize].as_mut().expect("stale PacketRef")
+    }
+
+    /// Take the packet out, recycling its slot. Panics on a stale ref.
+    #[inline]
+    pub fn free(&mut self, r: PacketRef) -> Packet {
+        let p = self.slots[r.0 as usize].take().expect("stale PacketRef (double free?)");
+        self.free.push(r.0);
+        self.live -= 1;
+        p
+    }
+
+    /// Packets currently in flight.
+    #[inline]
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Most packets ever simultaneously in flight (capacity diagnostics;
+    /// also the arena's resident slot count, since slots never shrink).
+    #[inline]
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{Payload, Proto, RouteKind};
+    use crate::topology::NodeId;
+
+    fn pkt(id: u64) -> Packet {
+        Packet::new(
+            id,
+            NodeId(0),
+            NodeId(1),
+            RouteKind::Directed,
+            Proto::Raw { tag: 0 },
+            Payload::Empty,
+            0,
+        )
+    }
+
+    #[test]
+    fn alloc_get_free_roundtrip() {
+        let mut a = PacketArena::new();
+        let r1 = a.alloc(pkt(1));
+        let r2 = a.alloc(pkt(2));
+        assert_eq!(a.get(r1).id, 1);
+        assert_eq!(a.get(r2).id, 2);
+        assert_eq!(a.live(), 2);
+        assert_eq!(a.free(r1).id, 1);
+        assert_eq!(a.live(), 1);
+        // Slot is recycled, handle stays unique to the new packet.
+        let r3 = a.alloc(pkt(3));
+        assert_eq!(r3.index(), r1.index());
+        assert_eq!(a.get(r3).id, 3);
+        assert_eq!(a.high_water(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale PacketRef")]
+    fn double_free_is_loud() {
+        let mut a = PacketArena::new();
+        let r = a.alloc(pkt(9));
+        a.free(r);
+        a.free(r);
+    }
+
+    #[test]
+    fn get_mut_edits_in_place() {
+        let mut a = PacketArena::new();
+        let r = a.alloc(pkt(5));
+        a.get_mut(r).hops = 7;
+        assert_eq!(a.get(r).hops, 7);
+    }
+}

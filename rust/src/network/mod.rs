@@ -6,6 +6,23 @@
 //! Workloads react to traffic through the [`App`] trait; every channel
 //! also buffers delivered data in inboxes that can be read after a run,
 //! so simple drivers need no callbacks at all.
+//!
+//! # Hot-path layout
+//!
+//! The event core moves [`Event`]s by value, so the enum is kept to
+//! ≤ 32 bytes (16 in practice; asserted by `event_size_budget`):
+//! packets ride in the [`arena::PacketArena`] behind a 4-byte
+//! [`arena::PacketRef`], Ethernet frames and Postmaster records are
+//! boxed (they only cross the queue once per delivery), and Bridge-FIFO
+//! word bursts are `Arc`-shared. Broadcast/multicast fan-out clones the
+//! ~100-byte packet header per copy but shares the payload bytes
+//! through `Arc` — a 2 KB broadcast at INC-3000 scale moves zero
+//! payload bytes per hop. The in-flight side tables (`eth_inflight`,
+//! `tunnel_results`, channel endpoint maps) use deterministic
+//! [`crate::util::FxHashMap`]s: no SipHash on the per-packet path, no
+//! per-process seed.
+
+pub mod arena;
 
 use crate::channels::bridge_fifo::BridgeFifoFabric;
 use crate::channels::ethernet::{EthFrame, EthernetFabric};
@@ -20,32 +37,35 @@ use crate::router::{
 };
 use crate::sim::{Sim, Time};
 use crate::topology::{LinkId, NodeId, Topology};
+use crate::util::FxHashMap;
 
-/// Events dispatched by the fabric.
+use arena::{PacketArena, PacketRef};
+
+/// Events dispatched by the fabric. Kept ≤ 32 bytes — see module docs.
 #[derive(Debug)]
 pub enum Event {
     /// Packet enters the source node's router (after injection overhead).
-    Inject { packet: Packet },
+    Inject { packet: PacketRef },
     /// Packet fully received at the downstream end of `link`.
-    Arrive { link: LinkId, packet: Packet },
+    Arrive { link: LinkId, packet: PacketRef },
     /// `link` may be able to transmit a queued packet now.
     Drain { link: LinkId },
     /// Receiver of `link` freed buffer space; credits return to its tx.
     Credit { link: LinkId, bytes: u32 },
     /// Bridge-FIFO receive logic finished for a packet (§3.3).
-    FifoRx { node: NodeId, packet: Packet },
+    FifoRx { node: NodeId, packet: PacketRef },
     /// Local (same-node) Bridge-FIFO delivery, bypassing the network.
-    FifoLocal { node: NodeId, channel: u8, words: Vec<u64> },
+    FifoLocal { node: NodeId, channel: u8, words: std::sync::Arc<Vec<u64>> },
     /// Postmaster target DMA completed for one record (§3.2).
-    PmRx { node: NodeId, queue: u8, record: PmRecord },
+    PmRx { node: NodeId, queue: u8, record: Box<PmRecord> },
     /// Ethernet frame DMA'd into destination DRAM; notify driver (§3.1).
-    EthRx { node: NodeId, frame: EthFrame },
+    EthRx { node: NodeId, frame: Box<EthFrame> },
     /// Ethernet driver polling tick.
     EthPoll { node: NodeId },
     /// Ethernet frame ready for injection after tx-side software costs.
-    EthTx { frame: EthFrame },
+    EthTx { frame: Box<EthFrame> },
     /// NetTunnel / diagnostic register access executed at `node`.
-    TunnelExec { node: NodeId, packet: Packet },
+    TunnelExec { node: NodeId, packet: PacketRef },
     /// Application timer.
     Timer { node: NodeId, tag: u64 },
 }
@@ -83,10 +103,12 @@ pub struct Network {
     pub fifos: BridgeFifoFabric,
     pub postmaster: PostmasterFabric,
     pub eth: EthernetFabric,
+    /// In-flight packet storage; events reference it by [`PacketRef`].
+    pub packets: PacketArena,
     /// Ethernet frames whose packet is in flight, keyed by packet id.
-    pub(crate) eth_inflight: std::collections::HashMap<u64, EthFrame>,
+    pub(crate) eth_inflight: FxHashMap<u64, EthFrame>,
     /// NetTunnel read results, keyed by request id.
-    pub tunnel_results: std::collections::HashMap<u64, u64>,
+    pub tunnel_results: FxHashMap<u64, u64>,
     /// Links marked defective (§2.4 "network defect avoidance").
     pub failed_links: Vec<bool>,
     next_packet_id: u64,
@@ -109,8 +131,9 @@ impl Network {
             fifos: BridgeFifoFabric::new(n),
             postmaster: PostmasterFabric::new(n),
             eth: EthernetFabric::new(n, &cfg),
-            eth_inflight: std::collections::HashMap::new(),
-            tunnel_results: std::collections::HashMap::new(),
+            packets: PacketArena::with_capacity(1024),
+            eth_inflight: FxHashMap::default(),
+            tunnel_results: FxHashMap::default(),
             failed_links: vec![false; topo_link_count],
             cfg,
             next_packet_id: 0,
@@ -200,7 +223,16 @@ impl Network {
     pub fn inject(&mut self, packet: Packet) {
         self.metrics.packets_injected += 1;
         let delay = self.cfg.link.inject_latency;
+        let packet = self.packets.alloc(packet);
         self.sim.after(delay, Event::Inject { packet });
+    }
+
+    /// Schedule an already-built packet to enter the fabric at absolute
+    /// time `at` (deferred-production workloads; the caller accounts
+    /// metrics and any software costs itself).
+    pub fn inject_at(&mut self, at: Time, packet: Packet) {
+        let packet = self.packets.alloc(packet);
+        self.sim.at(at, Event::Inject { packet });
     }
 
     /// Run until the event queue empties or `deadline` passes. Returns
@@ -227,22 +259,31 @@ impl Network {
 
     fn handle(&mut self, ev: Event, app: &mut dyn App) {
         match ev {
-            Event::Inject { packet } => self.route_from(packet.src, packet, None, app),
+            Event::Inject { packet } => {
+                let src = self.packets.get(packet).src;
+                self.route_from(src, packet, None, app)
+            }
             Event::Arrive { link, packet } => self.arrive(link, packet, app),
             Event::Drain { link } => self.drain(link),
             Event::Credit { link, bytes } => {
                 self.links[link.0 as usize].grant(bytes, self.cfg.link.credit_buffer_bytes);
                 self.drain(link);
             }
-            Event::FifoRx { node, packet } => self.fifo_rx(node, packet, app),
-            Event::FifoLocal { node, channel, words } => {
-                self.fifo_local_rx(node, channel, words, app)
+            Event::FifoRx { node, packet } => {
+                let pkt = self.packets.free(packet);
+                self.fifo_rx(node, pkt, app)
             }
-            Event::PmRx { node, queue, record } => self.pm_rx(node, queue, record, app),
-            Event::EthRx { node, frame } => self.eth_rx(node, frame, app),
+            Event::FifoLocal { node, channel, words } => {
+                self.fifo_local_rx(node, channel, &words, app)
+            }
+            Event::PmRx { node, queue, record } => self.pm_rx(node, queue, *record, app),
+            Event::EthRx { node, frame } => self.eth_rx(node, *frame, app),
             Event::EthPoll { node } => self.eth_poll(node, app),
-            Event::EthTx { frame } => self.eth_tx_inject(frame),
-            Event::TunnelExec { node, packet } => self.tunnel_exec(node, packet),
+            Event::EthTx { frame } => self.eth_tx_inject(*frame),
+            Event::TunnelExec { node, packet } => {
+                let pkt = self.packets.free(packet);
+                self.tunnel_exec(node, pkt)
+            }
             Event::Timer { node, tag } => app.on_timer(self, node, tag),
         }
     }
@@ -254,18 +295,22 @@ impl Network {
     fn route_from(
         &mut self,
         here: NodeId,
-        packet: Packet,
+        packet: PacketRef,
         arrived_via: Option<LinkId>,
         app: &mut dyn App,
     ) {
-        match packet.route {
+        let (route, dst, src, id, wire_bytes, hops) = {
+            let p = self.packets.get(packet);
+            (p.route, p.dst, p.src, p.id, p.wire_bytes, p.hops)
+        };
+        match route {
             RouteKind::Directed => {
-                if here == packet.dst {
+                if here == dst {
                     self.deliver(here, packet, app);
                     return;
                 }
                 let mut buf = [crate::topology::LinkId(0); 6];
-                let n = productive_links_buf(&self.topo, here, packet.dst, &mut buf);
+                let n = productive_links_buf(&self.topo, here, dst, &mut buf);
                 // Defect avoidance: drop failed links from the set.
                 let failed = &self.failed_links;
                 let mut live = [crate::topology::LinkId(0); 6];
@@ -278,11 +323,10 @@ impl Network {
                 }
                 let now = self.now();
                 let links = &self.links;
-                let bytes = packet.wire_bytes;
                 let chosen = if m > 0 {
                     pick_adaptive(
                         &live[..m],
-                        |l| links[l.0 as usize].ready(now, bytes),
+                        |l| links[l.0 as usize].ready(now, wire_bytes),
                         |l| links[l.0 as usize].busy_until(),
                         &mut self.rng,
                     )
@@ -294,21 +338,22 @@ impl Network {
                         .iter()
                         .copied()
                         .filter(|&l| !failed[l.0 as usize])
-                        .min_by_key(|&l| self.topo.min_hops(self.topo.link(l).dst, packet.dst))
+                        .min_by_key(|&l| self.topo.min_hops(self.topo.link(l).dst, dst))
                 };
                 // Livelock guard (misrouting around defects is bounded).
-                let budget = 4 * self.topo.min_hops(packet.src, packet.dst) + 64;
-                if packet.hops > budget {
-                    panic!("packet {} exceeded hop budget (defect livelock?)", packet.id);
+                let budget = 4 * self.topo.min_hops(src, dst) + 64;
+                if hops > budget {
+                    panic!("packet {id} exceeded hop budget (defect livelock?)");
                 }
                 if let Some(l) = chosen {
                     self.link_send(l, packet);
                 } else {
-                    panic!("node {here} fully disconnected; cannot route {}", packet.id);
+                    panic!("node {here} fully disconnected; cannot route {id}");
                 }
             }
             RouteKind::Multicast => {
-                let dsts = packet.mcast.clone().expect("multicast without targets");
+                let dsts =
+                    self.packets.get(packet).mcast.clone().expect("multicast without targets");
                 let (local, groups) = crate::router::multicast::multicast_partition(
                     &self.topo,
                     here,
@@ -316,18 +361,25 @@ impl Network {
                     &self.failed_links,
                 );
                 for (link, subset) in groups {
-                    let mut copy = packet.clone();
+                    // Header copy per branch; payload bytes stay shared
+                    // behind their Arc.
+                    let mut copy = self.packets.get(packet).clone();
                     copy.mcast = Some(std::sync::Arc::new(subset));
+                    let copy = self.packets.alloc(copy);
+                    self.metrics.multicast_copies += 1;
                     self.link_send(link, copy);
                 }
                 if local {
                     self.deliver(here, packet, app);
+                } else {
+                    // Forwarded-only node: this ref's journey ends here.
+                    self.packets.free(packet);
                 }
             }
             RouteKind::Broadcast { .. } => {
                 let arrived = arrived_via.map(|l| {
                     let info = self.topo.link(l);
-                    let zmode = match packet.route {
+                    let zmode = match route {
                         RouteKind::Broadcast { zmode } => zmode,
                         _ => unreachable!(),
                     };
@@ -335,9 +387,9 @@ impl Network {
                 });
                 let fwd = broadcast_forwards(&self.topo, here, arrived);
                 for (lid, rk) in fwd {
-                    let mut copy = packet.clone();
+                    let mut copy = self.packets.get(packet).clone();
                     copy.route = rk;
-                    copy.hops = packet.hops;
+                    let copy = self.packets.alloc(copy);
                     self.link_send(lid, copy);
                 }
                 // Every node (including the source) receives one copy.
@@ -348,16 +400,17 @@ impl Network {
     }
 
     /// Transmit `packet` on `link` now, or queue it if busy/out of credit.
-    fn link_send(&mut self, link: LinkId, packet: Packet) {
+    fn link_send(&mut self, link: LinkId, packet: PacketRef) {
+        let wire_bytes = self.packets.get(packet).wire_bytes;
         let now = self.now();
         let st = &mut self.links[link.0 as usize];
-        if st.ready(now, packet.wire_bytes) {
-            let busy_until = st.start_tx(now, &packet, &self.cfg.link);
-            let arrive_at = now + self.cfg.link.hop(packet.wire_bytes);
+        if st.ready(now, wire_bytes) {
+            let busy_until = st.start_tx(now, wire_bytes, &self.cfg.link);
+            let arrive_at = now + self.cfg.link.hop(wire_bytes);
             self.sim.at(busy_until, Event::Drain { link });
             self.sim.at(arrive_at, Event::Arrive { link, packet });
         } else {
-            st.enqueue(packet);
+            st.enqueue(packet, wire_bytes);
             self.metrics.link_stalls += 1;
         }
     }
@@ -365,34 +418,45 @@ impl Network {
     /// Serialization of a queued packet becomes possible.
     fn drain(&mut self, link: LinkId) {
         let now = self.now();
-        if let Some(packet) = self.links[link.0 as usize].pop_sendable(now) {
-            let busy_until = self.links[link.0 as usize].start_tx(now, &packet, &self.cfg.link);
-            let arrive_at = now + self.cfg.link.hop(packet.wire_bytes);
+        if let Some((packet, wire_bytes)) = self.links[link.0 as usize].pop_sendable(now) {
+            let busy_until =
+                self.links[link.0 as usize].start_tx(now, wire_bytes, &self.cfg.link);
+            let arrive_at = now + self.cfg.link.hop(wire_bytes);
             self.sim.at(busy_until, Event::Drain { link });
             self.sim.at(arrive_at, Event::Arrive { link, packet });
         }
     }
 
-    fn arrive(&mut self, link: LinkId, mut packet: Packet, app: &mut dyn App) {
-        packet.hops += 1;
+    fn arrive(&mut self, link: LinkId, packet: PacketRef, app: &mut dyn App) {
+        let wire_bytes = {
+            let p = self.packets.get_mut(packet);
+            p.hops += 1;
+            p.wire_bytes
+        };
         // Receiver frees its input buffer once the packet moves on; the
         // credit flight back to the transmitter takes one router latency.
         self.sim.after(
             self.cfg.link.router_latency,
-            Event::Credit { link, bytes: packet.wire_bytes },
+            Event::Credit { link, bytes: wire_bytes },
         );
         let here = self.topo.link(link).dst;
         self.route_from(here, packet, Some(link), app);
     }
 
     /// Packet reached its destination node: hand to the Packet Demux
-    /// (Fig 5) which dispatches per protocol.
-    fn deliver(&mut self, node: NodeId, packet: Packet, app: &mut dyn App) {
-        if !matches!(packet.proto, Proto::BridgeFifo { .. }) {
-            let latency = self.now() - packet.injected_at;
-            self.metrics.record_delivery(proto_name(packet.proto), latency, packet.wire_bytes);
+    /// (Fig 5) which dispatches per protocol. Terminal protocols take
+    /// the packet out of the arena; deferred ones (Bridge FIFO,
+    /// NetTunnel) keep the ref alive across their logic delay.
+    fn deliver(&mut self, node: NodeId, packet: PacketRef, app: &mut dyn App) {
+        let (proto, injected_at, wire_bytes) = {
+            let p = self.packets.get(packet);
+            (p.proto, p.injected_at, p.wire_bytes)
+        };
+        if !matches!(proto, Proto::BridgeFifo { .. }) {
+            let latency = self.now() - injected_at;
+            self.metrics.record_delivery(proto_name(proto), latency, wire_bytes);
         }
-        match packet.proto {
+        match proto {
             Proto::BridgeFifo { .. } => {
                 // Bridge-FIFO receive logic (half of the hop-0 FIFO
                 // latency budget; see config::SystemConfig docs); the
@@ -400,16 +464,27 @@ impl Network {
                 // words become readable.
                 let d = self.cfg.bridge_fifo_logic / 2;
                 self.sim.after(d, Event::FifoRx { node, packet });
-                return;
             }
-            Proto::Postmaster { queue } => self.pm_deliver(node, queue, packet),
-            Proto::Ethernet => self.eth_deliver(node, packet),
+            Proto::Postmaster { queue } => {
+                let pkt = self.packets.free(packet);
+                self.pm_deliver(node, queue, pkt);
+            }
+            Proto::Ethernet => {
+                let pkt = self.packets.free(packet);
+                self.eth_deliver(node, pkt);
+            }
             Proto::NetTunnel => {
                 // Tunnel logic executes the access in fabric hardware.
                 self.sim.after(100, Event::TunnelExec { node, packet });
             }
-            Proto::Boot => self.boot_deliver(node, packet),
-            Proto::Raw { .. } => app.on_raw(self, node, &packet),
+            Proto::Boot => {
+                let pkt = self.packets.free(packet);
+                self.boot_deliver(node, pkt);
+            }
+            Proto::Raw { .. } => {
+                let pkt = self.packets.free(packet);
+                app.on_raw(self, node, &pkt);
+            }
         }
     }
 }
@@ -432,11 +507,11 @@ mod tests {
 
     #[test]
     fn event_size_budget() {
-        // The event queue moves these by value O(log n) times per event;
-        // keep them small (see benches/sim_engine.rs).
+        // The timing wheel moves these by value on every push/pop; the
+        // arena/Box/Arc layout keeps them at 16 bytes (budget: 32).
         eprintln!("size Event = {}", std::mem::size_of::<Event>());
         eprintln!("size Packet = {}", std::mem::size_of::<Packet>());
-        assert!(std::mem::size_of::<Event>() <= 136);
+        assert!(std::mem::size_of::<Event>() <= 32);
     }
 
     struct Collect {
@@ -486,6 +561,7 @@ mod tests {
         let mut app = Collect { raw: vec![] };
         net.run_to_quiescence(&mut app);
         assert_eq!(app.raw.len(), 432);
+        assert_eq!(net.packets.live(), 0, "broadcast copies must be freed");
     }
 
     #[test]
@@ -508,6 +584,8 @@ mod tests {
         net.run_to_quiescence(&mut app);
         assert_eq!(app.raw.len(), (n * (n - 1)) as usize);
         assert_eq!(net.metrics.packets_delivered as usize, app.raw.len());
+        assert_eq!(net.packets.live(), 0, "arena leaked in-flight packets");
+        assert!(net.packets.high_water() > 0);
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Real PJRT backend (requires the `xla` crate; `pjrt` cargo feature).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Result};
+
+use super::manifest::{EntryPoint, Manifest};
+
+/// A compiled, executable artifact set.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load `dir/manifest.json` and compile every entry point on the
+    /// PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("pjrt client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for ep in &manifest.entries {
+            let path = dir.join(&ep.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+            )
+            .map_err(|e| eyre!("load {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| eyre!("compile {}: {e:?}", ep.name))?;
+            exes.insert(ep.name.clone(), exe);
+        }
+        Ok(Runtime { client, exes, manifest, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| eyre!("no entry point {name} in manifest"))
+    }
+
+    /// Execute entry point `name` with f32 input tensors (flat, row
+    /// major, shapes per the manifest). Returns the flat f32 outputs.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let ep = self.entry(name)?;
+        if inputs.len() != ep.inputs.len() {
+            return Err(eyre!(
+                "{name}: expected {} inputs, got {}",
+                ep.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in ep.inputs.iter().zip(inputs) {
+            if spec.element_count() != data.len() {
+                return Err(eyre!(
+                    "{name}/{}: expected {} elements for shape {:?}, got {}",
+                    spec.name,
+                    spec.element_count(),
+                    spec.shape,
+                    data.len()
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| eyre!("reshape {:?}: {e:?}", spec.shape))?;
+            literals.push(lit);
+        }
+        let exe = self.exes.get(name).ok_or_else(|| eyre!("not compiled: {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| eyre!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch {name}: {e:?}"))?;
+        // Entry points are lowered with return_tuple=True.
+        let parts = out.to_tuple().map_err(|e| eyre!("untuple {name}: {e:?}"))?;
+        if parts.len() != ep.outputs.len() {
+            return Err(eyre!(
+                "{name}: manifest declares {} outputs, module returned {}",
+                ep.outputs.len(),
+                parts.len()
+            ));
+        }
+        let mut vecs = Vec::with_capacity(parts.len());
+        for (spec, lit) in ep.outputs.iter().zip(parts) {
+            let v: Vec<f32> =
+                lit.to_vec().map_err(|e| eyre!("read output {}: {e:?}", spec.name))?;
+            if v.len() != spec.element_count() {
+                return Err(eyre!(
+                    "{name}/{}: output element count {} != manifest {}",
+                    spec.name,
+                    v.len(),
+                    spec.element_count()
+                ));
+            }
+            vecs.push(v);
+        }
+        Ok(vecs)
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("entries", &self.manifest.entries.len())
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+

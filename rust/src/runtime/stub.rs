@@ -1,0 +1,55 @@
+//! Stub runtime used when the `pjrt` cargo feature is disabled.
+//!
+//! The offline build environment cannot vendor the `xla` crate, so the
+//! default build replaces the PJRT-backed [`Runtime`] with this stub:
+//! identical API, but `load` always fails with an explanation. The
+//! simulator, coordinator and CLI compile and run unchanged; only the
+//! paths that need real numerics (`repro train`, the PJRT e2e tests)
+//! report the missing feature.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{EntryPoint, Manifest};
+
+/// Stub stand-in for the PJRT-backed runtime (see module docs).
+#[derive(Debug)]
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Always fails: built without the `pjrt` feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(anyhow!(
+            "inc_sim was built without the `pjrt` feature; to execute AOT \
+             artifacts, add the `xla` crate to rust/Cargo.toml (it cannot \
+             be vendored in the offline build) and rebuild with \
+             `--features pjrt`"
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no entry point {name} in manifest"))
+    }
+
+    /// Always fails: there is no compiled executable behind the stub.
+    pub fn execute_f32(&self, name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("cannot execute {name}: built without the `pjrt` feature"))
+    }
+}

@@ -4,15 +4,47 @@
 //! this makes serialization delay exactly 1 ns/byte, so all calibration
 //! constants in [`crate::config`] are integers.
 //!
-//! Determinism: events scheduled for the same instant are dispatched in
-//! insertion order (a monotone sequence number breaks ties), and the only
-//! randomness in the system is a seeded [`crate::util::SplitMix64`] owned
-//! by the network for adaptive-routing tie-breaks. Two runs with the same
-//! seed produce identical traces.
+//! # Event core
+//!
+//! The pending-event set is a hierarchical timing wheel
+//! ([`EventQueue`]): three levels of 1024 slots at 1 ns / 1 µs / ~1 ms
+//! granularity (covering ~1.07 s of look-ahead) plus a far-future
+//! overflow heap. Scheduling and dispatch are O(1) amortized — the old
+//! `BinaryHeap` core paid an O(log n) sift moving events by value on
+//! every operation, which dominated the fabric hot path at INC-3000
+//! scale (`benches/sim_engine.rs` tracks the throughput; the heap
+//! survives as [`ReferenceQueue`], the ordering oracle and bench
+//! baseline).
+//!
+//! # Size budgets
+//!
+//! The queue moves events by value, so [`crate::network::Event`] is
+//! kept to ≤ 32 bytes (asserted by the `event_size_budget` test): bulky
+//! payloads live behind a slab handle
+//! ([`crate::network::arena::PacketRef`], 4 bytes), a `Box`, or an
+//! `Arc`. `Packet` itself (~100 bytes) sits in the
+//! [`crate::network::arena::PacketArena`] and is recycled on delivery,
+//! so steady-state traffic allocates nothing per hop.
+//!
+//! # Determinism
+//!
+//! Events scheduled for the same instant are dispatched in insertion
+//! order (a monotone sequence number breaks ties); the wheel preserves
+//! the exact `(time, seq)` lexicographic pop order of a binary heap
+//! (argued in [`queue`]'s docs, enforced by
+//! `tests/queue_differential.rs`). The only randomness in the system is
+//! a seeded [`crate::util::SplitMix64`] owned by the network for
+//! adaptive-routing tie-breaks. Two runs with the same seed produce
+//! identical traces.
+//!
+//! Scheduling **into the past** ([`Sim::at`] with `at < now`) is
+//! defined to clamp to `now` in every build profile — debug and release
+//! behave identically (the seed's `debug_assert` panicked in debug but
+//! silently clamped in release).
 
 mod queue;
 
-pub use queue::{EventQueue, Scheduled};
+pub use queue::{EventQueue, ReferenceQueue, Scheduled};
 
 /// Virtual time in nanoseconds.
 pub type Time = u64;
@@ -67,10 +99,15 @@ impl<E> Sim<E> {
         self.queue.len()
     }
 
-    /// Schedule `ev` at absolute time `at` (must be ≥ now).
+    /// Schedule `ev` at absolute time `at`.
+    ///
+    /// An `at` in the past is clamped to `now`: the event dispatches at
+    /// the current instant, after everything already scheduled there.
+    /// This is deliberate and identical in debug and release builds
+    /// (see the module docs), so components may schedule "no later than
+    /// now" without checking the clock first.
     #[inline]
     pub fn at(&mut self, at: Time, ev: E) {
-        debug_assert!(at >= self.now, "scheduling into the past");
         self.queue.push(at.max(self.now), ev);
     }
 
@@ -148,5 +185,38 @@ mod tests {
         sim.pop();
         sim.after(25, 2);
         assert_eq!(sim.pop(), Some((75, 2)));
+    }
+
+    #[test]
+    fn at_in_the_past_clamps_to_now() {
+        let mut sim: Sim<u8> = Sim::new();
+        sim.at(100, 1);
+        assert_eq!(sim.pop(), Some((100, 1)));
+        // A past timestamp dispatches at the current instant, after
+        // anything already scheduled there.
+        sim.at(100, 2);
+        sim.at(40, 3);
+        assert_eq!(sim.pop(), Some((100, 2)));
+        assert_eq!(sim.pop(), Some((100, 3)));
+        assert_eq!(sim.now(), 100);
+    }
+
+    #[test]
+    fn deep_queue_spanning_all_wheel_levels() {
+        let mut sim: Sim<u64> = Sim::new();
+        // Mix of near, mid, far and multi-second timers.
+        for i in 0..4000u64 {
+            sim.at(i * 677 % 5_000_000, i);
+        }
+        sim.at(3 * SEC, 4000);
+        let mut last = 0;
+        let mut n = 0;
+        while let Some((t, _)) = sim.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+        }
+        assert_eq!(n, 4001);
+        assert_eq!(sim.now(), 3 * SEC);
     }
 }

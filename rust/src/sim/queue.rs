@@ -1,17 +1,66 @@
-//! The priority queue underlying [`super::Sim`].
+//! The priority queue underlying [`super::Sim`]: a hierarchical timing
+//! wheel with a far-future overflow heap.
 //!
-//! A binary heap keyed on `(time, seq)`; `seq` is a monotone counter so
-//! that same-instant events dispatch in insertion order. This is the
-//! single hottest data structure in the simulator (see `benches/
-//! sim_engine.rs`), so it is kept allocation-free per operation beyond the
-//! heap's own growth.
+//! This is the single hottest data structure in the simulator (see
+//! `benches/sim_engine.rs`). The previous implementation was a
+//! `BinaryHeap` keyed on `(time, seq)` — O(log n) sift per operation,
+//! each sift moving whole events by value. The wheel gives O(1) pushes
+//! and amortized O(1) pops while preserving the exact `(time, seq)`
+//! dispatch order (see the determinism argument below and the
+//! differential test in `tests/queue_differential.rs`).
+//!
+//! # Structure
+//!
+//! Three levels of 1024 slots each, indexed by bits of the *absolute*
+//! timestamp (1 tick = 1 ns):
+//!
+//! * level 0 — 1 ns/slot, covers a 1 µs window: one slot per instant,
+//! * level 1 — 1 µs/slot, covers a ~1 ms window,
+//! * level 2 — ~1 ms/slot, covers a ~1.07 s window,
+//! * overflow — a `(time, seq)` min-heap for anything beyond level 2
+//!   (multi-second timers; rare by construction).
+//!
+//! A slot holds a `Vec` of entries; a per-level bitmap (one bit per
+//! slot) lets `pop` find the next occupied slot with a handful of
+//! `trailing_zeros` scans instead of walking empty slots. When a level
+//! empties, the next occupied slot of the level above is *cascaded*:
+//! its entries are redistributed one level down and the lower window
+//! advances. Drained `Vec`s are recycled through a spare pool, so the
+//! steady state allocates nothing.
+//!
+//! # Determinism
+//!
+//! Events scheduled for the same instant must dispatch in insertion
+//! order. Each entry carries a monotone `seq`; a level-0 slot holds
+//! exactly one instant, and its entries are stable-sorted by `seq` when
+//! the slot is drained into the current *run*. Same-instant events
+//! pushed while the run is live (handlers scheduling at `now`) append
+//! to the run — their `seq` is larger than anything drained, so order
+//! is preserved without re-sorting. Cascades only move entries to
+//! strictly finer slots and never reorder across instants, so the pop
+//! sequence is exactly the `(time, seq)` lexicographic order — bit for
+//! bit the order the old heap produced.
+//!
+//! The caller contract (upheld by [`super::Sim`], which clamps) is that
+//! pushes are never in the past: `time >= ` the last popped time.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::sim::Time;
 
-/// A scheduled entry: ordering key + payload.
+/// log2 of the slot count per wheel level.
+const LEVEL_BITS: u32 = 10;
+/// Slots per level.
+const SLOTS: usize = 1 << LEVEL_BITS;
+const SLOT_MASK: u64 = (SLOTS - 1) as u64;
+/// Number of wheel levels (beyond them, the overflow heap).
+const LEVELS: usize = 3;
+/// u64 words per level bitmap.
+const BITMAP_WORDS: usize = SLOTS / 64;
+
+/// A scheduled entry: ordering key + payload. Also the overflow-heap
+/// element (kept public for the reference-queue API and tests).
 #[derive(Debug)]
 pub struct Scheduled<E> {
     pub time: Time,
@@ -36,11 +85,63 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
-/// Min-heap of scheduled events.
+/// One level of the wheel: slot buckets + occupancy bitmap.
+#[derive(Debug)]
+struct Level<E> {
+    slots: Vec<Vec<Scheduled<E>>>,
+    bitmap: [u64; BITMAP_WORDS],
+    /// The window id this level currently covers: valid `time`s satisfy
+    /// `time >> ((level + 1) * LEVEL_BITS) == epoch`.
+    epoch: u64,
+}
+
+impl<E> Level<E> {
+    fn new() -> Self {
+        Level {
+            slots: (0..SLOTS).map(|_| Vec::new()).collect(),
+            bitmap: [0; BITMAP_WORDS],
+            epoch: 0,
+        }
+    }
+
+    #[inline]
+    fn set_bit(&mut self, slot: usize) {
+        self.bitmap[slot >> 6] |= 1u64 << (slot & 63);
+    }
+
+    #[inline]
+    fn clear_bit(&mut self, slot: usize) {
+        self.bitmap[slot >> 6] &= !(1u64 << (slot & 63));
+    }
+
+    /// Index of the first occupied slot, if any. Slots below the
+    /// current scan position are always empty, so scanning from word 0
+    /// is both correct and cheap (≤ 16 words).
+    fn first_occupied(&self) -> Option<usize> {
+        for (w, &word) in self.bitmap.iter().enumerate() {
+            if word != 0 {
+                return Some((w << 6) + word.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+}
+
+/// Hierarchical timing wheel ordered by `(time, seq)`.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    /// Time of the last popped event (the run's instant). All stored
+    /// entries satisfy `time > cur_time`, except run appendees at
+    /// exactly `cur_time`.
+    cur_time: Time,
+    /// Events at the current instant, in `seq` order, popped from front.
+    run: VecDeque<Scheduled<E>>,
+    levels: [Level<E>; LEVELS],
+    overflow: BinaryHeap<Reverse<Scheduled<E>>>,
+    /// Recycled slot `Vec`s (bounds steady-state allocation).
+    spare: Vec<Vec<Scheduled<E>>>,
     next_seq: u64,
+    len: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -51,11 +152,188 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+        EventQueue {
+            cur_time: 0,
+            run: VecDeque::new(),
+            levels: [Level::new(), Level::new(), Level::new()],
+            overflow: BinaryHeap::new(),
+            spare: Vec::new(),
+            next_seq: 0,
+            len: 0,
+        }
     }
 
+    /// `cap` pre-sizes the same-instant run buffer (the wheel itself is
+    /// fixed-size).
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0 }
+        let mut q = Self::new();
+        q.run.reserve(cap.min(4096));
+        q
+    }
+
+    /// Schedule `event` at `time`. `time` must be ≥ the last popped
+    /// time (the `Sim` wrapper clamps; direct users must respect it).
+    #[inline]
+    pub fn push(&mut self, time: Time, event: E) {
+        debug_assert!(time >= self.cur_time, "push into the past");
+        let time = time.max(self.cur_time);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.len += 1;
+        let en = Scheduled { time, seq, event };
+        if time == self.cur_time {
+            // Same instant as the live run: `seq` is larger than
+            // everything already there, so appending keeps order.
+            self.run.push_back(en);
+        } else {
+            self.place(en);
+        }
+    }
+
+    /// File an entry into the wheel level whose window covers its time
+    /// (or the overflow heap). Never called with `time <= cur_time`.
+    fn place(&mut self, en: Scheduled<E>) {
+        let t = en.time;
+        for (l, level) in self.levels.iter_mut().enumerate() {
+            let shift = (l as u32 + 1) * LEVEL_BITS;
+            if t >> shift == level.epoch {
+                let slot = ((t >> (l as u32 * LEVEL_BITS)) & SLOT_MASK) as usize;
+                level.set_bit(slot);
+                level.slots[slot].push(en);
+                return;
+            }
+        }
+        self.overflow.push(Reverse(en));
+    }
+
+    /// Take a slot's bucket, leaving a recycled empty `Vec` behind.
+    fn take_bucket(&mut self, level: usize, slot: usize) -> Vec<Scheduled<E>> {
+        let spare = self.spare.pop().unwrap_or_default();
+        self.levels[level].clear_bit(slot);
+        std::mem::replace(&mut self.levels[level].slots[slot], spare)
+    }
+
+    fn recycle(&mut self, mut bucket: Vec<Scheduled<E>>) {
+        if self.spare.len() < 64 {
+            bucket.clear();
+            self.spare.push(bucket);
+        }
+    }
+
+    /// Refill the run from the wheel. Returns false iff the queue is
+    /// empty. Runs to completion between pops, so callers never observe
+    /// a partially advanced wheel.
+    fn next_run(&mut self) -> bool {
+        debug_assert!(self.run.is_empty());
+        loop {
+            // Level 0: one slot == one instant; drain it as the run.
+            if let Some(slot) = self.levels[0].first_occupied() {
+                let mut bucket = self.take_bucket(0, slot);
+                bucket.sort_unstable_by_key(|e| e.seq);
+                self.cur_time = bucket[0].time;
+                debug_assert!(bucket.iter().all(|e| e.time == self.cur_time));
+                self.run.extend(bucket.drain(..));
+                self.recycle(bucket);
+                return true;
+            }
+            // Cascade the next occupied slot of level 1 (or 2) down.
+            let mut cascaded = false;
+            for l in 1..LEVELS {
+                if let Some(slot) = self.levels[l].first_occupied() {
+                    let mut bucket = self.take_bucket(l, slot);
+                    // The level below now covers exactly this block.
+                    self.levels[l - 1].epoch = (self.levels[l].epoch << LEVEL_BITS) | slot as u64;
+                    for en in bucket.drain(..) {
+                        self.place(en);
+                    }
+                    self.recycle(bucket);
+                    cascaded = true;
+                    break;
+                }
+            }
+            if cascaded {
+                continue;
+            }
+            // Wheel fully empty: rebase every window at the overflow
+            // minimum and pull the now-coverable entries in.
+            let min_t = match self.overflow.peek() {
+                Some(Reverse(en)) => en.time,
+                None => return false,
+            };
+            for (l, level) in self.levels.iter_mut().enumerate() {
+                level.epoch = min_t >> ((l as u32 + 1) * LEVEL_BITS);
+            }
+            let horizon_epoch = self.levels[LEVELS - 1].epoch;
+            while let Some(Reverse(en)) = self.overflow.peek() {
+                if en.time >> (LEVELS as u32 * LEVEL_BITS) != horizon_epoch {
+                    break;
+                }
+                let Reverse(en) = self.overflow.pop().unwrap();
+                self.place(en);
+            }
+        }
+    }
+
+    /// Pop the earliest `(time, seq)` entry.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        if self.run.is_empty() && !self.next_run() {
+            return None;
+        }
+        let en = self.run.pop_front().expect("next_run guaranteed an entry");
+        self.len -= 1;
+        Some((en.time, en.event))
+    }
+
+    /// Earliest pending timestamp without popping.
+    pub fn peek_time(&self) -> Option<Time> {
+        if let Some(en) = self.run.front() {
+            return Some(en.time);
+        }
+        // Level 0 slots hold a single instant: the bit index IS the time.
+        if let Some(slot) = self.levels[0].first_occupied() {
+            return Some((self.levels[0].epoch << LEVEL_BITS) | slot as u64);
+        }
+        // Coarser levels: the first occupied slot contains the minimum,
+        // but the slot itself is unordered — scan its entries.
+        for level in &self.levels[1..] {
+            if let Some(slot) = level.first_occupied() {
+                return level.slots[slot].iter().map(|e| e.time).min();
+            }
+        }
+        self.overflow.peek().map(|Reverse(en)| en.time)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// The pre-wheel implementation: a binary min-heap on `(time, seq)`.
+/// Kept as the ordering oracle for the differential test
+/// (`tests/queue_differential.rs`) and as the baseline the perf bench
+/// (`benches/sim_engine.rs`) reports its speedup against.
+#[derive(Debug)]
+pub struct ReferenceQueue<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    next_seq: u64,
+}
+
+impl<E> Default for ReferenceQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> ReferenceQueue<E> {
+    pub fn new() -> Self {
+        ReferenceQueue { heap: BinaryHeap::new(), next_seq: 0 }
     }
 
     #[inline]
@@ -107,5 +385,85 @@ mod tests {
         assert!(q.is_empty());
         assert_eq!(q.peek_time(), None);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn crosses_level_boundaries() {
+        let mut q = EventQueue::new();
+        // One event per level + overflow, pushed out of order.
+        q.push(1 << 30, "overflow"); // beyond level 2's first window
+        q.push(5, "l0");
+        q.push(70_000, "l1");
+        q.push(3_000_000, "l2");
+        let out: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(out, vec!["l0", "l1", "l2", "overflow"]);
+    }
+
+    #[test]
+    fn same_instant_appends_after_pop() {
+        let mut q = EventQueue::new();
+        q.push(10, 1u32);
+        q.push(10, 2);
+        assert_eq!(q.pop(), Some((10, 1)));
+        // Handler schedules at the instant being dispatched.
+        q.push(10, 3);
+        assert_eq!(q.pop(), Some((10, 2)));
+        assert_eq!(q.pop(), Some((10, 3)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn reschedule_steady_state_stays_ordered() {
+        // The bench's steady-state pattern: pop, reschedule slightly
+        // ahead; times must be non-decreasing throughout.
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.push(i * 7 % 4096, i);
+        }
+        let mut last = 0;
+        let mut popped = 0u64;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last, "time went backwards: {t} < {last}");
+            last = t;
+            popped += 1;
+            if popped < 20_000 {
+                q.push(t + 1 + popped % 97, popped);
+            }
+        }
+        assert_eq!(popped, 20_000);
+    }
+
+    #[test]
+    fn peek_matches_pop_across_levels() {
+        let mut q = EventQueue::new();
+        for t in [9u64, 1 << 12, 1 << 22, 1 << 31] {
+            q.push(t, t);
+        }
+        while let Some(pt) = q.peek_time() {
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(pt, t);
+        }
+    }
+
+    #[test]
+    fn far_future_bursts_keep_seq_order() {
+        let mut q = EventQueue::new();
+        let t = (1u64 << 31) + 123; // overflow territory
+        for i in 0..50u64 {
+            q.push(t, i);
+        }
+        for i in 0..50u64 {
+            assert_eq!(q.pop(), Some((t, i)));
+        }
+    }
+
+    #[test]
+    fn reference_queue_agrees_on_basics() {
+        let mut q = ReferenceQueue::new();
+        q.push(3, 'c');
+        q.push(1, 'a');
+        q.push(3, 'd');
+        let out: Vec<char> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(out, vec!['a', 'c', 'd']);
     }
 }

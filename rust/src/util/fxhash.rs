@@ -1,0 +1,116 @@
+//! Deterministic FxHash-style hashing (the Firefox / rustc hash).
+//!
+//! `std::collections::HashMap`'s default `RandomState` seeds itself per
+//! process, which (a) costs a SipHash round per lookup on hot paths and
+//! (b) makes iteration order vary across runs — poison for a simulator
+//! whose selling point is bit-identical traces. [`FxHashMap`] swaps in
+//! the multiply-rotate hash rustc itself uses: ~1 ns per small key,
+//! fully deterministic. (We never iterate these maps on semantic paths,
+//! but determinism-by-construction beats auditing.)
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// The 64-bit Fx mixing constant (π-derived, as in rustc-hash).
+const K: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-rotate word hasher. Not DoS-resistant — keys here are
+/// internal ids, never attacker-controlled.
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(K);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(tail));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+/// A `HashMap` with deterministic, fast Fx hashing.
+pub type FxHashMap<K2, V> = HashMap<K2, V, BuildHasherDefault<FxHasher>>;
+/// A `HashSet` with deterministic, fast Fx hashing.
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_across_instances() {
+        let h = |v: u64| {
+            let mut f = FxHasher::default();
+            f.write_u64(v);
+            f.finish()
+        };
+        assert_eq!(h(42), h(42));
+        assert_ne!(h(42), h(43));
+    }
+
+    #[test]
+    fn map_roundtrip_with_tuple_keys() {
+        let mut m: FxHashMap<(u32, u8), u64> = FxHashMap::default();
+        for i in 0..100u32 {
+            m.insert((i, (i % 7) as u8), i as u64 * 3);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&(41, 6)), Some(&123));
+        assert_eq!(m.remove(&(0, 0)), Some(0));
+    }
+
+    #[test]
+    fn byte_slices_hash_consistently() {
+        let mut a = FxHasher::default();
+        a.write(b"hello world!!");
+        let mut b = FxHasher::default();
+        b.write(b"hello world!!");
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -1,7 +1,9 @@
 //! Small self-contained utilities (the build environment is offline, so
 //! these replace the usual crates.io dependencies).
 
+pub mod fxhash;
 pub mod json;
 pub mod rng;
 
+pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::SplitMix64;

@@ -141,7 +141,7 @@ fn schedule_pm_send(net: &mut Network, at: Time, src: NodeId, dst: NodeId, data:
     pkt.injected_at = at;
     let delay = net.cfg.arm.postmaster_enqueue + net.cfg.link.inject_latency;
     net.metrics.packets_injected += 1;
-    net.sim.at(at + delay, crate::network::Event::Inject { packet: pkt });
+    net.inject_at(at + delay, pkt);
 }
 
 /// Paper-shape check: streamed beats aggregated, and the advantage is

@@ -303,7 +303,7 @@ fn schedule_pm_reply(
     pkt.injected_at = at;
     let delay = net.cfg.arm.postmaster_enqueue + net.cfg.link.inject_latency;
     net.metrics.packets_injected += 1;
-    net.sim.at(at + delay, crate::network::Event::Inject { packet: pkt });
+    net.inject_at(at + delay, pkt);
 }
 
 /// Convenience: run a search with `k` workers on a fresh card.

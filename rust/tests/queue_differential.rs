@@ -1,0 +1,127 @@
+//! Differential test: the timing-wheel [`EventQueue`] must produce the
+//! exact `(time, seq)` pop order of the reference `BinaryHeap` queue on
+//! randomized interleaved push/pop schedules — including same-instant
+//! bursts, zero-delay (schedule-at-now) events, and far-future timers
+//! that land in every wheel level and the overflow heap.
+//!
+//! Each scenario drives both queues with an identical operation
+//! sequence generated from a seeded RNG (failures print the seed).
+
+use inc_sim::sim::{EventQueue, ReferenceQueue, Time};
+use inc_sim::util::SplitMix64;
+
+/// Drive both queues with the same randomized schedule; compare pops.
+fn run_case(seed: u64, ops: usize, horizon_weights: &[(u64, u32)]) {
+    let mut rng = SplitMix64::new(seed);
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut heap: ReferenceQueue<u64> = ReferenceQueue::new();
+    // Pushes must never be in the past; track the last popped time.
+    let mut now: Time = 0;
+    let mut next_ev = 0u64;
+    let total_weight: u32 = horizon_weights.iter().map(|(_, w)| w).sum();
+
+    let mut delay = |rng: &mut SplitMix64| {
+        let mut pick = rng.gen_range(total_weight as usize) as u32;
+        for &(h, w) in horizon_weights {
+            if pick < w {
+                return if h == 0 { 0 } else { rng.next_u64() % h };
+            }
+            pick -= w;
+        }
+        unreachable!()
+    };
+
+    for _ in 0..ops {
+        match rng.gen_range(100) {
+            // 60%: push a single event.
+            0..=59 => {
+                let t = now + delay(&mut rng);
+                wheel.push(t, next_ev);
+                heap.push(t, next_ev);
+                next_ev += 1;
+            }
+            // 10%: same-instant burst (time collisions stress seq order).
+            60..=69 => {
+                let t = now + delay(&mut rng);
+                let burst = 2 + rng.gen_range(6);
+                for _ in 0..burst {
+                    wheel.push(t, next_ev);
+                    heap.push(t, next_ev);
+                    next_ev += 1;
+                }
+            }
+            // 30%: pop and compare.
+            _ => {
+                let a = wheel.pop();
+                let b = heap.pop();
+                assert_eq!(a, b, "pop mismatch (seed {seed})");
+                if let Some((t, _)) = a {
+                    assert!(t >= now, "time regressed (seed {seed})");
+                    now = t;
+                }
+            }
+        }
+        assert_eq!(wheel.len(), heap.len(), "len diverged (seed {seed})");
+    }
+    // Drain both completely.
+    loop {
+        let a = wheel.pop();
+        let b = heap.pop();
+        assert_eq!(a, b, "drain mismatch (seed {seed})");
+        if a.is_none() {
+            break;
+        }
+    }
+    assert!(wheel.is_empty() && heap.is_empty());
+}
+
+#[test]
+fn near_future_traffic_shapes() {
+    // Fabric-like delays: sub-µs hops, occasional 100 µs timers.
+    for seed in 0..30 {
+        run_case(seed, 4000, &[(0, 5), (1_000, 60), (100_000, 35)]);
+    }
+}
+
+#[test]
+fn all_levels_and_overflow() {
+    // Delays spanning every wheel level plus multi-second overflow
+    // timers (level 2 covers ~1.07 s).
+    for seed in 100..120 {
+        run_case(
+            seed,
+            2500,
+            &[(0, 5), (900, 30), (800_000, 30), (700_000_000, 20), (5_000_000_000, 15)],
+        );
+    }
+}
+
+#[test]
+fn same_instant_heavy() {
+    // Mostly zero-delay pushes: everything lands at the live instant.
+    for seed in 200..215 {
+        run_case(seed, 3000, &[(0, 70), (50, 20), (2_000_000, 10)]);
+    }
+}
+
+#[test]
+fn deep_backlog_then_drain() {
+    // One huge backlog (the bench's depth-500k shape, scaled down),
+    // drained in a single sweep.
+    let mut rng = SplitMix64::new(42);
+    let mut wheel: EventQueue<u64> = EventQueue::new();
+    let mut heap: ReferenceQueue<u64> = ReferenceQueue::new();
+    for i in 0..100_000u64 {
+        let t = rng.next_u64() % 2_000_000;
+        wheel.push(t, i);
+        heap.push(t, i);
+    }
+    loop {
+        let a = wheel.pop();
+        let b = heap.pop();
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}

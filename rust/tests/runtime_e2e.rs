@@ -1,5 +1,9 @@
 //! Integration: PJRT runtime loads the AOT artifacts and the numeric
 //! contract holds end to end (requires `make artifacts`).
+//!
+//! Compiled only with the `pjrt` cargo feature (the default offline
+//! build has no PJRT backend).
+#![cfg(feature = "pjrt")]
 
 use inc_sim::runtime::{self, Runtime};
 

@@ -4,6 +4,10 @@
 //! This is the integration behind `examples/train_distributed.rs` (E10),
 //! kept short here: 30 steps must show a clearly decreasing loss and a
 //! sane virtual-time split.
+//!
+//! Compiled only with the `pjrt` cargo feature (the default offline
+//! build has no PJRT backend).
+#![cfg(feature = "pjrt")]
 
 use inc_sim::coordinator::Placement;
 use inc_sim::network::Network;
