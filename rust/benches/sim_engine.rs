@@ -11,11 +11,19 @@
 
 mod common;
 
+use inc_sim::config::SystemConfig;
+use inc_sim::network::sharded::ShardedNetwork;
 use inc_sim::network::{Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::sim::{EventQueue, ReferenceQueue};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
+
+/// Numeric knob from the environment (CI's bench-smoke step shrinks the
+/// run with BENCH_EVENTS / BENCH_PACKETS; defaults are the full run).
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 /// The two queue implementations share push/pop shapes but no trait;
 /// this local one lets the bench loop be written once.
@@ -72,8 +80,9 @@ fn main() {
 
     // Raw event queue at two steady-state depths (a card's working set
     // vs a pathological backlog), wheel vs BinaryHeap baseline.
+    let n_events = env_u64("BENCH_EVENTS", 2_000_000);
     for depth in [10_000u64, 500_000] {
-        let n = 2_000_000u64;
+        let n = n_events.max(depth);
         let wheel_eps = {
             let mut q: EventQueue<u64> = EventQueue::new();
             bench_queue(&mut q, depth, n)
@@ -105,9 +114,10 @@ fn main() {
     json.push_str("  \"packets\": [\n");
 
     // End-to-end packet simulation rate, uniform random traffic.
+    let bench_packets = env_u64("BENCH_PACKETS", 20_000) as u32;
     for (label, json_name, mut net, packets) in [
-        ("card (27)", "card", Network::card(), 20_000u32),
-        ("inc3000 (432)", "inc3000", Network::inc3000(), 20_000),
+        ("card (27)", "card", Network::card(), bench_packets),
+        ("inc3000 (432)", "inc3000", Network::inc3000(), bench_packets),
     ] {
         let nn = net.topo.node_count();
         let mut rng = SplitMix64::new(7);
@@ -144,24 +154,82 @@ fn main() {
     json.push_str("\n  ],\n");
 
     // Broadcast storm at INC 3000 scale (the §4.3 boot path shape).
+    let storms = (bench_packets / 100).max(10);
     let mut net = Network::inc3000();
     let ((), secs) = common::timed(|| {
-        for i in 0..200u32 {
+        for i in 0..storms {
             net.send_broadcast(NodeId(i % 432), Proto::Raw { tag: 1 }, Payload::Synthetic(2040));
         }
         net.run_to_quiescence(&mut NullApp);
     });
     let bc_eps = net.sim.dispatched() as f64 / secs;
     println!(
-        "broadcast storm: 200 × 432-node broadcasts in {:.3} s ({:.2} M events/s)",
+        "broadcast storm: {storms} × 432-node broadcasts in {:.3} s ({:.2} M events/s)",
         secs,
         bc_eps / 1e6
     );
     json.push_str(&format!(
-        "  \"broadcast_storm\": {{\"broadcasts\": 200, \"nodes\": 432, \
-         \"events_per_sec\": {bc_eps:.0}}}\n}}\n"
+        "  \"broadcast_storm\": {{\"broadcasts\": {storms}, \"nodes\": 432, \
+         \"events_per_sec\": {bc_eps:.0}}},\n"
+    ));
+
+    // Serial vs bounded-lag sharded engine on INC 9000 (one shard per
+    // cage), identical uniform traffic — the headline parallel-speedup
+    // number (EXPERIMENTS.md §Perf). The sharded run must also produce
+    // byte-identical metrics and final clock; checked here so a perf
+    // regression can never hide a correctness one.
+    let sh_packets = (2 * bench_packets).max(1000);
+    let gen_pairs = |nn: u32| {
+        let mut rng = SplitMix64::new(11);
+        (0..sh_packets)
+            .map(|_| {
+                let src = rng.gen_range(nn as usize) as u32;
+                let mut dst = rng.gen_range(nn as usize) as u32;
+                if dst == src {
+                    dst = (dst + 1) % nn;
+                }
+                (NodeId(src), NodeId(dst))
+            })
+            .collect::<Vec<_>>()
+    };
+    let pairs = gen_pairs(1728);
+    let mut serial = Network::new(SystemConfig::inc9000());
+    let ((), serial_secs) = common::timed(|| {
+        for &(s, d) in &pairs {
+            serial.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(256));
+        }
+        serial.run_to_quiescence(&mut NullApp);
+    });
+    let mut sharded = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+    let ((), sharded_secs) = common::timed(|| {
+        for &(s, d) in &pairs {
+            sharded.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(256));
+        }
+        sharded.run_to_quiescence();
+    });
+    let matches = serial.metrics == sharded.metrics() && serial.now() == sharded.now();
+    let serial_pps = sh_packets as f64 / serial_secs;
+    let sharded_pps = sh_packets as f64 / sharded_secs;
+    let speedup = serial_secs / sharded_secs;
+    println!(
+        "inc9000 (1728)  {sh_packets} pkts: serial {:.0} kpkt/s vs sharded×{} {:.0} kpkt/s \
+         ({speedup:.2}x, {} workers, metrics+clock match: {matches})",
+        serial_pps / 1e3,
+        sharded.shard_count(),
+        sharded_pps / 1e3,
+        sharded.worker_count(),
+    );
+    json.push_str(&format!(
+        "  \"inc9000_sharded\": {{\"packets\": {sh_packets}, \
+         \"serial_packets_per_sec\": {serial_pps:.0}, \
+         \"sharded_packets_per_sec\": {sharded_pps:.0}, \
+         \"shards\": {}, \"workers\": {}, \"speedup\": {speedup:.3}, \
+         \"matches_serial\": {matches}}}\n}}\n",
+        sharded.shard_count(),
+        sharded.worker_count(),
     ));
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json");
+    assert!(matches, "sharded run diverged from the serial oracle");
 }

@@ -144,8 +144,9 @@ impl Network {
             // touches the network.
             let masked: Vec<u64> = words.iter().map(|w| w & mask).collect();
             let logic = self.cfg.bridge_fifo_logic;
-            self.sim.after(
+            self.sim.after_keyed(
                 logic,
+                crate::network::key_fifo_local(src, channel),
                 Event::FifoLocal { node: src, channel, words: Arc::new(masked) },
             );
             return;
@@ -173,7 +174,7 @@ impl Network {
             let delay = tx_logic + self.cfg.link.inject_latency;
             self.metrics.packets_injected += 1;
             let packet = self.packets.alloc(pkt);
-            self.sim.after(delay, Event::Inject { packet });
+            self.sim.after_keyed(delay, crate::network::key_inject(id), Event::Inject { packet });
         }
         self.fifos.tx.get_mut(&(src.0, channel)).unwrap().next_seq = seq;
     }

@@ -30,6 +30,10 @@ pub const ETH_OVERHEAD: u32 = 18;
 /// An internal-Ethernet frame (content is modeled, not carried).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EthFrame {
+    /// Packet id the frame's fabric packet will carry, assigned when
+    /// the frame is created (at the driver API, not inside an event
+    /// handler — see the dispatch-order notes in [`crate::network`]).
+    pub id: u64,
     pub src: NodeId,
     pub dst: NodeId,
     /// Payload bytes (≤ [`ETH_MTU`]).
@@ -152,8 +156,10 @@ impl Network {
         let wire = bytes + ETH_OVERHEAD;
         let dma = (wire as f64 / arm.axi_bytes_per_ns).ceil() as Time;
         port.tx_busy_until = dma_start + dma;
-        let frame = Box::new(EthFrame { src, dst, bytes, tag, t_created: now });
-        self.sim.at(dma_start + dma, Event::EthTx { frame });
+        let id = self.next_packet_id();
+        let frame = Box::new(EthFrame { id, src, dst, bytes, tag, t_created: now });
+        self.sim
+            .at_keyed(dma_start + dma, crate::network::key_eth(src), Event::EthTx { frame });
     }
 
     /// Send an arbitrary-size message: the kernel segments it into
@@ -170,9 +176,10 @@ impl Network {
         frames
     }
 
-    /// Frame DMA into the fabric finished: inject as a network packet.
+    /// Frame DMA into the fabric finished: inject as a network packet
+    /// (the packet id was assigned when the frame was created).
     pub(crate) fn eth_tx_inject(&mut self, frame: EthFrame) {
-        let id = self.next_packet_id();
+        let id = frame.id;
         let wire = frame.bytes + ETH_OVERHEAD;
         let mut pkt = Packet::new(
             id,
@@ -206,7 +213,11 @@ impl Network {
                 let cost = arm.irq_cost + arm.driver + arm.kernel_stack;
                 self.nodes[node.0 as usize].cpu_busy_ns += cost;
                 self.eth.port_mut(node).irqs_taken += 1;
-                self.sim.after(dma + cost, Event::EthRx { node, frame: Box::new(frame) });
+                self.sim.after_keyed(
+                    dma + cost,
+                    crate::network::key_eth(node),
+                    Event::EthRx { node, frame: Box::new(frame) },
+                );
             }
             RxMode::Polling { interval } => {
                 let deliver_at = self.now() + dma;
@@ -215,7 +226,11 @@ impl Network {
                 if !port.poll_scheduled {
                     port.poll_scheduled = true;
                     let tick = deliver_at.div_ceil(interval).max(1) * interval;
-                    self.sim.at(tick.max(deliver_at), Event::EthPoll { node });
+                    self.sim.at_keyed(
+                        tick.max(deliver_at),
+                        crate::network::key_eth(node),
+                        Event::EthPoll { node },
+                    );
                 }
             }
         }
@@ -259,7 +274,11 @@ impl Network {
         if more {
             if let RxMode::Polling { interval } = self.eth.port(node).mode {
                 self.eth.port_mut(node).poll_scheduled = true;
-                self.sim.after(interval, Event::EthPoll { node });
+                self.sim.after_keyed(
+                    interval,
+                    crate::network::key_eth(node),
+                    Event::EthPoll { node },
+                );
             }
         }
     }
@@ -351,9 +370,10 @@ impl Network {
         let start = now.max(ext.ext_busy_until);
         ext.ext_busy_until = start + wire as u64 * EXT_NS_PER_BYTE;
         // Then the gateway forwards over the internal fabric.
-        let frame = Box::new(EthFrame { src: gw, dst: node, bytes, tag, t_created: now });
         let at = ext.ext_busy_until;
-        self.sim.at(at, Event::EthTx { frame });
+        let id = self.next_packet_id();
+        let frame = Box::new(EthFrame { id, src: gw, dst: node, bytes, tag, t_created: now });
+        self.sim.at_keyed(at, crate::network::key_eth(gw), Event::EthTx { frame });
         true
     }
 }

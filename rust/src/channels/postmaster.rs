@@ -106,7 +106,8 @@ impl Network {
         // kernel involvement (contrast with the Ethernet path).
         let delay = self.cfg.arm.postmaster_enqueue + self.cfg.link.inject_latency;
         self.metrics.packets_injected += 1;
-        self.sim.after(delay, Event::Inject { packet: pkt });
+        let packet = self.packets.alloc(pkt);
+        self.sim.after_keyed(delay, crate::network::key_inject(id), Event::Inject { packet });
     }
 
     /// Packet Demux handed us a Postmaster packet at its target: the DMA
@@ -131,7 +132,11 @@ impl Network {
             t_enqueued: packet.injected_at,
             t_stored: done,
         };
-        self.sim.at(done, Event::PmRx { node, queue, record: Box::new(record) });
+        self.sim.at_keyed(
+            done,
+            crate::network::key_pm_rx(node, queue),
+            Event::PmRx { node, queue, record: Box::new(record) },
+        );
     }
 
     /// DMA completion: append the record to the stream and notify.

@@ -208,10 +208,25 @@ pub struct SystemConfig {
     pub arm: ArmCosts,
     pub programming: ProgrammingModel,
     pub ringbus: RingBusTiming,
-    /// Seed for the deterministic RNG used in adaptive routing tie-breaks.
+    /// Seed folded into the per-packet adaptive-routing tie-break hash
+    /// (a stateless [`crate::util::mix64`] of (seed, packet, node, hop);
+    /// there is no RNG stream, so routing is independent of dispatch
+    /// order — see [`crate::network::sharded`]).
     pub seed: u64,
     /// Bridge-FIFO logic latency (Table 1 hop-0 case), ns.
     pub bridge_fifo_logic: Time,
+    /// NetTunnel execution latency, ns (§3.4): the time the tunnel
+    /// logic in the fabric hardware takes to perform a register/memory
+    /// access at the destination node once the packet leaves the Packet
+    /// Demux. NetTunnel carries Ring-Bus semantics over the main
+    /// fabric, so this is calibrated to the same order of magnitude as
+    /// a [`RingBusTiming::hop`] — both are short FPGA-logic paths with
+    /// no ARM involvement. Previously hardcoded in the demux.
+    pub tunnel_exec_latency: Time,
+    /// Worker threads for the sharded engine
+    /// ([`crate::network::sharded::ShardedNetwork`]): 0 = one per shard,
+    /// capped at the machine's available parallelism.
+    pub sim_threads: usize,
     /// DRAM capacity per node, bytes (1 GB, §2).
     pub dram_bytes: u64,
 }
@@ -226,6 +241,8 @@ impl SystemConfig {
             ringbus: RingBusTiming::default(),
             seed: 0x1BC0FFEE,
             bridge_fifo_logic: 250,
+            tunnel_exec_latency: 100,
+            sim_threads: 0,
             dram_bytes: 1 << 30,
         }
     }

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use crate::network::Network;
-use crate::router::{MemTarget, Packet, Payload, Proto};
+use crate::router::{MemTarget, Packet, Payload, Proto, RouteKind};
 use crate::sim::Time;
 use crate::topology::NodeId;
 
@@ -62,7 +62,22 @@ impl Network {
                         reply: true,
                         req_id,
                     };
-                    self.send_directed(node, packet.src, Proto::NetTunnel, payload);
+                    // The reply's packet id is derived from the request
+                    // id rather than drawn from the id counter: id
+                    // assignment inside an event handler would depend
+                    // on dispatch order, which the sharded engine does
+                    // not share with the serial one (bit 63 marks the
+                    // reply leg; bit 62 already marks tunnel requests).
+                    let reply = Packet::new(
+                        req_id | 1 << 63,
+                        node,
+                        packet.src,
+                        RouteKind::Directed,
+                        Proto::NetTunnel,
+                        payload,
+                        now,
+                    );
+                    self.inject(reply);
                 }
             }
             _ => unreachable!("tunnel packet without RegAccess payload"),

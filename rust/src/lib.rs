@@ -21,7 +21,9 @@
 //! * [`topology`] — cards, cages, systems; single-span and multi-span links.
 //! * [`link`] — SERDES link model with byte-credit flow control.
 //! * [`router`] — adaptive directed routing + exactly-once broadcast.
-//! * [`network`] — the assembled fabric: nodes × routers × links.
+//! * [`network`] — the assembled fabric: nodes × routers × links; both
+//!   the serial engine and the bounded-lag per-cage parallel engine
+//!   ([`network::sharded`]) live here.
 //! * [`channels`] — Internal Ethernet, Postmaster DMA, Bridge FIFO.
 //! * [`diag`] — JTAG, Ring Bus, NetTunnel, PCIe Sandbox.
 //! * [`node`] — per-node model: ARM costs, DRAM, registers, boot.
@@ -47,6 +49,7 @@ pub mod util;
 pub mod workload;
 
 pub use config::{LinkTiming, SystemConfig, SystemPreset};
-pub use network::Network;
+pub use network::sharded::ShardedNetwork;
+pub use network::{Delivery, Network};
 pub use sim::{Sim, Time};
 pub use topology::{Coord, NodeId, Topology};

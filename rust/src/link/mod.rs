@@ -28,6 +28,11 @@ pub struct LinkState {
     /// Packets waiting for the link (either busy or out of credits),
     /// as (arena handle, wire bytes).
     queue: VecDeque<(PacketRef, u32)>,
+    /// A `Drain` event is already scheduled for this link. An idle link
+    /// with an empty queue schedules nothing — the event core only ever
+    /// sees drains that can do work (suppressions are counted in
+    /// [`crate::metrics::Metrics::drains_suppressed`]).
+    drain_pending: bool,
     /// Lifetime counters.
     pub sent_packets: u64,
     pub sent_bytes: u64,
@@ -41,6 +46,7 @@ impl LinkState {
             credits: timing.credit_buffer_bytes,
             busy_until: 0,
             queue: VecDeque::new(),
+            drain_pending: false,
             sent_packets: 0,
             sent_bytes: 0,
             max_queue: 0,
@@ -90,6 +96,24 @@ impl LinkState {
     pub fn enqueue(&mut self, pkt: PacketRef, wire_bytes: u32) {
         self.queue.push_back((pkt, wire_bytes));
         self.max_queue = self.max_queue.max(self.queue.len());
+    }
+
+    /// Mark that a `Drain` event is scheduled. Returns `false` if one
+    /// was already pending (caller must not schedule a duplicate).
+    #[inline]
+    pub fn arm_drain(&mut self) -> bool {
+        if self.drain_pending {
+            false
+        } else {
+            self.drain_pending = true;
+            true
+        }
+    }
+
+    /// Clear the pending flag (invoked when the `Drain` event fires).
+    #[inline]
+    pub fn disarm_drain(&mut self) {
+        self.drain_pending = false;
     }
 
     /// Return credits granted by the receiver (it freed buffer space).
@@ -178,6 +202,16 @@ mod tests {
         l.start_tx(0, wire, &timing);
         assert!(!l.ready(100, wire));
         assert!(l.ready(508, wire));
+    }
+
+    #[test]
+    fn drain_arming_is_single_shot() {
+        let timing = LinkTiming::default();
+        let mut l = LinkState::new(&timing);
+        assert!(l.arm_drain(), "first arm schedules");
+        assert!(!l.arm_drain(), "second arm suppressed while pending");
+        l.disarm_drain();
+        assert!(l.arm_drain(), "re-arms after the event fired");
     }
 
     #[test]

@@ -10,8 +10,11 @@ use anyhow::Result;
 
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::diag::sandbox::PcieSandbox;
+use inc_sim::network::sharded::ShardedNetwork;
 use inc_sim::network::{Network, NullApp};
+use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::{Coord, NodeId, Topology};
+use inc_sim::util::SplitMix64;
 use inc_sim::workload::{learners, mcts, training};
 
 const USAGE: &str = "\
@@ -26,6 +29,10 @@ COMMANDS
   programming                                   JTAG vs PCIe programming times (§4.3)
   channels                                      virtual-channel comparison (Figs 3-5)
   sandbox     [--preset P] [--script FILE]      PCIe Sandbox session (§4.3)
+  traffic     [--preset P] [--packets N] [--bytes B] [--seed S] [--shards K]
+              uniform-random traffic soak; K>1 runs the bounded-lag
+              per-cage parallel engine (K=0 picks the preset's natural
+              shard count, 1 forces the serial engine)
   train       [--ranks N] [--steps N] [--lr F]  data-parallel LM training (E10)
   mcts        [--workers N] [--rollouts N]      distributed MCTS (E9)
   learners                                      learner-overlap experiment (E8)
@@ -96,6 +103,13 @@ fn main() -> Result<()> {
         "programming" => programming(),
         "channels" => channels(),
         "sandbox" => sandbox(args.preset(SystemPreset::Card), args.get_opt("script")),
+        "traffic" => traffic(
+            args.preset(SystemPreset::Inc9000),
+            args.get("packets", 50_000u32),
+            args.get("bytes", 256u32),
+            args.get("seed", 7u64),
+            args.get("shards", 0u32),
+        ),
         "train" => train(
             args.get("ranks", 4usize),
             args.get("steps", 200u32),
@@ -220,6 +234,55 @@ fn channels() {
     net.eth_send(src, dst, 64, 0);
     net.run_to_quiescence(&mut NullApp);
     println!("  ethernet    : {:>8.2} µs", net.now() as f64 / 1000.0);
+}
+
+/// Uniform-random traffic soak: the serial engine (`--shards 1`) or the
+/// bounded-lag per-cage parallel engine (EXPERIMENTS.md §Perf).
+fn traffic(p: SystemPreset, packets: u32, bytes: u32, seed: u64, shards: u32) {
+    let cfg = SystemConfig::new(p);
+    let nn = p.node_count();
+    let mut rng = SplitMix64::new(seed);
+    let mut pairs = Vec::with_capacity(packets as usize);
+    for _ in 0..packets {
+        let src = rng.gen_range(nn as usize) as u32;
+        let mut dst = rng.gen_range(nn as usize) as u32;
+        if dst == src {
+            dst = (dst + 1) % nn;
+        }
+        pairs.push((NodeId(src), NodeId(dst)));
+    }
+    let t0 = std::time::Instant::now();
+    let (events, vtime, metrics, label) = if shards == 1 {
+        let mut net = Network::new(cfg);
+        for &(s, d) in &pairs {
+            net.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(bytes));
+        }
+        let ev = net.run_to_quiescence(&mut NullApp);
+        (ev, net.now(), net.metrics.clone(), "serial".to_string())
+    } else {
+        let mut net = ShardedNetwork::new(cfg, if shards == 0 { u32::MAX } else { shards });
+        for &(s, d) in &pairs {
+            net.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(bytes));
+        }
+        let ev = net.run_to_quiescence();
+        let label = format!(
+            "sharded ({} shards, {} workers, lookahead {} ns)",
+            net.shard_count(),
+            net.worker_count(),
+            net.lookahead()
+        );
+        (ev, net.now(), net.metrics(), label)
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{p:?}: {packets} packets of {bytes} B, engine: {label}");
+    println!(
+        "{events} events in {secs:.3} s = {:.2} M events/s, {:.0} kpkt/s; \
+         virtual time {:.3} ms",
+        events as f64 / secs / 1e6,
+        packets as f64 / secs / 1e3,
+        vtime as f64 / 1e6
+    );
+    print!("{}", metrics.report());
 }
 
 fn sandbox(p: SystemPreset, script: Option<String>) {

@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 use crate::sim::Time;
 
 /// Log-scaled latency histogram (ns), plus exact min/max/mean.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LatencyHist {
     count: u64,
     sum: u128,
@@ -60,6 +60,22 @@ impl LatencyHist {
         self.max
     }
 
+    /// Fold `other` into this histogram (exact: counts, sums, extrema
+    /// and buckets all add, so merged shard histograms equal the serial
+    /// engine's histogram sample-for-sample).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (b, &c) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += c;
+        }
+    }
+
     /// Approximate percentile from the log buckets (upper bound of the
     /// bucket containing the p-quantile sample).
     pub fn percentile(&self, p: f64) -> Time {
@@ -79,7 +95,7 @@ impl LatencyHist {
 }
 
 /// Fabric-wide metrics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Metrics {
     /// End-to-end packet latency by protocol name.
     pub packet_latency: BTreeMap<&'static str, LatencyHist>,
@@ -92,11 +108,30 @@ pub struct Metrics {
     pub bytes_delivered: u64,
     /// Events where a packet had to queue on a busy/credit-blocked link.
     pub link_stalls: u64,
+    /// No-op `Drain` events the pending-drain flag kept out of the event
+    /// queue (an idle link with nothing queued schedules no drain).
+    pub drains_suppressed: u64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Metrics::default()
+    }
+
+    /// Fold another metrics block into this one (used to aggregate
+    /// per-shard metrics; every field is a sum or an exact histogram
+    /// merge, so the aggregate equals the serial engine's metrics).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (proto, hist) in &other.packet_latency {
+            self.packet_latency.entry(proto).or_insert_with(LatencyHist::new).merge(hist);
+        }
+        self.packets_delivered += other.packets_delivered;
+        self.packets_injected += other.packets_injected;
+        self.broadcast_copies += other.broadcast_copies;
+        self.multicast_copies += other.multicast_copies;
+        self.bytes_delivered += other.bytes_delivered;
+        self.link_stalls += other.link_stalls;
+        self.drains_suppressed += other.drains_suppressed;
     }
 
     pub fn record_delivery(&mut self, proto: &'static str, latency: Time, bytes: u32) {
@@ -113,13 +148,14 @@ impl Metrics {
         let mut s = String::new();
         s.push_str(&format!(
             "packets: injected={} delivered={} (broadcast copies={}, multicast copies={}), \
-             bytes={}, link stalls={}\n",
+             bytes={}, link stalls={}, drains suppressed={}\n",
             self.packets_injected,
             self.packets_delivered,
             self.broadcast_copies,
             self.multicast_copies,
             self.bytes_delivered,
-            self.link_stalls
+            self.link_stalls,
+            self.drains_suppressed
         ));
         for (proto, h) in &self.packet_latency {
             s.push_str(&format!(
@@ -170,6 +206,30 @@ mod tests {
         h.record(1_000_000);
         assert!(h.percentile(0.5) <= 2048);
         assert!(h.percentile(1.0) >= 1_000_000 / 2);
+    }
+
+    #[test]
+    fn merged_shard_metrics_equal_one_big_block() {
+        // Record the same samples once into a single block and once
+        // split across two blocks that are merged: byte-identical.
+        let samples = [(100u64, 16u32), (5_000, 64), (90, 1024), (77, 8)];
+        let mut whole = Metrics::new();
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        for (i, (lat, bytes)) in samples.iter().enumerate() {
+            whole.record_delivery("raw", *lat, *bytes);
+            let half = if i % 2 == 0 { &mut a } else { &mut b };
+            half.record_delivery("raw", *lat, *bytes);
+        }
+        whole.link_stalls = 3;
+        whole.drains_suppressed = 5;
+        a.link_stalls = 1;
+        b.link_stalls = 2;
+        a.drains_suppressed = 5;
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged, whole);
     }
 
     #[test]

@@ -22,7 +22,29 @@
 //! [`crate::util::FxHashMap`]s: no SipHash on the per-packet path, no
 //! per-process seed.
 
+//! # Dispatch-order independence
+//!
+//! Nothing in the fabric depends on *when* an event was scheduled, only
+//! on what it is:
+//!
+//! * every fabric event is pushed with a **content key** (event kind +
+//!   link/packet/node identity, see the `key_*` helpers), so
+//!   same-instant events dispatch in a content-determined order;
+//! * adaptive-routing tie-breaks hash the packet's identity
+//!   ([`crate::util::mix64`]) instead of drawing from an RNG stream;
+//! * packet ids are assigned at the driver API (or derived from the
+//!   originating packet, e.g. NetTunnel replies), never from a counter
+//!   inside an event handler.
+//!
+//! Together these make the per-cage parallel engine ([`sharded`])
+//! byte-identical to this serial one — the serial engine stays the
+//! oracle the sharded engine is differential-tested against
+//! (`tests/sharded_differential.rs`).
+
 pub mod arena;
+pub mod sharded;
+
+use std::sync::Arc;
 
 use crate::channels::bridge_fifo::BridgeFifoFabric;
 use crate::channels::ethernet::{EthFrame, EthernetFabric};
@@ -37,9 +59,118 @@ use crate::router::{
 };
 use crate::sim::{Sim, Time};
 use crate::topology::{LinkId, NodeId, Topology};
-use crate::util::FxHashMap;
+use crate::util::{mix64, FxHashMap};
 
 use arena::{PacketArena, PacketRef};
+
+// ---------------------------------------------------------------------
+// Event content keys: same-instant dispatch order (see module docs and
+// `sim::queue`). Layout: 4-bit event-kind tag in the top bits, entity
+// identity (link id / packet id / node) below. Two events can only share
+// a `(time, key)` pair when their handlers commute (equal-key ties fall
+// back to per-engine insertion order, which serial and sharded runs are
+// free to disagree on).
+// ---------------------------------------------------------------------
+
+const KEY_ENTITY_BITS: u32 = 56;
+const KEY_ENTITY_MASK: u64 = (1 << KEY_ENTITY_BITS) - 1;
+
+#[inline]
+fn ekey(tag: u64, entity: u64) -> u64 {
+    (tag << KEY_ENTITY_BITS) | (entity & KEY_ENTITY_MASK)
+}
+
+#[inline]
+pub(crate) fn key_inject(packet_id: u64) -> u64 {
+    ekey(1, packet_id)
+}
+#[inline]
+pub(crate) fn key_arrive(link: LinkId) -> u64 {
+    ekey(2, link.0 as u64)
+}
+#[inline]
+pub(crate) fn key_drain(link: LinkId) -> u64 {
+    ekey(3, link.0 as u64)
+}
+#[inline]
+pub(crate) fn key_credit(link: LinkId) -> u64 {
+    ekey(4, link.0 as u64)
+}
+#[inline]
+pub(crate) fn key_fifo_rx(packet_id: u64) -> u64 {
+    ekey(5, packet_id)
+}
+#[inline]
+pub(crate) fn key_fifo_local(node: NodeId, channel: u8) -> u64 {
+    ekey(6, (node.0 as u64) << 8 | channel as u64)
+}
+#[inline]
+pub(crate) fn key_pm_rx(node: NodeId, queue: u8) -> u64 {
+    ekey(7, (node.0 as u64) << 8 | queue as u64)
+}
+#[inline]
+pub(crate) fn key_eth(node: NodeId) -> u64 {
+    ekey(8, node.0 as u64)
+}
+#[inline]
+pub(crate) fn key_tunnel(packet_id: u64) -> u64 {
+    ekey(9, packet_id)
+}
+
+/// One line of the delivery trace: a packet reaching its destination's
+/// Packet Demux. The derived `Ord` (time, node, packet, …) is the
+/// canonical order traces are compared in — within one instant,
+/// deliveries at distinct nodes are causally independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Delivery {
+    pub time: Time,
+    pub node: u32,
+    pub packet: u64,
+    /// Discriminant of the packet's [`Proto`].
+    pub proto: u8,
+    pub wire_bytes: u32,
+}
+
+pub(crate) fn proto_tag(p: Proto) -> u8 {
+    match p {
+        Proto::Ethernet => 0,
+        Proto::Postmaster { .. } => 1,
+        Proto::BridgeFifo { .. } => 2,
+        Proto::NetTunnel => 3,
+        Proto::Boot => 4,
+        Proto::Raw { .. } => 5,
+    }
+}
+
+/// An event crossing a shard boundary (see [`sharded`]): the owning
+/// shard of a link's transmit side differs from the owner of its
+/// receive side, so `Arrive`s travel forward and `Credit`s travel back.
+/// Packets move *by value* between per-shard arenas.
+#[derive(Debug)]
+pub(crate) enum BoundaryEvent {
+    Arrive { link: LinkId, packet: Packet },
+    Credit { link: LinkId, bytes: u32 },
+}
+
+/// A boundary event plus its absolute dispatch time.
+#[derive(Debug)]
+pub(crate) struct BoundaryMsg {
+    pub at: Time,
+    pub ev: BoundaryEvent,
+}
+
+/// Shard identity of a `Network` acting as one shard of a
+/// [`sharded::ShardedNetwork`] (`None` for the ordinary serial engine).
+#[derive(Debug)]
+pub(crate) struct ShardCtx {
+    /// This shard's index.
+    pub shard: u32,
+    /// Owner shard per node (shared, read-only).
+    pub owner: Arc<Vec<u32>>,
+    /// Cross-boundary events generated this window, as (destination
+    /// shard, message), in generation order.
+    pub outbox: Vec<(u32, BoundaryMsg)>,
+}
 
 /// Events dispatched by the fabric. Kept ≤ 32 bytes — see module docs.
 #[derive(Debug)]
@@ -94,10 +225,11 @@ impl App for NullApp {}
 /// The assembled system.
 pub struct Network {
     pub cfg: SystemConfig,
-    pub topo: Topology,
+    /// Static topology, shared read-only (shards of a
+    /// [`sharded::ShardedNetwork`] all reference one instance).
+    pub topo: Arc<Topology>,
     pub links: Vec<LinkState>,
     pub sim: Sim<Event>,
-    pub rng: crate::util::SplitMix64,
     pub metrics: Metrics,
     pub nodes: Vec<NodeState>,
     pub fifos: BridgeFifoFabric,
@@ -111,18 +243,33 @@ pub struct Network {
     pub tunnel_results: FxHashMap<u64, u64>,
     /// Links marked defective (§2.4 "network defect avoidance").
     pub failed_links: Vec<bool>,
+    /// Delivery trace ([`Network::enable_trace`]): every packet handed
+    /// to a destination Packet Demux. Off by default (hot-path lean).
+    pub trace: Option<Vec<Delivery>>,
+    /// Set when this `Network` is one shard of a sharded run.
+    pub(crate) shard_ctx: Option<ShardCtx>,
     next_packet_id: u64,
 }
 
 impl Network {
     pub fn new(cfg: SystemConfig) -> Self {
-        let topo = Topology::preset(cfg.preset);
+        let topo = Arc::new(Topology::preset(cfg.preset));
+        Self::with_topology(cfg, topo)
+    }
+
+    /// Build a network over an existing (shared) topology. Used by the
+    /// sharded engine so all shards reference one `Topology`.
+    pub fn with_topology(cfg: SystemConfig, topo: Arc<Topology>) -> Self {
+        assert_eq!(
+            topo.dims(),
+            cfg.preset.dims(),
+            "topology does not match the config preset"
+        );
         let topo_link_count = topo.link_count();
         let links = (0..topo_link_count).map(|_| LinkState::new(&cfg.link)).collect();
         let n = topo.node_count();
         let nodes = (0..n).map(|i| NodeState::new(NodeId(i as u32), &cfg)).collect();
         Network {
-            rng: crate::util::SplitMix64::new(cfg.seed),
             topo,
             links,
             sim: Sim::new(),
@@ -135,6 +282,8 @@ impl Network {
             eth_inflight: FxHashMap::default(),
             tunnel_results: FxHashMap::default(),
             failed_links: vec![false; topo_link_count],
+            trace: None,
+            shard_ctx: None,
             cfg,
             next_packet_id: 0,
         }
@@ -157,6 +306,30 @@ impl Network {
         let id = self.next_packet_id;
         self.next_packet_id += 1;
         id
+    }
+
+    /// Current value of the packet-id counter (not advancing it). The
+    /// sharded engine keeps one global id space by syncing this cursor
+    /// around driver calls, so ids match the serial engine exactly.
+    pub fn packet_id_cursor(&self) -> u64 {
+        self.next_packet_id
+    }
+
+    /// Set the packet-id counter (see [`Network::packet_id_cursor`]).
+    pub fn set_packet_id_cursor(&mut self, v: u64) {
+        self.next_packet_id = v;
+    }
+
+    /// Start recording the delivery trace (see [`Delivery`]).
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(Vec::new());
+        }
+    }
+
+    /// Take the recorded delivery trace (empty if tracing is off).
+    pub fn take_trace(&mut self) -> Vec<Delivery> {
+        self.trace.take().unwrap_or_default()
     }
 
     /// Build and inject a directed packet from `src` (paying injection
@@ -223,16 +396,18 @@ impl Network {
     pub fn inject(&mut self, packet: Packet) {
         self.metrics.packets_injected += 1;
         let delay = self.cfg.link.inject_latency;
+        let key = key_inject(packet.id);
         let packet = self.packets.alloc(packet);
-        self.sim.after(delay, Event::Inject { packet });
+        self.sim.after_keyed(delay, key, Event::Inject { packet });
     }
 
     /// Schedule an already-built packet to enter the fabric at absolute
     /// time `at` (deferred-production workloads; the caller accounts
     /// metrics and any software costs itself).
     pub fn inject_at(&mut self, at: Time, packet: Packet) {
+        let key = key_inject(packet.id);
         let packet = self.packets.alloc(packet);
-        self.sim.at(at, Event::Inject { packet });
+        self.sim.at_keyed(at, key, Event::Inject { packet });
     }
 
     /// Run until the event queue empties or `deadline` passes. Returns
@@ -257,6 +432,20 @@ impl Network {
         self.sim.dispatched() - start
     }
 
+    /// Dispatch everything scheduled at or before `deadline` without
+    /// advancing the clock past the last event (unlike
+    /// [`Network::run_until`], which advances to the deadline). The
+    /// sharded engine's bounded-lag window runner: the final clock is
+    /// the last *event* time, matching the serial engine's quiescence
+    /// clock.
+    pub fn run_window(&mut self, app: &mut dyn App, deadline: Time) -> u64 {
+        let start = self.sim.dispatched();
+        while let Some((_, ev)) = self.sim.pop_until(deadline) {
+            self.handle(ev, app);
+        }
+        self.sim.dispatched() - start
+    }
+
     fn handle(&mut self, ev: Event, app: &mut dyn App) {
         match ev {
             Event::Inject { packet } => {
@@ -264,7 +453,10 @@ impl Network {
                 self.route_from(src, packet, None, app)
             }
             Event::Arrive { link, packet } => self.arrive(link, packet, app),
-            Event::Drain { link } => self.drain(link),
+            Event::Drain { link } => {
+                self.links[link.0 as usize].disarm_drain();
+                self.drain(link)
+            }
             Event::Credit { link, bytes } => {
                 self.links[link.0 as usize].grant(bytes, self.cfg.link.credit_buffer_bytes);
                 self.drain(link);
@@ -323,12 +515,21 @@ impl Network {
                 }
                 let now = self.now();
                 let links = &self.links;
+                // Tie-break hash over (seed, packet, node, hop): a pure
+                // function of what is being routed — identical in serial
+                // and sharded execution (see module docs).
+                let tie = mix64(
+                    self.cfg.seed
+                        ^ id.wrapping_mul(0x9E3779B97F4A7C15)
+                        ^ ((here.0 as u64) << 32)
+                        ^ (hops as u64),
+                );
                 let chosen = if m > 0 {
                     pick_adaptive(
                         &live[..m],
                         |l| links[l.0 as usize].ready(now, wire_bytes),
                         |l| links[l.0 as usize].busy_until(),
-                        &mut self.rng,
+                        tie,
                     )
                 } else {
                     // Every minimal link is dead: lateral escape over any
@@ -405,13 +606,27 @@ impl Network {
         let now = self.now();
         let st = &mut self.links[link.0 as usize];
         if st.ready(now, wire_bytes) {
-            let busy_until = st.start_tx(now, wire_bytes, &self.cfg.link);
+            st.start_tx(now, wire_bytes, &self.cfg.link);
             let arrive_at = now + self.cfg.link.hop(wire_bytes);
-            self.sim.at(busy_until, Event::Drain { link });
-            self.sim.at(arrive_at, Event::Arrive { link, packet });
+            // Nothing queued behind this packet (`ready` required an
+            // empty queue), so the unconditional end-of-serialization
+            // `Drain` would be a no-op: suppress it. A later enqueue
+            // while the link is busy arms the drain itself.
+            self.metrics.drains_suppressed += 1;
+            self.sched_arrive(link, packet, arrive_at);
         } else {
+            let busy = st.busy_until() > now;
             st.enqueue(packet, wire_bytes);
             self.metrics.link_stalls += 1;
+            // Busy link: wake when serialization finishes. (If the link
+            // is idle but out of credits, the `Credit` handler drains
+            // directly — no event needed.)
+            if busy {
+                let at = self.links[link.0 as usize].busy_until();
+                if self.links[link.0 as usize].arm_drain() {
+                    self.sim.at_keyed(at, key_drain(link), Event::Drain { link });
+                }
+            }
         }
     }
 
@@ -422,8 +637,85 @@ impl Network {
             let busy_until =
                 self.links[link.0 as usize].start_tx(now, wire_bytes, &self.cfg.link);
             let arrive_at = now + self.cfg.link.hop(wire_bytes);
-            self.sim.at(busy_until, Event::Drain { link });
-            self.sim.at(arrive_at, Event::Arrive { link, packet });
+            if self.links[link.0 as usize].queue_len() > 0 {
+                if self.links[link.0 as usize].arm_drain() {
+                    self.sim.at_keyed(busy_until, key_drain(link), Event::Drain { link });
+                }
+            } else {
+                self.metrics.drains_suppressed += 1;
+            }
+            self.sched_arrive(link, packet, arrive_at);
+        }
+    }
+
+    /// Schedule (or, across a shard boundary, export) an `Arrive`: the
+    /// handler runs where the link's *receive* side lives.
+    fn sched_arrive(&mut self, link: LinkId, packet: PacketRef, at: Time) {
+        let dst = self.topo.link(link).dst;
+        let export = self.shard_ctx.as_ref().and_then(|ctx| {
+            let owner = ctx.owner[dst.0 as usize];
+            (owner != ctx.shard).then_some(owner)
+        });
+        match export {
+            Some(owner) => {
+                // The packet leaves this shard's arena and rides the
+                // mailbox by value; the receiving shard re-allocs it.
+                let pkt = self.packets.free(packet);
+                let msg = BoundaryMsg { at, ev: BoundaryEvent::Arrive { link, packet: pkt } };
+                self.shard_ctx.as_mut().expect("checked above").outbox.push((owner, msg));
+            }
+            None => {
+                self.sim.at_keyed(at, key_arrive(link), Event::Arrive { link, packet });
+            }
+        }
+    }
+
+    /// Schedule (or export) a `Credit`: the handler runs where the
+    /// link's *transmit* side (its [`LinkState`]) lives.
+    fn sched_credit(&mut self, link: LinkId, bytes: u32, at: Time) {
+        let src = self.topo.link(link).src;
+        let export = self.shard_ctx.as_ref().and_then(|ctx| {
+            let owner = ctx.owner[src.0 as usize];
+            (owner != ctx.shard).then_some(owner)
+        });
+        match export {
+            Some(owner) => {
+                let msg = BoundaryMsg { at, ev: BoundaryEvent::Credit { link, bytes } };
+                self.shard_ctx.as_mut().expect("checked above").outbox.push((owner, msg));
+            }
+            None => {
+                self.sim.at_keyed(at, key_credit(link), Event::Credit { link, bytes });
+            }
+        }
+    }
+
+    /// This network's shard index (0 for the serial engine).
+    pub(crate) fn shard_id(&self) -> u32 {
+        self.shard_ctx.as_ref().map_or(0, |c| c.shard)
+    }
+
+    /// Drain this shard's boundary outbox (sharded runs only).
+    pub(crate) fn take_outbox(&mut self) -> Vec<(u32, BoundaryMsg)> {
+        match &mut self.shard_ctx {
+            Some(ctx) => std::mem::take(&mut ctx.outbox),
+            None => Vec::new(),
+        }
+    }
+
+    /// Insert boundary events received from other shards. The caller
+    /// presents them in the canonical `(source shard, generation seq)`
+    /// order; keys put them in their exact serial dispatch slot.
+    pub(crate) fn import_boundary(&mut self, msgs: Vec<(u32, BoundaryMsg)>) {
+        for (_src, msg) in msgs {
+            match msg.ev {
+                BoundaryEvent::Arrive { link, packet } => {
+                    let r = self.packets.alloc(packet);
+                    self.sim.at_keyed(msg.at, key_arrive(link), Event::Arrive { link, packet: r });
+                }
+                BoundaryEvent::Credit { link, bytes } => {
+                    self.sim.at_keyed(msg.at, key_credit(link), Event::Credit { link, bytes });
+                }
+            }
         }
     }
 
@@ -435,10 +727,8 @@ impl Network {
         };
         // Receiver frees its input buffer once the packet moves on; the
         // credit flight back to the transmitter takes one router latency.
-        self.sim.after(
-            self.cfg.link.router_latency,
-            Event::Credit { link, bytes: wire_bytes },
-        );
+        let credit_at = self.now() + self.cfg.link.router_latency;
+        self.sched_credit(link, wire_bytes, credit_at);
         let here = self.topo.link(link).dst;
         self.route_from(here, packet, Some(link), app);
     }
@@ -448,10 +738,19 @@ impl Network {
     /// the packet out of the arena; deferred ones (Bridge FIFO,
     /// NetTunnel) keep the ref alive across their logic delay.
     fn deliver(&mut self, node: NodeId, packet: PacketRef, app: &mut dyn App) {
-        let (proto, injected_at, wire_bytes) = {
+        let (id, proto, injected_at, wire_bytes) = {
             let p = self.packets.get(packet);
-            (p.proto, p.injected_at, p.wire_bytes)
+            (p.id, p.proto, p.injected_at, p.wire_bytes)
         };
+        if let Some(tr) = &mut self.trace {
+            tr.push(Delivery {
+                time: self.sim.now(),
+                node: node.0,
+                packet: id,
+                proto: proto_tag(proto),
+                wire_bytes,
+            });
+        }
         if !matches!(proto, Proto::BridgeFifo { .. }) {
             let latency = self.now() - injected_at;
             self.metrics.record_delivery(proto_name(proto), latency, wire_bytes);
@@ -463,7 +762,7 @@ impl Network {
                 // end-to-end latency metric is recorded there, once the
                 // words become readable.
                 let d = self.cfg.bridge_fifo_logic / 2;
-                self.sim.after(d, Event::FifoRx { node, packet });
+                self.sim.after_keyed(d, key_fifo_rx(id), Event::FifoRx { node, packet });
             }
             Proto::Postmaster { queue } => {
                 let pkt = self.packets.free(packet);
@@ -474,8 +773,13 @@ impl Network {
                 self.eth_deliver(node, pkt);
             }
             Proto::NetTunnel => {
-                // Tunnel logic executes the access in fabric hardware.
-                self.sim.after(100, Event::TunnelExec { node, packet });
+                // Tunnel logic executes the access in fabric hardware
+                // (calibrated in SystemConfig::tunnel_exec_latency).
+                self.sim.after_keyed(
+                    self.cfg.tunnel_exec_latency,
+                    key_tunnel(id),
+                    Event::TunnelExec { node, packet },
+                );
             }
             Proto::Boot => {
                 let pkt = self.packets.free(packet);
@@ -608,6 +912,40 @@ mod tests {
         let (t2, r2) = run();
         assert_eq!(t1, t2);
         assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn idle_links_schedule_no_drain_events() {
+        // A single packet crossing an uncontended fabric never queues,
+        // so every end-of-serialization drain is suppressed: the event
+        // count is exactly inject + per-hop (arrive + credit).
+        let mut net = Network::card();
+        let src = net.topo.id(Coord { x: 0, y: 0, z: 0 });
+        let dst = net.topo.id(Coord { x: 2, y: 2, z: 2 });
+        net.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::Empty);
+        let events = net.run_to_quiescence(&mut Collect { raw: vec![] });
+        assert_eq!(events, 1 + 6 * 2, "inject + 6 hops × (arrive + credit)");
+        assert_eq!(net.metrics.drains_suppressed, 6);
+        assert_eq!(net.metrics.link_stalls, 0);
+    }
+
+    #[test]
+    fn tunnel_exec_latency_is_configurable() {
+        let base = {
+            let mut net = Network::card();
+            net.tunnel_write(NodeId(0), NodeId(1), crate::node::regs::SCRATCH0, 1);
+            net.run_to_quiescence(&mut NullApp);
+            net.now()
+        };
+        let slow = {
+            let mut cfg = SystemConfig::card();
+            cfg.tunnel_exec_latency += 900;
+            let mut net = Network::new(cfg);
+            net.tunnel_write(NodeId(0), NodeId(1), crate::node::regs::SCRATCH0, 1);
+            net.run_to_quiescence(&mut NullApp);
+            net.now()
+        };
+        assert_eq!(slow, base + 900);
     }
 
     #[test]

@@ -1,0 +1,520 @@
+//! Bounded-lag per-cage parallel simulation (`ShardedNetwork`).
+//!
+//! The INC 9000 stacks four cages of 432 nodes (§2.1, Fig 2a), and all
+//! inter-cage traffic is confined to multi-span z links — exactly the
+//! partition boundary a conservative parallel discrete-event simulator
+//! wants. `ShardedNetwork` runs one [`Network`] per cage (falling back
+//! to per-card sharding for `Inc3000`/`Card`, see
+//! [`Topology::partition`]); each shard owns its own event wheel,
+//! packet arena, link and node state, while the [`Topology`] is shared
+//! read-only behind an `Arc`.
+//!
+//! # Bounded-lag epochs
+//!
+//! Shards advance in lockstep through windows of `lookahead` ns, where
+//! `lookahead` is the minimum latency of *any* cross-boundary event:
+//!
+//! * an `Arrive` on a boundary link takes `router_latency + ser(bytes)
+//!   ≥ router_latency + ser(header)`;
+//! * the returning `Credit` takes exactly `router_latency`;
+//!
+//! so `lookahead = router_latency` (684 ns by default). An event
+//! executing in window `k` (`[k·L, (k+1)·L)`) can only schedule
+//! cross-boundary work at `≥ (k+1)·L`, i.e. in a later window — shards
+//! therefore never see a boundary event "from the past". Between
+//! windows, boundary events travel through per-shard mailboxes and are
+//! merged in a fixed `(epoch, source shard, generation seq)` order, so
+//! the run is deterministic regardless of thread interleaving. Windows
+//! with no work are skipped (the next window index is derived from the
+//! global minimum pending-event time).
+//!
+//! # Byte-identical to the serial engine
+//!
+//! The headline property (differential-tested in
+//! `tests/sharded_differential.rs`): a sharded run produces the same
+//! delivery trace, metrics and final clock as [`Network`] run serially,
+//! byte for byte. Three serial-engine design points make this possible
+//! (see the "dispatch-order independence" notes in [`crate::network`]):
+//! content-keyed same-instant event ordering, per-packet tie-break
+//! hashes instead of an RNG stream, and driver-side packet-id
+//! assignment (the wrapper APIs here sync one global id cursor into the
+//! owning shard around every call). Same-`(time, key)` events whose
+//! relative order *can* differ between engines have commuting handlers
+//! by construction of the key scheme.
+//!
+//! # Scope
+//!
+//! Each shard is a full [`Network`] over the whole mesh: dynamic state
+//! (links, nodes, channel tables) is *allocated* everywhere but only
+//! ever *mutated* for the owned partition. That replication is a
+//! deliberate simplicity trade — state stays index-compatible with the
+//! serial engine at the cost of shard-count× idle memory (a few MB per
+//! Inc9000 shard); compacting per-shard state behind an index remap is
+//! a noted follow-up (ROADMAP).
+//!
+//! The sharded runner drives inbox-style workloads (the [`App`]
+//! callback surface is per-shard, so runs use [`NullApp`]); traffic is
+//! injected up front or between runs through the wrapper APIs. The one
+//! channel that cannot cross a shard boundary is internal Ethernet —
+//! its in-flight frame table lives on the transmit side — so
+//! cross-shard `eth_send` is unsupported (it panics loudly in
+//! `eth_deliver`); directed/broadcast/multicast raw traffic, Bridge
+//! FIFO, Postmaster and NetTunnel all work across boundaries.
+//!
+//! [`App`]: crate::network::App
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::config::SystemConfig;
+use crate::metrics::Metrics;
+use crate::network::{BoundaryMsg, Delivery, Network, NullApp, ShardCtx};
+use crate::router::{Payload, Proto};
+use crate::sim::Time;
+use crate::topology::{LinkId, NodeId, Topology};
+
+/// Per-shard inbox of boundary events, as (source shard, message).
+type Mailbox = Mutex<Vec<(u32, BoundaryMsg)>>;
+
+/// One [`Network`] per cage (or card group), advancing in bounded-lag
+/// lockstep. See the module docs.
+pub struct ShardedNetwork {
+    shards: Vec<Network>,
+    /// Owner shard per node (shared with every shard's `ShardCtx`).
+    owner: Arc<Vec<u32>>,
+    /// The topology all shards reference.
+    pub topo: Arc<Topology>,
+    /// Epoch window length, ns (= minimum cross-boundary latency).
+    lookahead: Time,
+    /// Worker threads driving the shards.
+    workers: usize,
+    /// Global packet-id cursor, synced into shards around driver calls
+    /// so ids match the serial engine exactly.
+    next_packet_id: u64,
+}
+
+impl ShardedNetwork {
+    /// Build a sharded system. `shards` is clamped to the natural unit
+    /// count of the preset (4 cages for `Inc9000`, 16 cards for
+    /// `Inc3000`, 1 for `Card`).
+    pub fn new(cfg: SystemConfig, shards: u32) -> Self {
+        let topo = Arc::new(Topology::preset(cfg.preset));
+        let (owner, count) = topo.partition(shards);
+        let owner = Arc::new(owner);
+        // The cheapest cross-boundary event is a Credit: exactly one
+        // router latency. (An Arrive adds at least ser(header) on top.)
+        // Zero lookahead would let boundary events land inside the
+        // window that produced them — the serial/sharded byte-identity
+        // contract cannot hold, so reject such configs loudly instead
+        // of clamping and silently diverging.
+        assert!(
+            cfg.link.router_latency >= 1,
+            "sharded simulation needs link.router_latency >= 1 ns for a \
+             positive conservative lookahead"
+        );
+        let lookahead = cfg.link.router_latency;
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let requested = if cfg.sim_threads > 0 { cfg.sim_threads } else { hw };
+        let workers = requested.clamp(1, count as usize);
+        let shards = (0..count)
+            .map(|i| {
+                let mut net = Network::with_topology(cfg.clone(), topo.clone());
+                net.shard_ctx =
+                    Some(ShardCtx { shard: i, owner: owner.clone(), outbox: Vec::new() });
+                net
+            })
+            .collect();
+        ShardedNetwork { shards, owner, topo, lookahead, workers, next_packet_id: 0 }
+    }
+
+    /// Natural shard count of a preset (what `new` clamps to).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Worker threads the run loop will use.
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Epoch window length in ns.
+    pub fn lookahead(&self) -> Time {
+        self.lookahead
+    }
+
+    /// The shards themselves (read-only; per-shard inboxes, metrics and
+    /// node state live here).
+    pub fn shards(&self) -> &[Network] {
+        &self.shards
+    }
+
+    /// Owning shard of `node`.
+    pub fn shard_of(&self, node: NodeId) -> usize {
+        self.owner[node.0 as usize] as usize
+    }
+
+    /// Mutable access to the shard owning `node` (driver-side state
+    /// setup; do not schedule events directly).
+    pub fn shard_mut(&mut self, node: NodeId) -> &mut Network {
+        let s = self.shard_of(node);
+        &mut self.shards[s]
+    }
+
+    /// Run `f` against the shard owning `node` with the global
+    /// packet-id cursor synced in and back out, so id assignment
+    /// matches a serial run call for call.
+    fn with_shard<R>(&mut self, node: NodeId, f: impl FnOnce(&mut Network) -> R) -> R {
+        let s = self.shard_of(node);
+        self.shards[s].set_packet_id_cursor(self.next_packet_id);
+        let r = f(&mut self.shards[s]);
+        self.next_packet_id = self.shards[s].packet_id_cursor();
+        r
+    }
+
+    // -----------------------------------------------------------------
+    // Driver APIs (mirror `Network`'s, routed to the owning shard)
+    // -----------------------------------------------------------------
+
+    /// See [`Network::send_directed`].
+    pub fn send_directed(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        self.with_shard(src, |n| n.send_directed(src, dst, proto, payload))
+    }
+
+    /// See [`Network::send_broadcast`].
+    pub fn send_broadcast(&mut self, src: NodeId, proto: Proto, payload: Payload) -> u64 {
+        self.with_shard(src, |n| n.send_broadcast(src, proto, payload))
+    }
+
+    /// See [`Network::send_multicast`].
+    pub fn send_multicast(
+        &mut self,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        self.with_shard(src, |n| n.send_multicast(src, dsts, proto, payload))
+    }
+
+    /// See [`Network::fifo_connect`] (registered on every shard: the
+    /// write port is used by the source shard, the read port by the
+    /// destination shard).
+    pub fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {
+        for sh in &mut self.shards {
+            sh.fifo_connect(src, dst, channel, width_bits);
+        }
+    }
+
+    /// See [`Network::fifo_send`].
+    pub fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
+        self.with_shard(src, |n| n.fifo_send(src, channel, words));
+    }
+
+    /// See [`Network::fifo_read`] (reads the destination shard's port).
+    pub fn fifo_read(&mut self, node: NodeId, channel: u8, max: usize) -> Vec<u64> {
+        self.shard_mut(node).fifo_read(node, channel, max)
+    }
+
+    /// See [`Network::pm_open`] (registered on every shard).
+    pub fn pm_open(&mut self, target: NodeId, queue: u8) {
+        for sh in &mut self.shards {
+            sh.pm_open(target, queue);
+        }
+    }
+
+    /// See [`Network::pm_send`].
+    pub fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        self.with_shard(src, |n| n.pm_send(src, target, queue, data));
+    }
+
+    /// See [`Network::tunnel_write`].
+    pub fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
+        self.with_shard(src, |n| n.tunnel_write(src, dst, addr, value));
+    }
+
+    /// See [`Network::tunnel_read`]. The result lands in the shard
+    /// owning `src`; fetch it with [`ShardedNetwork::tunnel_result`].
+    pub fn tunnel_read(&mut self, src: NodeId, dst: NodeId, addr: u64) -> u64 {
+        self.with_shard(src, |n| n.tunnel_read(src, dst, addr))
+    }
+
+    /// See [`Network::tunnel_result`] (checks every shard).
+    pub fn tunnel_result(&self, req_id: u64) -> Option<u64> {
+        self.shards.iter().find_map(|s| s.tunnel_result(req_id))
+    }
+
+    /// See [`Network::fail_link`] (applied to every shard: routing
+    /// tables must agree everywhere).
+    pub fn fail_link(&mut self, l: LinkId) {
+        for sh in &mut self.shards {
+            sh.fail_link(l);
+        }
+    }
+
+    /// See [`Network::repair_link`].
+    pub fn repair_link(&mut self, l: LinkId) {
+        for sh in &mut self.shards {
+            sh.repair_link(l);
+        }
+    }
+
+    /// Record the delivery trace on every shard (see
+    /// [`ShardedNetwork::take_trace`]).
+    pub fn enable_trace(&mut self) {
+        for sh in &mut self.shards {
+            sh.enable_trace();
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Aggregates
+    // -----------------------------------------------------------------
+
+    /// Final clock: the latest event time across shards (equals the
+    /// serial engine's quiescence clock).
+    pub fn now(&self) -> Time {
+        self.shards.iter().map(|s| s.now()).max().unwrap_or(0)
+    }
+
+    /// Merged fabric metrics (byte-identical to a serial run's).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for sh in &self.shards {
+            m.merge(&sh.metrics);
+        }
+        m
+    }
+
+    /// Merged delivery trace in the canonical [`Delivery`] order
+    /// (byte-identical to a serial run's sorted trace).
+    pub fn take_trace(&mut self) -> Vec<Delivery> {
+        let mut all = Vec::new();
+        for sh in &mut self.shards {
+            all.extend(sh.take_trace());
+        }
+        all.sort_unstable();
+        all
+    }
+
+    /// Packets currently held in any shard's arena (0 at quiescence).
+    pub fn live_packets(&self) -> usize {
+        self.shards.iter().map(|s| s.packets.live()).sum()
+    }
+
+    /// Events dispatched so far across all shards.
+    pub fn dispatched(&self) -> u64 {
+        self.shards.iter().map(|s| s.sim.dispatched()).sum()
+    }
+
+    // -----------------------------------------------------------------
+    // The epoch runner
+    // -----------------------------------------------------------------
+
+    /// Run every shard to global quiescence (no pending events and no
+    /// in-flight boundary messages). Returns the number of events
+    /// dispatched. Deterministic: thread scheduling cannot affect the
+    /// result (boundary merges are canonically ordered).
+    pub fn run_to_quiescence(&mut self) -> u64 {
+        let started: u64 = self.dispatched();
+        let nshards = self.shards.len();
+        let lookahead = self.lookahead;
+        let Some(first) = self.shards.iter().filter_map(|s| s.sim.peek_time()).min() else {
+            return 0;
+        };
+        let init_window = first / lookahead;
+
+        // Balanced chunks: `workers` is already clamped to the shard
+        // count, and the remainder is spread one-per-chunk so exactly
+        // `workers` threads run (e.g. 4 shards / 3 workers = 2+1+1).
+        let nchunks = self.workers;
+        let base = nshards / nchunks;
+        let rem = nshards % nchunks;
+        let barrier = Barrier::new(nchunks);
+        let mailboxes: Vec<Mailbox> = (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
+        let peeks: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(u64::MAX)).collect();
+        // Earliest epoch window in which a worker panicked (u64::MAX =
+        // none). Epoch-tagged rather than a plain flag: a fast worker
+        // may already be in window k+1 when it panics, and workers
+        // still deciding at the end of window k must NOT break early —
+        // everyone runs through window k+1's barriers, then stops
+        // together (otherwise the panicked worker waits on a barrier
+        // its peers already abandoned).
+        let abort_at = AtomicU64::new(u64::MAX);
+
+        std::thread::scope(|scope| {
+            let mut rest: &mut [Network] = &mut self.shards;
+            for ci in 0..nchunks {
+                let take = base + usize::from(ci < rem);
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                let barrier = &barrier;
+                let mailboxes = &mailboxes;
+                let peeks = &peeks;
+                let abort_at = &abort_at;
+                scope.spawn(move || {
+                    let mut app = NullApp;
+                    let mut window = init_window;
+                    loop {
+                        let deadline = (window + 1) * lookahead - 1;
+                        // Phase A: advance own shards through the
+                        // window and post boundary events.
+                        let ra = catch_unwind(AssertUnwindSafe(|| {
+                            for net in chunk.iter_mut() {
+                                net.run_window(&mut app, deadline);
+                                let sid = net.shard_id();
+                                for (dst, msg) in net.take_outbox() {
+                                    mailboxes[dst as usize].lock().unwrap().push((sid, msg));
+                                }
+                            }
+                        }));
+                        if ra.is_err() {
+                            abort_at.fetch_min(window, Ordering::SeqCst);
+                        }
+                        barrier.wait();
+                        // Phase B: merge own inboxes in (source shard,
+                        // generation seq) order, publish next pending
+                        // event times. Skipped once this window is
+                        // known to be aborting.
+                        let healthy = abort_at.load(Ordering::SeqCst) > window;
+                        let rb = if ra.is_ok() && healthy {
+                            catch_unwind(AssertUnwindSafe(|| {
+                                for net in chunk.iter_mut() {
+                                    let sid = net.shard_id() as usize;
+                                    let mut inbox =
+                                        std::mem::take(&mut *mailboxes[sid].lock().unwrap());
+                                    // Stable: preserves per-source order.
+                                    inbox.sort_by_key(|(src, _)| *src);
+                                    net.import_boundary(inbox);
+                                    peeks[sid].store(
+                                        net.sim.peek_time().unwrap_or(u64::MAX),
+                                        Ordering::SeqCst,
+                                    );
+                                }
+                            }))
+                        } else {
+                            Ok(())
+                        };
+                        if rb.is_err() {
+                            abort_at.fetch_min(window, Ordering::SeqCst);
+                        }
+                        barrier.wait();
+                        if abort_at.load(Ordering::SeqCst) <= window {
+                            // Re-raise this worker's own panic (if any);
+                            // other workers exit cleanly so the scope
+                            // can propagate the original.
+                            if let Err(p) = ra {
+                                resume_unwind(p);
+                            }
+                            if let Err(p) = rb {
+                                resume_unwind(p);
+                            }
+                            break;
+                        }
+                        // Every worker derives the same next window.
+                        // (peeks are stable here: the next write happens
+                        // in the next phase B, behind the next barrier.)
+                        let min = peeks
+                            .iter()
+                            .map(|p| p.load(Ordering::SeqCst))
+                            .min()
+                            .unwrap_or(u64::MAX);
+                        if min == u64::MAX {
+                            break;
+                        }
+                        window = min / lookahead;
+                    }
+                });
+            }
+        });
+        // Re-synchronize the shard clocks at the global quiescence
+        // instant: each shard stopped at its *own* last event, and a
+        // driver call between runs must stamp/schedule against the same
+        // clock the serial engine would (its single clock sits at the
+        // global last event).
+        let t = self.now();
+        for sh in &mut self.shards {
+            sh.sim.advance_to(t);
+        }
+        self.dispatched() - started
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemPreset;
+    use crate::topology::Coord;
+
+    /// Serial and sharded runs of the same tiny cross-boundary traffic:
+    /// identical trace, metrics and clock.
+    fn diff_smoke(preset: SystemPreset, shards: u32) {
+        let mut serial = Network::new(SystemConfig::new(preset));
+        serial.enable_trace();
+        let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), shards);
+        sharded.enable_trace();
+
+        let n = serial.topo.node_count() as u32;
+        for i in 0..32u32 {
+            let src = NodeId((i * 97) % n);
+            let dst = NodeId((i * 31 + n / 2) % n);
+            if src != dst {
+                serial.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::Synthetic(128));
+                sharded.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::Synthetic(128));
+            }
+        }
+        serial.run_to_quiescence(&mut NullApp);
+        sharded.run_to_quiescence();
+
+        let mut st = serial.take_trace();
+        st.sort_unstable();
+        assert_eq!(st, sharded.take_trace(), "delivery traces differ ({preset:?})");
+        assert_eq!(serial.metrics, sharded.metrics(), "metrics differ ({preset:?})");
+        assert_eq!(serial.now(), sharded.now(), "final clocks differ ({preset:?})");
+        assert_eq!(sharded.live_packets(), 0, "arena leak");
+    }
+
+    #[test]
+    fn card_single_shard_matches_serial() {
+        diff_smoke(SystemPreset::Card, 1);
+    }
+
+    #[test]
+    fn inc3000_four_shards_match_serial() {
+        diff_smoke(SystemPreset::Inc3000, 4);
+    }
+
+    #[test]
+    fn inc9000_broadcast_crosses_cages_identically() {
+        let mut serial = Network::new(SystemConfig::inc9000());
+        serial.enable_trace();
+        let mut sharded = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+        assert_eq!(sharded.shard_count(), 4);
+        sharded.enable_trace();
+        let src = serial.topo.id(Coord { x: 5, y: 5, z: 0 });
+        serial.send_broadcast(src, Proto::Raw { tag: 1 }, Payload::Empty);
+        sharded.send_broadcast(src, Proto::Raw { tag: 1 }, Payload::Empty);
+        serial.run_to_quiescence(&mut NullApp);
+        sharded.run_to_quiescence();
+        let mut st = serial.take_trace();
+        st.sort_unstable();
+        let sh = sharded.take_trace();
+        assert_eq!(sh.len(), 1728, "broadcast must reach every node once");
+        assert_eq!(st, sh);
+        assert_eq!(serial.metrics, sharded.metrics());
+        assert_eq!(serial.now(), sharded.now());
+    }
+
+    #[test]
+    fn empty_run_terminates() {
+        let mut sharded = ShardedNetwork::new(SystemConfig::card(), 1);
+        assert_eq!(sharded.run_to_quiescence(), 0);
+        assert_eq!(sharded.now(), 0);
+    }
+}

@@ -25,12 +25,11 @@ pub use packet::{
 };
 
 use crate::topology::{Dir, LinkId, NodeId, Span, Topology};
-use crate::util::SplitMix64;
 
 /// All productive output links for a directed packet at `here`:
 /// links whose traversal reduces `Topology::min_hops(here, dst)` by one.
-/// Allocation-free hot-path variant: fills `out` (a node has ≤ 12
-/// outgoing links, of which ≤ 6 can be productive) and returns the count.
+/// Allocation-free hot-path variant: fills `out` (≤ 2 productive links
+/// per axis) and returns the count.
 pub fn productive_links_buf(
     topo: &Topology,
     here: NodeId,
@@ -48,17 +47,28 @@ pub fn productive_links_buf(
         if cur == tgt {
             continue;
         }
-        let d = cur.abs_diff(tgt);
-        if l.dir != Dir::towards(axis, cur, tgt) {
-            continue;
-        }
         let step = l.span.distance();
-        if step > d {
-            continue; // would overshoot
-        }
-        // Hop economy along this axis: cost(d) = d/3 + d%3.
-        let cost = |d: u32| d / 3 + d % 3;
-        if cost(d - step) + 1 == cost(d) {
+        let productive = if axis == 2 {
+            // z: cage-aware cost ([`Topology::z_hops`]). Minimal moves
+            // can point *away* from the target coordinate here — e.g.
+            // z = 2 → 3 jumps forward to 5 (or steps back to 1) first —
+            // so every z link reducing the cost by one qualifies. The
+            // link exists, so the arithmetic stays in bounds.
+            let next = if l.dir.sign() > 0 { cur + step } else { cur - step };
+            Topology::z_hops(next, tgt) + 1 == Topology::z_hops(cur, tgt)
+        } else {
+            // x/y: multi-span links exist at every offset, so minimal
+            // paths move toward the target and never overshoot.
+            let d = cur.abs_diff(tgt);
+            if l.dir != Dir::towards(axis, cur, tgt) || step > d {
+                false
+            } else {
+                // Hop economy along this axis: cost(d) = d/3 + d%3.
+                let cost = |d: u32| d / 3 + d % 3;
+                cost(d - step) + 1 == cost(d)
+            }
+        };
+        if productive {
             out[n] = lid;
             n += 1;
         }
@@ -74,13 +84,20 @@ pub fn productive_links(topo: &Topology, here: NodeId, dst: NodeId) -> Vec<LinkI
 }
 
 /// Pick one productive link adaptively: prefer an idle link with credits;
-/// break ties with the seeded RNG; if none is idle, pick the one that
-/// frees up earliest (falls back to queueing on it).
+/// break ties with `tie` (a well-mixed hash of the packet's identity —
+/// see [`crate::util::mix64`]); if none is idle, pick the one that frees
+/// up earliest (falls back to queueing on it).
+///
+/// `tie` deliberately replaces a stateful RNG stream: the choice is a
+/// pure function of the candidate set and the packet, independent of how
+/// many routing decisions were made before it, so a partitioned
+/// simulation ([`crate::network::sharded`]) reproduces the serial
+/// engine's paths exactly.
 pub fn pick_adaptive(
     candidates: &[LinkId],
     idle: impl Fn(LinkId) -> bool,
     free_at: impl Fn(LinkId) -> u64,
-    rng: &mut SplitMix64,
+    tie: u64,
 ) -> Option<LinkId> {
     if candidates.is_empty() {
         return None;
@@ -88,7 +105,7 @@ pub fn pick_adaptive(
     // Allocation-free: count idle candidates, then pick the k-th.
     let idle_count = candidates.iter().filter(|&&l| idle(l)).count();
     if idle_count > 0 {
-        let k = rng.gen_range(idle_count);
+        let k = (tie % idle_count as u64) as usize;
         return candidates.iter().copied().filter(|&l| idle(l)).nth(k);
     }
     candidates.iter().copied().min_by_key(|&l| free_at(l))
@@ -254,17 +271,62 @@ mod tests {
     #[test]
     fn directed_walk_always_terminates_in_min_hops() {
         let t = topo3000();
-        let mut rng = SplitMix64::new(7);
         for (a, b) in [(0u32, 431u32), (5, 211), (100, 101), (17, 17)] {
             let (src, dst) = (NodeId(a), NodeId(b));
             let mut here = src;
-            let mut hops = 0;
+            let mut hops = 0u32;
             while here != dst {
                 let cands = productive_links(&t, here, dst);
-                let l = pick_adaptive(&cands, |_| true, |_| 0, &mut rng).unwrap();
+                let tie = crate::util::mix64(a as u64 ^ (hops as u64) << 32);
+                let l = pick_adaptive(&cands, |_| true, |_| 0, tie).unwrap();
                 here = t.link(l).dst;
                 hops += 1;
                 assert!(hops <= t.min_hops(src, dst));
+            }
+            assert_eq!(hops, t.min_hops(src, dst));
+        }
+    }
+
+    #[test]
+    fn productive_links_cross_cage_z_boundary() {
+        // z = 2 → z = 3: adjacent coordinates in different cages. No
+        // direct link exists (single-span z stays inside a cage), so
+        // the minimal first moves are the multi-span jump to z = 5 or
+        // the backward fill step to z = 1 — both must be offered, and
+        // both must reduce min_hops (which is 3 here, not 1).
+        let t = Topology::preset(crate::config::SystemPreset::Inc9000);
+        let src = t.id(crate::topology::Coord { x: 0, y: 0, z: 2 });
+        let dst = t.id(crate::topology::Coord { x: 0, y: 0, z: 3 });
+        assert_eq!(t.min_hops(src, dst), 3);
+        let cands = productive_links(&t, src, dst);
+        assert_eq!(cands.len(), 2, "jump-forward and fill-backward");
+        for l in cands {
+            assert_eq!(t.min_hops(t.link(l).dst, dst), 2, "link {l}");
+        }
+    }
+
+    #[test]
+    fn directed_walk_terminates_across_cages() {
+        let t = Topology::preset(crate::config::SystemPreset::Inc9000);
+        let pairs = [
+            ((0, 0, 2), (0, 0, 3)),   // the pathological off-by-one cage hop
+            ((5, 5, 0), (5, 5, 11)),  // full z sweep
+            ((0, 0, 1), (11, 11, 10)),
+            ((3, 7, 4), (3, 7, 8)),
+        ];
+        for (a, b) in pairs {
+            let src = t.id(crate::topology::Coord { x: a.0, y: a.1, z: a.2 });
+            let dst = t.id(crate::topology::Coord { x: b.0, y: b.1, z: b.2 });
+            let mut here = src;
+            let mut hops = 0u32;
+            while here != dst {
+                let cands = productive_links(&t, here, dst);
+                assert!(!cands.is_empty(), "stuck at {here} towards {dst}");
+                let tie = crate::util::mix64(here.0 as u64 ^ ((hops as u64) << 40));
+                let l = pick_adaptive(&cands, |_| true, |_| 0, tie).unwrap();
+                here = t.link(l).dst;
+                hops += 1;
+                assert!(hops <= t.min_hops(src, dst), "non-minimal walk");
             }
             assert_eq!(hops, t.min_hops(src, dst));
         }
@@ -322,15 +384,27 @@ mod tests {
 
     #[test]
     fn adaptive_prefers_idle_links() {
-        let mut rng = SplitMix64::new(1);
         let cands = vec![LinkId(0), LinkId(1), LinkId(2)];
         // Only link 1 idle.
-        let got = pick_adaptive(&cands, |l| l == LinkId(1), |_| 0, &mut rng);
+        let got = pick_adaptive(&cands, |l| l == LinkId(1), |_| 0, 7);
         assert_eq!(got, Some(LinkId(1)));
         // None idle: earliest-free wins.
-        let got = pick_adaptive(&cands, |_| false, |l| 10 - l.0 as u64, &mut rng);
+        let got = pick_adaptive(&cands, |_| false, |l| 10 - l.0 as u64, 7);
         assert_eq!(got, Some(LinkId(2)));
         // Empty.
-        assert_eq!(pick_adaptive(&[], |_| true, |_| 0, &mut rng), None);
+        assert_eq!(pick_adaptive(&[], |_| true, |_| 0, 7), None);
+    }
+
+    #[test]
+    fn adaptive_choice_is_a_pure_function_of_tie() {
+        // Same candidates + same tie → same pick, regardless of how many
+        // earlier decisions happened (there is no hidden stream state).
+        let cands = vec![LinkId(3), LinkId(5), LinkId(9)];
+        for tie in 0..32u64 {
+            let a = pick_adaptive(&cands, |_| true, |_| 0, tie);
+            let b = pick_adaptive(&cands, |_| true, |_| 0, tie);
+            assert_eq!(a, b);
+            assert_eq!(a, Some(cands[(tie % 3) as usize]));
+        }
     }
 }

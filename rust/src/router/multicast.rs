@@ -25,6 +25,13 @@ use crate::topology::{Dir, LinkId, NodeId, Span, Topology};
 /// then z. Unlike the adaptive chooser this is path-stable, which is
 /// what makes the multicast partition a tree. Failed links are skipped
 /// where a productive alternative exists on the same axis.
+///
+/// The z axis is cage-aware (§2.1): single-span z links never cross a
+/// cage and multi-span jumps preserve the intra-cage offset, so when
+/// the destination lies in another cage the rule aligns the offset
+/// *first* (single-span steps inside the current cage), then jumps
+/// cage by cage — every step reduces [`Topology::z_hops`] by one, so
+/// the walk is monotone and lands exactly.
 pub fn dimension_ordered_next(
     topo: &Topology,
     here: NodeId,
@@ -40,13 +47,42 @@ pub fn dimension_ordered_next(
             continue;
         }
         let d = cur.abs_diff(tgt);
-        let dir = Dir::towards(axis, cur, tgt);
-        let want_span = if d >= 3 { Span::Multi } else { Span::Single };
-        // Preferred span first, then the other as a live fallback.
-        for span in [want_span, other(want_span)] {
-            if span == Span::Multi && d < 3 {
-                continue; // would overshoot
+        // Candidate (dir, span) moves for this axis, preferred first.
+        // Every listed candidate strictly reduces the axis cost, so any
+        // fallback taken on a failed link keeps the walk monotone
+        // (non-monotone fallbacks could oscillate and clone copies
+        // forever — multicast has no hop budget).
+        let mut cands = [(Dir::XPlus, Span::Single); 2];
+        let ncands;
+        if axis == 2 && cur / 3 != tgt / 3 {
+            let (co, to) = (cur % 3, tgt % 3);
+            if co != to {
+                // Align the intra-cage offset first (stays in-cage);
+                // the cage-ward jump also reduces z_hops, so it is a
+                // sound fallback — note its direction is the *cage*
+                // direction, which can oppose the offset direction.
+                cands[0] = (Dir::towards(axis, co, to), Span::Single);
+                cands[1] = (Dir::towards(axis, cur, tgt), Span::Multi);
+                ncands = 2;
+            } else {
+                // Offsets aligned: only the jump reduces z_hops (a
+                // single-span step would un-align the offset).
+                cands[0] = (Dir::towards(axis, cur, tgt), Span::Multi);
+                ncands = 1;
             }
+        } else {
+            let dir = Dir::towards(axis, cur, tgt);
+            let want = if d >= 3 { Span::Multi } else { Span::Single };
+            cands[0] = (dir, want);
+            // The other span as a live fallback, unless it overshoots.
+            if other(want) == Span::Multi && d < 3 {
+                ncands = 1;
+            } else {
+                cands[1] = (dir, other(want));
+                ncands = 2;
+            }
+        }
+        for &(dir, span) in &cands[..ncands] {
             if let Some(l) = topo
                 .out_links(here)
                 .iter()
@@ -124,6 +160,35 @@ mod tests {
         let failed = no_fail(&t);
         let l = dimension_ordered_next(&t, here, dst, &failed).unwrap();
         assert_eq!(t.link(l).span, Span::Multi);
+    }
+
+    #[test]
+    fn dimension_order_crosses_cages_offset_first() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let failed = no_fail(&t);
+        // z = 2 → z = 3: different cages, offsets 2 vs 0. No direct
+        // link exists; the rule aligns the offset first (backwards!).
+        let here = t.id(Coord { x: 0, y: 0, z: 2 });
+        let dst = t.id(Coord { x: 0, y: 0, z: 3 });
+        let l = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        assert_eq!(t.link(l).dir, Dir::ZMinus);
+        assert_eq!(t.link(l).span, Span::Single);
+        // The walk lands exactly, monotonically in z_hops: 2→1→0→3.
+        let mut cur = here;
+        let mut steps = 0;
+        while cur != dst {
+            let before = Topology::z_hops(t.coord(cur).z, t.coord(dst).z);
+            let l = dimension_ordered_next(&t, cur, dst, &failed).unwrap();
+            cur = t.link(l).dst;
+            assert_eq!(
+                Topology::z_hops(t.coord(cur).z, t.coord(dst).z),
+                before - 1,
+                "non-monotone step at {cur}"
+            );
+            steps += 1;
+            assert!(steps <= 10, "walk must terminate");
+        }
+        assert_eq!(steps, 3);
     }
 
     #[test]

@@ -28,14 +28,19 @@
 //!
 //! # Determinism
 //!
-//! Events scheduled for the same instant are dispatched in insertion
-//! order (a monotone sequence number breaks ties); the wheel preserves
-//! the exact `(time, seq)` lexicographic pop order of a binary heap
-//! (argued in [`queue`]'s docs, enforced by
-//! `tests/queue_differential.rs`). The only randomness in the system is
-//! a seeded [`crate::util::SplitMix64`] owned by the network for
-//! adaptive-routing tie-breaks. Two runs with the same seed produce
-//! identical traces.
+//! Events are dispatched in `(time, key, seq)` order: the optional
+//! *content key* ([`Sim::at_keyed`]) orders same-instant events by
+//! event identity, and the monotone sequence number breaks the
+//! remaining ties in insertion order. The wheel preserves the exact
+//! lexicographic pop order of a binary heap (argued in [`queue`]'s
+//! docs, enforced by `tests/queue_differential.rs`). The only
+//! "randomness" in the system is a stateless per-packet hash for
+//! adaptive-routing tie-breaks ([`crate::util::mix64`] over the config
+//! seed and packet identity) — a deliberate design point: nothing in
+//! the simulation depends on *dispatch order*, only on event content,
+//! which is what lets the per-cage sharded engine
+//! ([`crate::network::sharded`]) replay the exact serial trace. Two
+//! runs with the same seed produce identical traces.
 //!
 //! Scheduling **into the past** ([`Sim::at`] with `at < now`) is
 //! defined to clamp to `now` in every build profile — debug and release
@@ -115,6 +120,23 @@ impl<E> Sim<E> {
     #[inline]
     pub fn after(&mut self, delay: Time, ev: E) {
         self.queue.push(self.now + delay, ev);
+    }
+
+    /// Schedule `ev` at absolute time `at` with a content `key`:
+    /// same-instant events dispatch in key order (insertion order only
+    /// breaks key ties). Content keys derived from event identity — not
+    /// from scheduling order — are what lets a partitioned simulation
+    /// reproduce the serial engine's dispatch order exactly (see
+    /// [`crate::network::sharded`]).
+    #[inline]
+    pub fn at_keyed(&mut self, at: Time, key: u64, ev: E) {
+        self.queue.push_keyed(at.max(self.now), key, ev);
+    }
+
+    /// Keyed variant of [`Sim::after`]; see [`Sim::at_keyed`].
+    #[inline]
+    pub fn after_keyed(&mut self, delay: Time, key: u64, ev: E) {
+        self.queue.push_keyed(self.now + delay, key, ev);
     }
 
     /// Pop the next event, advancing the clock to its timestamp.

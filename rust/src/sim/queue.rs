@@ -5,7 +5,7 @@
 //! `benches/sim_engine.rs`). The previous implementation was a
 //! `BinaryHeap` keyed on `(time, seq)` — O(log n) sift per operation,
 //! each sift moving whole events by value. The wheel gives O(1) pushes
-//! and amortized O(1) pops while preserving the exact `(time, seq)`
+//! and amortized O(1) pops while preserving an exact `(time, key, seq)`
 //! dispatch order (see the determinism argument below and the
 //! differential test in `tests/queue_differential.rs`).
 //!
@@ -30,16 +30,25 @@
 //!
 //! # Determinism
 //!
-//! Events scheduled for the same instant must dispatch in insertion
-//! order. Each entry carries a monotone `seq`; a level-0 slot holds
-//! exactly one instant, and its entries are stable-sorted by `seq` when
-//! the slot is drained into the current *run*. Same-instant events
-//! pushed while the run is live (handlers scheduling at `now`) append
-//! to the run — their `seq` is larger than anything drained, so order
-//! is preserved without re-sorting. Cascades only move entries to
-//! strictly finer slots and never reorder across instants, so the pop
-//! sequence is exactly the `(time, seq)` lexicographic order — bit for
-//! bit the order the old heap produced.
+//! Entries are popped in `(time, key, seq)` lexicographic order. `key`
+//! is a caller-supplied *content key* (0 for plain pushes): same-instant
+//! events dispatch in key order, and only events with equal keys fall
+//! back to insertion (`seq`) order. Content keys are what makes the
+//! sharded fabric byte-identical to the serial engine — each shard
+//! assigns seqs locally, so insertion order is not comparable across
+//! engines, but the `(time, key)` pair is derived from event *content*
+//! (link id, packet id, …) and therefore is (see
+//! [`crate::network::Network`]'s key scheme).
+//!
+//! A level-0 slot holds exactly one instant; its entries are sorted by
+//! `(key, seq)` when the slot is drained into the current *run*.
+//! Same-instant events pushed while the run is live (handlers
+//! scheduling at `now`) are ordered-inserted into the not-yet-popped
+//! remainder of the run. Cascades only move entries to strictly finer
+//! slots and never reorder across instants, so the pop sequence is
+//! exactly the `(time, key, seq)` lexicographic order over the pending
+//! set — the order the reference heap produces
+//! (`tests/queue_differential.rs`).
 //!
 //! The caller contract (upheld by [`super::Sim`], which clamps) is that
 //! pushes are never in the past: `time >= ` the last popped time.
@@ -59,18 +68,20 @@ const LEVELS: usize = 3;
 /// u64 words per level bitmap.
 const BITMAP_WORDS: usize = SLOTS / 64;
 
-/// A scheduled entry: ordering key + payload. Also the overflow-heap
+/// A scheduled entry: ordering fields + payload. Also the overflow-heap
 /// element (kept public for the reference-queue API and tests).
 #[derive(Debug)]
 pub struct Scheduled<E> {
     pub time: Time,
+    /// Content key: same-instant tie-break *before* insertion order.
+    pub key: u64,
     pub seq: u64,
     pub event: E,
 }
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.key == other.key && self.seq == other.seq
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -81,7 +92,7 @@ impl<E> PartialOrd for Scheduled<E> {
 }
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
+        (self.time, self.key, self.seq).cmp(&(other.time, other.key, other.seq))
     }
 }
 
@@ -127,14 +138,15 @@ impl<E> Level<E> {
     }
 }
 
-/// Hierarchical timing wheel ordered by `(time, seq)`.
+/// Hierarchical timing wheel ordered by `(time, key, seq)`.
 #[derive(Debug)]
 pub struct EventQueue<E> {
     /// Time of the last popped event (the run's instant). All stored
     /// entries satisfy `time > cur_time`, except run appendees at
     /// exactly `cur_time`.
     cur_time: Time,
-    /// Events at the current instant, in `seq` order, popped from front.
+    /// Events at the current instant, in `(key, seq)` order, popped
+    /// from the front.
     run: VecDeque<Scheduled<E>>,
     levels: [Level<E>; LEVELS],
     overflow: BinaryHeap<Reverse<Scheduled<E>>>,
@@ -171,20 +183,35 @@ impl<E> EventQueue<E> {
         q
     }
 
-    /// Schedule `event` at `time`. `time` must be ≥ the last popped
-    /// time (the `Sim` wrapper clamps; direct users must respect it).
+    /// Schedule `event` at `time` with content key 0. `time` must be ≥
+    /// the last popped time (the `Sim` wrapper clamps; direct users
+    /// must respect it).
     #[inline]
     pub fn push(&mut self, time: Time, event: E) {
+        self.push_keyed(time, 0, event);
+    }
+
+    /// Schedule `event` at `time` with an explicit content `key`:
+    /// same-instant events dispatch in `(key, seq)` order.
+    #[inline]
+    pub fn push_keyed(&mut self, time: Time, key: u64, event: E) {
         debug_assert!(time >= self.cur_time, "push into the past");
         let time = time.max(self.cur_time);
         let seq = self.next_seq;
         self.next_seq += 1;
         self.len += 1;
-        let en = Scheduled { time, seq, event };
+        let en = Scheduled { time, key, seq, event };
         if time == self.cur_time {
-            // Same instant as the live run: `seq` is larger than
-            // everything already there, so appending keeps order.
-            self.run.push_back(en);
+            // Same instant as the live run: ordered insert into the
+            // not-yet-popped remainder. `seq` is larger than everything
+            // already there, so equal keys append — the common key-0
+            // case stays a straight push_back.
+            let pos = self.run.partition_point(|e| (e.key, e.seq) <= (en.key, en.seq));
+            if pos == self.run.len() {
+                self.run.push_back(en);
+            } else {
+                self.run.insert(pos, en);
+            }
         } else {
             self.place(en);
         }
@@ -229,7 +256,7 @@ impl<E> EventQueue<E> {
             // Level 0: one slot == one instant; drain it as the run.
             if let Some(slot) = self.levels[0].first_occupied() {
                 let mut bucket = self.take_bucket(0, slot);
-                bucket.sort_unstable_by_key(|e| e.seq);
+                bucket.sort_unstable_by_key(|e| (e.key, e.seq));
                 self.cur_time = bucket[0].time;
                 debug_assert!(bucket.iter().all(|e| e.time == self.cur_time));
                 self.run.extend(bucket.drain(..));
@@ -274,7 +301,7 @@ impl<E> EventQueue<E> {
         }
     }
 
-    /// Pop the earliest `(time, seq)` entry.
+    /// Pop the earliest `(time, key, seq)` entry.
     #[inline]
     pub fn pop(&mut self) -> Option<(Time, E)> {
         if self.run.is_empty() && !self.next_run() {
@@ -315,7 +342,7 @@ impl<E> EventQueue<E> {
     }
 }
 
-/// The pre-wheel implementation: a binary min-heap on `(time, seq)`.
+/// The pre-wheel implementation: a binary min-heap on `(time, key, seq)`.
 /// Kept as the ordering oracle for the differential test
 /// (`tests/queue_differential.rs`) and as the baseline the perf bench
 /// (`benches/sim_engine.rs`) reports its speedup against.
@@ -338,9 +365,14 @@ impl<E> ReferenceQueue<E> {
 
     #[inline]
     pub fn push(&mut self, time: Time, event: E) {
+        self.push_keyed(time, 0, event);
+    }
+
+    #[inline]
+    pub fn push_keyed(&mut self, time: Time, key: u64, event: E) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse(Scheduled { time, seq, event }));
+        self.heap.push(Reverse(Scheduled { time, key, seq, event }));
     }
 
     #[inline]
@@ -454,6 +486,44 @@ mod tests {
         }
         for i in 0..50u64 {
             assert_eq!(q.pop(), Some((t, i)));
+        }
+    }
+
+    #[test]
+    fn keys_order_same_instant_before_seq() {
+        let mut q = EventQueue::new();
+        q.push_keyed(10, 3, 'c');
+        q.push_keyed(10, 1, 'a');
+        q.push_keyed(10, 2, 'b');
+        q.push_keyed(5, 9, 'x'); // earlier time wins regardless of key
+        let out: Vec<char> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(out, vec!['x', 'a', 'b', 'c']);
+    }
+
+    #[test]
+    fn keyed_push_at_live_instant_inserts_in_key_order() {
+        let mut q = EventQueue::new();
+        q.push_keyed(10, 2, "b");
+        q.push_keyed(10, 4, "d");
+        assert_eq!(q.pop(), Some((10, "b")));
+        // Scheduled at the live instant with a key between the popped
+        // entry and the pending one: dispatches before the pending one.
+        q.push_keyed(10, 3, "c");
+        // ... and a key below anything remaining goes first.
+        q.push_keyed(10, 1, "early");
+        assert_eq!(q.pop(), Some((10, "early")));
+        assert_eq!(q.pop(), Some((10, "c")));
+        assert_eq!(q.pop(), Some((10, "d")));
+    }
+
+    #[test]
+    fn equal_keys_fall_back_to_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10u64 {
+            q.push_keyed(7, 42, i);
+        }
+        for i in 0..10u64 {
+            assert_eq!(q.pop(), Some((7, i)));
         }
     }
 

@@ -166,6 +166,50 @@ impl Topology {
         (c.x / 3, c.y / 3, c.z / 3)
     }
 
+    /// The cage (3-node-tall z slab) a node belongs to. INC 9000 stacks
+    /// four of these (Fig 2a); smaller systems have exactly one.
+    #[inline]
+    pub fn cage_of(&self, n: NodeId) -> u32 {
+        self.coord(n).z / 3
+    }
+
+    /// Number of cages (z extent / 3).
+    #[inline]
+    pub fn cage_count(&self) -> u32 {
+        self.dims.2 / 3
+    }
+
+    /// Dense index of a node's card in [`Topology::cards`] order.
+    pub fn card_index(&self, n: NodeId) -> u32 {
+        let (cx, cy, cz) = self.card_of(n);
+        (cz * (self.dims.1 / 3) + cy) * (self.dims.0 / 3) + cx
+    }
+
+    /// Partition the mesh into `shards` contiguous groups of *natural
+    /// units* for parallel simulation: cages when the system has more
+    /// than one (INC 9000 — inter-cage traffic is confined to multi-span
+    /// z links, the cheapest boundary), otherwise cards. Returns the
+    /// owner shard per node plus the actual shard count (`shards` is
+    /// clamped to `[1, unit count]`).
+    pub fn partition(&self, shards: u32) -> (Vec<u32>, u32) {
+        let by_cage = self.cage_count() > 1;
+        let nunits =
+            if by_cage { self.cage_count() } else { self.cards().len() as u32 };
+        let s = shards.clamp(1, nunits);
+        let owner = (0..self.node_count() as u32)
+            .map(|n| {
+                let unit = if by_cage {
+                    self.cage_of(NodeId(n))
+                } else {
+                    self.card_index(NodeId(n))
+                };
+                // Contiguous unit ranges per shard (balanced to ±1 unit).
+                (unit as u64 * s as u64 / nunits as u64) as u32
+            })
+            .collect();
+        (owner, s)
+    }
+
     /// All nodes of one card, in node-number order (Fig 1 numbering).
     pub fn card_nodes(&self, card: (u32, u32, u32)) -> Vec<NodeId> {
         let mut v = Vec::with_capacity(27);
@@ -212,18 +256,35 @@ impl Topology {
     }
 
     /// Minimal hop count between two nodes using single- and multi-span
-    /// links: per axis, distance `d` costs `d/3 + d%3` hops (multi-span
-    /// covers 3, single-span covers 1; z multi-span crosses cages and z
-    /// single-span does not, which the formula respects because any z
-    /// distance ≥ 3 is covered by multi-span first).
+    /// links. Along x and y, distance `d` costs `d/3 + d%3` hops
+    /// (multi-span covers 3, single-span covers 1, both exist at every
+    /// offset). Along z the cage structure matters — see
+    /// [`Topology::z_hops`].
     pub fn min_hops(&self, a: NodeId, b: NodeId) -> u32 {
         let (ca, cb) = (self.coord(a), self.coord(b));
         let mut hops = 0;
-        for axis in 0..3 {
+        for axis in 0..2 {
             let d = ca.get(axis).abs_diff(cb.get(axis));
             hops += d / 3 + d % 3;
         }
-        hops
+        hops + Self::z_hops(ca.z, cb.z)
+    }
+
+    /// Minimal hops between two z coordinates. Single-span z links never
+    /// cross a cage (§2.1: the inter-cage backplane connectors carry
+    /// multi-span links only) and multi-span links jump exactly one cage
+    /// while preserving the intra-cage offset, so crossing cages costs
+    /// one multi-span hop per cage boundary plus single-span hops for
+    /// the offset difference. Within one cage it is plain distance.
+    /// (Note `d/3 + d%3` would *under*-count here: z = 2 → 3 is
+    /// distance 1 but needs 3 hops — jump 2→5, then fill 5→4→3.)
+    pub fn z_hops(az: u32, bz: u32) -> u32 {
+        let (ac, bc) = (az / 3, bz / 3);
+        if ac == bc {
+            az.abs_diff(bz)
+        } else {
+            ac.abs_diff(bc) + (az % 3).abs_diff(bz % 3)
+        }
     }
 
     /// Number of unidirectional links a card presents to the rest of the
@@ -376,6 +437,22 @@ mod tests {
     }
 
     #[test]
+    fn z_hops_respects_cage_boundaries() {
+        // Same cage: plain single-span distance.
+        assert_eq!(Topology::z_hops(0, 2), 2);
+        assert_eq!(Topology::z_hops(4, 4), 0);
+        // Aligned offsets: one multi-span jump per cage boundary.
+        assert_eq!(Topology::z_hops(2, 5), 1);
+        assert_eq!(Topology::z_hops(0, 9), 3);
+        // Misaligned: jump + intra-cage fill. z = 2 → 3 is coordinate
+        // distance 1 but needs 3 hops (2→5 multi, then 5→4→3).
+        assert_eq!(Topology::z_hops(2, 3), 3);
+        assert_eq!(Topology::z_hops(3, 2), 3);
+        assert_eq!(Topology::z_hops(2, 6), 4);
+        assert_eq!(Topology::z_hops(1, 11), 4);
+    }
+
+    #[test]
     fn min_hops_examples() {
         let t = Topology::preset(SystemPreset::Inc3000);
         let a = t.id(Coord { x: 0, y: 0, z: 0 });
@@ -389,6 +466,62 @@ mod tests {
         assert_eq!(t.min_hops(a, t.id(Coord { x: 4, y: 2, z: 1 })), 2 + 2 + 1);
         // Same node.
         assert_eq!(t.min_hops(a, a), 0);
+    }
+
+    #[test]
+    fn partition_by_cage_on_inc9000() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        assert_eq!(t.cage_count(), 4);
+        let (owner, s) = t.partition(4);
+        assert_eq!(s, 4);
+        for n in t.nodes() {
+            assert_eq!(owner[n.0 as usize], t.cage_of(n), "cage == shard at 4 shards");
+        }
+        // Every inter-shard link is a multi-span z link (the inter-cage
+        // backplane connectors), never a single-span one.
+        for l in t.links() {
+            let (a, b) = (owner[l.src.0 as usize], owner[l.dst.0 as usize]);
+            if a != b {
+                assert_eq!(l.span, Span::Multi);
+                assert_eq!(l.dir.axis(), 2);
+            }
+        }
+        // Two shards: cages pair up contiguously.
+        let (owner2, s2) = t.partition(2);
+        assert_eq!(s2, 2);
+        for n in t.nodes() {
+            assert_eq!(owner2[n.0 as usize], t.cage_of(n) / 2);
+        }
+    }
+
+    #[test]
+    fn partition_by_card_on_small_systems() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let (owner, s) = t.partition(16);
+        assert_eq!(s, 16, "one shard per card");
+        for n in t.nodes() {
+            assert_eq!(owner[n.0 as usize], t.card_index(n));
+        }
+        // Requests beyond the unit count clamp.
+        let (_, s) = t.partition(99);
+        assert_eq!(s, 16);
+        let card = Topology::preset(SystemPreset::Card);
+        let (owner, s) = card.partition(4);
+        assert_eq!(s, 1, "a single card cannot shard further");
+        assert!(owner.iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        let t = Topology::preset(SystemPreset::Inc3000);
+        let (owner, s) = t.partition(4);
+        assert_eq!(s, 4);
+        let mut per_shard = vec![0u32; s as usize];
+        for n in t.nodes() {
+            per_shard[owner[n.0 as usize] as usize] += 1;
+        }
+        // 16 cards over 4 shards: 4 cards = 108 nodes each.
+        assert!(per_shard.iter().all(|&c| c == 108), "{per_shard:?}");
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod json;
 pub mod rng;
 
 pub use fxhash::{FxHashMap, FxHashSet};
-pub use rng::SplitMix64;
+pub use rng::{mix64, SplitMix64};

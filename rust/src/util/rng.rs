@@ -4,6 +4,21 @@
 //! (§2.4: "each node may make a routing decision based on which links
 //! happen to be idle"); runs are reproducible given the config seed.
 
+/// Stateless SplitMix64 finalizer: a well-mixed 64-bit hash of `x`.
+///
+/// Used for adaptive-routing tie-breaks keyed on `(seed, packet, node,
+/// hop)` instead of a stateful RNG stream: the decision depends only on
+/// what is being routed, never on how many decisions happened before it,
+/// so serial and sharded execution make identical choices
+/// ([`crate::network::sharded`]).
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64: tiny, fast, passes BigCrush for this use.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -42,6 +57,15 @@ impl SplitMix64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix64_matches_splitmix_stream() {
+        // mix64 is the SplitMix64 finalizer applied to a raw state, so
+        // seeding a generator with `x` and drawing once must agree.
+        for x in [0u64, 1, 42, u64::MAX, 0xDEADBEEF] {
+            assert_eq!(mix64(x), SplitMix64::new(x).next_u64());
+        }
+    }
 
     #[test]
     fn deterministic() {

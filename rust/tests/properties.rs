@@ -16,7 +16,7 @@ const CASES: u64 = 40;
 #[test]
 fn prop_directed_minimal_hops_idle() {
     struct Check {
-        topo: Topology,
+        topo: std::sync::Arc<Topology>,
         got: Vec<(NodeId, NodeId, u32)>,
     }
     impl App for Check {

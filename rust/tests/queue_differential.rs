@@ -1,8 +1,9 @@
 //! Differential test: the timing-wheel [`EventQueue`] must produce the
-//! exact `(time, seq)` pop order of the reference `BinaryHeap` queue on
-//! randomized interleaved push/pop schedules — including same-instant
-//! bursts, zero-delay (schedule-at-now) events, and far-future timers
-//! that land in every wheel level and the overflow heap.
+//! exact `(time, key, seq)` pop order of the reference `BinaryHeap`
+//! queue on randomized interleaved push/pop schedules — including
+//! same-instant bursts (keyed and unkeyed), zero-delay
+//! (schedule-at-now) events, and far-future timers that land in every
+//! wheel level and the overflow heap.
 //!
 //! Each scenario drives both queues with an identical operation
 //! sequence generated from a seeded RNG (failures print the seed).
@@ -33,20 +34,31 @@ fn run_case(seed: u64, ops: usize, horizon_weights: &[(u64, u32)]) {
 
     for _ in 0..ops {
         match rng.gen_range(100) {
-            // 60%: push a single event.
-            0..=59 => {
+            // 45%: push a single event (content key 0).
+            0..=44 => {
                 let t = now + delay(&mut rng);
                 wheel.push(t, next_ev);
                 heap.push(t, next_ev);
                 next_ev += 1;
             }
-            // 10%: same-instant burst (time collisions stress seq order).
+            // 15%: push a single keyed event (small key space forces
+            // same-(time, key) collisions too).
+            45..=59 => {
+                let t = now + delay(&mut rng);
+                let key = rng.gen_range(4) as u64;
+                wheel.push_keyed(t, key, next_ev);
+                heap.push_keyed(t, key, next_ev);
+                next_ev += 1;
+            }
+            // 10%: same-instant burst with mixed keys (time collisions
+            // stress the (key, seq) order within a slot).
             60..=69 => {
                 let t = now + delay(&mut rng);
                 let burst = 2 + rng.gen_range(6);
                 for _ in 0..burst {
-                    wheel.push(t, next_ev);
-                    heap.push(t, next_ev);
+                    let key = rng.gen_range(3) as u64;
+                    wheel.push_keyed(t, key, next_ev);
+                    heap.push_keyed(t, key, next_ev);
                     next_ev += 1;
                 }
             }
