@@ -25,6 +25,7 @@ fn main() {
                         record_bytes: bytes,
                         compute_ns: compute_us * 1000,
                         steps: 3,
+                        stride: 1,
                     };
                     let (s, a) = overlap_advantage(Network::card, cfg);
                     println!(

@@ -12,12 +12,14 @@
 mod common;
 
 use inc_sim::config::SystemConfig;
+use inc_sim::coordinator::{Placement, RingAllreduce};
 use inc_sim::network::sharded::ShardedNetwork;
-use inc_sim::network::{Network, NullApp};
+use inc_sim::network::{Fabric, Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::sim::{EventQueue, ReferenceQueue};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 
 /// Numeric knob from the environment (CI's bench-smoke step shrinks the
 /// run with BENCH_EVENTS / BENCH_PACKETS; defaults are the full run).
@@ -207,7 +209,8 @@ fn main() {
         }
         sharded.run_to_quiescence();
     });
-    let matches = serial.metrics == sharded.metrics() && serial.now() == sharded.now();
+    let matches = serial.metrics.fabric_view() == sharded.metrics().fabric_view()
+        && serial.now() == sharded.now();
     let serial_pps = sh_packets as f64 / serial_secs;
     let sharded_pps = sh_packets as f64 / sharded_secs;
     let speedup = serial_secs / sharded_secs;
@@ -224,12 +227,64 @@ fn main() {
          \"serial_packets_per_sec\": {serial_pps:.0}, \
          \"sharded_packets_per_sec\": {sharded_pps:.0}, \
          \"shards\": {}, \"workers\": {}, \"speedup\": {speedup:.3}, \
-         \"matches_serial\": {matches}}}\n}}\n",
+         \"matches_serial\": {matches}}},\n",
         sharded.shard_count(),
         sharded.worker_count(),
+    ));
+
+    // App workloads through the engine-agnostic Fabric trait on INC
+    // 9000: distributed learners (Postmaster streams, grid strided
+    // across cages) and the ring all-reduce (ranks scattered across
+    // cages), serial vs sharded. The bench asserts the *app-level
+    // results* match, so the parallel engine can never quietly change a
+    // workload's answer.
+    let steps = (bench_packets / 2_000).clamp(1, 8);
+    let lcfg = LearnerConfig {
+        learners: 64,
+        outputs_per_step: 8,
+        record_bytes: 64,
+        compute_ns: 40_000,
+        steps,
+        stride: 27, // spread the grid across all four cages
+    };
+    let (l_serial, l_serial_secs) = common::timed(|| {
+        let mut net = Network::new(SystemConfig::inc9000());
+        learners::run(&mut net, lcfg, SendStrategy::Streamed)
+    });
+    let (l_sharded, l_sharded_secs) = common::timed(|| {
+        let mut net = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+        learners::run(&mut net, lcfg, SendStrategy::Streamed)
+    });
+    let learners_match = l_serial == l_sharded;
+    let learners_speedup = l_serial_secs / l_sharded_secs;
+
+    let ar_bytes = 512 * 1024;
+    let (ar_serial, ar_serial_secs) = common::timed(|| {
+        let mut net = Network::new(SystemConfig::inc9000());
+        let ranks = Placement::Scattered.select(&net.topo, 8);
+        RingAllreduce::new(&net, ranks, ar_bytes).run(&mut net)
+    });
+    let (ar_sharded, ar_sharded_secs) = common::timed(|| {
+        let mut net = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+        let ranks = Placement::Scattered.select(net.topo(), 8);
+        RingAllreduce::new(&net, ranks, ar_bytes).run(&mut net)
+    });
+    let allreduce_match = ar_serial == ar_sharded;
+    let allreduce_speedup = ar_serial_secs / ar_sharded_secs;
+    let app_matches = learners_match && allreduce_match;
+    let app_speedup = (l_serial_secs + ar_serial_secs) / (l_sharded_secs + ar_sharded_secs);
+    println!(
+        "inc9000 apps    learners {learners_speedup:.2}x, all-reduce {allreduce_speedup:.2}x \
+         (combined {app_speedup:.2}x, app results match: {app_matches})"
+    );
+    json.push_str(&format!(
+        "  \"inc9000_app_sharded\": {{\"learners_speedup\": {learners_speedup:.3}, \
+         \"allreduce_speedup\": {allreduce_speedup:.3}, \"speedup\": {app_speedup:.3}, \
+         \"matches_serial\": {app_matches}}}\n}}\n"
     ));
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json");
     assert!(matches, "sharded run diverged from the serial oracle");
+    assert!(app_matches, "sharded app workload diverged from the serial oracle");
 }

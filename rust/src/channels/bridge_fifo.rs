@@ -217,7 +217,7 @@ impl Network {
             }
         };
         if !released.is_empty() {
-            app.on_fifo(self, node, channel, &released);
+            self.app_scope(app, |net, app| app.on_fifo(net, node, channel, &released));
         }
     }
 
@@ -239,7 +239,7 @@ impl Network {
             rx.inbox.extend(words.iter().copied());
         }
         self.metrics.record_delivery("bridge_fifo", self.cfg.bridge_fifo_logic, 0);
-        app.on_fifo(self, node, channel, words);
+        self.app_scope(app, |net, app| app.on_fifo(net, node, channel, words));
     }
 
     /// Read up to `max` words from a channel's read port.

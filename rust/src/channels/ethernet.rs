@@ -177,7 +177,10 @@ impl Network {
     }
 
     /// Frame DMA into the fabric finished: inject as a network packet
-    /// (the packet id was assigned when the frame was created).
+    /// (the packet id was assigned when the frame was created). The
+    /// frame itself travels *inside* the packet, so it follows the
+    /// packet across shard boundaries (the receive side may live on a
+    /// different shard than this transmit side).
     pub(crate) fn eth_tx_inject(&mut self, frame: EthFrame) {
         let id = frame.id;
         let wire = frame.bytes + ETH_OVERHEAD;
@@ -191,19 +194,18 @@ impl Network {
             frame.t_created,
         );
         pkt.seq = frame.tag;
-        // Stash the frame so the receive side can reconstruct it.
-        self.eth_inflight.insert(id, frame);
+        pkt.eth_frame = Some(Box::new(frame));
         self.inject(pkt);
     }
 
     /// Packet Demux: an Ethernet packet reached its destination NIC. The
     /// device DMAs it into a DRAM buffer described by a buffer
     /// descriptor, then notifies the driver (interrupt or polling).
-    pub(crate) fn eth_deliver(&mut self, node: NodeId, packet: Packet) {
-        let frame = self
-            .eth_inflight
-            .remove(&packet.id)
-            .expect("ethernet packet without in-flight frame");
+    pub(crate) fn eth_deliver(&mut self, node: NodeId, mut packet: Packet) {
+        let frame = *packet
+            .eth_frame
+            .take()
+            .expect("ethernet packet without embedded frame");
         let arm = self.cfg.arm;
         let wire = frame.bytes + ETH_OVERHEAD;
         let dma = (wire as f64 / arm.axi_bytes_per_ns).ceil() as Time;
@@ -250,7 +252,7 @@ impl Network {
         if node == self.gateway() && frame.tag & (1 << 63) != 0 {
             self.nfs_progress(&frame);
         }
-        app.on_eth(self, node, &frame);
+        self.app_scope(app, |net, app| app.on_eth(net, node, &frame));
     }
 
     /// Polling tick: drain everything that has been DMA'd so far. One
@@ -303,6 +305,17 @@ impl Network {
         self.eth.external.nat.insert(external_port, (node, internal_port));
     }
 
+    /// Register an in-flight NFS transfer with the gateway-side state
+    /// (the shard that owns the gateway, in a sharded run — the
+    /// arriving frames progress the transfer there).
+    pub(crate) fn nfs_register_put(&mut self, node: NodeId, name: &str, size: u64) {
+        let tag = nfs_tag(name);
+        self.eth
+            .external
+            .puts
+            .insert((node.0, tag), (name.to_string(), size, size));
+    }
+
     /// Save `size` bytes from `node` to the external NFS host as `name`.
     /// The data travels over the internal Ethernet to the gateway, then
     /// over the physical 1 GbE port. Completion is visible when
@@ -310,10 +323,7 @@ impl Network {
     pub fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
         let gw = self.gateway();
         let tag = nfs_tag(name);
-        self.eth
-            .external
-            .puts
-            .insert((node.0, tag), (name.to_string(), size, size));
+        self.nfs_register_put(node, name, size);
         if node == gw {
             // Local: straight out of the physical port, no fabric hops.
             let mut left = size;

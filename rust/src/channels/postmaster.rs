@@ -81,6 +81,38 @@ impl Network {
     /// `data` must fit one network packet (larger transfers use several
     /// records — the contiguity guarantee is per record/packet).
     pub fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        let id = self.next_packet_id();
+        let now = self.now();
+        self.pm_send_record(id, now, src, target, queue, data);
+    }
+
+    /// Deferred [`Network::pm_send`] with an app-context packet id: the
+    /// record is produced (written to the transmit queue) at absolute
+    /// time `at ≥ now` and enters the fabric after the usual enqueue +
+    /// injection overheads. This is the send every engine-agnostic
+    /// workload uses — from driver context *and* from [`App`] callbacks
+    /// at `src` — because the per-node id keeps serial and sharded id
+    /// assignment identical (see [`Network::app_packet_id`]).
+    pub fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        debug_assert!(at >= self.now(), "postmaster record produced in the past");
+        let id = self.app_packet_id(src);
+        self.pm_send_record(id, at, src, target, queue, data);
+    }
+
+    /// The one Postmaster transmit recipe behind [`Network::pm_send`]
+    /// and [`Network::pm_send_at`]: validate, build the packet stamped
+    /// at its production instant `at`, charge the memory-mapped queue
+    /// write + injection overhead (tiny, no kernel involvement —
+    /// contrast with the Ethernet path), account the injection.
+    fn pm_send_record(
+        &mut self,
+        id: u64,
+        at: Time,
+        src: NodeId,
+        target: NodeId,
+        queue: u8,
+        data: Vec<u8>,
+    ) {
         let max = (self.cfg.link.mtu - crate::router::HEADER_BYTES) as usize;
         assert!(
             data.len() <= max,
@@ -92,7 +124,6 @@ impl Network {
             self.postmaster.queues.contains_key(&(target.0, queue)),
             "postmaster queue {queue} not open at {target}"
         );
-        let id = self.next_packet_id();
         let pkt = Packet::new(
             id,
             src,
@@ -100,14 +131,11 @@ impl Network {
             RouteKind::Directed,
             Proto::Postmaster { queue },
             Payload::bytes(data),
-            self.now(),
+            at, // injected_at: the production instant, for latency metrics
         );
-        // The queue write itself is a memory-mapped store: tiny, no
-        // kernel involvement (contrast with the Ethernet path).
         let delay = self.cfg.arm.postmaster_enqueue + self.cfg.link.inject_latency;
         self.metrics.packets_injected += 1;
-        let packet = self.packets.alloc(pkt);
-        self.sim.after_keyed(delay, crate::network::key_inject(id), Event::Inject { packet });
+        self.inject_at(at + delay, pkt);
     }
 
     /// Packet Demux handed us a Postmaster packet at its target: the DMA
@@ -150,7 +178,7 @@ impl Network {
             q.bytes += record.data.len() as u64;
             q.stream.push(record.clone());
         }
-        app.on_postmaster(self, node, queue, &record);
+        self.app_scope(app, |net, app| app.on_postmaster(net, node, queue, &record));
     }
 
     /// Drain unread records from a queue's stream (polling consumer).

@@ -7,8 +7,15 @@
 //! sees the *real* packet pattern (congestion, credit stalls, adaptive
 //! routing) while the numeric reduction itself happens in the
 //! coordinator on real data.
+//!
+//! The collective is engine-agnostic: it is written against
+//! [`Fabric`] and is a [`ShardableApp`] — per-rank receive state lives
+//! with the rank's node (so each sharded partition only ever touches
+//! its own ranks), and the aggregate stats are sum-reduced. A sharded
+//! run is byte-identical to a serial one (traffic ids come from the
+//! per-node app id space, see `tests/sharded_differential.rs`).
 
-use crate::network::{App, Network};
+use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::router::{Packet, Payload, Proto, RouteKind};
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -42,12 +49,13 @@ pub struct RingAllreduce {
 }
 
 impl RingAllreduce {
-    /// Prepare an all-reduce of `bytes` per rank across `ranks`.
-    pub fn new(net: &Network, ranks: Vec<NodeId>, bytes: u64) -> Self {
+    /// Prepare an all-reduce of `bytes` per rank across `ranks` (on
+    /// either engine).
+    pub fn new<F: Fabric>(net: &F, ranks: Vec<NodeId>, bytes: u64) -> Self {
         assert!(ranks.len() >= 2, "all-reduce needs ≥2 ranks");
         let k = ranks.len() as u64;
         let chunk_bytes = (bytes / k).max(1) as u32;
-        let mut index = vec![None; net.topo.node_count()];
+        let mut index = vec![None; net.topo().node_count()];
         for (i, r) in ranks.iter().enumerate() {
             index[r.0 as usize] = Some(i);
         }
@@ -65,44 +73,45 @@ impl RingAllreduce {
     /// Kick off the first step and run the fabric to completion.
     /// Returns the stats; the makespan is the virtual-time cost of the
     /// all-reduce.
-    pub fn run(mut self, net: &mut Network) -> CollectiveStats {
+    pub fn run<F: Fabric>(mut self, net: &mut F) -> CollectiveStats {
         let t0 = net.now();
         self.received = vec![0; self.ranks.len()];
         let ranks = self.ranks.clone();
         for (i, &r) in ranks.iter().enumerate() {
             self.send_step(net, i, r);
         }
-        net.run_to_quiescence(&mut self);
+        net.run(&mut self);
         assert_eq!(self.done_ranks, self.ranks.len(), "all-reduce did not complete");
         self.stats.makespan = net.now() - t0;
         self.stats
     }
 
-    fn send_step(&mut self, net: &mut Network, rank: usize, node: NodeId) {
+    /// Send rank `node`'s current chunk to its ring successor. Called
+    /// from driver context (kickoff) and from `on_raw` callbacks at
+    /// `node` — both use the per-node app id space, so serial and
+    /// sharded runs assign identical packet ids.
+    fn send_step<F: Fabric>(&mut self, net: &mut F, rank: usize, node: NodeId) {
         let next = self.ranks[(rank + 1) % self.ranks.len()];
         // Fragment the chunk at the network MTU.
-        let mtu = net.cfg.link.mtu - crate::router::HEADER_BYTES;
+        let mtu = net.config().link.mtu - crate::router::HEADER_BYTES;
         let mut left = self.chunk_bytes;
         while left > 0 {
             let take = left.min(mtu);
             // The *last* fragment of the chunk carries the step marker;
             // receipt of it advances the receiver.
             let marker = if take == left { 1u64 } else { 0 };
-            let id = net.next_packet_id();
-            let pkt = Packet::new(
+            let id = net.app_packet_id(node);
+            // Model `take` bytes on the wire (Synthetic: the chunk's
+            // size occupies wire/buffer space, no content carried).
+            let mut pkt = Packet::new(
                 id,
                 node,
                 next,
                 RouteKind::Directed,
                 Proto::Raw { tag: COLLECTIVE_TAG },
-                Payload::U64s([marker, rank as u64, take as u64, 0]),
+                Payload::Synthetic(take),
                 net.now(),
             );
-            // Model `take` bytes on the wire: U64s is 32B structured; we
-            // want the chunk's size — use Synthetic instead for bulk.
-            let mut pkt = pkt;
-            pkt.payload = Payload::Synthetic(take);
-            pkt.wire_bytes = crate::router::HEADER_BYTES + take;
             pkt.seq = marker;
             net.inject(pkt);
             self.stats.bytes_on_wire += (crate::router::HEADER_BYTES + take) as u64;
@@ -128,6 +137,33 @@ impl App for RingAllreduce {
         } else if r == self.total_steps {
             self.done_ranks += 1;
         }
+    }
+}
+
+impl ShardableApp for RingAllreduce {
+    /// Partitions carry *deltas*: per-rank receive counters restart at
+    /// zero (a rank's counter is only ever advanced by callbacks at
+    /// that rank's node, i.e. on exactly one shard) and the stats
+    /// accumulated so far — the kickoff sends — stay with the parent.
+    fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
+        RingAllreduce {
+            ranks: self.ranks.clone(),
+            index: self.index.clone(),
+            received: vec![0; self.ranks.len()],
+            total_steps: self.total_steps,
+            chunk_bytes: self.chunk_bytes,
+            done_ranks: 0,
+            stats: CollectiveStats { makespan: 0, bytes_on_wire: 0, messages: 0 },
+        }
+    }
+
+    fn reduce(&mut self, part: Self) {
+        for (a, b) in self.received.iter_mut().zip(&part.received) {
+            *a += *b;
+        }
+        self.done_ranks += part.done_ranks;
+        self.stats.bytes_on_wire += part.stats.bytes_on_wire;
+        self.stats.messages += part.stats.messages;
     }
 }
 

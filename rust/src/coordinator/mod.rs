@@ -10,7 +10,8 @@
 //! * [`collectives`] — ring all-reduce, tree reduce and broadcast built
 //!   from `Proto::Raw` packets, with the traffic simulated on the fabric
 //!   (the real numerics live in XLA artifacts; the fabric carries
-//!   modeled bytes).
+//!   modeled bytes). Engine-agnostic: collectives run on the serial or
+//!   the sharded engine through [`crate::network::Fabric`].
 
 pub mod collectives;
 pub mod placement;

@@ -23,7 +23,9 @@
 //! * [`router`] — adaptive directed routing + exactly-once broadcast.
 //! * [`network`] — the assembled fabric: nodes × routers × links; both
 //!   the serial engine and the bounded-lag per-cage parallel engine
-//!   ([`network::sharded`]) live here.
+//!   ([`network::sharded`]) live here, unified behind the
+//!   engine-agnostic [`network::Fabric`] trait that workloads and
+//!   coordinators are written against.
 //! * [`channels`] — Internal Ethernet, Postmaster DMA, Bridge FIFO.
 //! * [`diag`] — JTAG, Ring Bus, NetTunnel, PCIe Sandbox.
 //! * [`node`] — per-node model: ARM costs, DRAM, registers, boot.
@@ -50,6 +52,6 @@ pub mod workload;
 
 pub use config::{LinkTiming, SystemConfig, SystemPreset};
 pub use network::sharded::ShardedNetwork;
-pub use network::{Delivery, Network};
+pub use network::{App, Delivery, Fabric, Network, NullApp, ShardableApp};
 pub use sim::{Sim, Time};
 pub use topology::{Coord, NodeId, Topology};

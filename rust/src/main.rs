@@ -11,7 +11,7 @@ use anyhow::Result;
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::diag::sandbox::PcieSandbox;
 use inc_sim::network::sharded::ShardedNetwork;
-use inc_sim::network::{Network, NullApp};
+use inc_sim::network::{Fabric, Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::{Coord, NodeId, Topology};
 use inc_sim::util::SplitMix64;
@@ -33,9 +33,15 @@ COMMANDS
               uniform-random traffic soak; K>1 runs the bounded-lag
               per-cage parallel engine (K=0 picks the preset's natural
               shard count, 1 forces the serial engine)
-  train       [--ranks N] [--steps N] [--lr F]  data-parallel LM training (E10)
-  mcts        [--workers N] [--rollouts N]      distributed MCTS (E9)
-  learners                                      learner-overlap experiment (E8)
+  train       [--ranks N] [--steps N] [--lr F] [--preset P] [--shards K]
+              data-parallel LM training (E10)
+  mcts        [--workers N] [--rollouts N] [--preset P] [--shards K]
+              distributed MCTS (E9)
+  learners    [--preset P] [--shards K]          learner-overlap experiment (E8)
+
+The workload subcommands accept --shards like traffic does: every
+workload runs on either engine through the Fabric trait, with
+byte-identical results.
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -114,9 +120,16 @@ fn main() -> Result<()> {
             args.get("ranks", 4usize),
             args.get("steps", 200u32),
             args.get("lr", 0.25f32),
+            args.preset(SystemPreset::Card),
+            args.get("shards", 1u32),
         )?,
-        "mcts" => run_mcts(args.get("workers", 8usize), args.get("rollouts", 3000u64)),
-        "learners" => run_learners(),
+        "mcts" => run_mcts(
+            args.get("workers", 8usize),
+            args.get("rollouts", 3000u64),
+            args.preset(SystemPreset::Card),
+            args.get("shards", 1u32),
+        ),
+        "learners" => run_learners(args.preset(SystemPreset::Card), args.get("shards", 1u32)),
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
@@ -315,11 +328,31 @@ fn sandbox(p: SystemPreset, script: Option<String>) {
     }
 }
 
-fn train(ranks: usize, steps: u32, lr: f32) -> Result<()> {
+/// Build a sharded engine for a workload run: K=0 picks the preset's
+/// natural shard count.
+fn sharded_engine(preset: SystemPreset, shards: u32) -> ShardedNetwork {
+    ShardedNetwork::new(
+        SystemConfig::new(preset),
+        if shards == 0 { u32::MAX } else { shards },
+    )
+}
+
+fn train(ranks: usize, steps: u32, lr: f32, preset: SystemPreset, shards: u32) -> Result<()> {
     let rt = inc_sim::runtime::load_default()?;
-    let mut net = Network::card();
     let cfg = training::TrainConfig { ranks, steps, lr, ..Default::default() };
-    let report = training::train(&mut net, &rt, &cfg)?;
+    let report = if shards == 1 {
+        let mut net = Network::new(SystemConfig::new(preset));
+        training::train(&mut net, &rt, &cfg)?
+    } else {
+        let mut net = sharded_engine(preset, shards);
+        if net.shard_count() == 1 {
+            eprintln!(
+                "note: {preset:?} partitions into 1 shard — this run is effectively serial \
+                 (pick --preset inc3000|inc9000 for a multi-shard engine)"
+            );
+        }
+        training::train(&mut net, &rt, &cfg)?
+    };
     println!(
         "model {} — {} params, {} ranks, {} steps",
         rt.manifest.model, report.params, ranks, steps
@@ -339,10 +372,26 @@ fn train(ranks: usize, steps: u32, lr: f32) -> Result<()> {
     Ok(())
 }
 
-fn run_mcts(workers: usize, rollouts: u64) {
-    let r = mcts::run_card_search(workers, rollouts);
+fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32) {
+    // Leader at node 0; workers strided across the node space so larger
+    // presets (and the sharded engine) see cross-card/cage task traffic.
+    fn go<F: Fabric>(net: &mut F, workers: usize, rollouts: u64) -> mcts::MctsResult {
+        let nn = net.topo().node_count() as u32;
+        let stride = ((nn - 1) / (workers as u32).max(1)).max(1);
+        let ws: Vec<NodeId> = (0..workers as u32).map(|i| NodeId(1 + i * stride)).collect();
+        let game = mcts::Game { depth: 6, branching: 3, seed: 42 };
+        mcts::DistributedMcts::new(net, game, NodeId(0), ws).search(net, rollouts)
+    }
+    let (r, engine) = if shards == 1 {
+        let mut net = Network::new(SystemConfig::new(preset));
+        (go(&mut net, workers, rollouts), "serial".to_string())
+    } else {
+        let mut net = sharded_engine(preset, shards);
+        let label = format!("sharded x{}", net.shard_count());
+        (go(&mut net, workers, rollouts), label)
+    };
     println!(
-        "mcts: {} rollouts on {} workers -> best path {:?} (value {:.3})",
+        "mcts [{engine}]: {} rollouts on {} workers -> best path {:?} (value {:.3})",
         r.rollouts, workers, r.best_path, r.best_value
     );
     println!(
@@ -352,11 +401,25 @@ fn run_mcts(workers: usize, rollouts: u64) {
     );
 }
 
-fn run_learners() {
-    let cfg = learners::LearnerConfig::default();
-    let (streamed, aggregated) = learners::overlap_advantage(Network::card, cfg);
+fn run_learners(preset: SystemPreset, shards: u32) {
+    // Spread the learner grid across the whole mesh so cards/cages (and
+    // shard boundaries) sit between neighbors.
+    let nn = preset.node_count() as usize;
+    let cfg = learners::LearnerConfig {
+        stride: (nn / 27).max(1),
+        ..learners::LearnerConfig::default()
+    };
+    let (streamed, aggregated, engine) = if shards == 1 {
+        let f = move || Network::new(SystemConfig::new(preset));
+        let (s, a) = learners::overlap_advantage(f, cfg);
+        (s, a, "serial".to_string())
+    } else {
+        let f = move || sharded_engine(preset, shards);
+        let (s, a) = learners::overlap_advantage(f, cfg);
+        (s, a, "sharded".to_string())
+    };
     println!(
-        "distributed learners, {} outputs/step/node of {} B:",
+        "distributed learners [{engine}], {} outputs/step/node of {} B:",
         cfg.outputs_per_step, cfg.record_bytes
     );
     println!("  send-as-generated (postmaster): {:>9.1} µs/step", streamed / 1000.0);

@@ -111,6 +111,13 @@ pub struct Metrics {
     /// No-op `Drain` events the pending-drain flag kept out of the event
     /// queue (an idle link with nothing queued schedules no drain).
     pub drains_suppressed: u64,
+    /// **Engine-level** counter: lockstep windows the sharded engine's
+    /// adaptive epoch batching coalesced into a single barrier-free
+    /// sprint (see `network::sharded`). Always 0 on the serial engine,
+    /// so it is excluded from the serial↔sharded byte-identity contract
+    /// — compare [`Metrics::fabric_view`]s, not raw blocks, across
+    /// engines.
+    pub windows_merged: u64,
 }
 
 impl Metrics {
@@ -132,6 +139,17 @@ impl Metrics {
         self.bytes_delivered += other.bytes_delivered;
         self.link_stalls += other.link_stalls;
         self.drains_suppressed += other.drains_suppressed;
+        self.windows_merged += other.windows_merged;
+    }
+
+    /// The fabric-behavior view: engine-level counters (currently only
+    /// [`Metrics::windows_merged`]) zeroed. This is the block the
+    /// serial↔sharded differential compares byte-for-byte — how an
+    /// engine *schedules* its windows is not fabric behavior.
+    pub fn fabric_view(&self) -> Metrics {
+        let mut m = self.clone();
+        m.windows_merged = 0;
+        m
     }
 
     pub fn record_delivery(&mut self, proto: &'static str, latency: Time, bytes: u32) {
@@ -157,6 +175,9 @@ impl Metrics {
             self.link_stalls,
             self.drains_suppressed
         ));
+        if self.windows_merged > 0 {
+            s.push_str(&format!("  lockstep windows merged={}\n", self.windows_merged));
+        }
         for (proto, h) in &self.packet_latency {
             s.push_str(&format!(
                 "  {:<12} n={:<8} mean={:.2}µs min={:.2}µs max={:.2}µs p99≈{:.2}µs\n",
@@ -230,6 +251,20 @@ mod tests {
         merged.merge(&a);
         merged.merge(&b);
         assert_eq!(merged, whole);
+    }
+
+    #[test]
+    fn fabric_view_zeroes_engine_counters() {
+        let mut m = Metrics::new();
+        m.record_delivery("raw", 10, 4);
+        m.windows_merged = 7;
+        let f = m.fabric_view();
+        assert_eq!(f.windows_merged, 0);
+        assert_eq!(f.packets_delivered, 1);
+        let mut other = m.clone();
+        other.windows_merged = 3;
+        assert_ne!(m, other, "raw blocks differ on engine counters");
+        assert_eq!(m.fabric_view(), other.fabric_view(), "fabric views agree");
     }
 
     #[test]

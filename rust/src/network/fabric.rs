@@ -1,0 +1,432 @@
+//! The engine-agnostic execution API ([`Fabric`]) and the partitionable
+//! workload contract ([`ShardableApp`]).
+//!
+//! Before this layer existed, every workload and coordinator was pinned
+//! to the serial [`Network`]: `ShardedNetwork::run_to_quiescence` took
+//! no app, so the parallel engine could only replay raw traffic. The
+//! [`Fabric`] trait closes that gap — one injection/channel/run/metrics
+//! surface implemented by **both** engines, so `learners`, `mcts`,
+//! `training` and the ring all-reduce run unmodified on either, with
+//! byte-identical traces, metrics (fabric view) and app-level results
+//! (differential-tested in `tests/sharded_differential.rs`).
+//!
+//! # Two id spaces, two contexts
+//!
+//! *Driver context* (between runs): the global packet-id counter is
+//! coherent — the sharded wrappers sync one cursor into the owning
+//! shard around every call — so [`Fabric::send_directed`] and friends
+//! assign exactly the ids a serial run would.
+//!
+//! *App context* (inside [`App`] callbacks, which on the sharded engine
+//! execute mid-window on one shard): the global counter is **not**
+//! coherent, so app-originated traffic uses per-node ids
+//! ([`Fabric::app_packet_id`], [`Fabric::pm_send_at`]) that depend only
+//! on the sending node's own sequence. Engine-agnostic workloads use
+//! the app-context sends for *all* traffic they originate from a
+//! specific node — the per-node scheme is valid in both contexts, which
+//! lets one code path serve kickoff and callback alike.
+//!
+//! # Partitioned apps
+//!
+//! [`ShardableApp`] is how an [`App`] rides the parallel engine: the
+//! run splits it into one partition per shard
+//! ([`ShardableApp::partition`]), each partition sees exactly the
+//! callbacks for nodes its shard owns (in an order byte-identical to
+//! the serial engine's restriction to those nodes), and at the end the
+//! partitions fold back ([`ShardableApp::reduce`]). Reduction must be
+//! commutative across partitions — the fold order is unspecified.
+//! State that only one node's callbacks mutate (a leader's search tree,
+//! a rank's receive counter) needs no care beyond living in the
+//! partition that owns that node; cross-partition aggregates must be
+//! sums/maxes/unions.
+
+use std::sync::Arc;
+
+use crate::channels::ethernet::{EthFrame, RxMode};
+use crate::channels::postmaster::PmRecord;
+use crate::config::SystemConfig;
+use crate::metrics::Metrics;
+use crate::network::sharded::ShardedNetwork;
+use crate::network::{App, Delivery, Network, NullApp};
+use crate::router::{Packet, Payload, Proto};
+use crate::sim::Time;
+use crate::topology::{LinkId, NodeId, Topology};
+
+/// An [`App`] that can be partitioned across the sharded engine's
+/// shards and reduced back. See the module docs for the contract.
+pub trait ShardableApp: App + Send + Sized {
+    /// Build the partition that will run on `shard` (owning the nodes
+    /// `n` with `owner[n] == shard`). Called once per shard before the
+    /// run; the parent app is not consulted again until reduction.
+    fn partition(&self, shard: u32, owner: &[u32]) -> Self;
+
+    /// Fold a finished partition back into the parent. Must be
+    /// commutative across partitions.
+    fn reduce(&mut self, part: Self);
+}
+
+impl ShardableApp for NullApp {
+    fn partition(&self, _shard: u32, _owner: &[u32]) -> NullApp {
+        NullApp
+    }
+    fn reduce(&mut self, _part: NullApp) {}
+}
+
+/// The engine-agnostic fabric surface: everything a driver or workload
+/// needs — traffic injection, the three virtual channels, NetTunnel,
+/// execution, tracing and metrics — implemented by the serial
+/// [`Network`] and the bounded-lag parallel [`ShardedNetwork`] with
+/// identical observable behavior (`tests/sharded_differential.rs`).
+///
+/// Not object-safe (the run methods are generic over the app);
+/// engine-agnostic code is written as `fn f<F: Fabric>(net: &mut F)`.
+pub trait Fabric {
+    // -- identity / clock -------------------------------------------------
+
+    /// The (shared) static topology.
+    fn topo(&self) -> &Arc<Topology>;
+    /// The system configuration.
+    fn config(&self) -> &SystemConfig;
+    /// Current virtual time. On the sharded engine this is the global
+    /// clock (shards are re-synchronized after every run).
+    fn now(&self) -> Time;
+    /// Advance the clock to `t` if it is ahead; no-op otherwise
+    /// (deferred-production workloads close a compute window this way).
+    fn advance_to(&mut self, t: Time);
+    /// Events dispatched so far (summed across shards).
+    fn dispatched(&self) -> u64;
+
+    // -- diagnostics ------------------------------------------------------
+
+    /// Aggregated fabric metrics. Engine-level counters (e.g.
+    /// `windows_merged`) are included; compare
+    /// [`Metrics::fabric_view`]s across engines.
+    fn metrics(&self) -> Metrics;
+    /// Start recording the delivery trace.
+    fn enable_trace(&mut self);
+    /// Take the recorded trace in the canonical [`Delivery`] order
+    /// (sorted; byte-identical across engines).
+    fn take_trace(&mut self) -> Vec<Delivery>;
+
+    // -- driver-context injection (global id space) -----------------------
+
+    /// See [`Network::send_directed`].
+    fn send_directed(&mut self, src: NodeId, dst: NodeId, proto: Proto, payload: Payload) -> u64;
+    /// See [`Network::send_broadcast`].
+    fn send_broadcast(&mut self, src: NodeId, proto: Proto, payload: Payload) -> u64;
+    /// See [`Network::send_multicast`].
+    fn send_multicast(
+        &mut self,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64;
+    /// See [`Network::fail_link`].
+    fn fail_link(&mut self, l: LinkId);
+    /// See [`Network::repair_link`].
+    fn repair_link(&mut self, l: LinkId);
+
+    // -- app-context sends (per-node id space; valid in both contexts) ----
+
+    /// See [`Network::app_packet_id`].
+    fn app_packet_id(&mut self, node: NodeId) -> u64;
+    /// Inject a fully-built packet at its source node (injection
+    /// overhead applies; injection metrics accounted). The packet's id
+    /// must come from [`Fabric::app_packet_id`] when called from an
+    /// [`App`] callback.
+    fn inject(&mut self, pkt: Packet);
+    /// Schedule a fully-built packet to enter the fabric at absolute
+    /// time `at` (the caller accounts metrics and software costs).
+    fn inject_at(&mut self, at: Time, pkt: Packet);
+    /// See [`Network::pm_send_at`]: the engine-agnostic Postmaster send.
+    fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>);
+    /// See [`Network::timer_at`].
+    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64);
+
+    // -- virtual channels -------------------------------------------------
+
+    /// See [`Network::fifo_connect`].
+    fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8);
+    /// See [`Network::fifo_send`].
+    fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]);
+    /// See [`Network::fifo_read`].
+    fn fifo_read(&mut self, node: NodeId, channel: u8, max: usize) -> Vec<u64>;
+    /// See [`Network::pm_open`].
+    fn pm_open(&mut self, target: NodeId, queue: u8);
+    /// See [`Network::pm_send`].
+    fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>);
+    /// See [`Network::pm_read`].
+    fn pm_read(&mut self, node: NodeId, queue: u8) -> Vec<PmRecord>;
+    /// See [`Network::eth_set_mode`].
+    fn eth_set_mode(&mut self, node: NodeId, mode: RxMode);
+    /// See [`Network::eth_send`].
+    fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64);
+    /// See [`Network::eth_send_message`].
+    fn eth_send_message(&mut self, src: NodeId, dst: NodeId, bytes: u64, tag: u64) -> u32;
+    /// See [`Network::eth_read`].
+    fn eth_read(&mut self, node: NodeId) -> Vec<EthFrame>;
+    /// See [`Network::nfs_put`].
+    fn nfs_put(&mut self, node: NodeId, name: &str, size: u64);
+    /// See [`Network::tunnel_write`].
+    fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64);
+    /// See [`Network::tunnel_read`].
+    fn tunnel_read(&mut self, src: NodeId, dst: NodeId, addr: u64) -> u64;
+    /// See [`Network::tunnel_result`].
+    fn tunnel_result(&self, req_id: u64) -> Option<u64>;
+
+    // -- execution --------------------------------------------------------
+
+    /// Run to quiescence, driving `app`. On the sharded engine the app
+    /// is partitioned/reduced per [`ShardableApp`]. Returns events
+    /// dispatched.
+    fn run<A: ShardableApp>(&mut self, app: &mut A) -> u64;
+    /// Run until the queue empties or `deadline` passes, then advance
+    /// the clock to `deadline` (see [`Network::run_until`]).
+    fn run_until<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64;
+    /// Dispatch everything at or before `deadline` without advancing
+    /// the clock past the last event (see [`Network::run_window`]).
+    fn run_window<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64;
+}
+
+impl Fabric for Network {
+    fn topo(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+    fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+    fn now(&self) -> Time {
+        Network::now(self)
+    }
+    fn advance_to(&mut self, t: Time) {
+        self.sim.catch_up_to(t);
+    }
+    fn dispatched(&self) -> u64 {
+        self.sim.dispatched()
+    }
+
+    fn metrics(&self) -> Metrics {
+        self.metrics.clone()
+    }
+    fn enable_trace(&mut self) {
+        Network::enable_trace(self)
+    }
+    fn take_trace(&mut self) -> Vec<Delivery> {
+        let mut t = Network::take_trace(self);
+        t.sort_unstable();
+        t
+    }
+
+    fn send_directed(&mut self, src: NodeId, dst: NodeId, proto: Proto, payload: Payload) -> u64 {
+        Network::send_directed(self, src, dst, proto, payload)
+    }
+    fn send_broadcast(&mut self, src: NodeId, proto: Proto, payload: Payload) -> u64 {
+        Network::send_broadcast(self, src, proto, payload)
+    }
+    fn send_multicast(
+        &mut self,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        Network::send_multicast(self, src, dsts, proto, payload)
+    }
+    fn fail_link(&mut self, l: LinkId) {
+        Network::fail_link(self, l)
+    }
+    fn repair_link(&mut self, l: LinkId) {
+        Network::repair_link(self, l)
+    }
+
+    fn app_packet_id(&mut self, node: NodeId) -> u64 {
+        Network::app_packet_id(self, node)
+    }
+    fn inject(&mut self, pkt: Packet) {
+        Network::inject(self, pkt)
+    }
+    fn inject_at(&mut self, at: Time, pkt: Packet) {
+        Network::inject_at(self, at, pkt)
+    }
+    fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        Network::pm_send_at(self, at, src, target, queue, data)
+    }
+    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
+        Network::timer_at(self, at, node, tag)
+    }
+
+    fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {
+        Network::fifo_connect(self, src, dst, channel, width_bits)
+    }
+    fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
+        Network::fifo_send(self, src, channel, words)
+    }
+    fn fifo_read(&mut self, node: NodeId, channel: u8, max: usize) -> Vec<u64> {
+        Network::fifo_read(self, node, channel, max)
+    }
+    fn pm_open(&mut self, target: NodeId, queue: u8) {
+        Network::pm_open(self, target, queue)
+    }
+    fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        Network::pm_send(self, src, target, queue, data)
+    }
+    fn pm_read(&mut self, node: NodeId, queue: u8) -> Vec<PmRecord> {
+        Network::pm_read(self, node, queue)
+    }
+    fn eth_set_mode(&mut self, node: NodeId, mode: RxMode) {
+        Network::eth_set_mode(self, node, mode)
+    }
+    fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64) {
+        Network::eth_send(self, src, dst, bytes, tag)
+    }
+    fn eth_send_message(&mut self, src: NodeId, dst: NodeId, bytes: u64, tag: u64) -> u32 {
+        Network::eth_send_message(self, src, dst, bytes, tag)
+    }
+    fn eth_read(&mut self, node: NodeId) -> Vec<EthFrame> {
+        Network::eth_read(self, node)
+    }
+    fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
+        Network::nfs_put(self, node, name, size)
+    }
+    fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
+        Network::tunnel_write(self, src, dst, addr, value)
+    }
+    fn tunnel_read(&mut self, src: NodeId, dst: NodeId, addr: u64) -> u64 {
+        Network::tunnel_read(self, src, dst, addr)
+    }
+    fn tunnel_result(&self, req_id: u64) -> Option<u64> {
+        Network::tunnel_result(self, req_id)
+    }
+
+    fn run<A: ShardableApp>(&mut self, app: &mut A) -> u64 {
+        self.run_to_quiescence(app)
+    }
+    fn run_until<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        Network::run_until(self, app, deadline)
+    }
+    fn run_window<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        Network::run_window(self, app, deadline)
+    }
+}
+
+impl Fabric for ShardedNetwork {
+    fn topo(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+    fn config(&self) -> &SystemConfig {
+        ShardedNetwork::config(self)
+    }
+    fn now(&self) -> Time {
+        ShardedNetwork::now(self)
+    }
+    fn advance_to(&mut self, t: Time) {
+        ShardedNetwork::advance_to(self, t)
+    }
+    fn dispatched(&self) -> u64 {
+        ShardedNetwork::dispatched(self)
+    }
+
+    fn metrics(&self) -> Metrics {
+        ShardedNetwork::metrics(self)
+    }
+    fn enable_trace(&mut self) {
+        ShardedNetwork::enable_trace(self)
+    }
+    fn take_trace(&mut self) -> Vec<Delivery> {
+        ShardedNetwork::take_trace(self)
+    }
+
+    fn send_directed(&mut self, src: NodeId, dst: NodeId, proto: Proto, payload: Payload) -> u64 {
+        ShardedNetwork::send_directed(self, src, dst, proto, payload)
+    }
+    fn send_broadcast(&mut self, src: NodeId, proto: Proto, payload: Payload) -> u64 {
+        ShardedNetwork::send_broadcast(self, src, proto, payload)
+    }
+    fn send_multicast(
+        &mut self,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        ShardedNetwork::send_multicast(self, src, dsts, proto, payload)
+    }
+    fn fail_link(&mut self, l: LinkId) {
+        ShardedNetwork::fail_link(self, l)
+    }
+    fn repair_link(&mut self, l: LinkId) {
+        ShardedNetwork::repair_link(self, l)
+    }
+
+    fn app_packet_id(&mut self, node: NodeId) -> u64 {
+        self.shard_mut(node).app_packet_id(node)
+    }
+    fn inject(&mut self, pkt: Packet) {
+        let src = pkt.src;
+        self.shard_mut(src).inject(pkt)
+    }
+    fn inject_at(&mut self, at: Time, pkt: Packet) {
+        let src = pkt.src;
+        self.shard_mut(src).inject_at(at, pkt)
+    }
+    fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        self.shard_mut(src).pm_send_at(at, src, target, queue, data)
+    }
+    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
+        self.shard_mut(node).timer_at(at, node, tag)
+    }
+
+    fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {
+        ShardedNetwork::fifo_connect(self, src, dst, channel, width_bits)
+    }
+    fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
+        ShardedNetwork::fifo_send(self, src, channel, words)
+    }
+    fn fifo_read(&mut self, node: NodeId, channel: u8, max: usize) -> Vec<u64> {
+        ShardedNetwork::fifo_read(self, node, channel, max)
+    }
+    fn pm_open(&mut self, target: NodeId, queue: u8) {
+        ShardedNetwork::pm_open(self, target, queue)
+    }
+    fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
+        ShardedNetwork::pm_send(self, src, target, queue, data)
+    }
+    fn pm_read(&mut self, node: NodeId, queue: u8) -> Vec<PmRecord> {
+        self.shard_mut(node).pm_read(node, queue)
+    }
+    fn eth_set_mode(&mut self, node: NodeId, mode: RxMode) {
+        self.shard_mut(node).eth_set_mode(node, mode)
+    }
+    fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64) {
+        ShardedNetwork::eth_send(self, src, dst, bytes, tag)
+    }
+    fn eth_send_message(&mut self, src: NodeId, dst: NodeId, bytes: u64, tag: u64) -> u32 {
+        ShardedNetwork::eth_send_message(self, src, dst, bytes, tag)
+    }
+    fn eth_read(&mut self, node: NodeId) -> Vec<EthFrame> {
+        self.shard_mut(node).eth_read(node)
+    }
+    fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
+        ShardedNetwork::nfs_put(self, node, name, size)
+    }
+    fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
+        ShardedNetwork::tunnel_write(self, src, dst, addr, value)
+    }
+    fn tunnel_read(&mut self, src: NodeId, dst: NodeId, addr: u64) -> u64 {
+        ShardedNetwork::tunnel_read(self, src, dst, addr)
+    }
+    fn tunnel_result(&self, req_id: u64) -> Option<u64> {
+        ShardedNetwork::tunnel_result(self, req_id)
+    }
+
+    fn run<A: ShardableApp>(&mut self, app: &mut A) -> u64 {
+        self.run_app(app)
+    }
+    fn run_until<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        self.run_until_app(app, deadline)
+    }
+    fn run_window<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        self.run_window_app(app, deadline)
+    }
+}

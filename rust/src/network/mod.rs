@@ -5,7 +5,10 @@
 //! driven by [`Network::run_until`] / [`Network::run_to_quiescence`].
 //! Workloads react to traffic through the [`App`] trait; every channel
 //! also buffers delivered data in inboxes that can be read after a run,
-//! so simple drivers need no callbacks at all.
+//! so simple drivers need no callbacks at all. Drivers and workloads
+//! that should run on *either* engine — this serial one or the
+//! bounded-lag parallel [`sharded::ShardedNetwork`] — are written
+//! against the [`Fabric`] trait instead of a concrete engine.
 //!
 //! # Hot-path layout
 //!
@@ -17,8 +20,10 @@
 //! word bursts are `Arc`-shared. Broadcast/multicast fan-out clones the
 //! ~100-byte packet header per copy but shares the payload bytes
 //! through `Arc` — a 2 KB broadcast at INC-3000 scale moves zero
-//! payload bytes per hop. The in-flight side tables (`eth_inflight`,
-//! `tunnel_results`, channel endpoint maps) use deterministic
+//! payload bytes per hop. In-flight Ethernet frames ride inside their
+//! packet (`Packet::eth_frame`, boxed) so they follow the packet across
+//! shard boundaries; the remaining side tables (`tunnel_results`,
+//! channel endpoint maps) use deterministic
 //! [`crate::util::FxHashMap`]s: no SipHash on the per-packet path, no
 //! per-process seed.
 
@@ -33,8 +38,13 @@
 //! * adaptive-routing tie-breaks hash the packet's identity
 //!   ([`crate::util::mix64`]) instead of drawing from an RNG stream;
 //! * packet ids are assigned at the driver API (or derived from the
-//!   originating packet, e.g. NetTunnel replies), never from a counter
-//!   inside an event handler.
+//!   originating packet, e.g. NetTunnel replies), never from a global
+//!   counter inside an event handler. Traffic that [`App`] callbacks
+//!   originate *is* produced inside event handlers, so it draws from
+//!   **per-node** id counters instead ([`Network::app_packet_id`]):
+//!   node `n`'s k-th app-originated packet has the same id in every
+//!   engine, because `n`'s delivery sequence — and therefore its send
+//!   sequence — is itself byte-identical across engines.
 //!
 //! Together these make the per-cage parallel engine ([`sharded`])
 //! byte-identical to this serial one — the serial engine stays the
@@ -42,7 +52,10 @@
 //! (`tests/sharded_differential.rs`).
 
 pub mod arena;
+pub mod fabric;
 pub mod sharded;
+
+pub use fabric::{Fabric, ShardableApp};
 
 use std::sync::Arc;
 
@@ -116,6 +129,30 @@ pub(crate) fn key_eth(node: NodeId) -> u64 {
 pub(crate) fn key_tunnel(packet_id: u64) -> u64 {
     ekey(9, packet_id)
 }
+#[inline]
+pub(crate) fn key_timer(node: NodeId, tag: u64) -> u64 {
+    // The tag is truncated to the key's entity space; two timers at the
+    // same (node, instant) whose tags collide mod 2^24 fall back to
+    // insertion order, which is the schedule order at the owning node —
+    // identical in serial and sharded runs.
+    ekey(10, (node.0 as u64) << 24 | (tag & 0xFF_FFFF))
+}
+
+// ---------------------------------------------------------------------
+// App-originated packet ids ([`Network::app_packet_id`]): drawn from
+// per-node counters so they are reproducible inside event handlers,
+// where the global driver counter would depend on cross-node dispatch
+// interleaving the sharded engine does not share with the serial one.
+// Layout: bit 61 marks the app id space; bit 55 is the marker that
+// survives the 56-bit event-key truncation (driver ids and NetTunnel
+// request/reply ids are far below 2^55, so truncated keys never
+// collide across spaces); node in bits 39..55, per-node seq below.
+// ---------------------------------------------------------------------
+
+const APP_ID_SPACE: u64 = 1 << 61;
+const APP_ID_KEY_MARK: u64 = 1 << 55;
+const APP_ID_NODE_SHIFT: u32 = 39;
+const APP_ID_SEQ_MASK: u64 = (1 << APP_ID_NODE_SHIFT) - 1;
 
 /// One line of the delivery trace: a packet reaching its destination's
 /// Packet Demux. The derived `Ord` (time, node, packet, …) is the
@@ -197,15 +234,36 @@ pub enum Event {
     EthTx { frame: Box<EthFrame> },
     /// NetTunnel / diagnostic register access executed at `node`.
     TunnelExec { node: NodeId, packet: PacketRef },
-    /// Application timer.
+    /// Application timer ([`Network::timer_at`]).
     Timer { node: NodeId, tag: u64 },
 }
 
 /// Workload hook points. All methods have default empty bodies; override
 /// the ones the workload cares about. Delivered data is *also* available
 /// from channel inboxes after a run.
+///
+/// # Per-node contract
+///
+/// Every callback names the node it fires at, and on the sharded engine
+/// it runs on the partition owning that node (see [`ShardableApp`]).
+/// Code inside a callback must therefore:
+///
+/// * mutate only state attributable to that node (or reduced
+///   commutatively at the end of the run — see
+///   [`ShardableApp::reduce`]);
+/// * originate new traffic only *from* that node, and only through the
+///   app-context send APIs ([`Network::app_packet_id`] /
+///   [`Fabric::pm_send_at`] / [`Fabric::inject`] with an app id): the
+///   global-counter driver APIs ([`Network::send_directed`] etc.) panic
+///   inside callbacks on the sharded engine, where the global cursor is
+///   not coherent mid-run.
 #[allow(unused_variables)]
 pub trait App {
+    /// Any packet reached its destination's Packet Demux (all
+    /// protocols; fires before the per-protocol handler, so channel
+    /// logic delays have *not* elapsed yet). `d` is exactly the line
+    /// the delivery tracer would record.
+    fn on_deliver(&mut self, net: &mut Network, node: NodeId, d: &Delivery) {}
     /// A directed/broadcast `Proto::Raw` packet arrived at `node`.
     fn on_raw(&mut self, net: &mut Network, node: NodeId, packet: &Packet) {}
     /// Words became readable on a Bridge-FIFO read port.
@@ -214,7 +272,7 @@ pub trait App {
     fn on_postmaster(&mut self, net: &mut Network, node: NodeId, queue: u8, rec: &PmRecord) {}
     /// An internal-Ethernet frame was handed to the kernel at `node`.
     fn on_eth(&mut self, net: &mut Network, node: NodeId, frame: &EthFrame) {}
-    /// An application timer fired.
+    /// An application timer fired ([`Network::timer_at`]).
     fn on_timer(&mut self, net: &mut Network, node: NodeId, tag: u64) {}
 }
 
@@ -237,8 +295,6 @@ pub struct Network {
     pub eth: EthernetFabric,
     /// In-flight packet storage; events reference it by [`PacketRef`].
     pub packets: PacketArena,
-    /// Ethernet frames whose packet is in flight, keyed by packet id.
-    pub(crate) eth_inflight: FxHashMap<u64, EthFrame>,
     /// NetTunnel read results, keyed by request id.
     pub tunnel_results: FxHashMap<u64, u64>,
     /// Links marked defective (§2.4 "network defect avoidance").
@@ -248,6 +304,11 @@ pub struct Network {
     pub trace: Option<Vec<Delivery>>,
     /// Set when this `Network` is one shard of a sharded run.
     pub(crate) shard_ctx: Option<ShardCtx>,
+    /// Per-node counters behind [`Network::app_packet_id`].
+    app_seq: Vec<u64>,
+    /// True while an [`App`] callback is on the stack (enforces the
+    /// app-context send contract on sharded shards).
+    in_app: bool,
     next_packet_id: u64,
 }
 
@@ -279,11 +340,12 @@ impl Network {
             postmaster: PostmasterFabric::new(n),
             eth: EthernetFabric::new(n, &cfg),
             packets: PacketArena::with_capacity(1024),
-            eth_inflight: FxHashMap::default(),
             tunnel_results: FxHashMap::default(),
             failed_links: vec![false; topo_link_count],
             trace: None,
             shard_ctx: None,
+            app_seq: vec![0; n],
+            in_app: false,
             cfg,
             next_packet_id: 0,
         }
@@ -303,9 +365,57 @@ impl Network {
     }
 
     pub fn next_packet_id(&mut self) -> u64 {
+        // On a shard of a sharded run the global cursor is only coherent
+        // between runs (the wrapper APIs sync it around driver calls);
+        // an App callback drawing from it would assign ids the serial
+        // oracle never assigns. Fail loudly instead of diverging.
+        assert!(
+            !(self.in_app && self.shard_ctx.is_some()),
+            "global packet-id counter used inside an App callback on a sharded \
+             shard; use app_packet_id / the app-context send APIs instead"
+        );
         let id = self.next_packet_id;
         self.next_packet_id += 1;
         id
+    }
+
+    /// Allocate a packet id for traffic originated *by an [`App`]
+    /// callback at `node`* (or by engine-agnostic workload code that
+    /// sends from a specific node). Drawn from a per-node counter, so
+    /// the id depends only on the node's own send sequence — which is
+    /// byte-identical across engines — never on global dispatch
+    /// interleaving. The id space is disjoint from driver-assigned and
+    /// NetTunnel-derived ids (see the module docs).
+    pub fn app_packet_id(&mut self, node: NodeId) -> u64 {
+        let seq = self.app_seq[node.0 as usize];
+        self.app_seq[node.0 as usize] += 1;
+        assert!(seq < APP_ID_SEQ_MASK, "app packet-id counter exhausted at {node}");
+        APP_ID_SPACE | APP_ID_KEY_MARK | ((node.0 as u64) << APP_ID_NODE_SHIFT) | seq
+    }
+
+    /// Schedule an [`App::on_timer`] callback at `node` at absolute
+    /// time `at`. Usable from driver context or from a callback at any
+    /// node on the same shard; on the sharded engine the timer fires on
+    /// the partition owning `node`.
+    pub fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
+        self.debug_check_src_owned(node);
+        self.sim.at_keyed(at, key_timer(node, tag), Event::Timer { node, tag });
+    }
+
+    /// Run `f` with the in-app flag raised (restores the previous value,
+    /// so nested callback chains — e.g. a poll draining several frames —
+    /// stay marked).
+    #[inline]
+    pub(crate) fn app_scope<R>(
+        &mut self,
+        app: &mut dyn App,
+        f: impl FnOnce(&mut Network, &mut dyn App) -> R,
+    ) -> R {
+        let prev = self.in_app;
+        self.in_app = true;
+        let r = f(self, app);
+        self.in_app = prev;
+        r
     }
 
     /// Current value of the packet-id counter (not advancing it). The
@@ -394,6 +504,7 @@ impl Network {
 
     /// Inject an already-built packet at its source node.
     pub fn inject(&mut self, packet: Packet) {
+        self.debug_check_src_owned(packet.src);
         self.metrics.packets_injected += 1;
         let delay = self.cfg.link.inject_latency;
         let key = key_inject(packet.id);
@@ -405,9 +516,23 @@ impl Network {
     /// time `at` (deferred-production workloads; the caller accounts
     /// metrics and any software costs itself).
     pub fn inject_at(&mut self, at: Time, packet: Packet) {
+        self.debug_check_src_owned(packet.src);
         let key = key_inject(packet.id);
         let packet = self.packets.alloc(packet);
         self.sim.at_keyed(at, key, Event::Inject { packet });
+    }
+
+    /// A shard may only originate traffic from nodes it owns — anything
+    /// else would schedule the injection on the wrong event wheel. App
+    /// callbacks satisfy this by sending only from their callback node.
+    #[inline]
+    fn debug_check_src_owned(&self, src: NodeId) {
+        if let Some(ctx) = &self.shard_ctx {
+            debug_assert_eq!(
+                ctx.owner[src.0 as usize], ctx.shard,
+                "injection from {src}, which this shard does not own"
+            );
+        }
     }
 
     /// Run until the event queue empties or `deadline` passes. Returns
@@ -446,6 +571,25 @@ impl Network {
         self.sim.dispatched() - start
     }
 
+    /// Dispatch events at or before `deadline` until the first one that
+    /// exports a boundary message (the event itself completes; its
+    /// exports stay in the outbox for the caller). The sharded engine's
+    /// adaptive epoch batching uses this to let a shard that is *alone*
+    /// in having pending work sprint through many lockstep windows
+    /// without barriers — safe exactly until it produces cross-shard
+    /// traffic. On the serial engine (no shard context) the outbox never
+    /// fills, so this equals [`Network::run_window`].
+    pub(crate) fn run_exclusive(&mut self, app: &mut dyn App, deadline: Time) -> u64 {
+        let start = self.sim.dispatched();
+        while let Some((_, ev)) = self.sim.pop_until(deadline) {
+            self.handle(ev, app);
+            if self.shard_ctx.as_ref().is_some_and(|c| !c.outbox.is_empty()) {
+                break;
+            }
+        }
+        self.sim.dispatched() - start
+    }
+
     fn handle(&mut self, ev: Event, app: &mut dyn App) {
         match ev {
             Event::Inject { packet } => {
@@ -476,7 +620,9 @@ impl Network {
                 let pkt = self.packets.free(packet);
                 self.tunnel_exec(node, pkt)
             }
-            Event::Timer { node, tag } => app.on_timer(self, node, tag),
+            Event::Timer { node, tag } => {
+                self.app_scope(app, |net, app| app.on_timer(net, node, tag))
+            }
         }
     }
 
@@ -742,15 +888,17 @@ impl Network {
             let p = self.packets.get(packet);
             (p.id, p.proto, p.injected_at, p.wire_bytes)
         };
+        let d = Delivery {
+            time: self.sim.now(),
+            node: node.0,
+            packet: id,
+            proto: proto_tag(proto),
+            wire_bytes,
+        };
         if let Some(tr) = &mut self.trace {
-            tr.push(Delivery {
-                time: self.sim.now(),
-                node: node.0,
-                packet: id,
-                proto: proto_tag(proto),
-                wire_bytes,
-            });
+            tr.push(d);
         }
+        self.app_scope(app, |net, app| app.on_deliver(net, node, &d));
         if !matches!(proto, Proto::BridgeFifo { .. }) {
             let latency = self.now() - injected_at;
             self.metrics.record_delivery(proto_name(proto), latency, wire_bytes);
@@ -761,8 +909,8 @@ impl Network {
                 // latency budget; see config::SystemConfig docs); the
                 // end-to-end latency metric is recorded there, once the
                 // words become readable.
-                let d = self.cfg.bridge_fifo_logic / 2;
-                self.sim.after_keyed(d, key_fifo_rx(id), Event::FifoRx { node, packet });
+                let delay = self.cfg.bridge_fifo_logic / 2;
+                self.sim.after_keyed(delay, key_fifo_rx(id), Event::FifoRx { node, packet });
             }
             Proto::Postmaster { queue } => {
                 let pkt = self.packets.free(packet);
@@ -787,7 +935,7 @@ impl Network {
             }
             Proto::Raw { .. } => {
                 let pkt = self.packets.free(packet);
-                app.on_raw(self, node, &pkt);
+                self.app_scope(app, |net, app| app.on_raw(net, node, &pkt));
             }
         }
     }

@@ -28,6 +28,23 @@
 //! with no work are skipped (the next window index is derived from the
 //! global minimum pending-event time).
 //!
+//! # Adaptive epoch batching
+//!
+//! On sparse traffic the cost is not the windows with work but the
+//! *barriers* around them. Whenever exactly one shard has pending
+//! events and no boundary messages are in flight, lockstep is
+//! pointless: that shard runs **exclusively** — no window deadline, no
+//! barriers — until it either quiesces or produces its first boundary
+//! message (at which point normal lockstep resumes; see
+//! `Network::run_exclusive`). All workers derive the decision from the
+//! same published next-event times, so it is deterministic, and the
+//! sprinting shard processes its queue in exactly the order the
+//! windowed schedule would have. Coalesced windows are counted in
+//! [`Metrics::windows_merged`] — an engine-level counter, excluded from
+//! the byte-identity contract via [`Metrics::fabric_view`]. A
+//! single-shard "sharded" run degenerates to one long sprint, i.e. to
+//! serial execution with two barriers total.
+//!
 //! # Byte-identical to the serial engine
 //!
 //! The headline property (differential-tested in
@@ -52,16 +69,23 @@
 //! Inc9000 shard); compacting per-shard state behind an index remap is
 //! a noted follow-up (ROADMAP).
 //!
-//! The sharded runner drives inbox-style workloads (the [`App`]
-//! callback surface is per-shard, so runs use [`NullApp`]); traffic is
-//! injected up front or between runs through the wrapper APIs. The one
-//! channel that cannot cross a shard boundary is internal Ethernet —
-//! its in-flight frame table lives on the transmit side — so
-//! cross-shard `eth_send` is unsupported (it panics loudly in
-//! `eth_deliver`); directed/broadcast/multicast raw traffic, Bridge
-//! FIFO, Postmaster and NetTunnel all work across boundaries.
+//! Workloads ride the parallel engine through the engine-agnostic
+//! [`Fabric`] trait: [`ShardedNetwork::run_app`] splits a
+//! [`ShardableApp`] into one partition per shard, each partition sees
+//! the callbacks for its shard's nodes in the serial engine's exact
+//! order (byte-identity extends to app-originated traffic via per-node
+//! packet ids — [`crate::network::Network::app_packet_id`]), and the
+//! partitions fold back commutatively at the end of the run. All five
+//! traffic classes cross shard boundaries: directed/broadcast/multicast
+//! raw, Bridge FIFO, Postmaster, NetTunnel, and internal Ethernet
+//! (frames ride inside their packet — `Packet::eth_frame` — so the
+//! receive side needs no transmit-side table).
 //!
 //! [`App`]: crate::network::App
+//! [`Fabric`]: crate::network::Fabric
+//! [`ShardableApp`]: crate::network::ShardableApp
+//! [`Metrics::windows_merged`]: crate::metrics::Metrics::windows_merged
+//! [`Metrics::fabric_view`]: crate::metrics::Metrics::fabric_view
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -69,7 +93,7 @@ use std::sync::{Arc, Barrier, Mutex};
 
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
-use crate::network::{BoundaryMsg, Delivery, Network, NullApp, ShardCtx};
+use crate::network::{App, BoundaryMsg, Delivery, Network, NullApp, ShardCtx, ShardableApp};
 use crate::router::{Payload, Proto};
 use crate::sim::Time;
 use crate::topology::{LinkId, NodeId, Topology};
@@ -265,6 +289,59 @@ impl ShardedNetwork {
         }
     }
 
+    /// See [`Network::eth_send`] (transmit-side software costs accrue on
+    /// the shard owning `src`; the frame crosses boundaries inside its
+    /// packet).
+    pub fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64) {
+        self.with_shard(src, |n| n.eth_send(src, dst, bytes, tag));
+    }
+
+    /// See [`Network::eth_send_message`].
+    pub fn eth_send_message(&mut self, src: NodeId, dst: NodeId, bytes: u64, tag: u64) -> u32 {
+        self.with_shard(src, |n| n.eth_send_message(src, dst, bytes, tag))
+    }
+
+    /// See [`Network::nfs_put`]. The transfer's gateway-side progress
+    /// state must live where the frames arrive — the shard owning the
+    /// gateway — while the frames themselves stream from `node`'s
+    /// shard.
+    pub fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
+        let gw = self.gateway();
+        if self.shard_of(node) == self.shard_of(gw) {
+            self.with_shard(node, |n| n.nfs_put(node, name, size));
+        } else {
+            let gs = self.shard_of(gw);
+            self.shards[gs].nfs_register_put(node, name, size);
+            let tag = crate::channels::ethernet::nfs_tag(name);
+            self.eth_send_message(node, gw, size, tag);
+        }
+    }
+
+    /// The gateway node (see [`Network::gateway`]).
+    pub fn gateway(&self) -> NodeId {
+        self.topo.gateway_node((0, 0, 0))
+    }
+
+    /// The external world behind the gateway's physical port (NFS files,
+    /// NAT table, egress counters) — it lives on the gateway's shard.
+    pub fn eth_external(&self) -> &crate::channels::ethernet::ExternalWorld {
+        let gs = self.owner[self.gateway().0 as usize] as usize;
+        &self.shards[gs].eth.external
+    }
+
+    /// The system configuration (identical on every shard).
+    pub fn config(&self) -> &crate::config::SystemConfig {
+        &self.shards[0].cfg
+    }
+
+    /// Advance every shard's clock to `t` if it is ahead; no-op
+    /// otherwise (see [`crate::sim::Sim::catch_up_to`]).
+    pub fn advance_to(&mut self, t: Time) {
+        for sh in &mut self.shards {
+            sh.sim.catch_up_to(t);
+        }
+    }
+
     /// Record the delivery trace on every shard (see
     /// [`ShardedNetwork::take_trace`]).
     pub fn enable_trace(&mut self) {
@@ -283,7 +360,10 @@ impl ShardedNetwork {
         self.shards.iter().map(|s| s.now()).max().unwrap_or(0)
     }
 
-    /// Merged fabric metrics (byte-identical to a serial run's).
+    /// Merged metrics across shards. The *fabric* counters are
+    /// byte-identical to a serial run's; engine-level counters
+    /// ([`Metrics::windows_merged`]) are nonzero only here, so compare
+    /// engines through [`Metrics::fabric_view`].
     pub fn metrics(&self) -> Metrics {
         let mut m = Metrics::new();
         for sh in &self.shards {
@@ -317,17 +397,92 @@ impl ShardedNetwork {
     // The epoch runner
     // -----------------------------------------------------------------
 
-    /// Run every shard to global quiescence (no pending events and no
-    /// in-flight boundary messages). Returns the number of events
-    /// dispatched. Deterministic: thread scheduling cannot affect the
-    /// result (boundary merges are canonically ordered).
+    /// Run every shard to global quiescence with a [`NullApp`]
+    /// partition per shard (traffic-replay runs). Workload runs use
+    /// [`ShardedNetwork::run_app`] (or the [`Fabric`] trait).
+    ///
+    /// [`Fabric`]: crate::network::Fabric
     pub fn run_to_quiescence(&mut self) -> u64 {
+        self.run_app(&mut NullApp)
+    }
+
+    /// Run to global quiescence (no pending events and no in-flight
+    /// boundary messages) driving `app`: the app splits into one
+    /// partition per shard ([`ShardableApp::partition`]), each
+    /// partition handles exactly the callbacks of the nodes its shard
+    /// owns — in the serial engine's order — and the partitions fold
+    /// back at the end ([`ShardableApp::reduce`]). Returns the number
+    /// of events dispatched. Deterministic: thread scheduling cannot
+    /// affect the result (boundary merges are canonically ordered).
+    pub fn run_app<A: ShardableApp>(&mut self, app: &mut A) -> u64 {
+        let n = self.drive(app, Time::MAX);
+        // Re-synchronize the shard clocks at the global quiescence
+        // instant: each shard stopped at its *own* last event, and a
+        // driver call between runs must stamp/schedule against the same
+        // clock the serial engine would (its single clock sits at the
+        // global last event).
+        let t = self.now();
+        for sh in &mut self.shards {
+            sh.sim.advance_to(t);
+        }
+        n
+    }
+
+    /// Parity with [`Network::run_until`]: dispatch everything at or
+    /// before `deadline`, then advance every shard's clock to
+    /// `deadline` (events past it stay queued). Engine-agnostic
+    /// drivers can step either engine through identical deadlines.
+    pub fn run_until_app<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        let n = self.drive(app, deadline);
+        for sh in &mut self.shards {
+            sh.sim.catch_up_to(deadline);
+        }
+        n
+    }
+
+    /// Parity with [`Network::run_window`]: dispatch everything at or
+    /// before `deadline` without advancing the clock past the last
+    /// event (the global clock ends at the last dispatched event, as
+    /// the serial engine's would).
+    pub fn run_window_app<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        let n = self.drive(app, deadline);
+        let t = self.now();
+        for sh in &mut self.shards {
+            sh.sim.advance_to(t);
+        }
+        n
+    }
+
+    /// Partition `app`, run the bounded epoch loop, reduce.
+    fn drive<A: ShardableApp>(&mut self, app: &mut A, deadline: Time) -> u64 {
+        let owner = self.owner.clone();
+        let mut parts: Vec<A> = (0..self.shards.len())
+            .map(|i| app.partition(i as u32, owner.as_slice()))
+            .collect();
+        let n = self.run_epochs(&mut parts, deadline);
+        for p in parts {
+            app.reduce(p);
+        }
+        n
+    }
+
+    /// The bounded-lag epoch loop: drive `apps[i]` on shard `i` through
+    /// lockstep windows — with solo-shard sprints when only one shard
+    /// has work (module docs, "Adaptive epoch batching") — until global
+    /// quiescence or `deadline`. Events after `deadline` stay queued;
+    /// clocks are left at each shard's last event (callers
+    /// re-synchronize).
+    fn run_epochs<A: App + Send>(&mut self, apps: &mut [A], deadline: Time) -> u64 {
+        debug_assert_eq!(apps.len(), self.shards.len());
         let started: u64 = self.dispatched();
         let nshards = self.shards.len();
         let lookahead = self.lookahead;
         let Some(first) = self.shards.iter().filter_map(|s| s.sim.peek_time()).min() else {
             return 0;
         };
+        if first > deadline {
+            return 0;
+        }
         let init_window = first / lookahead;
 
         // Balanced chunks: `workers` is already clamped to the shard
@@ -338,7 +493,15 @@ impl ShardedNetwork {
         let rem = nshards % nchunks;
         let barrier = Barrier::new(nchunks);
         let mailboxes: Vec<Mailbox> = (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
-        let peeks: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(u64::MAX)).collect();
+        // Next-pending-event time per shard, pre-filled so the first
+        // iteration can already detect a solo shard. Between the
+        // phase-B barrier and the next phase B these are stable (the
+        // next store is two barriers ahead of any reader).
+        let peeks: Vec<AtomicU64> = self
+            .shards
+            .iter()
+            .map(|s| AtomicU64::new(s.sim.peek_time().unwrap_or(u64::MAX)))
+            .collect();
         // Earliest epoch window in which a worker panicked (u64::MAX =
         // none). Epoch-tagged rather than a plain flag: a fast worker
         // may already be in window k+1 when it panics, and workers
@@ -348,27 +511,58 @@ impl ShardedNetwork {
         // its peers already abandoned).
         let abort_at = AtomicU64::new(u64::MAX);
 
+        // Exactly-one-shard-pending detection over the published peeks:
+        // every worker reads the same values, so every worker reaches
+        // the same verdict — no coordination beyond the barriers.
+        let solo_shard = |peeks: &[AtomicU64]| -> Option<usize> {
+            let mut solo = None;
+            for (i, p) in peeks.iter().enumerate() {
+                if p.load(Ordering::SeqCst) != u64::MAX {
+                    if solo.is_some() {
+                        return None;
+                    }
+                    solo = Some(i);
+                }
+            }
+            solo
+        };
+
         std::thread::scope(|scope| {
             let mut rest: &mut [Network] = &mut self.shards;
+            let mut rest_apps: &mut [A] = apps;
             for ci in 0..nchunks {
                 let take = base + usize::from(ci < rem);
                 let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
                 rest = tail;
+                let (apps_chunk, apps_tail) = std::mem::take(&mut rest_apps).split_at_mut(take);
+                rest_apps = apps_tail;
                 let barrier = &barrier;
                 let mailboxes = &mailboxes;
                 let peeks = &peeks;
                 let abort_at = &abort_at;
+                let solo_shard = &solo_shard;
                 scope.spawn(move || {
-                    let mut app = NullApp;
                     let mut window = init_window;
+                    let mut solo = solo_shard(peeks);
                     loop {
-                        let deadline = (window + 1) * lookahead - 1;
-                        // Phase A: advance own shards through the
-                        // window and post boundary events.
+                        let win_deadline =
+                            ((window + 1).saturating_mul(lookahead) - 1).min(deadline);
+                        // Phase A: advance own shards through the window
+                        // (a lone shard sprints past it barrier-free —
+                        // until its first boundary export) and post
+                        // boundary events.
                         let ra = catch_unwind(AssertUnwindSafe(|| {
-                            for net in chunk.iter_mut() {
-                                net.run_window(&mut app, deadline);
+                            for (net, app) in chunk.iter_mut().zip(apps_chunk.iter_mut()) {
                                 let sid = net.shard_id();
+                                if solo == Some(sid as usize) {
+                                    net.run_exclusive(app, deadline);
+                                    // Windows the sprint coalesced (its
+                                    // first event was in `window`).
+                                    let w_end = net.sim.now() / lookahead;
+                                    net.metrics.windows_merged += w_end.saturating_sub(window);
+                                } else {
+                                    net.run_window(app, win_deadline);
+                                }
                                 for (dst, msg) in net.take_outbox() {
                                     mailboxes[dst as usize].lock().unwrap().push((sid, msg));
                                 }
@@ -417,31 +611,24 @@ impl ShardedNetwork {
                             }
                             break;
                         }
-                        // Every worker derives the same next window.
-                        // (peeks are stable here: the next write happens
-                        // in the next phase B, behind the next barrier.)
+                        // Every worker derives the same next window and
+                        // the same solo verdict. (peeks are stable here:
+                        // the next write happens in the next phase B,
+                        // behind the next barrier.)
                         let min = peeks
                             .iter()
                             .map(|p| p.load(Ordering::SeqCst))
                             .min()
                             .unwrap_or(u64::MAX);
-                        if min == u64::MAX {
+                        if min == u64::MAX || min > deadline {
                             break;
                         }
                         window = min / lookahead;
+                        solo = solo_shard(peeks);
                     }
                 });
             }
         });
-        // Re-synchronize the shard clocks at the global quiescence
-        // instant: each shard stopped at its *own* last event, and a
-        // driver call between runs must stamp/schedule against the same
-        // clock the serial engine would (its single clock sits at the
-        // global last event).
-        let t = self.now();
-        for sh in &mut self.shards {
-            sh.sim.advance_to(t);
-        }
         self.dispatched() - started
     }
 }
@@ -475,7 +662,11 @@ mod tests {
         let mut st = serial.take_trace();
         st.sort_unstable();
         assert_eq!(st, sharded.take_trace(), "delivery traces differ ({preset:?})");
-        assert_eq!(serial.metrics, sharded.metrics(), "metrics differ ({preset:?})");
+        assert_eq!(
+            serial.metrics.fabric_view(),
+            sharded.metrics().fabric_view(),
+            "metrics differ ({preset:?})"
+        );
         assert_eq!(serial.now(), sharded.now(), "final clocks differ ({preset:?})");
         assert_eq!(sharded.live_packets(), 0, "arena leak");
     }
@@ -507,7 +698,7 @@ mod tests {
         let sh = sharded.take_trace();
         assert_eq!(sh.len(), 1728, "broadcast must reach every node once");
         assert_eq!(st, sh);
-        assert_eq!(serial.metrics, sharded.metrics());
+        assert_eq!(serial.metrics.fabric_view(), sharded.metrics().fabric_view());
         assert_eq!(serial.now(), sharded.now());
     }
 
@@ -516,5 +707,44 @@ mod tests {
         let mut sharded = ShardedNetwork::new(SystemConfig::card(), 1);
         assert_eq!(sharded.run_to_quiescence(), 0);
         assert_eq!(sharded.now(), 0);
+    }
+
+    #[test]
+    fn single_shard_run_merges_all_windows() {
+        // One shard is always solo: the whole run is one exclusive
+        // sprint, and every lockstep window past the first is counted
+        // as merged.
+        let mut net = ShardedNetwork::new(SystemConfig::card(), 1);
+        net.send_directed(NodeId(0), NodeId(26), Proto::Raw { tag: 0 }, Payload::Synthetic(64));
+        net.run_to_quiescence();
+        let merged = net.metrics().windows_merged;
+        assert!(merged > 0, "six-hop flight spans several 684 ns windows");
+        // The flight takes > merged * lookahead ns by construction.
+        assert!(net.now() / net.lookahead() >= merged);
+    }
+
+    #[test]
+    fn sparse_cross_cage_traffic_merges_windows_and_stays_identical() {
+        // A single packet crossing all four cages: the owning shard
+        // sprints between boundary hops instead of pacing every 684 ns
+        // window, and the result is still byte-identical to serial.
+        let mut serial = Network::new(SystemConfig::inc9000());
+        serial.enable_trace();
+        let mut sharded = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+        sharded.enable_trace();
+        let (src, dst) = (NodeId(0), NodeId(1727));
+        serial.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::Synthetic(256));
+        sharded.send_directed(src, dst, Proto::Raw { tag: 0 }, Payload::Synthetic(256));
+        serial.run_to_quiescence(&mut NullApp);
+        sharded.run_to_quiescence();
+        let mut st = serial.take_trace();
+        st.sort_unstable();
+        assert_eq!(st, sharded.take_trace());
+        assert_eq!(serial.metrics.fabric_view(), sharded.metrics().fabric_view());
+        assert_eq!(serial.now(), sharded.now());
+        assert!(
+            sharded.metrics().windows_merged > 0,
+            "sparse traffic should coalesce windows"
+        );
     }
 }

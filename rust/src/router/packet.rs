@@ -131,6 +131,12 @@ pub struct Packet {
     pub hops: u32,
     /// Remaining multicast destinations (None for unicast/broadcast).
     pub mcast: Option<std::sync::Arc<Vec<NodeId>>>,
+    /// For `Proto::Ethernet`: the in-flight frame, owned by the packet
+    /// itself so internal-Ethernet traffic can cross shard boundaries
+    /// (the packet moves between per-shard arenas *by value*; a
+    /// transmit-side side table could not follow it). Boxed to keep the
+    /// arena slot small; `None` for every other protocol.
+    pub eth_frame: Option<Box<crate::channels::ethernet::EthFrame>>,
 }
 
 impl Packet {
@@ -156,6 +162,7 @@ impl Packet {
             seq: 0,
             hops: 0,
             mcast: None,
+            eth_frame: None,
         }
     }
 }

@@ -171,6 +171,17 @@ impl<E> Sim<E> {
         debug_assert!(t >= self.now);
         self.now = t;
     }
+
+    /// Advance the clock to `t` if it is ahead; no-op otherwise. The
+    /// tolerant form engine-agnostic drivers use
+    /// ([`crate::network::Fabric::advance_to`]): a deadline that has
+    /// already passed is not an error, unlike [`Sim::advance_to`].
+    #[inline]
+    pub fn catch_up_to(&mut self, t: Time) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -221,6 +232,17 @@ mod tests {
         assert_eq!(sim.pop(), Some((100, 2)));
         assert_eq!(sim.pop(), Some((100, 3)));
         assert_eq!(sim.now(), 100);
+    }
+
+    #[test]
+    fn catch_up_to_never_rewinds() {
+        let mut sim: Sim<u8> = Sim::new();
+        sim.at(100, 1);
+        sim.pop();
+        sim.catch_up_to(50); // behind: no-op
+        assert_eq!(sim.now(), 100);
+        sim.catch_up_to(150);
+        assert_eq!(sim.now(), 150);
     }
 
     #[test]

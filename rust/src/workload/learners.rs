@@ -15,7 +15,7 @@
 //! at the end. The measured quantity is the makespan of a time step:
 //! compute + residual communication tail.
 
-use crate::network::{App, Network};
+use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
 
@@ -40,6 +40,11 @@ pub struct LearnerConfig {
     /// Compute window per step (FPGA time), ns.
     pub compute_ns: Time,
     pub steps: u32,
+    /// Node-index stride when selecting learners (1 = the first
+    /// `learners` nodes). A stride spreads the grid across cards and
+    /// cages, which is how the workload exercises the sharded engine's
+    /// cross-boundary path.
+    pub stride: usize,
 }
 
 impl Default for LearnerConfig {
@@ -50,12 +55,13 @@ impl Default for LearnerConfig {
             record_bytes: 64,
             compute_ns: 50_000,
             steps: 4,
+            stride: 1,
         }
     }
 }
 
 /// Per-step result.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StepStats {
     pub makespan: Time,
     pub records: u64,
@@ -78,9 +84,23 @@ impl App for LearnerApp {
     }
 }
 
-/// Run the workload; returns per-step stats.
-pub fn run(net: &mut Network, cfg: LearnerConfig, strategy: SendStrategy) -> Vec<StepStats> {
-    let nodes: Vec<NodeId> = net.topo.nodes().take(cfg.learners).collect();
+impl ShardableApp for LearnerApp {
+    fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
+        LearnerApp { expected: 0, received: 0 }
+    }
+    fn reduce(&mut self, part: Self) {
+        self.received += part.received;
+    }
+}
+
+/// Run the workload on either engine; returns per-step stats.
+pub fn run<F: Fabric>(
+    net: &mut F,
+    cfg: LearnerConfig,
+    strategy: SendStrategy,
+) -> Vec<StepStats> {
+    let nodes: Vec<NodeId> =
+        net.topo().nodes().step_by(cfg.stride.max(1)).take(cfg.learners).collect();
     assert!(nodes.len() >= 2, "need at least two learners");
     for &n in &nodes {
         net.pm_open(n, 0);
@@ -108,13 +128,11 @@ pub fn run(net: &mut Network, cfg: LearnerConfig, strategy: SendStrategy) -> Vec
             }
         }
         let mut app = LearnerApp { expected: records, received: 0 };
-        net.run_to_quiescence(&mut app);
+        net.run(&mut app);
         assert_eq!(app.received, app.expected, "lost learner records");
         // The step ends when compute is done AND all records landed.
         let end = net.now().max(t0 + cfg.compute_ns);
-        if end > net.now() {
-            net.sim.advance_to(end);
-        }
+        net.advance_to(end);
         out.push(StepStats { makespan: end - t0, records });
     }
     out
@@ -122,31 +140,16 @@ pub fn run(net: &mut Network, cfg: LearnerConfig, strategy: SendStrategy) -> Vec
 
 /// Deferred Postmaster send: the record enters the fabric at its
 /// production instant `at` (which is how "send as generated" overlaps
-/// communication with the compute window).
-fn schedule_pm_send(net: &mut Network, at: Time, src: NodeId, dst: NodeId, data: Vec<u8>) {
-    debug_assert!(at >= net.now());
-    let queue = 0u8;
-    let max = (net.cfg.link.mtu - crate::router::HEADER_BYTES) as usize;
-    assert!(data.len() <= max);
-    let id = net.next_packet_id();
-    let mut pkt = crate::router::Packet::new(
-        id,
-        src,
-        dst,
-        crate::router::RouteKind::Directed,
-        crate::router::Proto::Postmaster { queue },
-        crate::router::Payload::bytes(data),
-        at,
-    );
-    pkt.injected_at = at;
-    let delay = net.cfg.arm.postmaster_enqueue + net.cfg.link.inject_latency;
-    net.metrics.packets_injected += 1;
-    net.inject_at(at + delay, pkt);
+/// communication with the compute window). [`Fabric::pm_send_at`]
+/// carries the whole recipe — per-node id, enqueue + injection
+/// overheads, metrics.
+fn schedule_pm_send<F: Fabric>(net: &mut F, at: Time, src: NodeId, dst: NodeId, data: Vec<u8>) {
+    net.pm_send_at(at, src, dst, 0, data);
 }
 
 /// Paper-shape check: streamed beats aggregated, and the advantage is
 /// the communication tail hidden under compute.
-pub fn overlap_advantage(net_factory: impl Fn() -> Network, cfg: LearnerConfig) -> (f64, f64) {
+pub fn overlap_advantage<F: Fabric>(net_factory: impl Fn() -> F, cfg: LearnerConfig) -> (f64, f64) {
     let mut a = net_factory();
     let streamed = run(&mut a, cfg, SendStrategy::Streamed);
     let mut b = net_factory();

@@ -13,8 +13,8 @@
 //! deterministic and the optimum is known — the search must actually
 //! find it (tested below).
 
-use crate::network::{App, Network};
 use crate::channels::postmaster::PmRecord;
+use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
 
@@ -73,6 +73,13 @@ struct TreeNode {
 }
 
 /// Leader + worker state for the distributed search.
+///
+/// As a [`ShardableApp`], the state is leader-owned: the tree, the
+/// pending-task map and the rollout counter only ever mutate in
+/// callbacks at the leader node, so exactly one sharded partition (the
+/// one owning the leader) carries them and reduction adopts that
+/// partition wholesale. Worker callbacks are pure functions of the
+/// task record plus the read-only `game`.
 pub struct DistributedMcts {
     pub game: Game,
     leader: NodeId,
@@ -90,6 +97,10 @@ pub struct DistributedMcts {
     pub rollout_ns: Time,
     /// Max outstanding tasks per worker.
     pub pipeline_depth: u32,
+    /// Whether this instance (or partition) owns the leader's state —
+    /// true for the parent app; among sharded partitions, true exactly
+    /// for the shard owning the leader node.
+    owns_leader: bool,
 }
 
 /// Result of a search run.
@@ -104,7 +115,7 @@ pub struct MctsResult {
 }
 
 impl DistributedMcts {
-    pub fn new(net: &mut Network, game: Game, leader: NodeId, workers: Vec<NodeId>) -> Self {
+    pub fn new<F: Fabric>(net: &mut F, game: Game, leader: NodeId, workers: Vec<NodeId>) -> Self {
         assert!(!workers.is_empty());
         net.pm_open(leader, PM_RESULT_Q);
         for &w in &workers {
@@ -123,11 +134,13 @@ impl DistributedMcts {
             rollouts_target: 0,
             rollout_ns: 20_000,
             pipeline_depth: 4,
+            owns_leader: true,
         }
     }
 
-    /// Run `rollouts` rollouts and return the best action path found.
-    pub fn search(mut self, net: &mut Network, rollouts: u64) -> MctsResult {
+    /// Run `rollouts` rollouts (on either engine) and return the best
+    /// action path found.
+    pub fn search<F: Fabric>(mut self, net: &mut F, rollouts: u64) -> MctsResult {
         let t0 = net.now();
         self.rollouts_target = rollouts;
         // Prime every worker's pipeline.
@@ -138,7 +151,7 @@ impl DistributedMcts {
                 }
             }
         }
-        net.run_to_quiescence(&mut self);
+        net.run(&mut self);
         assert_eq!(self.rollouts_done, rollouts, "lost rollouts");
         // Extract the visit-greedy path.
         let mut best_path = Vec::new();
@@ -208,8 +221,11 @@ impl DistributedMcts {
         }
     }
 
-    /// Issue one rollout task to worker `w` over Postmaster.
-    fn dispatch(&mut self, net: &mut Network, w: usize) {
+    /// Issue one rollout task to worker `w` over Postmaster. Called at
+    /// kickoff (driver context) and from result callbacks at the leader
+    /// (app context); [`Fabric::pm_send_at`]'s per-node ids make both
+    /// engine-agnostic.
+    fn dispatch<F: Fabric>(&mut self, net: &mut F, w: usize) {
         let idx = self.select_expand();
         let nonce = self.next_nonce;
         self.next_nonce += 1;
@@ -219,7 +235,8 @@ impl DistributedMcts {
         let mut data = nonce.to_le_bytes().to_vec();
         data.extend((w as u64).to_le_bytes());
         data.extend(self.paths[idx].iter().flat_map(|a| a.to_le_bytes()));
-        net.pm_send(self.leader, self.workers[w], PM_TASK_Q, data);
+        let now = net.now();
+        net.pm_send_at(now, self.leader, self.workers[w], PM_TASK_Q, data);
     }
 
     fn backup(&mut self, idx: usize, value: f64) {
@@ -261,7 +278,7 @@ impl App for DistributedMcts {
                 // Reply after the rollout compute window.
                 let leader = self.leader;
                 let at = net.now() + self.rollout_ns;
-                schedule_pm_reply(net, at, node, leader, PM_RESULT_Q, data);
+                net.pm_send_at(at, node, leader, PM_RESULT_Q, data);
             }
             PM_RESULT_Q => {
                 // Leader: backup + keep the worker's pipeline full.
@@ -282,28 +299,38 @@ impl App for DistributedMcts {
     }
 }
 
-fn schedule_pm_reply(
-    net: &mut Network,
-    at: Time,
-    src: NodeId,
-    dst: NodeId,
-    queue: u8,
-    data: Vec<u8>,
-) {
-    let id = net.next_packet_id();
-    let mut pkt = crate::router::Packet::new(
-        id,
-        src,
-        dst,
-        crate::router::RouteKind::Directed,
-        crate::router::Proto::Postmaster { queue },
-        crate::router::Payload::bytes(data),
-        at,
-    );
-    pkt.injected_at = at;
-    let delay = net.cfg.arm.postmaster_enqueue + net.cfg.link.inject_latency;
-    net.metrics.packets_injected += 1;
-    net.inject_at(at + delay, pkt);
+impl ShardableApp for DistributedMcts {
+    fn partition(&self, shard: u32, owner: &[u32]) -> Self {
+        DistributedMcts {
+            game: self.game,
+            leader: self.leader,
+            workers: self.workers.clone(),
+            arena: self.arena.clone(),
+            paths: self.paths.clone(),
+            inflight: self.inflight.clone(),
+            pending: self.pending.clone(),
+            next_nonce: self.next_nonce,
+            rollouts_done: self.rollouts_done,
+            rollouts_target: self.rollouts_target,
+            rollout_ns: self.rollout_ns,
+            pipeline_depth: self.pipeline_depth,
+            owns_leader: owner[self.leader.0 as usize] == shard,
+        }
+    }
+
+    fn reduce(&mut self, part: Self) {
+        // Leader-owned state: exactly one partition carried it forward;
+        // adopt that one, drop the rest (their clones never mutated —
+        // worker callbacks are stateless). Commutative by uniqueness.
+        if part.owns_leader {
+            self.arena = part.arena;
+            self.paths = part.paths;
+            self.inflight = part.inflight;
+            self.pending = part.pending;
+            self.next_nonce = part.next_nonce;
+            self.rollouts_done = part.rollouts_done;
+        }
+    }
 }
 
 /// Convenience: run a search with `k` workers on a fresh card.

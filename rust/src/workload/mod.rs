@@ -12,6 +12,13 @@
 //! * [`mcts`] — distributed Monte Carlo Tree Search, the intro's example
 //!   of an algorithm ill-suited to SIMD hardware: a leader node expands
 //!   a UCB tree and farms rollouts to workers over Postmaster (E9).
+//!
+//! Every workload is written against the engine-agnostic
+//! [`crate::network::Fabric`] trait and implements
+//! [`crate::network::ShardableApp`], so it runs unmodified — and
+//! byte-identically — on the serial engine or the bounded-lag parallel
+//! engine (`repro <workload> --shards K`;
+//! `tests/sharded_differential.rs`).
 
 pub mod learners;
 pub mod mcts;

@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::coordinator::collectives::{mean_reduce, RingAllreduce};
 use crate::coordinator::Placement;
-use crate::network::Network;
+use crate::network::Fabric;
 use crate::runtime::Runtime;
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -98,10 +98,63 @@ pub fn gen_batch(
     (x, y)
 }
 
+/// One training step's *fabric* side: close the compute window (all
+/// ranks compute in parallel), then all-reduce `grad_bytes` over the
+/// mesh. Shared by [`train`] and [`train_comm`]; returns the step's
+/// communication makespan.
+fn step_comm<F: Fabric>(net: &mut F, ranks: &[NodeId], grad_bytes: u64, compute_ns: Time) -> Time {
+    let t_compute_done = net.now() + compute_ns;
+    net.advance_to(t_compute_done);
+    if ranks.len() >= 2 {
+        RingAllreduce::new(net, ranks.to_vec(), grad_bytes).run(net).makespan
+    } else {
+        0
+    }
+}
+
+/// The communication/time shape of a training run, with the numerics
+/// replaced by fixed sizes — runnable on the stub runtime, on either
+/// engine. This is what the serial↔sharded training differential and
+/// the app-workload bench exercise; [`train`] layers the real PJRT
+/// numerics on the same per-step fabric path.
+#[derive(Debug, Clone)]
+pub struct CommShape {
+    pub ranks: usize,
+    pub steps: u32,
+    pub grad_bytes: u64,
+    /// Per-rank compute window per step, ns.
+    pub compute_ns: Time,
+    pub placement: Placement,
+}
+
+/// Result of a [`train_comm`] run (virtual-time split only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommReport {
+    pub vtime_total: Time,
+    pub vtime_compute: Time,
+    pub vtime_comm: Time,
+}
+
+/// Run the training communication shape (no numerics; see
+/// [`CommShape`]).
+pub fn train_comm<F: Fabric>(net: &mut F, shape: &CommShape) -> CommReport {
+    let ranks: Vec<NodeId> = shape.placement.select(net.topo(), shape.ranks);
+    let t_start = net.now();
+    let mut vtime_comm: Time = 0;
+    for _ in 0..shape.steps {
+        vtime_comm += step_comm(net, &ranks, shape.grad_bytes, shape.compute_ns);
+    }
+    CommReport {
+        vtime_total: net.now() - t_start,
+        vtime_compute: shape.compute_ns * shape.steps as Time,
+        vtime_comm,
+    }
+}
+
 /// Run data-parallel training; `rt` must contain `init`/`grad`/`apply`
 /// entry points (see `python/compile/aot.py`).
-pub fn train(net: &mut Network, rt: &Runtime, cfg: &TrainConfig) -> Result<TrainReport> {
-    let ranks: Vec<NodeId> = cfg.placement.select(&net.topo, cfg.ranks);
+pub fn train<F: Fabric>(net: &mut F, rt: &Runtime, cfg: &TrainConfig) -> Result<TrainReport> {
+    let ranks: Vec<NodeId> = cfg.placement.select(net.topo(), cfg.ranks);
     let grad_ep = rt.entry("grad")?.clone();
     // Input layout of `grad`: params..., x, y. Outputs: loss, grads...
     let n_params = grad_ep.inputs.len() - 2;
@@ -152,21 +205,15 @@ pub fn train(net: &mut Network, rt: &Runtime, cfg: &TrainConfig) -> Result<Train
             losses.push(out.remove(0)[0]);
             grads.push(out);
         }
-        let t_compute_done = net.now() + compute_ns;
-        net.sim.advance_to(t_compute_done);
-        vtime_compute += compute_ns;
-
         // 2. All-reduce the gradients: arithmetic here, traffic on the
-        //    fabric.
+        //    fabric (after the compute window closes).
         let mut mean_grads = Vec::with_capacity(n_params);
         for p in 0..n_params {
             let per_rank: Vec<Vec<f32>> = grads.iter().map(|g| g[p].clone()).collect();
             mean_grads.push(mean_reduce(per_rank));
         }
-        if ranks.len() >= 2 {
-            let stats = RingAllreduce::new(net, ranks.clone(), grad_bytes).run(net);
-            vtime_comm += stats.makespan;
-        }
+        vtime_compute += compute_ns;
+        vtime_comm += step_comm(net, &ranks, grad_bytes, compute_ns);
 
         // 3. Replicated SGD update.
         let mut inputs = params;

@@ -1,90 +1,37 @@
 //! Serial ↔ sharded equivalence: the bounded-lag per-cage parallel
 //! engine must be **byte-identical** to the serial engine — same
-//! delivery trace, same metrics (including latency histograms), same
-//! final clock — on randomized seeded traffic mixes that include
-//! broadcast and multicast crossing cage boundaries, Bridge FIFO,
-//! Postmaster and NetTunnel traffic, on all three presets.
+//! delivery trace, same metrics (fabric view; engine-level counters
+//! like `windows_merged` are excluded by definition), same final clock
+//! — on randomized seeded traffic mixes that include broadcast and
+//! multicast crossing cage boundaries, Bridge FIFO, Postmaster,
+//! NetTunnel **and internal Ethernet** traffic, on all three presets.
+//!
+//! Since the engine-agnostic [`Fabric`] refactor the same contract
+//! extends to *workloads*: distributed learners, MCTS, the ring
+//! all-reduce and the training communication shape run unmodified on
+//! either engine and must produce identical app-level results on top
+//! of identical traces.
 //!
 //! The serial engine is the oracle; failures print the (preset, seed).
 
 use inc_sim::config::{SystemConfig, SystemPreset};
+use inc_sim::coordinator::{Placement, RingAllreduce};
 use inc_sim::network::sharded::ShardedNetwork;
-use inc_sim::network::{Delivery, Network, NullApp};
+use inc_sim::network::{Delivery, Fabric, Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
-
-/// The injection surface shared by both engines, so one generator
-/// drives both with an identical call sequence.
-trait Driver {
-    fn directed(&mut self, src: NodeId, dst: NodeId, payload: Payload);
-    fn broadcast(&mut self, src: NodeId, payload: Payload);
-    fn multicast(&mut self, src: NodeId, dsts: &[NodeId], payload: Payload);
-    fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8);
-    fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]);
-    fn pm_open(&mut self, target: NodeId, queue: u8);
-    fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>);
-    fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64);
-}
-
-impl Driver for Network {
-    fn directed(&mut self, src: NodeId, dst: NodeId, payload: Payload) {
-        self.send_directed(src, dst, Proto::Raw { tag: 0 }, payload);
-    }
-    fn broadcast(&mut self, src: NodeId, payload: Payload) {
-        self.send_broadcast(src, Proto::Raw { tag: 1 }, payload);
-    }
-    fn multicast(&mut self, src: NodeId, dsts: &[NodeId], payload: Payload) {
-        self.send_multicast(src, dsts, Proto::Raw { tag: 2 }, payload);
-    }
-    fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8) {
-        Network::fifo_connect(self, src, dst, channel, 64);
-    }
-    fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
-        Network::fifo_send(self, src, channel, words);
-    }
-    fn pm_open(&mut self, target: NodeId, queue: u8) {
-        Network::pm_open(self, target, queue);
-    }
-    fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
-        Network::pm_send(self, src, target, queue, data);
-    }
-    fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
-        Network::tunnel_write(self, src, dst, addr, value);
-    }
-}
-
-impl Driver for ShardedNetwork {
-    fn directed(&mut self, src: NodeId, dst: NodeId, payload: Payload) {
-        self.send_directed(src, dst, Proto::Raw { tag: 0 }, payload);
-    }
-    fn broadcast(&mut self, src: NodeId, payload: Payload) {
-        self.send_broadcast(src, Proto::Raw { tag: 1 }, payload);
-    }
-    fn multicast(&mut self, src: NodeId, dsts: &[NodeId], payload: Payload) {
-        self.send_multicast(src, dsts, Proto::Raw { tag: 2 }, payload);
-    }
-    fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8) {
-        ShardedNetwork::fifo_connect(self, src, dst, channel, 64);
-    }
-    fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
-        ShardedNetwork::fifo_send(self, src, channel, words);
-    }
-    fn pm_open(&mut self, target: NodeId, queue: u8) {
-        ShardedNetwork::pm_open(self, target, queue);
-    }
-    fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
-        ShardedNetwork::pm_send(self, src, target, queue, data);
-    }
-    fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
-        ShardedNetwork::tunnel_write(self, src, dst, addr, value);
-    }
-}
+use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
+use inc_sim::workload::mcts::{DistributedMcts, Game};
+use inc_sim::workload::training::{train_comm, CommShape};
 
 /// Inject a seeded mixed workload: directed packets of varied sizes,
 /// broadcasts and sprawling multicasts (both cross cage boundaries on
-/// Inc9000), FIFO streams, Postmaster records, tunnel writes.
-fn inject_mix(d: &mut dyn Driver, nodes: u32, seed: u64, count: u32) {
+/// Inc9000), FIFO streams, Postmaster records, tunnel writes, Ethernet
+/// frames. One generic generator drives both engines through the
+/// [`Fabric`] trait with an identical call sequence — no engine
+/// special-casing anywhere.
+fn inject_mix<F: Fabric>(d: &mut F, nodes: u32, seed: u64, count: u32) {
     let mut rng = SplitMix64::new(seed);
     let node = |rng: &mut SplitMix64| NodeId(rng.gen_range(nodes as usize) as u32);
     let far_pair = |rng: &mut SplitMix64| {
@@ -99,47 +46,70 @@ fn inject_mix(d: &mut dyn Driver, nodes: u32, seed: u64, count: u32) {
     // (guaranteed cross-shard on every sharded preset).
     let fifo_src = NodeId(0);
     let fifo_dst = NodeId(nodes - 1);
-    d.fifo_connect(fifo_src, fifo_dst, 0);
+    d.fifo_connect(fifo_src, fifo_dst, 0, 64);
     d.pm_open(NodeId(nodes / 2), 0);
 
     for i in 0..count {
         match rng.gen_range(100) {
-            0..=59 => {
+            0..=54 => {
                 let (src, dst) = far_pair(&mut rng);
                 let payload = match rng.gen_range(3) {
                     0 => Payload::Empty,
                     1 => Payload::Synthetic(16 + rng.gen_range(1000) as u32),
                     _ => Payload::bytes(vec![i as u8; 1 + rng.gen_range(512)]),
                 };
-                d.directed(src, dst, payload);
+                d.send_directed(src, dst, Proto::Raw { tag: 0 }, payload);
             }
-            60..=69 => {
+            55..=64 => {
                 let words: Vec<u64> = (0..1 + rng.gen_range(40)).map(|w| w as u64).collect();
                 d.fifo_send(fifo_src, 0, &words);
             }
-            70..=79 => {
+            65..=74 => {
                 let src = node(&mut rng);
                 if src != NodeId(nodes / 2) {
                     d.pm_send(src, NodeId(nodes / 2), 0, vec![i as u8; 1 + rng.gen_range(100)]);
                 }
             }
-            80..=89 => {
+            75..=84 => {
                 let dsts: Vec<NodeId> = (0..2 + rng.gen_range(6))
                     .map(|_| node(&mut rng))
                     .collect::<std::collections::BTreeSet<_>>()
                     .into_iter()
                     .collect();
-                d.multicast(node(&mut rng), &dsts, Payload::Synthetic(64));
+                let src = node(&mut rng);
+                d.send_multicast(src, &dsts, Proto::Raw { tag: 2 }, Payload::Synthetic(64));
             }
-            90..=95 => {
+            85..=89 => {
                 let (src, dst) = far_pair(&mut rng);
                 d.tunnel_write(src, dst, 0xF000_0100 + 8 * rng.gen_range(16) as u64, i as u64);
             }
+            90..=95 => {
+                // Internal Ethernet, including cross-shard frames (the
+                // frame rides inside its packet since the Fabric
+                // refactor).
+                let (src, dst) = far_pair(&mut rng);
+                d.eth_send(src, dst, 64 + rng.gen_range(1400) as u32, i as u64);
+            }
             _ => {
-                d.broadcast(node(&mut rng), Payload::Synthetic(128));
+                d.send_broadcast(node(&mut rng), Proto::Raw { tag: 1 }, Payload::Synthetic(128));
             }
         }
     }
+}
+
+/// Assert every observable of two finished engines matches: sorted
+/// delivery trace, fabric-view metrics, final clock.
+fn assert_same_outcome<A: Fabric, B: Fabric>(serial: &mut A, sharded: &mut B, ctx: &str) {
+    let st: Vec<Delivery> = serial.take_trace();
+    let sh = sharded.take_trace();
+    assert_eq!(st.len(), sh.len(), "{ctx}: delivery counts differ");
+    assert_eq!(st, sh, "{ctx}: delivery traces differ");
+    assert_eq!(
+        serial.metrics().fabric_view(),
+        sharded.metrics().fabric_view(),
+        "{ctx}: metrics differ"
+    );
+    assert_eq!(serial.now(), sharded.now(), "{ctx}: final clocks differ");
 }
 
 /// Run the same mix through both engines and compare everything.
@@ -147,27 +117,17 @@ fn assert_equivalent(preset: SystemPreset, shards: u32, seed: u64, count: u32) {
     let nodes = preset.node_count();
 
     let mut serial = Network::new(SystemConfig::new(preset));
-    serial.enable_trace();
+    Fabric::enable_trace(&mut serial);
     inject_mix(&mut serial, nodes, seed, count);
     serial.run_to_quiescence(&mut NullApp);
-    let mut serial_trace: Vec<Delivery> = serial.take_trace();
-    serial_trace.sort_unstable();
 
     let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), shards);
     sharded.enable_trace();
     inject_mix(&mut sharded, nodes, seed, count);
     sharded.run_to_quiescence();
-    let sharded_trace = sharded.take_trace();
 
     let ctx = format!("{preset:?} shards={} seed={seed}", sharded.shard_count());
-    assert_eq!(
-        serial_trace.len(),
-        sharded_trace.len(),
-        "{ctx}: delivery counts differ"
-    );
-    assert_eq!(serial_trace, sharded_trace, "{ctx}: delivery traces differ");
-    assert_eq!(serial.metrics, sharded.metrics(), "{ctx}: metrics differ");
-    assert_eq!(serial.now(), sharded.now(), "{ctx}: final clocks differ");
+    assert_same_outcome(&mut serial, &mut sharded, &ctx);
     assert_eq!(sharded.live_packets(), 0, "{ctx}: arena leak");
 }
 
@@ -205,7 +165,7 @@ fn injection_between_runs_matches_serial() {
     let nodes = preset.node_count();
 
     let mut serial = Network::new(SystemConfig::new(preset));
-    serial.enable_trace();
+    Fabric::enable_trace(&mut serial);
     let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), 4);
     sharded.enable_trace();
 
@@ -226,11 +186,7 @@ fn injection_between_runs_matches_serial() {
     serial.run_to_quiescence(&mut NullApp);
     sharded.run_to_quiescence();
 
-    let mut st = serial.take_trace();
-    st.sort_unstable();
-    assert_eq!(st, sharded.take_trace(), "two-phase traces differ");
-    assert_eq!(serial.metrics, sharded.metrics(), "two-phase metrics differ");
-    assert_eq!(serial.now(), sharded.now(), "two-phase clocks differ");
+    assert_same_outcome(&mut serial, &mut sharded, "two-phase");
 }
 
 #[test]
@@ -242,13 +198,16 @@ fn sharded_runs_are_reproducible_across_thread_schedules() {
         net.enable_trace();
         inject_mix(&mut net, 1728, 42, 300);
         let events = net.run_to_quiescence();
-        (events, net.now(), net.take_trace())
+        (events, net.now(), net.take_trace(), net.metrics())
     };
-    let (e1, t1, tr1) = run();
-    let (e2, t2, tr2) = run();
+    let (e1, t1, tr1, m1) = run();
+    let (e2, t2, tr2, m2) = run();
     assert_eq!(e1, e2);
     assert_eq!(t1, t2);
     assert_eq!(tr1, tr2);
+    // Including the engine-level counters: window merging is itself
+    // deterministic.
+    assert_eq!(m1, m2);
 }
 
 #[test]
@@ -267,4 +226,184 @@ fn fifo_words_arrive_in_order_across_cage_boundary() {
     net.run_to_quiescence();
     assert_eq!(net.fifo_read(dst, 0, 1000), words);
     assert_eq!(net.live_packets(), 0);
+}
+
+// ---------------------------------------------------------------------
+// run_until / run_window parity: drivers step either engine through
+// identical deadlines without special-casing.
+// ---------------------------------------------------------------------
+
+#[test]
+fn stepped_run_until_matches_serial_at_every_deadline() {
+    let preset = SystemPreset::Inc9000;
+    let nodes = preset.node_count();
+    let mut serial = Network::new(SystemConfig::new(preset));
+    Fabric::enable_trace(&mut serial);
+    let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), 4);
+    sharded.enable_trace();
+    inject_mix(&mut serial, nodes, 31, 200);
+    inject_mix(&mut sharded, nodes, 31, 200);
+
+    let mut deadline = 0u64;
+    loop {
+        deadline += 7_919; // deliberately not window-aligned
+        let es = Fabric::run_until(&mut serial, &mut NullApp, deadline);
+        let eh = Fabric::run_until(&mut sharded, &mut NullApp, deadline);
+        assert_eq!(es, eh, "event counts diverged at deadline {deadline}");
+        assert_eq!(serial.now(), deadline, "serial clock lands on the deadline");
+        assert_eq!(sharded.now(), deadline, "sharded clock lands on the deadline");
+        if es == 0 && eh == 0 && deadline > 1_000_000 {
+            break;
+        }
+        assert!(deadline < 1_000_000_000, "runaway");
+    }
+    assert_same_outcome(&mut serial, &mut sharded, "stepped run_until");
+}
+
+#[test]
+fn run_window_stops_both_engines_at_the_last_event() {
+    let preset = SystemPreset::Inc9000;
+    let mut serial = Network::new(SystemConfig::new(preset));
+    let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), 4);
+    serial.send_directed(NodeId(3), NodeId(1700), Proto::Raw { tag: 0 }, Payload::Synthetic(64));
+    sharded.send_directed(NodeId(3), NodeId(1700), Proto::Raw { tag: 0 }, Payload::Synthetic(64));
+    let deadline = 3_000; // mid-flight
+    Fabric::run_window(&mut serial, &mut NullApp, deadline);
+    Fabric::run_window(&mut sharded, &mut NullApp, deadline);
+    assert_eq!(serial.now(), sharded.now(), "window clocks differ");
+    assert!(serial.now() <= deadline);
+    // Finish the flight; everything still matches.
+    serial.run_to_quiescence(&mut NullApp);
+    sharded.run_to_quiescence();
+    assert_eq!(serial.now(), sharded.now());
+}
+
+// ---------------------------------------------------------------------
+// Workload differentials: the same workload code (via the Fabric
+// trait) on both engines, compared on app-level results *and* fabric
+// observables.
+// ---------------------------------------------------------------------
+
+#[test]
+fn learners_overlap_identical_on_sharded_engine() {
+    // Learner grid strided across all 16 cards of Inc3000: every
+    // neighbor exchange crosses a shard boundary on the per-card
+    // partition.
+    let cfg = LearnerConfig {
+        learners: 32,
+        outputs_per_step: 8,
+        record_bytes: 48,
+        compute_ns: 30_000,
+        steps: 2,
+        stride: 13,
+    };
+    for strategy in [SendStrategy::Streamed, SendStrategy::Aggregated] {
+        let mut serial = Network::inc3000();
+        Fabric::enable_trace(&mut serial);
+        let mut sharded = ShardedNetwork::new(SystemConfig::inc3000(), 16);
+        sharded.enable_trace();
+        let ss = learners::run(&mut serial, cfg, strategy);
+        let sh = learners::run(&mut sharded, cfg, strategy);
+        assert_eq!(ss, sh, "per-step stats differ ({strategy:?})");
+        assert_same_outcome(&mut serial, &mut sharded, &format!("learners {strategy:?}"));
+    }
+}
+
+#[test]
+fn mcts_identical_on_sharded_engine() {
+    // Leader in card 0, workers spread across the Inc3000 mesh: task
+    // and result records cross card-shard boundaries continuously.
+    let game = Game { depth: 5, branching: 3, seed: 11 };
+    let leader = NodeId(0);
+    let workers: Vec<NodeId> = (0..6u32).map(|i| NodeId(31 + i * 67)).collect();
+
+    let mut serial = Network::inc3000();
+    Fabric::enable_trace(&mut serial);
+    let s = DistributedMcts::new(&mut serial, game, leader, workers.clone());
+    let rs = s.search(&mut serial, 500);
+
+    let mut sharded = ShardedNetwork::new(SystemConfig::inc3000(), 16);
+    sharded.enable_trace();
+    let p = DistributedMcts::new(&mut sharded, game, leader, workers);
+    let rp = p.search(&mut sharded, 500);
+
+    assert_eq!(rs.best_path, rp.best_path, "search results differ");
+    assert_eq!(rs.best_value, rp.best_value);
+    assert_eq!(rs.rollouts, rp.rollouts);
+    assert_eq!(rs.makespan, rp.makespan);
+    assert_same_outcome(&mut serial, &mut sharded, "mcts");
+}
+
+#[test]
+fn ring_allreduce_identical_across_cages() {
+    // Ranks scattered across all four Inc9000 cages; every ring step
+    // crosses a cage boundary somewhere.
+    let bytes = 256 * 1024;
+    let mut serial = Network::new(SystemConfig::inc9000());
+    Fabric::enable_trace(&mut serial);
+    let ranks = Placement::Scattered.select(&serial.topo, 8);
+    let ss = RingAllreduce::new(&serial, ranks.clone(), bytes).run(&mut serial);
+
+    let mut sharded = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+    sharded.enable_trace();
+    let sh = RingAllreduce::new(&sharded, ranks, bytes).run(&mut sharded);
+
+    assert_eq!(ss, sh, "collective stats differ");
+    assert_same_outcome(&mut serial, &mut sharded, "ring all-reduce");
+}
+
+#[test]
+fn training_comm_shape_identical_on_sharded_engine() {
+    // The training loop's fabric side (compute windows + per-step ring
+    // all-reduce) under the stub runtime, ranks scattered across cages.
+    let shape = CommShape {
+        ranks: 8,
+        steps: 3,
+        grad_bytes: 64 * 1024,
+        compute_ns: 100_000,
+        placement: Placement::Scattered,
+    };
+    let mut serial = Network::new(SystemConfig::inc9000());
+    Fabric::enable_trace(&mut serial);
+    let rs = train_comm(&mut serial, &shape);
+
+    let mut sharded = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+    sharded.enable_trace();
+    let rp = train_comm(&mut sharded, &shape);
+
+    assert_eq!(rs, rp, "training comm reports differ");
+    assert!(rs.vtime_comm > 0);
+    assert_same_outcome(&mut serial, &mut sharded, "train_comm");
+}
+
+#[test]
+fn ethernet_and_nfs_cross_shard_identical() {
+    // Cross-cage internal Ethernet (frames ride inside packets) plus an
+    // NFS put from the far cage through the cage-0 gateway.
+    let mut serial = Network::new(SystemConfig::inc9000());
+    Fabric::enable_trace(&mut serial);
+    let mut sharded = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+    sharded.enable_trace();
+    let far = NodeId(1700); // cage 3
+    assert_ne!(sharded.shard_of(far), sharded.shard_of(sharded.gateway()));
+
+    // Identical call sequence on both engines.
+    let (a, b) = (NodeId(5), NodeId(1650));
+    serial.eth_send_message(a, b, 100_000, 1);
+    serial.nfs_put(far, "ckpt.bin", 50_000);
+    serial.run_to_quiescence(&mut NullApp);
+    sharded.eth_send_message(a, b, 100_000, 1);
+    sharded.nfs_put(far, "ckpt.bin", 50_000);
+    sharded.run_to_quiescence();
+
+    let fs = serial.eth_read(NodeId(1650));
+    let fh = Fabric::eth_read(&mut sharded, NodeId(1650));
+    assert_eq!(fs, fh, "delivered frames differ");
+    assert_eq!(fs.iter().map(|f| f.bytes as u64).sum::<u64>(), 100_000);
+    assert_eq!(
+        serial.eth.external.files.get("ckpt.bin"),
+        sharded.eth_external().files.get("ckpt.bin"),
+    );
+    assert_eq!(sharded.eth_external().files.get("ckpt.bin"), Some(&50_000));
+    assert_same_outcome(&mut serial, &mut sharded, "ethernet/nfs");
 }
