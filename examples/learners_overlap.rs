@@ -23,7 +23,7 @@ fn main() {
                 record_bytes: bytes,
                 compute_ns: 50_000,
                 steps: 3,
-                stride: 1,
+                ..LearnerConfig::default()
             };
             let (s, a) = overlap_advantage(Network::card, cfg);
             println!(

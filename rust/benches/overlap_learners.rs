@@ -25,7 +25,7 @@ fn main() {
                         record_bytes: bytes,
                         compute_ns: compute_us * 1000,
                         steps: 3,
-                        stride: 1,
+                        ..LearnerConfig::default()
                     };
                     let (s, a) = overlap_advantage(Network::card, cfg);
                     println!(

@@ -11,6 +11,8 @@
 
 mod common;
 
+use inc_sim::channels::ethernet::RxMode;
+use inc_sim::channels::{CommMode, Message};
 use inc_sim::config::SystemConfig;
 use inc_sim::coordinator::{Placement, RingAllreduce};
 use inc_sim::network::sharded::ShardedNetwork;
@@ -246,6 +248,7 @@ fn main() {
         compute_ns: 40_000,
         steps,
         stride: 27, // spread the grid across all four cages
+        ..LearnerConfig::default()
     };
     let (l_serial, l_serial_secs) = common::timed(|| {
         let mut net = Network::new(SystemConfig::inc9000());
@@ -262,12 +265,12 @@ fn main() {
     let (ar_serial, ar_serial_secs) = common::timed(|| {
         let mut net = Network::new(SystemConfig::inc9000());
         let ranks = Placement::Scattered.select(&net.topo, 8);
-        RingAllreduce::new(&net, ranks, ar_bytes).run(&mut net)
+        RingAllreduce::new(&mut net, ranks, ar_bytes).run(&mut net)
     });
     let (ar_sharded, ar_sharded_secs) = common::timed(|| {
         let mut net = ShardedNetwork::new(SystemConfig::inc9000(), 4);
         let ranks = Placement::Scattered.select(net.topo(), 8);
-        RingAllreduce::new(&net, ranks, ar_bytes).run(&mut net)
+        RingAllreduce::new(&mut net, ranks, ar_bytes).run(&mut net)
     });
     let allreduce_match = ar_serial == ar_sharded;
     let allreduce_speedup = ar_serial_secs / ar_sharded_secs;
@@ -280,8 +283,63 @@ fn main() {
     json.push_str(&format!(
         "  \"inc9000_app_sharded\": {{\"learners_speedup\": {learners_speedup:.3}, \
          \"allreduce_speedup\": {allreduce_speedup:.3}, \"speedup\": {app_speedup:.3}, \
-         \"matches_serial\": {app_matches}}}\n}}\n"
+         \"matches_serial\": {app_matches}}},\n"
     ));
+
+    // Comm-mode sweep (EXPERIMENTS.md E11): identical small-message
+    // traffic through one generic function, the virtual channel as the
+    // only variable — the Table-1-style latency comparison plus the
+    // simulator's wall-clock message rate per mode.
+    let sweep_msgs = ((bench_packets / 4).max(500)) as u64;
+    json.push_str("  \"comm_mode_sweep\": [\n");
+    println!("comm-mode sweep: {sweep_msgs} x 64 B messages, 32 endpoints on inc3000");
+    for (cli, mode, hist) in [
+        ("fifo", CommMode::BridgeFifo { width_bits: 64 }, "bridge_fifo"),
+        ("pm", CommMode::Postmaster { queue: 0 }, "postmaster"),
+        ("eth", CommMode::Ethernet { rx: RxMode::Interrupt }, "eth_frame"),
+    ] {
+        let mut net = Network::inc3000();
+        let nn = net.topo.node_count() as u32;
+        let k = 32u32;
+        let nodes: Vec<NodeId> = (0..k).map(|i| NodeId(i * (nn / k))).collect();
+        let eps: Vec<_> = nodes.iter().map(|&n| net.open(n, mode)).collect();
+        if net.caps(mode).pair_setup {
+            for (i, ep) in eps.iter().enumerate() {
+                for (j, &dst) in nodes.iter().enumerate() {
+                    if i != j {
+                        net.connect(ep, dst);
+                    }
+                }
+            }
+        }
+        let mut rng = SplitMix64::new(13);
+        let ((), secs) = common::timed(|| {
+            for m in 0..sweep_msgs {
+                let i = rng.gen_range(k as usize);
+                let mut j = rng.gen_range(k as usize);
+                if j == i {
+                    j = (j + 1) % k as usize;
+                }
+                net.send(&eps[i], nodes[j], Message::new(vec![m as u8; 64]));
+            }
+            net.run_to_quiescence(&mut NullApp);
+        });
+        let mean_ns = net.metrics.latency(hist).map(|h| h.mean()).unwrap_or(0.0);
+        let t = net.metrics.mode_traffic[mode.name()];
+        assert_eq!(t.messages, sweep_msgs, "sweep lost {} messages", mode.name());
+        let mps = sweep_msgs as f64 / secs;
+        println!(
+            "  {cli:<5} mean latency {:>9.2} µs, {:>8.0} msgs/s wall-clock",
+            mean_ns / 1000.0,
+            mps
+        );
+        json.push_str(&format!(
+            "    {{\"mode\": \"{cli}\", \"messages\": {sweep_msgs}, \
+             \"mean_latency_ns\": {mean_ns:.0}, \"msgs_per_sec\": {mps:.0}}},\n"
+        ));
+    }
+    json.truncate(json.len() - 2);
+    json.push_str("\n  ]\n}\n");
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json");

@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use crate::network::{App, Event, Network};
 use crate::router::{Packet, Payload, Proto, RouteKind};
+use crate::sim::Time;
 use crate::topology::NodeId;
 use crate::util::FxHashMap;
 
@@ -121,10 +122,35 @@ impl Network {
         assert!(prev_rx.is_none(), "channel {channel} already connected at {dst}");
     }
 
-    /// Write words into the channel's transmit port. Words are masked to
-    /// the configured width; the transmit unit packetizes (chunking at
-    /// the network MTU) and hands packets to the Packet Mux.
+    /// Write words into the channel's transmit port now, with
+    /// driver-assigned packet ids: the legacy shim over
+    /// [`Network::fifo_send_impl`]. For a raw word stream the words
+    /// *are* the payload, so mode accounting counts `words × 8` (the
+    /// Endpoint API counts its byte payload instead, excluding its
+    /// framing header).
     pub fn fifo_send(&mut self, src: NodeId, channel: u8, words: &[u64]) {
+        self.metrics.record_mode("bridge_fifo", words.len() as u64 * 8);
+        let now = self.now();
+        self.fifo_send_impl(now, src, channel, words, false);
+    }
+
+    /// Endpoint-layer transmit ([`crate::channels::endpoint`]): words
+    /// are produced at absolute time `at ≥ now` with per-node app
+    /// packet ids, so it is valid from [`App`] callbacks on both
+    /// engines.
+    pub(crate) fn fifo_send_app(&mut self, at: Time, src: NodeId, channel: u8, words: &[u64]) {
+        debug_assert!(at >= self.now(), "Bridge-FIFO words produced in the past");
+        self.fifo_send_impl(at, src, channel, words, true);
+    }
+
+    /// The one Bridge-FIFO transmit recipe: mask words to the channel
+    /// width, packetize (chunking at the network MTU, one per-channel
+    /// sequence number per packet for the receive-side reorder buffer)
+    /// and hand the packets to the Packet Mux at `at` + transmit logic
+    /// + injection overhead. `app_ids` selects the packet-id space:
+    /// driver-global (legacy [`Network::fifo_send`]) or per-node app
+    /// ids (the Endpoint API).
+    fn fifo_send_impl(&mut self, at: Time, src: NodeId, channel: u8, words: &[u64], app_ids: bool) {
         let (dst, width, seq0) = {
             let tx = self
                 .fifos
@@ -144,8 +170,8 @@ impl Network {
             // touches the network.
             let masked: Vec<u64> = words.iter().map(|w| w & mask).collect();
             let logic = self.cfg.bridge_fifo_logic;
-            self.sim.after_keyed(
-                logic,
+            self.sim.at_keyed(
+                at + logic,
                 crate::network::key_fifo_local(src, channel),
                 Event::FifoLocal { node: src, channel, words: Arc::new(masked) },
             );
@@ -157,7 +183,7 @@ impl Network {
         let mut seq = seq0;
         for chunk in words.chunks(max_words.max(1)) {
             let masked: Vec<u64> = chunk.iter().map(|w| w & mask).collect();
-            let id = self.next_packet_id();
+            let id = if app_ids { self.app_packet_id(src) } else { self.next_packet_id() };
             let mut pkt = Packet::new(
                 id,
                 src,
@@ -165,7 +191,7 @@ impl Network {
                 RouteKind::Directed,
                 Proto::BridgeFifo { channel },
                 Payload::Words(std::sync::Arc::new(masked)),
-                self.now(),
+                at,
             );
             pkt.seq = seq;
             seq += 1;
@@ -174,7 +200,7 @@ impl Network {
             let delay = tx_logic + self.cfg.link.inject_latency;
             self.metrics.packets_injected += 1;
             let packet = self.packets.alloc(pkt);
-            self.sim.after_keyed(delay, crate::network::key_inject(id), Event::Inject { packet });
+            self.sim.at_keyed(at + delay, crate::network::key_inject(id), Event::Inject { packet });
         }
         self.fifos.tx.get_mut(&(src.0, channel)).unwrap().next_seq = seq;
     }
@@ -217,7 +243,13 @@ impl Network {
             }
         };
         if !released.is_empty() {
-            self.app_scope(app, |net, app| app.on_fifo(net, node, channel, &released));
+            let captured = self.comm_capture_fifo(node, channel, &released);
+            self.app_scope(app, |net, app| {
+                app.on_fifo(net, node, channel, &released);
+                for (ep, msg) in &captured {
+                    app.on_message(net, *ep, msg);
+                }
+            });
         }
     }
 
@@ -239,7 +271,13 @@ impl Network {
             rx.inbox.extend(words.iter().copied());
         }
         self.metrics.record_delivery("bridge_fifo", self.cfg.bridge_fifo_logic, 0);
-        self.app_scope(app, |net, app| app.on_fifo(net, node, channel, words));
+        let captured = self.comm_capture_fifo(node, channel, words);
+        self.app_scope(app, |net, app| {
+            app.on_fifo(net, node, channel, words);
+            for (ep, msg) in &captured {
+                app.on_message(net, *ep, msg);
+            }
+        });
     }
 
     /// Read up to `max` words from a channel's read port.

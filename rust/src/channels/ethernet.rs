@@ -27,20 +27,29 @@ pub const ETH_MTU: u32 = 1500;
 /// Frame overhead (MAC header + FCS, rounded).
 pub const ETH_OVERHEAD: u32 = 18;
 
-/// An internal-Ethernet frame (content is modeled, not carried).
+/// An internal-Ethernet frame. Legacy traffic models content by size
+/// only (`data: None`); frames sent through the unified Endpoint API
+/// ([`crate::channels::endpoint`]) additionally carry their payload
+/// bytes, which is how byte [`crate::channels::Message`]s travel over
+/// this mode.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EthFrame {
     /// Packet id the frame's fabric packet will carry, assigned when
-    /// the frame is created (at the driver API, not inside an event
-    /// handler — see the dispatch-order notes in [`crate::network`]).
+    /// the frame is created (at the driver API or from the per-node app
+    /// id space, never inside an event handler from the global counter
+    /// — see the dispatch-order notes in [`crate::network`]).
     pub id: u64,
     pub src: NodeId,
     pub dst: NodeId,
     /// Payload bytes (≤ [`ETH_MTU`]).
     pub bytes: u32,
-    /// Application tag (models port numbers / message ids).
+    /// Application tag (models port numbers / message ids). Endpoint
+    /// fragments encode `(msg seq, frag idx, frag count)` here.
     pub tag: u64,
     pub t_created: Time,
+    /// Endpoint-message fragment content (`None` for legacy frames;
+    /// presence is what marks a frame as endpoint traffic).
+    pub data: Option<std::sync::Arc<Vec<u8>>>,
 }
 
 /// Receive notification mechanism (§3.1: interrupt or polling).
@@ -135,19 +144,34 @@ impl Network {
         self.eth.port_mut(node).mode = mode;
     }
 
-    /// Transmit one frame (≤ MTU payload) from `src` to `dst` over the
-    /// internal Ethernet. Models Fig 3's transmit operation: kernel stack
-    /// → driver/descriptors → AXI-HP DMA into the fabric → router.
-    pub fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64) {
+    /// The one internal-Ethernet transmit path (Fig 3's transmit
+    /// operation: kernel stack → driver/descriptors → AXI-HP DMA into
+    /// the fabric → router), for one frame produced at absolute time
+    /// `at`. Everything else — the legacy [`Network::eth_send`] /
+    /// [`Network::eth_send_message`] shims and the Endpoint API — is a
+    /// thin wrapper over this: the single-frame send is literally the
+    /// one-frame case of the message path.
+    ///
+    /// The software costs serialize on the source ARM from `at` (this
+    /// is what makes internal Ethernet the slow path — §3.1 vs §3.2);
+    /// `data` is the endpoint-message fragment, `None` for legacy
+    /// size-only traffic.
+    #[allow(clippy::too_many_arguments)] // one frame's full wire identity
+    pub(crate) fn eth_frame_tx(
+        &mut self,
+        at: Time,
+        id: u64,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u32,
+        tag: u64,
+        data: Option<std::sync::Arc<Vec<u8>>>,
+    ) {
         assert!(bytes <= ETH_MTU, "frame payload {bytes} exceeds MTU {ETH_MTU}");
         let arm = self.cfg.arm;
         let sw = arm.kernel_stack + arm.driver + arm.dma_setup;
-        let now = self.now();
-        // The transmit software path runs on the ARM: it serializes with
-        // any other software work the node is doing (this is what makes
-        // internal Ethernet the slow path — §3.1 vs §3.2).
         let node = &mut self.nodes[src.0 as usize];
-        let cpu_start = now.max(node.cpu_free_at);
+        let cpu_start = at.max(node.cpu_free_at);
         node.cpu_free_at = cpu_start + sw;
         node.cpu_busy_ns += sw;
         let port = self.eth.port_mut(src);
@@ -156,20 +180,33 @@ impl Network {
         let wire = bytes + ETH_OVERHEAD;
         let dma = (wire as f64 / arm.axi_bytes_per_ns).ceil() as Time;
         port.tx_busy_until = dma_start + dma;
-        let id = self.next_packet_id();
-        let frame = Box::new(EthFrame { id, src, dst, bytes, tag, t_created: now });
+        let frame = Box::new(EthFrame { id, src, dst, bytes, tag, t_created: at, data });
         self.sim
             .at_keyed(dma_start + dma, crate::network::key_eth(src), Event::EthTx { frame });
     }
 
+    /// Transmit one frame (≤ MTU payload) from `src` to `dst` over the
+    /// internal Ethernet: the one-frame case of
+    /// [`Network::eth_frame_tx`], with a driver-assigned packet id.
+    pub fn eth_send(&mut self, src: NodeId, dst: NodeId, bytes: u32, tag: u64) {
+        self.metrics.record_mode("ethernet", bytes as u64);
+        let id = self.next_packet_id();
+        let now = self.now();
+        self.eth_frame_tx(now, id, src, dst, bytes, tag, None);
+    }
+
     /// Send an arbitrary-size message: the kernel segments it into
-    /// MTU-sized frames (models TCP segmentation).
+    /// MTU-sized frames (models TCP segmentation), each going down the
+    /// same path as a single-frame send.
     pub fn eth_send_message(&mut self, src: NodeId, dst: NodeId, bytes: u64, tag: u64) -> u32 {
+        self.metrics.record_mode("ethernet", bytes);
         let mut left = bytes;
         let mut frames = 0;
         while left > 0 {
             let take = left.min(ETH_MTU as u64) as u32;
-            self.eth_send(src, dst, take, tag);
+            let id = self.next_packet_id();
+            let now = self.now();
+            self.eth_frame_tx(now, id, src, dst, take, tag, None);
             left -= take as u64;
             frames += 1;
         }
@@ -252,7 +289,13 @@ impl Network {
         if node == self.gateway() && frame.tag & (1 << 63) != 0 {
             self.nfs_progress(&frame);
         }
-        self.app_scope(app, |net, app| app.on_eth(net, node, &frame));
+        let captured = self.comm_capture_eth(node, &frame);
+        self.app_scope(app, |net, app| {
+            app.on_eth(net, node, &frame);
+            if let Some((ep, msg)) = &captured {
+                app.on_message(net, *ep, msg);
+            }
+        });
     }
 
     /// Polling tick: drain everything that has been DMA'd so far. One
@@ -309,6 +352,10 @@ impl Network {
     /// (the shard that owns the gateway, in a sharded run — the
     /// arriving frames progress the transfer there).
     pub(crate) fn nfs_register_put(&mut self, node: NodeId, name: &str, size: u64) {
+        // Mode accounting lives here because both engines pass every
+        // put through this registration (the sharded wrapper calls it
+        // on the gateway's shard).
+        self.metrics.record_mode("nfs", size);
         let tag = nfs_tag(name);
         self.eth
             .external
@@ -381,8 +428,10 @@ impl Network {
         ext.ext_busy_until = start + wire as u64 * EXT_NS_PER_BYTE;
         // Then the gateway forwards over the internal fabric.
         let at = ext.ext_busy_until;
+        self.metrics.record_mode("ethernet", bytes as u64);
         let id = self.next_packet_id();
-        let frame = Box::new(EthFrame { id, src: gw, dst: node, bytes, tag, t_created: now });
+        let frame =
+            Box::new(EthFrame { id, src: gw, dst: node, bytes, tag, t_created: now, data: None });
         self.sim.at_keyed(at, crate::network::key_eth(gw), Event::EthTx { frame });
         true
     }

@@ -1,25 +1,58 @@
-//! Virtual communication channels layered on the packet router (§3).
+//! Virtual communication channels layered on the packet router (§3) —
+//! and the unified, first-class API over them.
 //!
 //! "Multiple virtual channels can be designed to sit atop the underlying
 //! packet router logic … to give the processor and FPGA logic different
-//! virtual or logical interfaces to the communication network." The three
-//! the paper describes — and we implement — are:
+//! virtual or logical interfaces to the communication network." The
+//! paper's point is not any single channel but the *choice*: the three
+//! it describes are interchangeable transports multiplexed onto the
+//! same SERDES links through the Packet Mux/Demux (modeled by
+//! [`crate::router::Proto`] dispatch in [`crate::network::Network`]),
+//! each trading compatibility against overhead.
+//!
+//! That choice is a first-class value here: a [`CommMode`] names a
+//! channel (with its per-mode parameters), [`ChannelCaps`] describes
+//! what it guarantees — latency class, ordering, reliability, max
+//! payload, setup requirements; the paper's Table 1 distinctions in
+//! code — and the [`endpoint`] module implements one
+//! `open`/`connect`/`send`/`recv` surface over every mode, on both
+//! simulation engines (see [`crate::network::Fabric`]). Workloads take
+//! a `CommMode` instead of hard-coding a method family; `repro
+//! learners|mcts --comm pm|eth|fifo` switches the transport under an
+//! unchanged workload.
+//!
+//! The channels, from most compatible to lowest latency:
 //!
 //! * [`ethernet`] — the virtual **Internal Ethernet** (§3.1, Fig 3): a
 //!   standard-looking NIC so unmodified IP software (ssh, MPI, NFS) runs
-//!   between nodes; the heaviest path (full kernel stack) but the most
-//!   compatible.
+//!   between nodes; the heaviest path (full kernel stack: [`ChannelCaps::cpu_on_path`])
+//!   but the most compatible. [`CommMode::Ethernet`], and the transport
+//!   behind [`CommMode::Nfs`]'s external-storage path.
 //! * [`postmaster`] — **Postmaster DMA** (§3.2, Fig 4): a tunneled queue
 //!   for small messages; initiator writes to a fixed address, data lands
 //!   in a contiguous receive stream on the target; far lower overhead
-//!   than TCP/IP.
+//!   than TCP/IP. One atomic record per message
+//!   ([`ChannelCaps::max_payload`]). [`CommMode::Postmaster`].
 //! * [`bridge_fifo`] — **Bridge FIFO** (§3.3, Fig 5, Table 1): direct
-//!   hardware-to-hardware FIFO between two FPGAs; lowest latency of all.
+//!   hardware-to-hardware FIFO between two FPGAs; lowest latency of all,
+//!   and the only mode with per-pair FIFO ordering
+//!   ([`crate::channels::endpoint::MsgOrdering::PerPairFifo`]) — at the
+//!   price of per-pair setup ([`ChannelCaps::pair_setup`]).
+//!   [`CommMode::BridgeFifo`].
 //!
-//! All three multiplex onto the same SERDES links through the Packet
-//! Mux/Demux (modeled by [`crate::router::Proto`] dispatch in
-//! [`crate::network::Network`]).
+//! (NetTunnel register writes (§4.2) round out the set as
+//! [`CommMode::Tunnel`] — one-word messages with no ARM involvement.)
+//!
+//! The capability contracts are property-tested on both engines in
+//! `tests/comm_caps.rs`; the mode choice is benchmarked on identical
+//! traffic in `benches/sim_engine.rs` (`comm_mode_sweep`,
+//! EXPERIMENTS.md E11).
 
 pub mod bridge_fifo;
+pub mod endpoint;
 pub mod ethernet;
 pub mod postmaster;
+
+pub use endpoint::{
+    ChannelCaps, CommMode, Endpoint, LatencyClass, Message, MsgId, MsgOrdering, Reliability,
+};

@@ -89,10 +89,11 @@ impl Network {
     /// Deferred [`Network::pm_send`] with an app-context packet id: the
     /// record is produced (written to the transmit queue) at absolute
     /// time `at ≥ now` and enters the fabric after the usual enqueue +
-    /// injection overheads. This is the send every engine-agnostic
-    /// workload uses — from driver context *and* from [`App`] callbacks
-    /// at `src` — because the per-node id keeps serial and sharded id
-    /// assignment identical (see [`Network::app_packet_id`]).
+    /// injection overheads. This is the transmit the unified Endpoint
+    /// API rides for `CommMode::Postmaster` — valid from driver context
+    /// *and* from [`App`] callbacks at `src`, because the per-node id
+    /// keeps serial and sharded id assignment identical (see
+    /// [`Network::app_packet_id`]).
     pub fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
         debug_assert!(at >= self.now(), "postmaster record produced in the past");
         let id = self.app_packet_id(src);
@@ -124,6 +125,7 @@ impl Network {
             self.postmaster.queues.contains_key(&(target.0, queue)),
             "postmaster queue {queue} not open at {target}"
         );
+        self.metrics.record_mode("postmaster", data.len() as u64);
         let pkt = Packet::new(
             id,
             src,
@@ -178,7 +180,13 @@ impl Network {
             q.bytes += record.data.len() as u64;
             q.stream.push(record.clone());
         }
-        self.app_scope(app, |net, app| app.on_postmaster(net, node, queue, &record));
+        let captured = self.comm_capture_pm(node, queue, &record);
+        self.app_scope(app, |net, app| {
+            app.on_postmaster(net, node, queue, &record);
+            if let Some((ep, msg)) = &captured {
+                app.on_message(net, *ep, msg);
+            }
+        });
     }
 
     /// Drain unread records from a queue's stream (polling consumer).

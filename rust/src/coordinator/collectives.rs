@@ -2,35 +2,44 @@
 //!
 //! A ring all-reduce (reduce-scatter + all-gather, 2(k−1) steps of
 //! `bytes/k` each) implemented as an event-driven [`App`]: every rank
-//! sends its current chunk to its ring successor as `Proto::Raw` traffic
-//! and advances when the predecessor's chunk lands. The fabric therefore
-//! sees the *real* packet pattern (congestion, credit stalls, adaptive
-//! routing) while the numeric reduction itself happens in the
-//! coordinator on real data.
+//! sends its current chunk to its ring successor and advances when the
+//! predecessor's chunk lands. The fabric therefore sees the *real*
+//! packet pattern (congestion, credit stalls, adaptive routing) while
+//! the numeric reduction itself happens in the coordinator on real
+//! data.
 //!
-//! The collective is engine-agnostic: it is written against
-//! [`Fabric`] and is a [`ShardableApp`] — per-rank receive state lives
-//! with the rank's node (so each sharded partition only ever touches
-//! its own ranks), and the aggregate stats are sum-reduced. A sharded
-//! run is byte-identical to a serial one (traffic ids come from the
-//! per-node app id space, see `tests/sharded_differential.rs`).
+//! The collective is engine-agnostic **and mode-generic**: chunks
+//! travel as unified [`Message`]s over any [`CommMode`]
+//! ([`RingAllreduce::with_mode`]) — Postmaster DMA by default, whose
+//! per-record payload cap sets the fragment size; over internal
+//! Ethernet or Bridge FIFO a chunk rides as one natively-segmented
+//! message. The final fragment of a chunk carries a one-byte marker,
+//! and receipt of the marker advances the receiving rank — the same
+//! protocol whichever channel carries it. (Unlike the old
+//! `Payload::Synthetic` raw-packet transport, fragments carry real
+//! bytes — the price of mode genericity; the app drains its endpoint
+//! inboxes per callback so a run retains only the in-flight window.)
+//!
+//! As a [`ShardableApp`], per-rank receive state lives with the rank's
+//! node (so each sharded partition only ever touches its own ranks) and
+//! the aggregate stats are sum-reduced. A sharded run is byte-identical
+//! to a serial one (all traffic uses the endpoint sends' per-node app
+//! id space; see `tests/sharded_differential.rs`).
 
+use crate::channels::endpoint::{CommMode, Endpoint, Message};
 use crate::network::{App, Fabric, Network, ShardableApp};
-use crate::router::{Packet, Payload, Proto, RouteKind};
 use crate::sim::Time;
 use crate::topology::NodeId;
-
-/// Raw-protocol tag used by collective traffic.
-pub const COLLECTIVE_TAG: u16 = 0xC0;
 
 /// Outcome of a simulated collective.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CollectiveStats {
     /// Virtual time from kickoff to the last rank finishing.
     pub makespan: Time,
-    /// Total bytes put on the fabric.
+    /// Payload bytes handed to the channel (excluding per-mode framing
+    /// and packet headers).
     pub bytes_on_wire: u64,
-    /// Messages (packets at the message level, pre-fragmentation).
+    /// Chunk-messages sent (pre-fragmentation).
     pub messages: u64,
 }
 
@@ -44,20 +53,44 @@ pub struct RingAllreduce {
     /// Total steps each rank must receive: 2(k−1).
     total_steps: u32,
     chunk_bytes: u32,
+    /// Fragment size: the mode's max payload (chunks over unbounded
+    /// modes travel as one message).
+    frag_bytes: u32,
+    mode: CommMode,
     done_ranks: usize,
     pub stats: CollectiveStats,
 }
 
 impl RingAllreduce {
     /// Prepare an all-reduce of `bytes` per rank across `ranks` (on
-    /// either engine).
-    pub fn new<F: Fabric>(net: &F, ranks: Vec<NodeId>, bytes: u64) -> Self {
+    /// either engine), over the default Postmaster DMA transport.
+    pub fn new<F: Fabric>(net: &mut F, ranks: Vec<NodeId>, bytes: u64) -> Self {
+        Self::with_mode(net, ranks, bytes, CommMode::Postmaster { queue: 0 })
+    }
+
+    /// Prepare an all-reduce over an explicit communication mode:
+    /// endpoints open at every rank, ring-successor pairs connected
+    /// where the mode requires per-pair setup.
+    pub fn with_mode<F: Fabric>(
+        net: &mut F,
+        ranks: Vec<NodeId>,
+        bytes: u64,
+        mode: CommMode,
+    ) -> Self {
         assert!(ranks.len() >= 2, "all-reduce needs ≥2 ranks");
         let k = ranks.len() as u64;
         let chunk_bytes = (bytes / k).max(1) as u32;
+        let caps = net.caps(mode);
+        let frag_bytes = caps.max_payload.unwrap_or(chunk_bytes).max(1);
         let mut index = vec![None; net.topo().node_count()];
         for (i, r) in ranks.iter().enumerate() {
             index[r.0 as usize] = Some(i);
+        }
+        let eps: Vec<Endpoint> = ranks.iter().map(|&r| net.open(r, mode)).collect();
+        if caps.pair_setup {
+            for (i, ep) in eps.iter().enumerate() {
+                net.connect(ep, ranks[(i + 1) % ranks.len()]);
+            }
         }
         RingAllreduce {
             total_steps: 2 * (ranks.len() as u32 - 1),
@@ -65,6 +98,8 @@ impl RingAllreduce {
             index,
             received: vec![],
             chunk_bytes,
+            frag_bytes,
+            mode,
             done_ranks: 0,
             stats: CollectiveStats { makespan: 0, bytes_on_wire: 0, messages: 0 },
         }
@@ -77,8 +112,8 @@ impl RingAllreduce {
         let t0 = net.now();
         self.received = vec![0; self.ranks.len()];
         let ranks = self.ranks.clone();
-        for (i, &r) in ranks.iter().enumerate() {
-            self.send_step(net, i, r);
+        for &r in &ranks {
+            self.send_step(net, r);
         }
         net.run(&mut self);
         assert_eq!(self.done_ranks, self.ranks.len(), "all-reduce did not complete");
@@ -86,35 +121,26 @@ impl RingAllreduce {
         self.stats
     }
 
-    /// Send rank `node`'s current chunk to its ring successor. Called
-    /// from driver context (kickoff) and from `on_raw` callbacks at
-    /// `node` — both use the per-node app id space, so serial and
-    /// sharded runs assign identical packet ids.
-    fn send_step<F: Fabric>(&mut self, net: &mut F, rank: usize, node: NodeId) {
+    /// Send rank `node`'s current chunk to its ring successor, as
+    /// fragments of at most the mode's max payload; the *last* fragment
+    /// carries the one-byte step marker, and its receipt advances the
+    /// receiver. Called from driver context (kickoff) and from
+    /// `on_message` callbacks at `node` — the endpoint sends' per-node
+    /// app ids keep serial and sharded runs identical.
+    fn send_step<F: Fabric>(&mut self, net: &mut F, node: NodeId) {
+        let rank = self.index[node.0 as usize].expect("send_step at non-rank");
         let next = self.ranks[(rank + 1) % self.ranks.len()];
-        // Fragment the chunk at the network MTU.
-        let mtu = net.config().link.mtu - crate::router::HEADER_BYTES;
+        let ep = Endpoint { node, mode: self.mode };
+        let now = net.now();
         let mut left = self.chunk_bytes;
         while left > 0 {
-            let take = left.min(mtu);
-            // The *last* fragment of the chunk carries the step marker;
-            // receipt of it advances the receiver.
-            let marker = if take == left { 1u64 } else { 0 };
-            let id = net.app_packet_id(node);
-            // Model `take` bytes on the wire (Synthetic: the chunk's
-            // size occupies wire/buffer space, no content carried).
-            let mut pkt = Packet::new(
-                id,
-                node,
-                next,
-                RouteKind::Directed,
-                Proto::Raw { tag: COLLECTIVE_TAG },
-                Payload::Synthetic(take),
-                net.now(),
-            );
-            pkt.seq = marker;
-            net.inject(pkt);
-            self.stats.bytes_on_wire += (crate::router::HEADER_BYTES + take) as u64;
+            let take = left.min(self.frag_bytes);
+            let mut data = vec![0u8; take as usize];
+            if take == left {
+                data[0] = 1; // final fragment of this chunk
+            }
+            net.send_at(now, &ep, next, Message::new(data));
+            self.stats.bytes_on_wire += take as u64;
             left -= take;
         }
         self.stats.messages += 1;
@@ -122,18 +148,19 @@ impl RingAllreduce {
 }
 
 impl App for RingAllreduce {
-    fn on_raw(&mut self, net: &mut Network, node: NodeId, packet: &Packet) {
-        if packet.proto != (Proto::Raw { tag: COLLECTIVE_TAG }) {
-            return;
-        }
-        if packet.seq != 1 {
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) {
+        // Callback-consumed endpoint: drain the recv inbox so the run
+        // does not retain every fragment it ever moved.
+        net.recv(&ep);
+        if msg.data.first() != Some(&1) {
             return; // mid-chunk fragment
         }
-        let rank = self.index[node.0 as usize].expect("collective packet at non-rank");
+        let node = ep.node;
+        let rank = self.index[node.0 as usize].expect("collective message at non-rank");
         self.received[rank] += 1;
         let r = self.received[rank];
         if r < self.total_steps {
-            self.send_step(net, rank, node);
+            self.send_step(net, node);
         } else if r == self.total_steps {
             self.done_ranks += 1;
         }
@@ -152,6 +179,8 @@ impl ShardableApp for RingAllreduce {
             received: vec![0; self.ranks.len()],
             total_steps: self.total_steps,
             chunk_bytes: self.chunk_bytes,
+            frag_bytes: self.frag_bytes,
+            mode: self.mode,
             done_ranks: 0,
             stats: CollectiveStats { makespan: 0, bytes_on_wire: 0, messages: 0 },
         }
@@ -189,15 +218,16 @@ pub fn mean_reduce(mut grads: Vec<Vec<f32>>) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::channels::ethernet::RxMode;
     use crate::coordinator::Placement;
 
     #[test]
     fn allreduce_completes_and_scales_with_bytes() {
         let mut net = Network::card();
         let ranks = Placement::Block.select(&net.topo, 8);
-        let small = RingAllreduce::new(&net, ranks.clone(), 64 * 1024).run(&mut net);
+        let small = RingAllreduce::new(&mut net, ranks.clone(), 64 * 1024).run(&mut net);
         let mut net2 = Network::card();
-        let big = RingAllreduce::new(&net2, ranks, 1024 * 1024).run(&mut net2);
+        let big = RingAllreduce::new(&mut net2, ranks, 1024 * 1024).run(&mut net2);
         assert!(small.makespan > 0);
         assert!(big.makespan > small.makespan);
         assert!(big.bytes_on_wire > small.bytes_on_wire);
@@ -207,9 +237,30 @@ mod tests {
     fn allreduce_message_count_is_2k_minus_1_rounds() {
         let mut net = Network::card();
         let ranks = Placement::Block.select(&net.topo, 4);
-        let stats = RingAllreduce::new(&net, ranks, 4096).run(&mut net);
+        let stats = RingAllreduce::new(&mut net, ranks, 4096).run(&mut net);
         // Every rank sends 2(k-1) chunk-messages.
         assert_eq!(stats.messages, 4 * 2 * 3);
+    }
+
+    #[test]
+    fn allreduce_is_mode_generic() {
+        // Same collective over all three modes: same message count,
+        // mode-dependent makespan with the software path slowest.
+        let run = |mode: CommMode| {
+            let mut net = Network::card();
+            let ranks = Placement::Block.select(&net.topo, 4);
+            RingAllreduce::with_mode(&mut net, ranks, 64 * 1024, mode).run(&mut net)
+        };
+        let pm = run(CommMode::Postmaster { queue: 0 });
+        let fifo = run(CommMode::BridgeFifo { width_bits: 64 });
+        let eth = run(CommMode::Ethernet { rx: RxMode::Interrupt });
+        assert_eq!(pm.messages, 4 * 2 * 3);
+        assert_eq!(fifo.messages, 4 * 2 * 3);
+        assert_eq!(eth.messages, 4 * 2 * 3);
+        assert_eq!(pm.bytes_on_wire, fifo.bytes_on_wire);
+        assert_eq!(pm.bytes_on_wire, eth.bytes_on_wire);
+        assert!(pm.makespan < eth.makespan, "pm {} vs eth {}", pm.makespan, eth.makespan);
+        assert!(fifo.makespan < eth.makespan, "fifo {} vs eth {}", fifo.makespan, eth.makespan);
     }
 
     #[test]
@@ -220,8 +271,8 @@ mod tests {
         let run = |p: Placement| {
             let mut net = Network::inc3000();
             let ranks = p.select(&net.topo, 8);
-            RingAllreduce::new(&net, ranks, 256 * 1024).run(&mut net);
-            net.metrics.latency("raw").unwrap().mean()
+            RingAllreduce::new(&mut net, ranks, 256 * 1024).run(&mut net);
+            net.metrics.latency("postmaster").unwrap().mean()
         };
         let block = run(Placement::Block);
         let scattered = run(Placement::Scattered);
@@ -240,7 +291,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "≥2 ranks")]
     fn single_rank_rejected() {
-        let net = Network::card();
-        RingAllreduce::new(&net, vec![NodeId(0)], 1024);
+        let mut net = Network::card();
+        RingAllreduce::new(&mut net, vec![NodeId(0)], 1024);
     }
 }

@@ -7,11 +7,13 @@
 //!
 //! * [`placement`] — mapping jobs onto mesh nodes (blocks, scattered,
 //!   whole cards).
-//! * [`collectives`] — ring all-reduce, tree reduce and broadcast built
-//!   from `Proto::Raw` packets, with the traffic simulated on the fabric
-//!   (the real numerics live in XLA artifacts; the fabric carries
-//!   modeled bytes). Engine-agnostic: collectives run on the serial or
-//!   the sharded engine through [`crate::network::Fabric`].
+//! * [`collectives`] — ring all-reduce built from unified endpoint
+//!   [`crate::channels::Message`]s, with the traffic simulated on the
+//!   fabric (the real numerics live in XLA artifacts; the fabric
+//!   carries modeled bytes). Engine-agnostic **and** mode-generic:
+//!   collectives run on the serial or the sharded engine through
+//!   [`crate::network::Fabric`], over any
+//!   [`crate::channels::CommMode`].
 
 pub mod collectives;
 pub mod placement;

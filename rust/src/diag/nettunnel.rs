@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use crate::network::Network;
+use crate::network::{App, Network};
 use crate::router::{MemTarget, Packet, Payload, Proto, RouteKind};
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -19,6 +19,7 @@ use crate::topology::NodeId;
 impl Network {
     /// Write a word to `addr` on `dst` through the fabric.
     pub fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
+        self.metrics.record_mode("net_tunnel", 8);
         let payload =
             Payload::RegAccess { addr, value, write: true, reply: false, req_id: 0 };
         self.send_directed(src, dst, Proto::NetTunnel, payload);
@@ -26,6 +27,7 @@ impl Network {
 
     /// Broadcast-write a word to the same `addr` on every node.
     pub fn tunnel_broadcast_write(&mut self, src: NodeId, addr: u64, value: u64) {
+        self.metrics.record_mode("net_tunnel", 8);
         let payload =
             Payload::RegAccess { addr, value, write: true, reply: false, req_id: 0 };
         self.send_broadcast(src, Proto::NetTunnel, payload);
@@ -34,6 +36,7 @@ impl Network {
     /// Issue a read of `addr` on `dst`; the result appears in
     /// `tunnel_results[req_id]` once the reply packet lands.
     pub fn tunnel_read(&mut self, src: NodeId, dst: NodeId, addr: u64) -> u64 {
+        self.metrics.record_mode("net_tunnel", 8);
         let req_id = self.next_packet_id() | 1 << 62;
         let payload =
             Payload::RegAccess { addr, value: 0, write: false, reply: false, req_id };
@@ -41,8 +44,10 @@ impl Network {
         req_id
     }
 
-    /// Execute a tunnel access at `node` (scheduled by the Packet Demux).
-    pub(crate) fn tunnel_exec(&mut self, node: NodeId, packet: Packet) {
+    /// Execute a tunnel access at `node` (scheduled by the Packet
+    /// Demux). `app` sees writes that land on an open `Tunnel`
+    /// endpoint's mailbox register as messages.
+    pub(crate) fn tunnel_exec(&mut self, node: NodeId, packet: Packet, app: &mut dyn App) {
         let now = self.now();
         match packet.payload {
             Payload::RegAccess { addr, value, write, reply, req_id } => {
@@ -53,6 +58,11 @@ impl Network {
                     let n = &mut self.nodes[node.0 as usize];
                     n.write_addr(addr, value, now);
                     n.tick_boot(now);
+                    if let Some((ep, msg)) =
+                        self.comm_capture_tunnel(node, packet.src, addr, value)
+                    {
+                        self.app_scope(app, |net, app| app.on_message(net, ep, &msg));
+                    }
                 } else {
                     let v = self.nodes[node.0 as usize].read_addr(addr, now);
                     let payload = Payload::RegAccess {

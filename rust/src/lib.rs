@@ -26,7 +26,9 @@
 //!   ([`network::sharded`]) live here, unified behind the
 //!   engine-agnostic [`network::Fabric`] trait that workloads and
 //!   coordinators are written against.
-//! * [`channels`] — Internal Ethernet, Postmaster DMA, Bridge FIFO.
+//! * [`channels`] — Internal Ethernet, Postmaster DMA, Bridge FIFO,
+//!   unified behind the first-class [`channels::CommMode`] /
+//!   [`channels::Endpoint`] API (open/send/recv over any mode).
 //! * [`diag`] — JTAG, Ring Bus, NetTunnel, PCIe Sandbox.
 //! * [`node`] — per-node model: ARM costs, DRAM, registers, boot.
 //! * [`runtime`] — PJRT executable loading (AOT artifacts from JAX).
@@ -50,6 +52,7 @@ pub mod topology;
 pub mod util;
 pub mod workload;
 
+pub use channels::{ChannelCaps, CommMode, Endpoint, Message, MsgId};
 pub use config::{LinkTiming, SystemConfig, SystemPreset};
 pub use network::sharded::ShardedNetwork;
 pub use network::{App, Delivery, Fabric, Network, NullApp, ShardableApp};

@@ -8,6 +8,8 @@
 
 use anyhow::Result;
 
+use inc_sim::channels::ethernet::RxMode;
+use inc_sim::channels::CommMode;
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::diag::sandbox::PcieSandbox;
 use inc_sim::network::sharded::ShardedNetwork;
@@ -35,13 +37,17 @@ COMMANDS
               shard count, 1 forces the serial engine)
   train       [--ranks N] [--steps N] [--lr F] [--preset P] [--shards K]
               data-parallel LM training (E10)
-  mcts        [--workers N] [--rollouts N] [--preset P] [--shards K]
+  mcts        [--workers N] [--rollouts N] [--preset P] [--shards K] [--comm M]
               distributed MCTS (E9)
-  learners    [--preset P] [--shards K]          learner-overlap experiment (E8)
+  learners    [--preset P] [--shards K] [--comm M]
+              learner-overlap experiment (E8)
 
 The workload subcommands accept --shards like traffic does: every
 workload runs on either engine through the Fabric trait, with
-byte-identical results.
+byte-identical results. --comm pm|eth|fifo picks the virtual channel
+the workload's messages travel over (first-class communication modes;
+default pm = Postmaster DMA, eth = internal Ethernet, fifo = Bridge
+FIFO).
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -93,6 +99,22 @@ impl Args {
             None => default,
         }
     }
+
+    /// `--comm pm|eth|fifo` → the workload's communication mode.
+    fn comm(&self) -> CommMode {
+        match self.flags.get("comm").map(|s| s.to_ascii_lowercase()) {
+            None => CommMode::Postmaster { queue: 0 },
+            Some(s) => match s.as_str() {
+                "pm" | "postmaster" => CommMode::Postmaster { queue: 0 },
+                "eth" | "ethernet" => CommMode::Ethernet { rx: RxMode::Interrupt },
+                "fifo" | "bridge_fifo" => CommMode::BridgeFifo { width_bits: 64 },
+                other => {
+                    eprintln!("unknown comm mode {other:?}; use pm | eth | fifo");
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
 }
 
 fn main() -> Result<()> {
@@ -128,8 +150,13 @@ fn main() -> Result<()> {
             args.get("rollouts", 3000u64),
             args.preset(SystemPreset::Card),
             args.get("shards", 1u32),
+            args.comm(),
         ),
-        "learners" => run_learners(args.preset(SystemPreset::Card), args.get("shards", 1u32)),
+        "learners" => run_learners(
+            args.preset(SystemPreset::Card),
+            args.get("shards", 1u32),
+            args.comm(),
+        ),
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
@@ -372,27 +399,36 @@ fn train(ranks: usize, steps: u32, lr: f32, preset: SystemPreset, shards: u32) -
     Ok(())
 }
 
-fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32) {
+fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32, comm: CommMode) {
     // Leader at node 0; workers strided across the node space so larger
     // presets (and the sharded engine) see cross-card/cage task traffic.
-    fn go<F: Fabric>(net: &mut F, workers: usize, rollouts: u64) -> mcts::MctsResult {
+    fn go<F: Fabric>(
+        net: &mut F,
+        workers: usize,
+        rollouts: u64,
+        comm: CommMode,
+    ) -> mcts::MctsResult {
         let nn = net.topo().node_count() as u32;
         let stride = ((nn - 1) / (workers as u32).max(1)).max(1);
         let ws: Vec<NodeId> = (0..workers as u32).map(|i| NodeId(1 + i * stride)).collect();
         let game = mcts::Game { depth: 6, branching: 3, seed: 42 };
-        mcts::DistributedMcts::new(net, game, NodeId(0), ws).search(net, rollouts)
+        mcts::DistributedMcts::with_mode(net, game, NodeId(0), ws, comm).search(net, rollouts)
     }
     let (r, engine) = if shards == 1 {
         let mut net = Network::new(SystemConfig::new(preset));
-        (go(&mut net, workers, rollouts), "serial".to_string())
+        (go(&mut net, workers, rollouts, comm), "serial".to_string())
     } else {
         let mut net = sharded_engine(preset, shards);
         let label = format!("sharded x{}", net.shard_count());
-        (go(&mut net, workers, rollouts), label)
+        (go(&mut net, workers, rollouts, comm), label)
     };
     println!(
-        "mcts [{engine}]: {} rollouts on {} workers -> best path {:?} (value {:.3})",
-        r.rollouts, workers, r.best_path, r.best_value
+        "mcts [{engine}, comm {}]: {} rollouts on {} workers -> best path {:?} (value {:.3})",
+        comm.name(),
+        r.rollouts,
+        workers,
+        r.best_path,
+        r.best_value
     );
     println!(
         "makespan {:.3} ms, throughput {:.0} rollouts/s (virtual)",
@@ -401,12 +437,13 @@ fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32) {
     );
 }
 
-fn run_learners(preset: SystemPreset, shards: u32) {
+fn run_learners(preset: SystemPreset, shards: u32, comm: CommMode) {
     // Spread the learner grid across the whole mesh so cards/cages (and
     // shard boundaries) sit between neighbors.
     let nn = preset.node_count() as usize;
     let cfg = learners::LearnerConfig {
         stride: (nn / 27).max(1),
+        comm,
         ..learners::LearnerConfig::default()
     };
     let (streamed, aggregated, engine) = if shards == 1 {
@@ -419,10 +456,12 @@ fn run_learners(preset: SystemPreset, shards: u32) {
         (s, a, "sharded".to_string())
     };
     println!(
-        "distributed learners [{engine}], {} outputs/step/node of {} B:",
-        cfg.outputs_per_step, cfg.record_bytes
+        "distributed learners [{engine}, comm {}], {} outputs/step/node of {} B:",
+        comm.name(),
+        cfg.outputs_per_step,
+        cfg.record_bytes
     );
-    println!("  send-as-generated (postmaster): {:>9.1} µs/step", streamed / 1000.0);
+    println!("  send-as-generated             : {:>9.1} µs/step", streamed / 1000.0);
     println!("  aggregate-then-send           : {:>9.1} µs/step", aggregated / 1000.0);
     println!("  overlap advantage             : {:>9.2}x", aggregated / streamed);
 }

@@ -94,11 +94,32 @@ impl LatencyHist {
     }
 }
 
+/// Traffic totals of one communication mode (messages handed to the
+/// channel and the payload bytes they carried; framing overhead —
+/// Ethernet frame headers, Bridge-FIFO header words and word padding —
+/// is excluded, so per-mode byte totals are comparable on identical
+/// traffic). Message granularity is the mode's natural unit: one
+/// Postmaster record, one Ethernet message (`eth_send_message` call,
+/// endpoint message however many frames it segments into, or one
+/// NAT-ingress frame), one Bridge-FIFO burst, one NetTunnel access,
+/// one NFS transfer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModeTraffic {
+    pub messages: u64,
+    pub bytes: u64,
+}
+
 /// Fabric-wide metrics.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Metrics {
     /// End-to-end packet latency by protocol name.
     pub packet_latency: BTreeMap<&'static str, LatencyHist>,
+    /// Per-communication-mode traffic, keyed by
+    /// [`crate::channels::CommMode::name`]. Counted at the transmit
+    /// recipes, so the unified Endpoint API and the legacy per-channel
+    /// shims land in the same buckets. Part of the cross-engine
+    /// byte-identity contract ([`Metrics::fabric_view`] keeps it).
+    pub mode_traffic: BTreeMap<&'static str, ModeTraffic>,
     pub packets_delivered: u64,
     pub packets_injected: u64,
     pub broadcast_copies: u64,
@@ -132,6 +153,11 @@ impl Metrics {
         for (proto, hist) in &other.packet_latency {
             self.packet_latency.entry(proto).or_insert_with(LatencyHist::new).merge(hist);
         }
+        for (mode, t) in &other.mode_traffic {
+            let e = self.mode_traffic.entry(mode).or_default();
+            e.messages += t.messages;
+            e.bytes += t.bytes;
+        }
         self.packets_delivered += other.packets_delivered;
         self.packets_injected += other.packets_injected;
         self.broadcast_copies += other.broadcast_copies;
@@ -150,6 +176,14 @@ impl Metrics {
         let mut m = self.clone();
         m.windows_merged = 0;
         m
+    }
+
+    /// Count one message of `bytes` payload handed to communication
+    /// mode `mode` (see [`ModeTraffic`]).
+    pub fn record_mode(&mut self, mode: &'static str, bytes: u64) {
+        let e = self.mode_traffic.entry(mode).or_default();
+        e.messages += 1;
+        e.bytes += bytes;
     }
 
     pub fn record_delivery(&mut self, proto: &'static str, latency: Time, bytes: u32) {
@@ -177,6 +211,12 @@ impl Metrics {
         ));
         if self.windows_merged > 0 {
             s.push_str(&format!("  lockstep windows merged={}\n", self.windows_merged));
+        }
+        for (mode, t) in &self.mode_traffic {
+            s.push_str(&format!(
+                "  mode {:<12} messages={:<8} bytes={}\n",
+                mode, t.messages, t.bytes
+            ));
         }
         for (proto, h) in &self.packet_latency {
             s.push_str(&format!(
@@ -251,6 +291,24 @@ mod tests {
         merged.merge(&a);
         merged.merge(&b);
         assert_eq!(merged, whole);
+    }
+
+    #[test]
+    fn mode_traffic_merges_and_survives_fabric_view() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_mode("postmaster", 64);
+        a.record_mode("postmaster", 32);
+        b.record_mode("postmaster", 8);
+        b.record_mode("ethernet", 1500);
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.mode_traffic["postmaster"], ModeTraffic { messages: 3, bytes: 104 });
+        assert_eq!(merged.mode_traffic["ethernet"], ModeTraffic { messages: 1, bytes: 1500 });
+        // Per-mode totals are fabric behavior: the view keeps them, so
+        // cross-engine equality covers them too.
+        assert_eq!(merged.fabric_view().mode_traffic, merged.mode_traffic);
     }
 
     #[test]

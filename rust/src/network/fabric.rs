@@ -20,11 +20,23 @@
 //! *App context* (inside [`App`] callbacks, which on the sharded engine
 //! execute mid-window on one shard): the global counter is **not**
 //! coherent, so app-originated traffic uses per-node ids
-//! ([`Fabric::app_packet_id`], [`Fabric::pm_send_at`]) that depend only
-//! on the sending node's own sequence. Engine-agnostic workloads use
-//! the app-context sends for *all* traffic they originate from a
-//! specific node — the per-node scheme is valid in both contexts, which
-//! lets one code path serve kickoff and callback alike.
+//! ([`Network::app_packet_id`]) that depend only on the sending node's
+//! own sequence. The unified Endpoint sends ([`Fabric::send`] /
+//! [`Fabric::send_at`]) are built on that id space, which is valid in
+//! both contexts — engine-agnostic workloads use them for *all*
+//! traffic they originate, so one code path serves kickoff and
+//! callback alike.
+//!
+//! # Communication modes
+//!
+//! The virtual channels are a first-class axis: [`Fabric::open`] binds
+//! a node to a [`CommMode`], [`Fabric::send`]/[`Fabric::send_at`] move
+//! [`Message`]s over it ([`Fabric::connect`] first, where
+//! [`ChannelCaps::pair_setup`] demands), and complete messages surface
+//! through [`Fabric::recv`] or [`App::on_message`]. The legacy
+//! per-channel families (`fifo_*`, `pm_*`, `eth_*`) remain as thin
+//! shims over the same per-mode transmit recipes for channel-specific
+//! drivers and tests.
 //!
 //! # Partitioned apps
 //!
@@ -42,13 +54,14 @@
 
 use std::sync::Arc;
 
+use crate::channels::endpoint::{ChannelCaps, CommMode, Endpoint, Message, MsgId};
 use crate::channels::ethernet::{EthFrame, RxMode};
 use crate::channels::postmaster::PmRecord;
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
 use crate::network::sharded::ShardedNetwork;
 use crate::network::{App, Delivery, Network, NullApp};
-use crate::router::{Packet, Payload, Proto};
+use crate::router::{Payload, Proto};
 use crate::sim::Time;
 use crate::topology::{LinkId, NodeId, Topology};
 
@@ -127,24 +140,30 @@ pub trait Fabric {
     /// See [`Network::repair_link`].
     fn repair_link(&mut self, l: LinkId);
 
-    // -- app-context sends (per-node id space; valid in both contexts) ----
+    // -- communication modes: the unified Endpoint API --------------------
+    //
+    // Valid in driver context *and* (except `open`/`connect`/`Nfs`
+    // sends) from App callbacks at the endpoint's node: every send
+    // draws per-node app packet ids, so both engines assign identical
+    // ids (see the module docs).
 
-    /// See [`Network::app_packet_id`].
-    fn app_packet_id(&mut self, node: NodeId) -> u64;
-    /// Inject a fully-built packet at its source node (injection
-    /// overhead applies; injection metrics accounted). The packet's id
-    /// must come from [`Fabric::app_packet_id`] when called from an
-    /// [`App`] callback.
-    fn inject(&mut self, pkt: Packet);
-    /// Schedule a fully-built packet to enter the fabric at absolute
-    /// time `at` (the caller accounts metrics and software costs).
-    fn inject_at(&mut self, at: Time, pkt: Packet);
-    /// See [`Network::pm_send_at`]: the engine-agnostic Postmaster send.
-    fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>);
-    /// See [`Network::timer_at`].
-    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64);
+    /// See [`Network::open`]: bind `node` to a communication mode.
+    fn open(&mut self, node: NodeId, mode: CommMode) -> Endpoint;
+    /// See [`Network::connect`]: per-pair setup where
+    /// [`ChannelCaps::pair_setup`] requires it (driver context).
+    fn connect(&mut self, ep: &Endpoint, dst: NodeId);
+    /// See [`Network::send`]: send a message over the endpoint's mode.
+    fn send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId;
+    /// See [`Network::send_at`]: deferred-production send (`at ≥ now`).
+    fn send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId;
+    /// See [`Network::recv`]: drain the endpoint's complete messages.
+    fn recv(&mut self, ep: &Endpoint) -> Vec<Message>;
+    /// Capability descriptor of `mode` under this fabric's config.
+    fn caps(&self, mode: CommMode) -> ChannelCaps {
+        mode.caps(self.config())
+    }
 
-    // -- virtual channels -------------------------------------------------
+    // -- virtual channels (legacy per-channel shims) ----------------------
 
     /// See [`Network::fifo_connect`].
     fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8);
@@ -240,20 +259,20 @@ impl Fabric for Network {
         Network::repair_link(self, l)
     }
 
-    fn app_packet_id(&mut self, node: NodeId) -> u64 {
-        Network::app_packet_id(self, node)
+    fn open(&mut self, node: NodeId, mode: CommMode) -> Endpoint {
+        Network::open(self, node, mode)
     }
-    fn inject(&mut self, pkt: Packet) {
-        Network::inject(self, pkt)
+    fn connect(&mut self, ep: &Endpoint, dst: NodeId) {
+        Network::connect(self, ep, dst)
     }
-    fn inject_at(&mut self, at: Time, pkt: Packet) {
-        Network::inject_at(self, at, pkt)
+    fn send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        Network::send(self, ep, dst, msg)
     }
-    fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
-        Network::pm_send_at(self, at, src, target, queue, data)
+    fn send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        Network::send_at(self, at, ep, dst, msg)
     }
-    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
-        Network::timer_at(self, at, node, tag)
+    fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
+        Network::recv(self, ep)
     }
 
     fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {
@@ -359,22 +378,20 @@ impl Fabric for ShardedNetwork {
         ShardedNetwork::repair_link(self, l)
     }
 
-    fn app_packet_id(&mut self, node: NodeId) -> u64 {
-        self.shard_mut(node).app_packet_id(node)
+    fn open(&mut self, node: NodeId, mode: CommMode) -> Endpoint {
+        ShardedNetwork::open(self, node, mode)
     }
-    fn inject(&mut self, pkt: Packet) {
-        let src = pkt.src;
-        self.shard_mut(src).inject(pkt)
+    fn connect(&mut self, ep: &Endpoint, dst: NodeId) {
+        ShardedNetwork::connect(self, ep, dst)
     }
-    fn inject_at(&mut self, at: Time, pkt: Packet) {
-        let src = pkt.src;
-        self.shard_mut(src).inject_at(at, pkt)
+    fn send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        ShardedNetwork::send(self, ep, dst, msg)
     }
-    fn pm_send_at(&mut self, at: Time, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
-        self.shard_mut(src).pm_send_at(at, src, target, queue, data)
+    fn send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        ShardedNetwork::send_at(self, at, ep, dst, msg)
     }
-    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
-        self.shard_mut(node).timer_at(at, node, tag)
+    fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
+        ShardedNetwork::recv(self, ep)
     }
 
     fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {

@@ -60,6 +60,7 @@ pub use fabric::{Fabric, ShardableApp};
 use std::sync::Arc;
 
 use crate::channels::bridge_fifo::BridgeFifoFabric;
+use crate::channels::endpoint::{CommState, Endpoint, Message};
 use crate::channels::ethernet::{EthFrame, EthernetFabric};
 use crate::channels::postmaster::{PmRecord, PostmasterFabric};
 use crate::config::SystemConfig;
@@ -242,6 +243,12 @@ pub enum Event {
 /// the ones the workload cares about. Delivered data is *also* available
 /// from channel inboxes after a run.
 ///
+/// Mode-generic workloads need only [`App::on_message`]: it fires for
+/// every complete [`Message`] arriving on an open [`Endpoint`],
+/// whichever [`crate::channels::CommMode`] carries it. The
+/// per-channel callbacks remain for code bound to one channel's native
+/// units (frames, records, words).
+///
 /// # Per-node contract
 ///
 /// Every callback names the node it fires at, and on the sharded engine
@@ -252,8 +259,9 @@ pub enum Event {
 ///   commutatively at the end of the run — see
 ///   [`ShardableApp::reduce`]);
 /// * originate new traffic only *from* that node, and only through the
-///   app-context send APIs ([`Network::app_packet_id`] /
-///   [`Fabric::pm_send_at`] / [`Fabric::inject`] with an app id): the
+///   app-context send APIs — the Endpoint sends
+///   ([`Network::send`] / [`Network::send_at`]) or a raw
+///   [`Network::inject`] with a [`Network::app_packet_id`] id: the
 ///   global-counter driver APIs ([`Network::send_directed`] etc.) panic
 ///   inside callbacks on the sharded engine, where the global cursor is
 ///   not coherent mid-run.
@@ -274,6 +282,10 @@ pub trait App {
     fn on_eth(&mut self, net: &mut Network, node: NodeId, frame: &EthFrame) {}
     /// An application timer fired ([`Network::timer_at`]).
     fn on_timer(&mut self, net: &mut Network, node: NodeId, tag: u64) {}
+    /// A complete [`Message`] arrived on the open endpoint `ep`
+    /// (fires after the channel's native callback; `msg.from` is the
+    /// sender). The mode-generic hook every endpoint workload uses.
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) {}
 }
 
 /// An [`App`] that does nothing (inbox-driven workloads).
@@ -302,6 +314,9 @@ pub struct Network {
     /// Delivery trace ([`Network::enable_trace`]): every packet handed
     /// to a destination Packet Demux. Off by default (hot-path lean).
     pub trace: Option<Vec<Delivery>>,
+    /// Endpoint-layer state (open lanes, inboxes, reassembly; see
+    /// [`crate::channels::endpoint`]).
+    pub(crate) comm: CommState,
     /// Set when this `Network` is one shard of a sharded run.
     pub(crate) shard_ctx: Option<ShardCtx>,
     /// Per-node counters behind [`Network::app_packet_id`].
@@ -343,6 +358,7 @@ impl Network {
             tunnel_results: FxHashMap::default(),
             failed_links: vec![false; topo_link_count],
             trace: None,
+            comm: CommState::default(),
             shard_ctx: None,
             app_seq: vec![0; n],
             in_app: false,
@@ -618,7 +634,7 @@ impl Network {
             Event::EthTx { frame } => self.eth_tx_inject(*frame),
             Event::TunnelExec { node, packet } => {
                 let pkt = self.packets.free(packet);
-                self.tunnel_exec(node, pkt)
+                self.tunnel_exec(node, pkt, app)
             }
             Event::Timer { node, tag } => {
                 self.app_scope(app, |net, app| app.on_timer(net, node, tag))

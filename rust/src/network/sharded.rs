@@ -91,6 +91,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
+use crate::channels::endpoint::{CommMode, Endpoint, Message, MsgId};
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
 use crate::network::{App, BoundaryMsg, Delivery, Network, NullApp, ShardCtx, ShardableApp};
@@ -256,6 +257,60 @@ impl ShardedNetwork {
     /// See [`Network::pm_send`].
     pub fn pm_send(&mut self, src: NodeId, target: NodeId, queue: u8, data: Vec<u8>) {
         self.with_shard(src, |n| n.pm_send(src, target, queue, data));
+    }
+
+    // -----------------------------------------------------------------
+    // The unified Endpoint API (see `channels::endpoint`): node-level
+    // registries replicate to every shard (like `pm_open` /
+    // `fifo_connect`, so send-side checks and receive-side capture
+    // agree everywhere); sends and receives route to the owning shard.
+    // Everything uses per-node ids, so no cursor sync is needed and the
+    // calls stay byte-identical to the serial engine.
+    // -----------------------------------------------------------------
+
+    /// See [`Network::open`] (registered on every shard).
+    pub fn open(&mut self, node: NodeId, mode: CommMode) -> Endpoint {
+        let mut ep = Endpoint { node, mode };
+        for sh in &mut self.shards {
+            ep = sh.open(node, mode);
+        }
+        ep
+    }
+
+    /// See [`Network::connect`] (registered on every shard; the
+    /// deterministic channel allocation picks the same id everywhere).
+    pub fn connect(&mut self, ep: &Endpoint, dst: NodeId) {
+        for sh in &mut self.shards {
+            sh.connect(ep, dst);
+        }
+    }
+
+    /// See [`Network::send`].
+    pub fn send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        let now = self.now();
+        self.send_at(now, ep, dst, msg)
+    }
+
+    /// See [`Network::send_at`]. `Nfs` is the one mode routed through
+    /// the gateway-aware [`ShardedNetwork::nfs_put`] wrapper (its
+    /// transfer state must live on the gateway's shard); everything
+    /// else goes straight to the shard owning `ep.node`.
+    pub fn send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        match ep.mode {
+            CommMode::Nfs => {
+                let seq = self.shard_mut(ep.node).comm_next_msg_seq(ep.node);
+                let name = crate::channels::endpoint::comm_nfs_name(ep.node, seq);
+                let len = msg.data.len() as u64;
+                self.nfs_put(ep.node, &name, len);
+                crate::channels::endpoint::comm_msg_id(ep.node, seq)
+            }
+            _ => self.shard_mut(ep.node).send_at(at, ep, dst, msg),
+        }
+    }
+
+    /// See [`Network::recv`] (drains the owning shard's inbox).
+    pub fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
+        self.shard_mut(ep.node).recv(ep)
     }
 
     /// See [`Network::tunnel_write`].

@@ -1,4 +1,4 @@
-//! Distributed learners over Postmaster DMA (§3.2, experiment E8).
+//! Distributed learners (§3.2, experiment E8) — mode-generic.
 //!
 //! "Regions or learners are distributed across multiple nodes, and each
 //! node generates multiple small outputs during each time step which
@@ -14,7 +14,14 @@
 //! (uniformly through the compute window), `Aggregated` emits everything
 //! at the end. The measured quantity is the makespan of a time step:
 //! compute + residual communication tail.
+//!
+//! The channel itself is a parameter ([`LearnerConfig::comm`]): the
+//! records ride the unified [`Endpoint`] API, so the same workload runs
+//! over Postmaster DMA (the paper's recommendation), internal Ethernet
+//! or Bridge FIFO — `repro learners --comm pm|eth|fifo` — and the
+//! per-mode makespans quantify *why* §3.2 recommends Postmaster.
 
+use crate::channels::endpoint::{CommMode, Endpoint, Message};
 use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -45,6 +52,8 @@ pub struct LearnerConfig {
     /// cages, which is how the workload exercises the sharded engine's
     /// cross-boundary path.
     pub stride: usize,
+    /// The virtual channel the records travel over.
+    pub comm: CommMode,
 }
 
 impl Default for LearnerConfig {
@@ -56,6 +65,7 @@ impl Default for LearnerConfig {
             compute_ns: 50_000,
             steps: 4,
             stride: 1,
+            comm: CommMode::Postmaster { queue: 0 },
         }
     }
 }
@@ -73,13 +83,9 @@ struct LearnerApp {
 }
 
 impl App for LearnerApp {
-    fn on_postmaster(
-        &mut self,
-        _net: &mut Network,
-        _node: NodeId,
-        _queue: u8,
-        _rec: &crate::channels::postmaster::PmRecord,
-    ) {
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, _msg: &Message) {
+        // Callback-consumed endpoint: keep the recv inbox from growing.
+        net.recv(&ep);
         self.received += 1;
     }
 }
@@ -93,6 +99,17 @@ impl ShardableApp for LearnerApp {
     }
 }
 
+/// The k-th output's destination for learner `i` (round-robin over the
+/// other learners; never `i` itself).
+fn dst_of(nodes: &[NodeId], i: usize, k: usize) -> NodeId {
+    let dst = nodes[(i + 1 + k % (nodes.len() - 1)) % nodes.len()];
+    if dst == nodes[i] {
+        nodes[(i + 1) % nodes.len()]
+    } else {
+        dst
+    }
+}
+
 /// Run the workload on either engine; returns per-step stats.
 pub fn run<F: Fabric>(
     net: &mut F,
@@ -102,28 +119,31 @@ pub fn run<F: Fabric>(
     let nodes: Vec<NodeId> =
         net.topo().nodes().step_by(cfg.stride.max(1)).take(cfg.learners).collect();
     assert!(nodes.len() >= 2, "need at least two learners");
-    for &n in &nodes {
-        net.pm_open(n, 0);
+    let eps: Vec<Endpoint> = nodes.iter().map(|&n| net.open(n, cfg.comm)).collect();
+    if net.caps(cfg.comm).pair_setup {
+        // Pre-establish exactly the pairs the schedule uses.
+        for i in 0..nodes.len() {
+            for k in 0..cfg.outputs_per_step {
+                net.connect(&eps[i], dst_of(&nodes, i, k));
+            }
+        }
     }
     let mut out = Vec::with_capacity(cfg.steps as usize);
     for _step in 0..cfg.steps {
         let t0 = net.now();
         // Each learner sends `outputs_per_step` records round-robin to
-        // the other learners.
+        // the other learners, each produced at its production time.
         let mut records = 0u64;
-        for (i, &src) in nodes.iter().enumerate() {
+        for i in 0..nodes.len() {
             for k in 0..cfg.outputs_per_step {
-                let dst = nodes[(i + 1 + k % (nodes.len() - 1)) % nodes.len()];
-                let dst = if dst == src { nodes[(i + 1) % nodes.len()] } else { dst };
+                let dst = dst_of(&nodes, i, k);
                 let at = match strategy {
                     SendStrategy::Streamed => {
                         t0 + cfg.compute_ns * (k as Time + 1) / cfg.outputs_per_step as Time
                     }
                     SendStrategy::Aggregated => t0 + cfg.compute_ns,
                 };
-                // Schedule the send at its production time via a timer.
-                let payload = vec![k as u8; cfg.record_bytes];
-                schedule_pm_send(net, at, src, dst, payload);
+                net.send_at(at, &eps[i], dst, Message::new(vec![k as u8; cfg.record_bytes]));
                 records += 1;
             }
         }
@@ -136,15 +156,6 @@ pub fn run<F: Fabric>(
         out.push(StepStats { makespan: end - t0, records });
     }
     out
-}
-
-/// Deferred Postmaster send: the record enters the fabric at its
-/// production instant `at` (which is how "send as generated" overlaps
-/// communication with the compute window). [`Fabric::pm_send_at`]
-/// carries the whole recipe — per-node id, enqueue + injection
-/// overheads, metrics.
-fn schedule_pm_send<F: Fabric>(net: &mut F, at: Time, src: NodeId, dst: NodeId, data: Vec<u8>) {
-    net.pm_send_at(at, src, dst, 0, data);
 }
 
 /// Paper-shape check: streamed beats aggregated, and the advantage is
@@ -163,6 +174,7 @@ pub fn overlap_advantage<F: Fabric>(net_factory: impl Fn() -> F, cfg: LearnerCon
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::channels::ethernet::RxMode;
 
     #[test]
     fn streamed_overlaps_and_wins() {
@@ -188,5 +200,27 @@ mod tests {
         let cfg = LearnerConfig { steps: 1, compute_ns: 200_000, ..Default::default() };
         let stats = run(&mut net, cfg, SendStrategy::Streamed);
         assert!(stats[0].makespan >= 200_000);
+    }
+
+    #[test]
+    fn every_mode_carries_the_workload() {
+        // The mode axis: identical record schedule over all three
+        // channels, all records delivered; the per-mode makespans obey
+        // the paper's overhead ordering (fifo ≤ pm ≪ eth).
+        let go = |comm: CommMode| {
+            let mut net = Network::card();
+            let cfg = LearnerConfig { steps: 1, outputs_per_step: 4, comm, ..Default::default() };
+            let stats = run(&mut net, cfg, SendStrategy::Aggregated);
+            assert_eq!(stats[0].records, 27 * 4);
+            let t = net.metrics.mode_traffic[comm.name()];
+            assert_eq!(t.messages, 27 * 4, "per-mode accounting ({})", comm.name());
+            stats[0].makespan
+        };
+        let fifo = go(CommMode::BridgeFifo { width_bits: 64 });
+        let pm = go(CommMode::Postmaster { queue: 0 });
+        let eth = go(CommMode::Ethernet { rx: RxMode::Interrupt });
+        // The §3.1-vs-§3.2 claim: the software-path mode is the slow one.
+        assert!(pm < eth, "pm {pm} vs eth {eth}");
+        assert!(fifo < eth, "fifo {fifo} vs eth {eth}");
     }
 }

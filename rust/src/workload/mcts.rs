@@ -5,15 +5,18 @@
 //! architecture": control-heavy, latency-sensitive, trivially
 //! node-parallel. On INC it maps naturally: a leader node owns the tree
 //! (UCB1 selection/expansion/backup); worker nodes run rollouts on their
-//! FPGA fabric; tasks and results travel over Postmaster DMA — exactly
-//! the small-message pattern §3.2 is built for.
+//! FPGA fabric; tasks and results travel as small messages — by default
+//! over Postmaster DMA, exactly the pattern §3.2 is built for, but the
+//! channel is a [`CommMode`] parameter ([`DistributedMcts::with_mode`],
+//! `repro mcts --comm pm|eth|fifo`): the search is latency-bound, so
+//! the mode choice shows up directly in rollout throughput.
 //!
 //! The game is a synthetic but non-trivial bandit tree: depth-`d`,
 //! branching-`b`, with leaf payoffs from a seeded hash so every run is
 //! deterministic and the optimum is known — the search must actually
 //! find it (tested below).
 
-use crate::channels::postmaster::PmRecord;
+use crate::channels::endpoint::{CommMode, Endpoint, Message};
 use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -97,6 +100,8 @@ pub struct DistributedMcts {
     pub rollout_ns: Time,
     /// Max outstanding tasks per worker.
     pub pipeline_depth: u32,
+    /// The channel tasks and results travel over.
+    mode: CommMode,
     /// Whether this instance (or partition) owns the leader's state —
     /// true for the parent app; among sharded partitions, true exactly
     /// for the shard owning the leader node.
@@ -115,11 +120,33 @@ pub struct MctsResult {
 }
 
 impl DistributedMcts {
+    /// Default transport: Postmaster DMA (§3.2's small-message channel).
     pub fn new<F: Fabric>(net: &mut F, game: Game, leader: NodeId, workers: Vec<NodeId>) -> Self {
+        Self::with_mode(net, game, leader, workers, CommMode::Postmaster { queue: 1 })
+    }
+
+    /// Build the search over an explicit communication mode: endpoints
+    /// open at the leader and every worker, with per-pair setup in both
+    /// directions where the mode requires it.
+    pub fn with_mode<F: Fabric>(
+        net: &mut F,
+        game: Game,
+        leader: NodeId,
+        workers: Vec<NodeId>,
+        mode: CommMode,
+    ) -> Self {
         assert!(!workers.is_empty());
-        net.pm_open(leader, PM_RESULT_Q);
+        // Messages dispatch on node identity (leader = result, anything
+        // else = task), so the leader cannot double as a worker.
+        assert!(!workers.contains(&leader), "leader cannot be one of the workers");
+        let pair_setup = net.caps(mode).pair_setup;
+        let lep = net.open(leader, mode);
         for &w in &workers {
-            net.pm_open(w, PM_TASK_Q);
+            let wep = net.open(w, mode);
+            if pair_setup {
+                net.connect(&lep, w);
+                net.connect(&wep, leader);
+            }
         }
         DistributedMcts {
             game,
@@ -134,6 +161,7 @@ impl DistributedMcts {
             rollouts_target: 0,
             rollout_ns: 20_000,
             pipeline_depth: 4,
+            mode,
             owns_leader: true,
         }
     }
@@ -221,22 +249,23 @@ impl DistributedMcts {
         }
     }
 
-    /// Issue one rollout task to worker `w` over Postmaster. Called at
-    /// kickoff (driver context) and from result callbacks at the leader
-    /// (app context); [`Fabric::pm_send_at`]'s per-node ids make both
-    /// engine-agnostic.
+    /// Issue one rollout task to worker `w` over the configured mode.
+    /// Called at kickoff (driver context) and from result callbacks at
+    /// the leader (app context); the endpoint sends' per-node ids make
+    /// both engine-agnostic.
     fn dispatch<F: Fabric>(&mut self, net: &mut F, w: usize) {
         let idx = self.select_expand();
         let nonce = self.next_nonce;
         self.next_nonce += 1;
         self.pending.insert(nonce, idx);
         self.inflight[w] += 1;
-        // Task record: [nonce, arena idx, path...] — small by design.
+        // Task message: [nonce, worker idx, path...] — small by design.
         let mut data = nonce.to_le_bytes().to_vec();
         data.extend((w as u64).to_le_bytes());
         data.extend(self.paths[idx].iter().flat_map(|a| a.to_le_bytes()));
         let now = net.now();
-        net.pm_send_at(now, self.leader, self.workers[w], PM_TASK_Q, data);
+        let ep = Endpoint { node: self.leader, mode: self.mode };
+        net.send_at(now, &ep, self.workers[w], Message::new(data));
     }
 
     fn backup(&mut self, idx: usize, value: f64) {
@@ -254,47 +283,46 @@ impl DistributedMcts {
     }
 }
 
-/// Postmaster queue ids.
-const PM_TASK_Q: u8 = 1;
-const PM_RESULT_Q: u8 = 2;
-
 impl App for DistributedMcts {
-    fn on_postmaster(&mut self, net: &mut Network, node: NodeId, queue: u8, rec: &PmRecord) {
-        match queue {
-            PM_TASK_Q => {
-                // Worker: run the rollout on the FPGA (modeled compute
-                // time), then return the value.
-                let nonce = u64::from_le_bytes(rec.data[0..8].try_into().unwrap());
-                let widx = u64::from_le_bytes(rec.data[8..16].try_into().unwrap());
-                let path: Vec<u32> = rec.data[16..]
-                    .chunks_exact(4)
-                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-                    .collect();
-                let value = self.game.rollout(&path, nonce);
-                // Result record: [nonce, widx, value bits].
-                let mut data = nonce.to_le_bytes().to_vec();
-                data.extend(widx.to_le_bytes());
-                data.extend(value.to_bits().to_le_bytes());
-                // Reply after the rollout compute window.
-                let leader = self.leader;
-                let at = net.now() + self.rollout_ns;
-                net.pm_send_at(at, node, leader, PM_RESULT_Q, data);
+    /// One handler for both directions: a message arriving at the
+    /// leader is a rollout result, a message arriving anywhere else is
+    /// a task at that worker. (Mode-generic: whichever channel carries
+    /// the message, the payload layout is the same.)
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) {
+        // Callback-consumed endpoint: keep the recv inbox from growing.
+        net.recv(&ep);
+        let node = ep.node;
+        if node != self.leader {
+            // Worker: run the rollout on the FPGA (modeled compute
+            // time), then return the value.
+            let nonce = u64::from_le_bytes(msg.data[0..8].try_into().unwrap());
+            let widx = u64::from_le_bytes(msg.data[8..16].try_into().unwrap());
+            let path: Vec<u32> = msg.data[16..]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let value = self.game.rollout(&path, nonce);
+            // Result message: [nonce, widx, value bits].
+            let mut data = nonce.to_le_bytes().to_vec();
+            data.extend(widx.to_le_bytes());
+            data.extend(value.to_bits().to_le_bytes());
+            // Reply after the rollout compute window.
+            let leader = self.leader;
+            let at = net.now() + self.rollout_ns;
+            net.send_at(at, &Endpoint { node, mode: self.mode }, leader, Message::new(data));
+        } else {
+            // Leader: backup + keep the worker's pipeline full.
+            let nonce = u64::from_le_bytes(msg.data[0..8].try_into().unwrap());
+            let widx = u64::from_le_bytes(msg.data[8..16].try_into().unwrap()) as usize;
+            let value =
+                f64::from_bits(u64::from_le_bytes(msg.data[16..24].try_into().unwrap()));
+            let idx = self.pending.remove(&nonce).expect("unknown rollout result");
+            self.inflight[widx] -= 1;
+            self.rollouts_done += 1;
+            self.backup(idx, value);
+            if self.issued() < self.rollouts_target {
+                self.dispatch(net, widx);
             }
-            PM_RESULT_Q => {
-                // Leader: backup + keep the worker's pipeline full.
-                let nonce = u64::from_le_bytes(rec.data[0..8].try_into().unwrap());
-                let widx = u64::from_le_bytes(rec.data[8..16].try_into().unwrap()) as usize;
-                let value =
-                    f64::from_bits(u64::from_le_bytes(rec.data[16..24].try_into().unwrap()));
-                let idx = self.pending.remove(&nonce).expect("unknown rollout result");
-                self.inflight[widx] -= 1;
-                self.rollouts_done += 1;
-                self.backup(idx, value);
-                if self.issued() < self.rollouts_target {
-                    self.dispatch(net, widx);
-                }
-            }
-            _ => {}
         }
     }
 }
@@ -314,6 +342,7 @@ impl ShardableApp for DistributedMcts {
             rollouts_target: self.rollouts_target,
             rollout_ns: self.rollout_ns,
             pipeline_depth: self.pipeline_depth,
+            mode: self.mode,
             owns_leader: owner[self.leader.0 as usize] == shard,
         }
     }
@@ -367,6 +396,33 @@ mod tests {
             "8 workers ({:.0}/s) should beat 2 workers ({:.0}/s) by >2x",
             r8.throughput,
             r2.throughput
+        );
+    }
+
+    #[test]
+    fn search_is_mode_generic() {
+        // The same search over Bridge FIFO and internal Ethernet: the
+        // channel changes the makespan, never the answer.
+        use crate::channels::endpoint::CommMode;
+        use crate::channels::ethernet::RxMode;
+        let run = |mode: CommMode| {
+            let mut net = Network::card();
+            let ws: Vec<NodeId> = (1..=6).map(NodeId).collect();
+            let game = Game { depth: 4, branching: 3, seed: 42 };
+            let mcts = DistributedMcts::with_mode(&mut net, game, NodeId(0), ws, mode);
+            mcts.search(&mut net, 600)
+        };
+        let fifo = run(CommMode::BridgeFifo { width_bits: 64 });
+        let eth = run(CommMode::Ethernet { rx: RxMode::Interrupt });
+        assert_eq!(fifo.rollouts, 600);
+        assert_eq!(eth.rollouts, 600);
+        assert_eq!(fifo.best_path, vec![0; 4]);
+        assert_eq!(eth.best_path, vec![0; 4]);
+        assert!(
+            fifo.makespan < eth.makespan,
+            "latency-bound search: fifo {} should beat eth {}",
+            fifo.makespan,
+            eth.makespan
         );
     }
 

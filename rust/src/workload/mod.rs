@@ -18,7 +18,10 @@
 //! [`crate::network::ShardableApp`], so it runs unmodified — and
 //! byte-identically — on the serial engine or the bounded-lag parallel
 //! engine (`repro <workload> --shards K`;
-//! `tests/sharded_differential.rs`).
+//! `tests/sharded_differential.rs`). Their traffic rides the unified
+//! Endpoint API, so the virtual channel is itself a parameter
+//! ([`crate::channels::CommMode`]; `repro learners|mcts --comm
+//! pm|eth|fifo`) rather than baked into the call sites.
 
 pub mod learners;
 pub mod mcts;
