@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         placement: Placement::Block,
         log_every: 20,
+        ..Default::default()
     };
     println!(
         "training {} ranks × {} steps on a 27-node card…\n",

@@ -234,6 +234,76 @@ fn main() {
         sharded.worker_count(),
     ));
 
+    // Shard-local state domains + distance-aware multi-shard epoch
+    // batching (EXPERIMENTS.md E12): the per-shard memory cut from the
+    // owned-subset domains, and how many windows (on how many shards
+    // simultaneously) the distance-aware batching coalesces on sparse
+    // staggered traffic. Tracked across PRs so neither the memory cut
+    // nor the batching win can silently regress.
+    let serial_state = Network::new(SystemConfig::inc9000()).state_bytes();
+    let mut dnet = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+    let per_shard = dnet.state_bytes_per_shard();
+    let shard_state_max = *per_shard.iter().max().unwrap();
+    // The remap bookkeeping itself (O(mesh) index maps, replicated per
+    // shard) — reported alongside so the cut is never overstated; it is
+    // far below the dynamic state it makes partitionable.
+    let index_map_bytes: u64 =
+        dnet.shards().iter().map(|s| s.domain.index_bytes()).max().unwrap();
+    assert_eq!(per_shard.iter().sum::<u64>(), serial_state, "state not conserved");
+    assert!(
+        index_map_bytes * 4 < shard_state_max,
+        "index maps ({index_map_bytes} B) should be far below the per-shard state"
+    );
+    {
+        // Sparse staggered traffic: bursts local to cages 0 and 3 in
+        // disjoint time phases — both owning shards must sprint.
+        let pm = CommMode::Postmaster { queue: 0 };
+        let pairs = [(NodeId(0), NodeId(1)), (NodeId(1726), NodeId(1727))];
+        let eps: Vec<_> = pairs
+            .iter()
+            .flat_map(|&(a, b)| [a, b])
+            .map(|n| dnet.open(n, pm))
+            .collect();
+        for phase in 0..6u64 {
+            let (ep, dst) = if phase % 2 == 0 { (&eps[0], pairs[0].1) } else { (&eps[2], pairs[1].1) };
+            for i in 0..4u64 {
+                dnet.send_at(
+                    phase * 250_000 + i * 2_000,
+                    ep,
+                    dst,
+                    Message::new(vec![i as u8; 64]),
+                );
+            }
+        }
+        // Plus one phase with *both* cages active at the same instants:
+        // the cage-0/cage-3 horizon is 3 hops × 684 ns, so both shards
+        // sprint within the same epochs (simultaneous, not alternating).
+        for i in 0..4u64 {
+            dnet.send_at(1_500_000 + i * 2_000, &eps[0], pairs[0].1, Message::new(vec![7; 64]));
+            dnet.send_at(1_500_000 + i * 2_000, &eps[2], pairs[1].1, Message::new(vec![7; 64]));
+        }
+        dnet.run_to_quiescence();
+    }
+    let windows_merged = dnet.metrics().windows_merged;
+    let merging_shards =
+        dnet.shards().iter().filter(|s| s.metrics.windows_merged > 0).count();
+    let state_cut = serial_state as f64 / shard_state_max as f64;
+    println!(
+        "inc9000 domains serial state {:.2} MB vs {:.2} MB/shard ({state_cut:.2}x cut); \
+         sparse batching merged {windows_merged} windows on {merging_shards} shards",
+        serial_state as f64 / 1e6,
+        shard_state_max as f64 / 1e6,
+    );
+    json.push_str(&format!(
+        "  \"inc9000_domain\": {{\"serial_state_bytes\": {serial_state}, \
+         \"shard_state_bytes_max\": {shard_state_max}, \
+         \"shard_index_map_bytes\": {index_map_bytes}, \"shards\": {}, \
+         \"state_cut\": {state_cut:.3}, \"windows_merged\": {windows_merged}, \
+         \"merging_shards\": {merging_shards}}},\n",
+        dnet.shard_count(),
+    ));
+    assert!(merging_shards >= 2, "multi-shard batching failed to fire");
+
     // App workloads through the engine-agnostic Fabric trait on INC
     // 9000: distributed learners (Postmaster streams, grid strided
     // across cages) and the ring all-reduce (ranks scattered across

@@ -246,8 +246,10 @@ impl Network {
             let captured = self.comm_capture_fifo(node, channel, &released);
             self.app_scope(app, |net, app| {
                 app.on_fifo(net, node, channel, &released);
-                for (ep, msg) in &captured {
-                    app.on_message(net, *ep, msg);
+                for (ep, msg) in captured {
+                    if !app.on_message(net, ep, &msg) {
+                        net.comm_inbox_push(&ep, msg);
+                    }
                 }
             });
         }
@@ -274,8 +276,10 @@ impl Network {
         let captured = self.comm_capture_fifo(node, channel, words);
         self.app_scope(app, |net, app| {
             app.on_fifo(net, node, channel, words);
-            for (ep, msg) in &captured {
-                app.on_message(net, *ep, msg);
+            for (ep, msg) in captured {
+                if !app.on_message(net, ep, &msg) {
+                    net.comm_inbox_push(&ep, msg);
+                }
             }
         });
     }

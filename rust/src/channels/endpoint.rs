@@ -314,7 +314,15 @@ impl Network {
                     self.pm_open(node, queue);
                 }
             }
-            CommMode::Ethernet { rx } => self.eth_set_mode(node, rx),
+            // NIC state is shard-local (domain-sized vector): configure
+            // it only where it exists. The mode registry below still
+            // replicates everywhere, which is all the send-side checks
+            // on other shards need.
+            CommMode::Ethernet { rx } => {
+                if self.domain.owns_node(node) {
+                    self.eth_set_mode(node, rx);
+                }
+            }
             CommMode::BridgeFifo { width_bits } => {
                 assert_eq!(
                     width_bits, 64,
@@ -458,8 +466,12 @@ impl Network {
     }
 
     /// Drain the endpoint's inbox of complete messages, in delivery
-    /// order. (`Nfs` endpoints never receive; their payloads appear in
-    /// the external world's file table.)
+    /// order. Messages an [`App::on_message`] callback consumed
+    /// (returned `true` for) never enter the inbox. (`Nfs` endpoints
+    /// never receive; their payloads appear in the external world's
+    /// file table.)
+    ///
+    /// [`App::on_message`]: crate::network::App::on_message
     pub fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
         match self.comm.inbox.get_mut(&(ep.node.0, lane(&ep.mode))) {
             Some(q) => q.drain(..).collect(),
@@ -478,10 +490,20 @@ impl Network {
 
     // -----------------------------------------------------------------
     // Delivery capture: the per-channel receive paths call these to
-    // surface complete messages on open endpoints (pushing to the inbox
-    // and returning what `App::on_message` should see). Legacy traffic
-    // on lanes without an open endpoint is untouched.
+    // assemble complete messages on open endpoints and hand them to
+    // `App::on_message`; a message the callback does not consume
+    // (returns `false`) is queued for `recv` afterwards via
+    // [`Network::comm_inbox_push`]. Legacy traffic on lanes without an
+    // open endpoint is untouched.
     // -----------------------------------------------------------------
+
+    /// Queue a delivered message for [`Network::recv`] (the
+    /// not-consumed path of [`App::on_message`]).
+    ///
+    /// [`App::on_message`]: crate::network::App::on_message
+    pub(crate) fn comm_inbox_push(&mut self, ep: &Endpoint, msg: Message) {
+        self.comm.inbox.entry((ep.node.0, lane(&ep.mode))).or_default().push_back(msg);
+    }
 
     pub(crate) fn comm_capture_pm(
         &mut self,
@@ -492,7 +514,6 @@ impl Network {
         let key = (node.0, LANE_PM | queue as u16);
         let mode = *self.comm.open.get(&key)?;
         let msg = Message { from: rec.initiator, data: rec.data.clone() };
-        self.comm.inbox.entry(key).or_default().push_back(msg.clone());
         Some((Endpoint { node, mode }, msg))
     }
 
@@ -522,7 +543,6 @@ impl Network {
             Arc::new(all)
         };
         let msg = Message { from: frame.src, data: complete };
-        self.comm.inbox.entry(key).or_default().push_back(msg.clone());
         Some((Endpoint { node, mode }, msg))
     }
 
@@ -561,10 +581,6 @@ impl Network {
                 out.push((Endpoint { node, mode }, msg));
             }
         }
-        let inbox = self.comm.inbox.entry(key).or_default();
-        for (_, msg) in &out {
-            inbox.push_back(msg.clone());
-        }
         out
     }
 
@@ -584,7 +600,6 @@ impl Network {
         // The original payload length is not transported; messages come
         // back as the full 8-byte register word, zero-padded.
         let msg = Message { from: src, data: Arc::new(value.to_le_bytes().to_vec()) };
-        self.comm.inbox.entry(key).or_default().push_back(msg.clone());
         Some((Endpoint { node, mode }, msg))
     }
 }
@@ -707,24 +722,33 @@ mod tests {
 
     #[test]
     fn on_message_fires_per_complete_message() {
-        struct Count(Vec<(u32, usize)>);
+        struct Count {
+            seen: Vec<(u32, usize)>,
+            consume: bool,
+        }
         impl App for Count {
-            fn on_message(&mut self, _net: &mut Network, ep: Endpoint, msg: &Message) {
-                self.0.push((ep.node.0, msg.data.len()));
+            fn on_message(&mut self, _net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
+                self.seen.push((ep.node.0, msg.data.len()));
+                self.consume
             }
         }
-        let mut net = card();
-        let (a, b) = (NodeId(0), NodeId(9));
-        let mode = CommMode::Postmaster { queue: 0 };
-        let ea = net.open(a, mode);
-        net.open(b, mode);
-        net.send(&ea, b, Message::new(vec![7; 48]));
-        net.send(&ea, b, Message::new(vec![8; 12]));
-        let mut app = Count(Vec::new());
-        net.run_to_quiescence(&mut app);
-        assert_eq!(app.0.len(), 2);
-        assert!(app.0.iter().all(|&(n, _)| n == b.0));
-        assert_eq!(app.0.iter().map(|&(_, l)| l).sum::<usize>(), 60);
+        for consume in [false, true] {
+            let mut net = card();
+            let (a, b) = (NodeId(0), NodeId(9));
+            let mode = CommMode::Postmaster { queue: 0 };
+            let ea = net.open(a, mode);
+            let eb = net.open(b, mode);
+            net.send(&ea, b, Message::new(vec![7; 48]));
+            net.send(&ea, b, Message::new(vec![8; 12]));
+            let mut app = Count { seen: Vec::new(), consume };
+            net.run_to_quiescence(&mut app);
+            assert_eq!(app.seen.len(), 2);
+            assert!(app.seen.iter().all(|&(n, _)| n == b.0));
+            assert_eq!(app.seen.iter().map(|&(_, l)| l).sum::<usize>(), 60);
+            // The consumed flag decides whether recv still sees them.
+            let left = net.recv(&eb);
+            assert_eq!(left.len(), if consume { 0 } else { 2 });
+        }
     }
 
     #[test]

@@ -114,27 +114,37 @@ pub struct ExternalWorld {
 /// Physical 1 GbE serialization: 8 ns per byte (125 MB/s).
 const EXT_NS_PER_BYTE: u64 = 8;
 
-/// All virtual NICs plus the (single) external world.
+/// All virtual NICs this engine owns, plus the (single) external world.
+/// `ports` is sized by the engine's state [`Domain`] — the full mesh on
+/// the serial engine, the owned subset on a shard — and indexed through
+/// the domain's node map.
+///
+/// [`Domain`]: crate::network::Domain
 #[derive(Debug)]
 pub struct EthernetFabric {
     pub ports: Vec<EthPort>,
+    domain: std::sync::Arc<crate::network::Domain>,
     pub external: ExternalWorld,
 }
 
 impl EthernetFabric {
-    pub fn new(nodes: usize, _cfg: &crate::config::SystemConfig) -> Self {
+    pub fn new(
+        domain: std::sync::Arc<crate::network::Domain>,
+        _cfg: &crate::config::SystemConfig,
+    ) -> Self {
         EthernetFabric {
-            ports: (0..nodes).map(|_| EthPort::new()).collect(),
+            ports: (0..domain.node_count()).map(|_| EthPort::new()).collect(),
+            domain,
             external: ExternalWorld::default(),
         }
     }
 
     pub fn port(&self, n: NodeId) -> &EthPort {
-        &self.ports[n.0 as usize]
+        &self.ports[self.domain.node_index(n)]
     }
 
     pub fn port_mut(&mut self, n: NodeId) -> &mut EthPort {
-        &mut self.ports[n.0 as usize]
+        &mut self.ports[self.domain.node_index(n)]
     }
 }
 
@@ -170,7 +180,7 @@ impl Network {
         assert!(bytes <= ETH_MTU, "frame payload {bytes} exceeds MTU {ETH_MTU}");
         let arm = self.cfg.arm;
         let sw = arm.kernel_stack + arm.driver + arm.dma_setup;
-        let node = &mut self.nodes[src.0 as usize];
+        let node = self.node_mut(src);
         let cpu_start = at.max(node.cpu_free_at);
         node.cpu_free_at = cpu_start + sw;
         node.cpu_busy_ns += sw;
@@ -250,7 +260,7 @@ impl Network {
             RxMode::Interrupt => {
                 // IRQ → driver → kernel stack, all on the ARM.
                 let cost = arm.irq_cost + arm.driver + arm.kernel_stack;
-                self.nodes[node.0 as usize].cpu_busy_ns += cost;
+                self.node_mut(node).cpu_busy_ns += cost;
                 self.eth.port_mut(node).irqs_taken += 1;
                 self.sim.after_keyed(
                     dma + cost,
@@ -292,8 +302,10 @@ impl Network {
         let captured = self.comm_capture_eth(node, &frame);
         self.app_scope(app, |net, app| {
             app.on_eth(net, node, &frame);
-            if let Some((ep, msg)) = &captured {
-                app.on_message(net, *ep, msg);
+            if let Some((ep, msg)) = captured {
+                if !app.on_message(net, ep, &msg) {
+                    net.comm_inbox_push(&ep, msg);
+                }
             }
         });
     }
@@ -310,7 +322,7 @@ impl Network {
             port.pending_rx.drain(..).collect()
         };
         let cost = arm.poll_cost + drained.len() as Time * (arm.driver + arm.kernel_stack);
-        self.nodes[node.0 as usize].cpu_busy_ns += cost;
+        self.node_mut(node).cpu_busy_ns += cost;
         for frame in drained {
             self.eth_rx(node, frame, app);
         }

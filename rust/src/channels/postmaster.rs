@@ -183,8 +183,10 @@ impl Network {
         let captured = self.comm_capture_pm(node, queue, &record);
         self.app_scope(app, |net, app| {
             app.on_postmaster(net, node, queue, &record);
-            if let Some((ep, msg)) = &captured {
-                app.on_message(net, *ep, msg);
+            if let Some((ep, msg)) = captured {
+                if !app.on_message(net, ep, &msg) {
+                    net.comm_inbox_push(&ep, msg);
+                }
             }
         });
     }

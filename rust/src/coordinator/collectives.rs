@@ -17,8 +17,9 @@
 //! and receipt of the marker advances the receiving rank — the same
 //! protocol whichever channel carries it. (Unlike the old
 //! `Payload::Synthetic` raw-packet transport, fragments carry real
-//! bytes — the price of mode genericity; the app drains its endpoint
-//! inboxes per callback so a run retains only the in-flight window.)
+//! bytes — the price of mode genericity; the app *consumes* every
+//! message in its `on_message` callback, so a run retains only the
+//! in-flight window instead of filling the recv inboxes.)
 //!
 //! As a [`ShardableApp`], per-rank receive state lives with the rank's
 //! node (so each sharded partition only ever touches its own ranks) and
@@ -148,12 +149,11 @@ impl RingAllreduce {
 }
 
 impl App for RingAllreduce {
-    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) {
-        // Callback-consumed endpoint: drain the recv inbox so the run
-        // does not retain every fragment it ever moved.
-        net.recv(&ep);
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
+        // Every fragment is consumed on delivery, so a run retains only
+        // the in-flight window instead of every fragment it ever moved.
         if msg.data.first() != Some(&1) {
-            return; // mid-chunk fragment
+            return true; // mid-chunk fragment
         }
         let node = ep.node;
         let rank = self.index[node.0 as usize].expect("collective message at non-rank");
@@ -164,6 +164,7 @@ impl App for RingAllreduce {
         } else if r == self.total_steps {
             self.done_ranks += 1;
         }
+        true
     }
 }
 

@@ -48,7 +48,7 @@ impl Network {
         let mut t = now;
         for n in self.topo.card_nodes(card) {
             t += per_device;
-            let st = &mut self.nodes[n.0 as usize];
+            let st = self.node_mut(n);
             st.fpga_image = Some((build_id, image.clone()));
             st.fpga_done_at = t;
         }
@@ -64,7 +64,7 @@ impl Network {
         let mut t = now;
         for n in self.topo.card_nodes(card) {
             t += per_device;
-            let st = &mut self.nodes[n.0 as usize];
+            let st = self.node_mut(n);
             st.flash_image = Some(image.clone());
             st.flash_done_at = t;
         }
@@ -77,7 +77,7 @@ impl Network {
         // One DAP transaction ≈ 100 TCK cycles at the effective rate.
         let t =
             (100.0 * 8.0 / self.cfg.programming.jtag_fpga_bits_per_s * 1e9) as Time;
-        let v = self.nodes[node.0 as usize].read_addr(addr, self.now());
+        let v = self.node(node).read_addr(addr, self.now());
         (v, t)
     }
 
@@ -111,8 +111,7 @@ impl Network {
         let now = self.now();
         let done = now + p.host_overhead_ns + pcie + ser + depth + local;
         self.sim.advance_to(done);
-        for n in self.topo.nodes() {
-            let st = &mut self.nodes[n.0 as usize];
+        for st in &mut self.nodes {
             match target {
                 MemTarget::Fpga => {
                     st.fpga_image = Some((build_id, image.clone()));

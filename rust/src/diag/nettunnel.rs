@@ -55,16 +55,20 @@ impl Network {
                     // Read response arriving back at the requester.
                     self.tunnel_results.insert(req_id, value);
                 } else if write {
-                    let n = &mut self.nodes[node.0 as usize];
+                    let n = self.node_mut(node);
                     n.write_addr(addr, value, now);
                     n.tick_boot(now);
                     if let Some((ep, msg)) =
                         self.comm_capture_tunnel(node, packet.src, addr, value)
                     {
-                        self.app_scope(app, |net, app| app.on_message(net, ep, &msg));
+                        self.app_scope(app, |net, app| {
+                            if !app.on_message(net, ep, &msg) {
+                                net.comm_inbox_push(&ep, msg);
+                            }
+                        });
                     }
                 } else {
-                    let v = self.nodes[node.0 as usize].read_addr(addr, now);
+                    let v = self.node(node).read_addr(addr, now);
                     let payload = Payload::RegAccess {
                         addr,
                         value: v,
@@ -116,7 +120,7 @@ impl Network {
         now: Time,
     ) {
         let p = self.cfg.programming;
-        let n = &mut self.nodes[node.0 as usize];
+        let n = self.node_mut(node);
         match target {
             MemTarget::Dram => n.dram.write_region(offset, data),
             MemTarget::Fpga => {

@@ -43,7 +43,7 @@ impl Network {
         let from = ring_index(&nodes, requester);
         let to = ring_index(&nodes, target);
         let now = self.now();
-        let value = self.nodes[target.0 as usize].read_addr(addr, now);
+        let value = self.node(target).read_addr(addr, now);
         let hops = ring_hops(nodes.len(), from, to) + ring_hops(nodes.len(), to, from);
         (value, hops as Time * self.cfg.ringbus.hop)
     }
@@ -62,7 +62,7 @@ impl Network {
         let from = ring_index(&nodes, requester);
         let to = ring_index(&nodes, target);
         let now = self.now();
-        let n = &mut self.nodes[target.0 as usize];
+        let n = self.node_mut(target);
         n.write_addr(addr, value, now);
         n.tick_boot(now);
         ring_hops(nodes.len(), from, to) as Time * self.cfg.ringbus.hop
@@ -80,7 +80,7 @@ impl Network {
         let nodes = self.topo.card_nodes(card);
         let now = self.now();
         for &n in &nodes {
-            let st = &mut self.nodes[n.0 as usize];
+            let st = self.node_mut(n);
             st.write_addr(addr, value, now);
             st.tick_boot(now);
         }
@@ -101,7 +101,7 @@ impl Network {
         let start = ring_index(&nodes, requester);
         for k in 0..nodes.len() {
             let n = nodes[(start + k) % nodes.len()];
-            out.push((n, self.nodes[n.0 as usize].read_addr(addr, now)));
+            out.push((n, self.node(n).read_addr(addr, now)));
         }
         out.sort_by_key(|(n, _)| n.0);
         (out, nodes.len() as Time * self.cfg.ringbus.hop)

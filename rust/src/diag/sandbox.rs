@@ -130,7 +130,7 @@ impl PcieSandbox {
             ["uart", "detach"] => {
                 if let Some(n) = self.uart_attached.take() {
                     let now = net.now();
-                    net.nodes[n.0 as usize].write_addr(regs::UART_ATTACH, 0, now);
+                    net.node_mut(n).write_addr(regs::UART_ATTACH, 0, now);
                 }
                 "uart detached".to_string()
             }
@@ -138,7 +138,7 @@ impl PcieSandbox {
                 let n = parse_node(net, node);
                 self.uart_attached = Some(n);
                 self.write_any(net, n, regs::UART_ATTACH, 1);
-                let lines = net.nodes[n.0 as usize].uart.join("\n");
+                let lines = net.node(n).uart.join("\n");
                 format!("uart attached to {n}\n{lines}")
             }
             ["help"] | [] => "commands: read write readall temps eeprom buildids config \

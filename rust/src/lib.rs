@@ -55,6 +55,6 @@ pub mod workload;
 pub use channels::{ChannelCaps, CommMode, Endpoint, Message, MsgId};
 pub use config::{LinkTiming, SystemConfig, SystemPreset};
 pub use network::sharded::ShardedNetwork;
-pub use network::{App, Delivery, Fabric, Network, NullApp, ShardableApp};
+pub use network::{App, Delivery, Domain, Fabric, Network, NullApp, ShardableApp};
 pub use sim::{Sim, Time};
 pub use topology::{Coord, NodeId, Topology};

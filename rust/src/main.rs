@@ -35,8 +35,9 @@ COMMANDS
               uniform-random traffic soak; K>1 runs the bounded-lag
               per-cage parallel engine (K=0 picks the preset's natural
               shard count, 1 forces the serial engine)
-  train       [--ranks N] [--steps N] [--lr F] [--preset P] [--shards K]
-              data-parallel LM training (E10)
+  train       [--ranks N] [--steps N] [--lr F] [--preset P] [--shards K] [--comm M]
+              data-parallel LM training (E10); --comm picks the channel
+              the gradient all-reduce rides
   mcts        [--workers N] [--rollouts N] [--preset P] [--shards K] [--comm M]
               distributed MCTS (E9)
   learners    [--preset P] [--shards K] [--comm M]
@@ -144,6 +145,7 @@ fn main() -> Result<()> {
             args.get("lr", 0.25f32),
             args.preset(SystemPreset::Card),
             args.get("shards", 1u32),
+            args.comm(),
         )?,
         "mcts" => run_mcts(
             args.get("workers", 8usize),
@@ -364,9 +366,16 @@ fn sharded_engine(preset: SystemPreset, shards: u32) -> ShardedNetwork {
     )
 }
 
-fn train(ranks: usize, steps: u32, lr: f32, preset: SystemPreset, shards: u32) -> Result<()> {
+fn train(
+    ranks: usize,
+    steps: u32,
+    lr: f32,
+    preset: SystemPreset,
+    shards: u32,
+    comm: CommMode,
+) -> Result<()> {
     let rt = inc_sim::runtime::load_default()?;
-    let cfg = training::TrainConfig { ranks, steps, lr, ..Default::default() };
+    let cfg = training::TrainConfig { ranks, steps, lr, comm, ..Default::default() };
     let report = if shards == 1 {
         let mut net = Network::new(SystemConfig::new(preset));
         training::train(&mut net, &rt, &cfg)?
@@ -381,8 +390,12 @@ fn train(ranks: usize, steps: u32, lr: f32, preset: SystemPreset, shards: u32) -
         training::train(&mut net, &rt, &cfg)?
     };
     println!(
-        "model {} — {} params, {} ranks, {} steps",
-        rt.manifest.model, report.params, ranks, steps
+        "model {} — {} params, {} ranks, {} steps, all-reduce over {}",
+        rt.manifest.model,
+        report.params,
+        ranks,
+        steps,
+        comm.name()
     );
     println!("{:>6} {:>10} {:>12}", "step", "loss", "vtime ms");
     for p in &report.curve {

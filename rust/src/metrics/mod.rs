@@ -133,12 +133,21 @@ pub struct Metrics {
     /// queue (an idle link with nothing queued schedules no drain).
     pub drains_suppressed: u64,
     /// **Engine-level** counter: lockstep windows the sharded engine's
-    /// adaptive epoch batching coalesced into a single barrier-free
-    /// sprint (see `network::sharded`). Always 0 on the serial engine,
+    /// distance-aware epoch batching coalesced into barrier-free
+    /// sprints (see `network::sharded`). Always 0 on the serial engine,
     /// so it is excluded from the serial↔sharded byte-identity contract
     /// — compare [`Metrics::fabric_view`]s, not raw blocks, across
     /// engines.
     pub windows_merged: u64,
+    /// **Engine-level**: resident bytes of the engine's domain-sized
+    /// dynamic state vectors (links, nodes, NIC ports, failure flags —
+    /// see `Network::state_bytes`), set at construction. Merging sums
+    /// the per-shard slices, which equal the serial engine's figure
+    /// exactly (every node and link is owned by one shard); the
+    /// headline is the *per-shard* value, cut ~shard-count× by the
+    /// owned-subset domains (`inc9000_domain` bench rows). Excluded
+    /// from [`Metrics::fabric_view`] like every engine-level field.
+    pub state_bytes: u64,
 }
 
 impl Metrics {
@@ -166,15 +175,18 @@ impl Metrics {
         self.link_stalls += other.link_stalls;
         self.drains_suppressed += other.drains_suppressed;
         self.windows_merged += other.windows_merged;
+        self.state_bytes += other.state_bytes;
     }
 
-    /// The fabric-behavior view: engine-level counters (currently only
-    /// [`Metrics::windows_merged`]) zeroed. This is the block the
-    /// serial↔sharded differential compares byte-for-byte — how an
-    /// engine *schedules* its windows is not fabric behavior.
+    /// The fabric-behavior view: engine-level fields
+    /// ([`Metrics::windows_merged`], [`Metrics::state_bytes`]) zeroed.
+    /// This is the block the serial↔sharded differential compares
+    /// byte-for-byte — how an engine *schedules* its windows or *lays
+    /// out* its state is not fabric behavior.
     pub fn fabric_view(&self) -> Metrics {
         let mut m = self.clone();
         m.windows_merged = 0;
+        m.state_bytes = 0;
         m
     }
 
@@ -211,6 +223,9 @@ impl Metrics {
         ));
         if self.windows_merged > 0 {
             s.push_str(&format!("  lockstep windows merged={}\n", self.windows_merged));
+        }
+        if self.state_bytes > 0 {
+            s.push_str(&format!("  resident state bytes={}\n", self.state_bytes));
         }
         for (mode, t) in &self.mode_traffic {
             s.push_str(&format!(
@@ -316,11 +331,14 @@ mod tests {
         let mut m = Metrics::new();
         m.record_delivery("raw", 10, 4);
         m.windows_merged = 7;
+        m.state_bytes = 4096;
         let f = m.fabric_view();
         assert_eq!(f.windows_merged, 0);
+        assert_eq!(f.state_bytes, 0);
         assert_eq!(f.packets_delivered, 1);
         let mut other = m.clone();
         other.windows_merged = 3;
+        other.state_bytes = 1024;
         assert_ne!(m, other, "raw blocks differ on engine counters");
         assert_eq!(m.fabric_view(), other.fabric_view(), "fabric views agree");
     }

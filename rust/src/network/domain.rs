@@ -1,0 +1,291 @@
+//! Shard-local state domains: dense index remaps for per-shard state.
+//!
+//! A [`Domain`] describes which slice of the mesh a [`Network`] holds
+//! dynamic state for, and how global identifiers map onto that state's
+//! dense local indices:
+//!
+//! * the **full** domain (serial engine): every node and link, with the
+//!   identity mapping — zero overhead on the classic hot path;
+//! * an **owned-subset** domain (one per shard of a
+//!   [`sharded::ShardedNetwork`]): exactly the nodes the shard owns per
+//!   [`Topology::partition`]'s owner map, plus the links whose
+//!   *transmit* side lives on an owned node (link state — credits,
+//!   occupancy, queues — is transmit-side state; the receive side of a
+//!   boundary link only ever sees the packet, never the `LinkState`).
+//!
+//! Before this existed, every shard allocated full-mesh `links`/`nodes`
+//! vectors and mutated only its own slice — k shards held k copies of
+//! the mesh. With owned-subset domains a k-shard run holds ~1/k of the
+//! state per shard (the sum over shards equals the serial engine's
+//! state exactly; asserted in `tests/properties.rs`).
+//!
+//! The global↔local maps are **bijections** between the owned
+//! identifier set and `0..count` (property-tested in
+//! `tests/properties.rs`). Indexing state for an identifier the domain
+//! does not own is a bug — the shard would silently read idle state the
+//! owning shard is mutating — so [`Domain::node_index`] /
+//! [`Domain::link_index`] debug-assert ownership with a named-shard
+//! message, and in release builds the `u32::MAX` sentinel turns the
+//! mistake into an immediate out-of-bounds panic at the state vector
+//! instead of a silent wrong read.
+//!
+//! [`Network`]: crate::network::Network
+//! [`sharded::ShardedNetwork`]: crate::network::sharded::ShardedNetwork
+//! [`Topology::partition`]: crate::topology::Topology::partition
+
+use crate::topology::{LinkId, NodeId, Topology};
+
+/// Sentinel for "not owned by this domain" in the global→local maps.
+const UNOWNED: u32 = u32::MAX;
+
+/// Dense global↔local index maps for one engine's slice of the mesh.
+/// See the module docs.
+#[derive(Debug)]
+pub struct Domain {
+    /// `None` = full mesh, identity mapping (the serial engine).
+    map: Option<DomainMap>,
+    nodes_len: usize,
+    links_len: usize,
+    shard: u32,
+}
+
+#[derive(Debug)]
+struct DomainMap {
+    /// Global node id → local index (`UNOWNED` if not owned).
+    node_local: Vec<u32>,
+    /// Local index → global node id.
+    node_global: Vec<u32>,
+    /// Global link id → local index (`UNOWNED` if not owned).
+    link_local: Vec<u32>,
+    /// Local index → global link id.
+    link_global: Vec<u32>,
+}
+
+impl Domain {
+    /// The full-mesh identity domain (serial engine / single shard of a
+    /// trivial partition).
+    pub fn full(topo: &Topology) -> Domain {
+        Domain {
+            map: None,
+            nodes_len: topo.node_count(),
+            links_len: topo.link_count(),
+            shard: 0,
+        }
+    }
+
+    /// The owned-subset domain of `shard` under `owner` (one entry per
+    /// node, as returned by [`Topology::partition`]): nodes with
+    /// `owner[n] == shard`, links whose transmit side (`src`) is owned.
+    /// Local indices follow global order, so per-shard iteration order
+    /// matches the serial engine's restriction to the owned set.
+    ///
+    /// [`Topology::partition`]: crate::topology::Topology::partition
+    pub fn owned(topo: &Topology, owner: &[u32], shard: u32) -> Domain {
+        assert_eq!(owner.len(), topo.node_count(), "owner map does not cover the mesh");
+        let mut node_local = vec![UNOWNED; topo.node_count()];
+        let mut node_global = Vec::new();
+        for n in 0..topo.node_count() {
+            if owner[n] == shard {
+                node_local[n] = node_global.len() as u32;
+                node_global.push(n as u32);
+            }
+        }
+        let mut link_local = vec![UNOWNED; topo.link_count()];
+        let mut link_global = Vec::new();
+        for l in topo.links() {
+            if owner[l.src.0 as usize] == shard {
+                link_local[l.id.0 as usize] = link_global.len() as u32;
+                link_global.push(l.id.0);
+            }
+        }
+        Domain {
+            nodes_len: node_global.len(),
+            links_len: link_global.len(),
+            map: Some(DomainMap { node_local, node_global, link_local, link_global }),
+            shard,
+        }
+    }
+
+    /// Whether this is the identity (full-mesh) domain.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.map.is_none()
+    }
+
+    /// The shard this domain belongs to (0 for the full domain).
+    #[inline]
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    /// Number of nodes this domain holds state for.
+    #[inline]
+    pub fn node_count(&self) -> usize {
+        self.nodes_len
+    }
+
+    /// Number of links this domain holds state for.
+    #[inline]
+    pub fn link_count(&self) -> usize {
+        self.links_len
+    }
+
+    /// Does this domain own `n`'s state?
+    #[inline]
+    pub fn owns_node(&self, n: NodeId) -> bool {
+        match &self.map {
+            None => (n.0 as usize) < self.nodes_len,
+            Some(m) => m.node_local[n.0 as usize] != UNOWNED,
+        }
+    }
+
+    /// Does this domain own `l`'s (transmit-side) state?
+    #[inline]
+    pub fn owns_link(&self, l: LinkId) -> bool {
+        match &self.map {
+            None => (l.0 as usize) < self.links_len,
+            Some(m) => m.link_local[l.0 as usize] != UNOWNED,
+        }
+    }
+
+    /// Local state index of node `n`. Debug-asserts ownership; in
+    /// release an un-owned node yields the `u32::MAX` sentinel, which
+    /// panics at the state vector's bounds check (loud, never a silent
+    /// read of idle state — see the module docs).
+    #[inline]
+    pub fn node_index(&self, n: NodeId) -> usize {
+        match &self.map {
+            None => n.0 as usize,
+            Some(m) => {
+                let local = m.node_local[n.0 as usize];
+                debug_assert_ne!(
+                    local, UNOWNED,
+                    "state of {n} indexed on shard {}, which does not own it",
+                    self.shard
+                );
+                local as usize
+            }
+        }
+    }
+
+    /// Local state index of link `l` (transmit-side state). Same
+    /// ownership contract as [`Domain::node_index`].
+    #[inline]
+    pub fn link_index(&self, l: LinkId) -> usize {
+        match &self.map {
+            None => l.0 as usize,
+            Some(m) => {
+                let local = m.link_local[l.0 as usize];
+                debug_assert_ne!(
+                    local, UNOWNED,
+                    "state of {l} indexed on shard {}, which does not own its transmit side",
+                    self.shard
+                );
+                local as usize
+            }
+        }
+    }
+
+    /// Bookkeeping cost of the index maps themselves: an owned-subset
+    /// domain pays O(mesh) — 4 bytes per global node + 4 per global
+    /// link for the global→local direction, plus 4 per *owned* id for
+    /// the inverse — replicated per shard (0 for the full domain, which
+    /// maps by identity). This overhead is deliberately **not** part of
+    /// `Network::state_bytes` (that figure is the dynamic fabric state,
+    /// which partitions exactly across shards); the `inc9000_domain`
+    /// bench row reports it separately so the ~4 B/node+link per shard
+    /// is never hidden — it is two orders of magnitude below the
+    /// dynamic state it replaces (`LinkState`/`NodeState`/`EthPort` are
+    /// hundreds of bytes each).
+    pub fn index_bytes(&self) -> u64 {
+        match &self.map {
+            None => 0,
+            Some(m) => ((m.node_local.len()
+                + m.node_global.len()
+                + m.link_local.len()
+                + m.link_global.len())
+                * std::mem::size_of::<u32>()) as u64,
+        }
+    }
+
+    /// Global node id at local index `i` (inverse of
+    /// [`Domain::node_index`]).
+    #[inline]
+    pub fn node_at(&self, i: usize) -> NodeId {
+        match &self.map {
+            None => NodeId(i as u32),
+            Some(m) => NodeId(m.node_global[i]),
+        }
+    }
+
+    /// Global link id at local index `i` (inverse of
+    /// [`Domain::link_index`]).
+    #[inline]
+    pub fn link_at(&self, i: usize) -> LinkId {
+        match &self.map {
+            None => LinkId(i as u32),
+            Some(m) => LinkId(m.link_global[i]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemPreset;
+
+    #[test]
+    fn full_domain_is_identity() {
+        let t = Topology::preset(SystemPreset::Card);
+        let d = Domain::full(&t);
+        assert!(d.is_full());
+        assert_eq!(d.node_count(), t.node_count());
+        assert_eq!(d.link_count(), t.link_count());
+        for n in t.nodes() {
+            assert!(d.owns_node(n));
+            assert_eq!(d.node_index(n), n.0 as usize);
+            assert_eq!(d.node_at(n.0 as usize), n);
+        }
+        for l in t.links() {
+            assert!(d.owns_link(l.id));
+            assert_eq!(d.link_index(l.id), l.id.0 as usize);
+            assert_eq!(d.link_at(l.id.0 as usize), l.id);
+        }
+    }
+
+    #[test]
+    fn owned_domain_holds_exactly_the_owned_subset() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let (owner, s) = t.partition(4);
+        assert_eq!(s, 4);
+        let mut nodes_total = 0;
+        let mut links_total = 0;
+        for shard in 0..s {
+            let d = Domain::owned(&t, &owner, shard);
+            assert!(!d.is_full());
+            assert_eq!(d.shard(), shard);
+            nodes_total += d.node_count();
+            links_total += d.link_count();
+            for n in t.nodes() {
+                assert_eq!(d.owns_node(n), owner[n.0 as usize] == shard);
+            }
+            for l in t.links() {
+                assert_eq!(d.owns_link(l.id), owner[l.src.0 as usize] == shard);
+            }
+        }
+        // Every node and every link is owned by exactly one shard.
+        assert_eq!(nodes_total, t.node_count());
+        assert_eq!(links_total, t.link_count());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "does not own")]
+    fn unowned_node_index_fails_loudly() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let (owner, _) = t.partition(4);
+        let d = Domain::owned(&t, &owner, 0);
+        // Node 1727 sits in cage 3.
+        d.node_index(NodeId(1727));
+    }
+}

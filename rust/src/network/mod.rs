@@ -52,9 +52,11 @@
 //! (`tests/sharded_differential.rs`).
 
 pub mod arena;
+pub mod domain;
 pub mod fabric;
 pub mod sharded;
 
+pub use domain::Domain;
 pub use fabric::{Fabric, ShardableApp};
 
 use std::sync::Arc;
@@ -285,7 +287,17 @@ pub trait App {
     /// A complete [`Message`] arrived on the open endpoint `ep`
     /// (fires after the channel's native callback; `msg.from` is the
     /// sender). The mode-generic hook every endpoint workload uses.
-    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) {}
+    ///
+    /// The return value is the **consumed flag**: return `true` and the
+    /// message is done — it never enters the endpoint's recv inbox, so
+    /// callback-driven apps no longer drain [`Network::recv`] per
+    /// callback to keep the inbox from growing. The default `false`
+    /// keeps the inbox-driven contract: the message is queued for
+    /// [`Network::recv`] after the callback returns (during the
+    /// callback the message is *not* yet in the inbox).
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
+        false
+    }
 }
 
 /// An [`App`] that does nothing (inbox-driven workloads).
@@ -298,9 +310,19 @@ pub struct Network {
     /// Static topology, shared read-only (shards of a
     /// [`sharded::ShardedNetwork`] all reference one instance).
     pub topo: Arc<Topology>,
+    /// Which slice of the mesh this engine holds state for, and the
+    /// global↔local index maps for it: the identity full-mesh domain on
+    /// the serial engine, a dense owned-subset domain per shard of a
+    /// sharded run. `links`/`failed_links`/`nodes`/`app_seq` and the
+    /// per-node NIC ports are all **domain-indexed** — a k-shard run
+    /// holds ~1/k of the mesh state per shard instead of k full copies.
+    pub domain: Arc<Domain>,
+    /// Transmit-side link state, indexed by [`Domain::link_index`].
     pub links: Vec<LinkState>,
     pub sim: Sim<Event>,
     pub metrics: Metrics,
+    /// Per-node state, indexed by [`Domain::node_index`] (prefer
+    /// [`Network::node`] / [`Network::node_mut`]).
     pub nodes: Vec<NodeState>,
     pub fifos: BridgeFifoFabric,
     pub postmaster: PostmasterFabric,
@@ -309,7 +331,10 @@ pub struct Network {
     pub packets: PacketArena,
     /// NetTunnel read results, keyed by request id.
     pub tunnel_results: FxHashMap<u64, u64>,
-    /// Links marked defective (§2.4 "network defect avoidance").
+    /// Links marked defective (§2.4 "network defect avoidance"),
+    /// indexed by [`Domain::link_index`]. Routing only ever consults a
+    /// link's failure flag at its transmit node, so the owned-subset
+    /// slice is complete for a shard.
     pub failed_links: Vec<bool>,
     /// Delivery trace ([`Network::enable_trace`]): every packet handed
     /// to a destination Packet Demux. Off by default (hot-path lean).
@@ -319,7 +344,8 @@ pub struct Network {
     pub(crate) comm: CommState,
     /// Set when this `Network` is one shard of a sharded run.
     pub(crate) shard_ctx: Option<ShardCtx>,
-    /// Per-node counters behind [`Network::app_packet_id`].
+    /// Per-node counters behind [`Network::app_packet_id`]
+    /// (domain-indexed).
     app_seq: Vec<u64>,
     /// True while an [`App`] callback is on the stack (enforces the
     /// app-context send contract on sharded shards).
@@ -333,38 +359,101 @@ impl Network {
         Self::with_topology(cfg, topo)
     }
 
-    /// Build a network over an existing (shared) topology. Used by the
-    /// sharded engine so all shards reference one `Topology`.
+    /// Build a network over an existing (shared) topology with the
+    /// full-mesh identity [`Domain`]. Used wherever a single engine
+    /// simulates the whole mesh.
     pub fn with_topology(cfg: SystemConfig, topo: Arc<Topology>) -> Self {
+        let domain = Arc::new(Domain::full(&topo));
+        Self::with_domain(cfg, topo, domain)
+    }
+
+    /// Build a network holding state for exactly `domain`'s slice of
+    /// the mesh. The sharded engine passes each shard its owned-subset
+    /// domain; every state vector is sized by the domain's local counts
+    /// (nothing full-mesh is allocated).
+    pub(crate) fn with_domain(
+        cfg: SystemConfig,
+        topo: Arc<Topology>,
+        domain: Arc<Domain>,
+    ) -> Self {
         assert_eq!(
             topo.dims(),
             cfg.preset.dims(),
             "topology does not match the config preset"
         );
-        let topo_link_count = topo.link_count();
-        let links = (0..topo_link_count).map(|_| LinkState::new(&cfg.link)).collect();
-        let n = topo.node_count();
-        let nodes = (0..n).map(|i| NodeState::new(NodeId(i as u32), &cfg)).collect();
-        Network {
+        let links = (0..domain.link_count()).map(|_| LinkState::new(&cfg.link)).collect();
+        let nodes = (0..domain.node_count())
+            .map(|i| NodeState::new(domain.node_at(i), &cfg))
+            .collect();
+        let mut net = Network {
             topo,
             links,
             sim: Sim::new(),
             metrics: Metrics::new(),
             nodes,
-            fifos: BridgeFifoFabric::new(n),
-            postmaster: PostmasterFabric::new(n),
-            eth: EthernetFabric::new(n, &cfg),
+            fifos: BridgeFifoFabric::new(domain.node_count()),
+            postmaster: PostmasterFabric::new(domain.node_count()),
+            eth: EthernetFabric::new(domain.clone(), &cfg),
             packets: PacketArena::with_capacity(1024),
             tunnel_results: FxHashMap::default(),
-            failed_links: vec![false; topo_link_count],
+            failed_links: vec![false; domain.link_count()],
             trace: None,
             comm: CommState::default(),
             shard_ctx: None,
-            app_seq: vec![0; n],
+            app_seq: vec![0; domain.node_count()],
             in_app: false,
+            domain,
             cfg,
             next_packet_id: 0,
-        }
+        };
+        net.metrics.state_bytes = net.state_bytes();
+        net
+    }
+
+    /// Resident bytes of the domain-sized dynamic state vectors (link
+    /// state + failure flags, node state, NIC ports, app-id counters).
+    /// An engine-level figure: the serial engine reports the full mesh,
+    /// each shard its owned slice, and the slices sum to the serial
+    /// value exactly (every node and link is owned once). The domain's
+    /// own O(mesh) index maps are *not* included — they do not
+    /// partition (each shard carries a full global→local table) and are
+    /// accounted separately by [`Domain::index_bytes`], which the
+    /// `inc9000_domain` bench row reports alongside this. Tracked in
+    /// [`Metrics::state_bytes`].
+    pub fn state_bytes(&self) -> u64 {
+        (self.links.len() * std::mem::size_of::<LinkState>()
+            + self.failed_links.len() * std::mem::size_of::<bool>()
+            + self.nodes.len() * std::mem::size_of::<NodeState>()
+            + self.eth.ports.len()
+                * std::mem::size_of::<crate::channels::ethernet::EthPort>()
+            + self.app_seq.len() * std::mem::size_of::<u64>()) as u64
+    }
+
+    /// State of node `n` (domain-mapped; panics if this engine does not
+    /// own `n` — see [`Domain::node_index`]).
+    #[inline]
+    pub fn node(&self, n: NodeId) -> &NodeState {
+        &self.nodes[self.domain.node_index(n)]
+    }
+
+    /// Mutable state of node `n` (domain-mapped).
+    #[inline]
+    pub fn node_mut(&mut self, n: NodeId) -> &mut NodeState {
+        let i = self.domain.node_index(n);
+        &mut self.nodes[i]
+    }
+
+    /// Transmit-side state of link `l` (domain-mapped).
+    #[inline]
+    pub fn link_state(&self, l: LinkId) -> &LinkState {
+        &self.links[self.domain.link_index(l)]
+    }
+
+    /// Mutable transmit-side state of link `l` (domain-mapped).
+    #[inline]
+    pub fn link_state_mut(&mut self, l: LinkId) -> &mut LinkState {
+        let i = self.domain.link_index(l);
+        &mut self.links[i]
     }
 
     pub fn card() -> Self {
@@ -403,8 +492,9 @@ impl Network {
     /// interleaving. The id space is disjoint from driver-assigned and
     /// NetTunnel-derived ids (see the module docs).
     pub fn app_packet_id(&mut self, node: NodeId) -> u64 {
-        let seq = self.app_seq[node.0 as usize];
-        self.app_seq[node.0 as usize] += 1;
+        let i = self.domain.node_index(node);
+        let seq = self.app_seq[i];
+        self.app_seq[i] += 1;
         assert!(seq < APP_ID_SEQ_MASK, "app packet-id counter exhausted at {node}");
         APP_ID_SPACE | APP_ID_KEY_MARK | ((node.0 as u64) << APP_ID_NODE_SHIFT) | seq
     }
@@ -490,14 +580,18 @@ impl Network {
     }
 
     /// Mark a link defective: directed/multicast routing avoids it
-    /// (§2.4's "network defect avoidance" extension).
+    /// (§2.4's "network defect avoidance" extension). On a shard, valid
+    /// only for links whose transmit side the shard owns (the sharded
+    /// wrapper routes here).
     pub fn fail_link(&mut self, l: LinkId) {
-        self.failed_links[l.0 as usize] = true;
+        let i = self.domain.link_index(l);
+        self.failed_links[i] = true;
     }
 
     /// Bring a failed link back into service.
     pub fn repair_link(&mut self, l: LinkId) {
-        self.failed_links[l.0 as usize] = false;
+        let i = self.domain.link_index(l);
+        self.failed_links[i] = false;
     }
 
     /// Spanning-tree multicast to `dsts` (§2.4 extension): shared path
@@ -539,16 +633,18 @@ impl Network {
     }
 
     /// A shard may only originate traffic from nodes it owns — anything
-    /// else would schedule the injection on the wrong event wheel. App
-    /// callbacks satisfy this by sending only from their callback node.
+    /// else would schedule the injection on the wrong event wheel (and,
+    /// since the domain refactor, index state the shard does not hold).
+    /// App callbacks satisfy this by sending only from their callback
+    /// node. Release builds stay loud too: the first domain-mapped
+    /// state access for an un-owned source panics out of bounds.
     #[inline]
     fn debug_check_src_owned(&self, src: NodeId) {
-        if let Some(ctx) = &self.shard_ctx {
-            debug_assert_eq!(
-                ctx.owner[src.0 as usize], ctx.shard,
-                "injection from {src}, which this shard does not own"
-            );
-        }
+        debug_assert!(
+            self.domain.owns_node(src),
+            "traffic originated from {src}, which shard {} does not own",
+            self.domain.shard()
+        );
     }
 
     /// Run until the event queue empties or `deadline` passes. Returns
@@ -590,11 +686,13 @@ impl Network {
     /// Dispatch events at or before `deadline` until the first one that
     /// exports a boundary message (the event itself completes; its
     /// exports stay in the outbox for the caller). The sharded engine's
-    /// adaptive epoch batching uses this to let a shard that is *alone*
-    /// in having pending work sprint through many lockstep windows
-    /// without barriers — safe exactly until it produces cross-shard
-    /// traffic. On the serial engine (no shard context) the outbox never
-    /// fills, so this equals [`Network::run_window`].
+    /// distance-aware epoch batching uses this to let a shard whose
+    /// horizon clears the lockstep window sprint through many windows
+    /// without barriers — the caller bounds `deadline` by the horizon,
+    /// and the first boundary export ends the sprint because its
+    /// consequences are not reflected in the horizon. On the serial
+    /// engine (no shard context) the outbox never fills, so this equals
+    /// [`Network::run_window`].
     pub(crate) fn run_exclusive(&mut self, app: &mut dyn App, deadline: Time) -> u64 {
         let start = self.sim.dispatched();
         while let Some((_, ev)) = self.sim.pop_until(deadline) {
@@ -614,11 +712,12 @@ impl Network {
             }
             Event::Arrive { link, packet } => self.arrive(link, packet, app),
             Event::Drain { link } => {
-                self.links[link.0 as usize].disarm_drain();
+                self.link_state_mut(link).disarm_drain();
                 self.drain(link)
             }
             Event::Credit { link, bytes } => {
-                self.links[link.0 as usize].grant(bytes, self.cfg.link.credit_buffer_bytes);
+                let cap = self.cfg.link.credit_buffer_bytes;
+                self.link_state_mut(link).grant(bytes, cap);
                 self.drain(link);
             }
             Event::FifoRx { node, packet } => {
@@ -665,12 +764,15 @@ impl Network {
                 }
                 let mut buf = [crate::topology::LinkId(0); 6];
                 let n = productive_links_buf(&self.topo, here, dst, &mut buf);
-                // Defect avoidance: drop failed links from the set.
+                // Defect avoidance: drop failed links from the set. All
+                // candidates leave `here`, which this engine owns, so
+                // the domain-mapped lookups stay inside the owned slice.
+                let domain = &self.domain;
                 let failed = &self.failed_links;
                 let mut live = [crate::topology::LinkId(0); 6];
                 let mut m = 0;
                 for &l in &buf[..n] {
-                    if !failed[l.0 as usize] {
+                    if !failed[domain.link_index(l)] {
                         live[m] = l;
                         m += 1;
                     }
@@ -689,8 +791,8 @@ impl Network {
                 let chosen = if m > 0 {
                     pick_adaptive(
                         &live[..m],
-                        |l| links[l.0 as usize].ready(now, wire_bytes),
-                        |l| links[l.0 as usize].busy_until(),
+                        |l| links[domain.link_index(l)].ready(now, wire_bytes),
+                        |l| links[domain.link_index(l)].busy_until(),
                         tie,
                     )
                 } else {
@@ -700,7 +802,7 @@ impl Network {
                         .out_links(here)
                         .iter()
                         .copied()
-                        .filter(|&l| !failed[l.0 as usize])
+                        .filter(|&l| !failed[domain.link_index(l)])
                         .min_by_key(|&l| self.topo.min_hops(self.topo.link(l).dst, dst))
                 };
                 // Livelock guard (misrouting around defects is bounded).
@@ -717,11 +819,12 @@ impl Network {
             RouteKind::Multicast => {
                 let dsts =
                     self.packets.get(packet).mcast.clone().expect("multicast without targets");
+                let (domain, failed) = (&self.domain, &self.failed_links);
                 let (local, groups) = crate::router::multicast::multicast_partition(
                     &self.topo,
                     here,
                     &dsts,
-                    &self.failed_links,
+                    &|l| failed[domain.link_index(l)],
                 );
                 for (link, subset) in groups {
                     // Header copy per branch; payload bytes stay shared
@@ -766,7 +869,8 @@ impl Network {
     fn link_send(&mut self, link: LinkId, packet: PacketRef) {
         let wire_bytes = self.packets.get(packet).wire_bytes;
         let now = self.now();
-        let st = &mut self.links[link.0 as usize];
+        let li = self.domain.link_index(link);
+        let st = &mut self.links[li];
         if st.ready(now, wire_bytes) {
             st.start_tx(now, wire_bytes, &self.cfg.link);
             let arrive_at = now + self.cfg.link.hop(wire_bytes);
@@ -784,8 +888,8 @@ impl Network {
             // is idle but out of credits, the `Credit` handler drains
             // directly — no event needed.)
             if busy {
-                let at = self.links[link.0 as usize].busy_until();
-                if self.links[link.0 as usize].arm_drain() {
+                let at = self.links[li].busy_until();
+                if self.links[li].arm_drain() {
                     self.sim.at_keyed(at, key_drain(link), Event::Drain { link });
                 }
             }
@@ -795,12 +899,12 @@ impl Network {
     /// Serialization of a queued packet becomes possible.
     fn drain(&mut self, link: LinkId) {
         let now = self.now();
-        if let Some((packet, wire_bytes)) = self.links[link.0 as usize].pop_sendable(now) {
-            let busy_until =
-                self.links[link.0 as usize].start_tx(now, wire_bytes, &self.cfg.link);
+        let li = self.domain.link_index(link);
+        if let Some((packet, wire_bytes)) = self.links[li].pop_sendable(now) {
+            let busy_until = self.links[li].start_tx(now, wire_bytes, &self.cfg.link);
             let arrive_at = now + self.cfg.link.hop(wire_bytes);
-            if self.links[link.0 as usize].queue_len() > 0 {
-                if self.links[link.0 as usize].arm_drain() {
+            if self.links[li].queue_len() > 0 {
+                if self.links[li].arm_drain() {
                     self.sim.at_keyed(busy_until, key_drain(link), Event::Drain { link });
                 }
             } else {

@@ -28,22 +28,39 @@
 //! with no work are skipped (the next window index is derived from the
 //! global minimum pending-event time).
 //!
-//! # Adaptive epoch batching
+//! # Distance-aware multi-shard epoch batching
 //!
 //! On sparse traffic the cost is not the windows with work but the
-//! *barriers* around them. Whenever exactly one shard has pending
-//! events and no boundary messages are in flight, lockstep is
-//! pointless: that shard runs **exclusively** — no window deadline, no
-//! barriers — until it either quiesces or produces its first boundary
-//! message (at which point normal lockstep resumes; see
-//! `Network::run_exclusive`). All workers derive the decision from the
-//! same published next-event times, so it is deterministic, and the
-//! sprinting shard processes its queue in exactly the order the
-//! windowed schedule would have. Coalesced windows are counted in
+//! *barriers* around them. The lockstep window only exists to bound how
+//! far a shard may run before another shard's activity can reach it —
+//! and that bound is **per shard pair**, not global: influence crosses
+//! the mesh one link per event, and every link crossing (an `Arrive`
+//! forward or a `Credit` back) costs at least one router latency, so an
+//! event pending on shard `j` at time `t` cannot cause an import into
+//! shard `i` before `t + hops(j, i) × router_latency`, where
+//! `hops(j, i)` is the minimum link distance between the shards'
+//! boundary nodes ([`Topology::shard_hop_matrix`], precomputed at
+//! construction).
+//!
+//! At every epoch each shard therefore derives its **horizon** — the
+//! minimum over other shards of their published next-event time plus
+//! the pairwise lookahead — and any shard whose horizon clears the
+//! lockstep window runs **exclusively** past it: no window deadline, no
+//! barriers, until it quiesces, reaches its horizon, or produces its
+//! first boundary message (whose consequences the horizon does not yet
+//! reflect; see `Network::run_exclusive`). Several shards can sprint
+//! *simultaneously* — traffic local to far-apart partitions proceeds
+//! barrier-free in all of them at once. All workers derive every
+//! decision from the same published next-event times and the same
+//! static matrix, so the schedule is deterministic, and a sprinting
+//! shard processes its queue in exactly the order the windowed schedule
+//! would have. Coalesced windows are counted per shard in
 //! [`Metrics::windows_merged`] — an engine-level counter, excluded from
 //! the byte-identity contract via [`Metrics::fabric_view`]. A
-//! single-shard "sharded" run degenerates to one long sprint, i.e. to
-//! serial execution with two barriers total.
+//! single-shard "sharded" run has an infinite horizon and degenerates
+//! to one long sprint, i.e. to serial execution with two barriers
+//! total; a shard that is alone in having pending events (the old
+//! "solo sprint" special case) likewise sees an infinite horizon.
 //!
 //! # Byte-identical to the serial engine
 //!
@@ -61,13 +78,20 @@
 //!
 //! # Scope
 //!
-//! Each shard is a full [`Network`] over the whole mesh: dynamic state
-//! (links, nodes, channel tables) is *allocated* everywhere but only
-//! ever *mutated* for the owned partition. That replication is a
-//! deliberate simplicity trade — state stays index-compatible with the
-//! serial engine at the cost of shard-count× idle memory (a few MB per
-//! Inc9000 shard); compacting per-shard state behind an index remap is
-//! a noted follow-up (ROADMAP).
+//! Each shard is a [`Network`] over an **owned-subset state domain**
+//! ([`crate::network::Domain`]): its `links`/`nodes`/`failed_links`/NIC
+//! vectors hold exactly the owned partition — node state for owned
+//! nodes, transmit-side link state for links leaving them — behind
+//! dense global↔local index maps, so a k-shard run holds ~1/k of the
+//! mesh state per shard (the per-shard slices sum to the serial
+//! engine's state exactly; [`Metrics::state_bytes`] and the
+//! `inc9000_domain` bench rows track the cut). Un-owned state simply
+//! does not exist on a shard: indexing it debug-asserts with the shard
+//! named, and panics out of bounds in release, instead of silently
+//! reading an idle full-mesh copy as the pre-domain engine did.
+//! Node-level *registries* (channel tables, endpoint lanes — hash maps,
+//! not per-node vectors) still replicate to every shard so send-side
+//! checks agree everywhere.
 //!
 //! Workloads ride the parallel engine through the engine-agnostic
 //! [`Fabric`] trait: [`ShardedNetwork::run_app`] splits a
@@ -94,7 +118,9 @@ use std::sync::{Arc, Barrier, Mutex};
 use crate::channels::endpoint::{CommMode, Endpoint, Message, MsgId};
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
-use crate::network::{App, BoundaryMsg, Delivery, Network, NullApp, ShardCtx, ShardableApp};
+use crate::network::{
+    App, BoundaryMsg, Delivery, Domain, Network, NullApp, ShardCtx, ShardableApp,
+};
 use crate::router::{Payload, Proto};
 use crate::sim::Time;
 use crate::topology::{LinkId, NodeId, Topology};
@@ -112,6 +138,12 @@ pub struct ShardedNetwork {
     pub topo: Arc<Topology>,
     /// Epoch window length, ns (= minimum cross-boundary latency).
     lookahead: Time,
+    /// Pairwise lookahead, ns: flat `shards × shards` row-major matrix,
+    /// entry `[j][i]` = minimum link-hop distance between shards j and
+    /// i × router latency — the soonest an event pending on j can cause
+    /// an import into i (see the module docs, "Distance-aware
+    /// multi-shard epoch batching").
+    pair_lookahead: Vec<u64>,
     /// Worker threads driving the shards.
     workers: usize,
     /// Global packet-id cursor, synced into shards around driver calls
@@ -139,18 +171,28 @@ impl ShardedNetwork {
              positive conservative lookahead"
         );
         let lookahead = cfg.link.router_latency;
+        // Distance-aware per-pair lookahead: hops between shard
+        // boundary nodes × the per-link-crossing minimum latency.
+        let pair_lookahead: Vec<u64> = topo
+            .shard_hop_matrix(&owner, count)
+            .iter()
+            .map(|&h| h as u64 * lookahead)
+            .collect();
         let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let requested = if cfg.sim_threads > 0 { cfg.sim_threads } else { hw };
         let workers = requested.clamp(1, count as usize);
         let shards = (0..count)
             .map(|i| {
-                let mut net = Network::with_topology(cfg.clone(), topo.clone());
+                // Each shard holds state for its owned subset only
+                // (dense-remapped; see `network::domain`).
+                let domain = Arc::new(Domain::owned(&topo, &owner, i));
+                let mut net = Network::with_domain(cfg.clone(), topo.clone(), domain);
                 net.shard_ctx =
                     Some(ShardCtx { shard: i, owner: owner.clone(), outbox: Vec::new() });
                 net
             })
             .collect();
-        ShardedNetwork { shards, owner, topo, lookahead, workers, next_packet_id: 0 }
+        ShardedNetwork { shards, owner, topo, lookahead, pair_lookahead, workers, next_packet_id: 0 }
     }
 
     /// Natural shard count of a preset (what `new` clamps to).
@@ -329,19 +371,19 @@ impl ShardedNetwork {
         self.shards.iter().find_map(|s| s.tunnel_result(req_id))
     }
 
-    /// See [`Network::fail_link`] (applied to every shard: routing
-    /// tables must agree everywhere).
+    /// See [`Network::fail_link`]. A link's failure flag lives with its
+    /// transmit-side state — on the shard owning `src` — and routing
+    /// only ever consults it there, so the wrapper routes to exactly
+    /// that shard (the owned-subset domains hold nothing else).
     pub fn fail_link(&mut self, l: LinkId) {
-        for sh in &mut self.shards {
-            sh.fail_link(l);
-        }
+        let s = self.shard_of(self.topo.link(l).src);
+        self.shards[s].fail_link(l);
     }
 
     /// See [`Network::repair_link`].
     pub fn repair_link(&mut self, l: LinkId) {
-        for sh in &mut self.shards {
-            sh.repair_link(l);
-        }
+        let s = self.shard_of(self.topo.link(l).src);
+        self.shards[s].repair_link(l);
     }
 
     /// See [`Network::eth_send`] (transmit-side software costs accrue on
@@ -443,6 +485,14 @@ impl ShardedNetwork {
         self.shards.iter().map(|s| s.packets.live()).sum()
     }
 
+    /// Resident dynamic-state bytes per shard (see
+    /// [`Network::state_bytes`]). With owned-subset domains these sum
+    /// to the serial engine's figure; before the domain refactor each
+    /// entry *was* the serial figure.
+    pub fn state_bytes_per_shard(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.state_bytes()).collect()
+    }
+
     /// Events dispatched so far across all shards.
     pub fn dispatched(&self) -> u64 {
         self.shards.iter().map(|s| s.sim.dispatched()).sum()
@@ -522,8 +572,9 @@ impl ShardedNetwork {
     }
 
     /// The bounded-lag epoch loop: drive `apps[i]` on shard `i` through
-    /// lockstep windows — with solo-shard sprints when only one shard
-    /// has work (module docs, "Adaptive epoch batching") — until global
+    /// lockstep windows — with barrier-free sprints whenever a shard's
+    /// distance-aware horizon clears the window (module docs,
+    /// "Distance-aware multi-shard epoch batching") — until global
     /// quiescence or `deadline`. Events after `deadline` stay queued;
     /// clocks are left at each shard's last event (callers
     /// re-synchronize).
@@ -532,6 +583,7 @@ impl ShardedNetwork {
         let started: u64 = self.dispatched();
         let nshards = self.shards.len();
         let lookahead = self.lookahead;
+        let pair_lookahead: &[u64] = &self.pair_lookahead;
         let Some(first) = self.shards.iter().filter_map(|s| s.sim.peek_time()).min() else {
             return 0;
         };
@@ -549,7 +601,7 @@ impl ShardedNetwork {
         let barrier = Barrier::new(nchunks);
         let mailboxes: Vec<Mailbox> = (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
         // Next-pending-event time per shard, pre-filled so the first
-        // iteration can already detect a solo shard. Between the
+        // iteration can already derive sprint horizons. Between the
         // phase-B barrier and the next phase B these are stable (the
         // next store is two barriers ahead of any reader).
         let peeks: Vec<AtomicU64> = self
@@ -566,20 +618,25 @@ impl ShardedNetwork {
         // its peers already abandoned).
         let abort_at = AtomicU64::new(u64::MAX);
 
-        // Exactly-one-shard-pending detection over the published peeks:
-        // every worker reads the same values, so every worker reaches
-        // the same verdict — no coordination beyond the barriers.
-        let solo_shard = |peeks: &[AtomicU64]| -> Option<usize> {
-            let mut solo = None;
-            for (i, p) in peeks.iter().enumerate() {
-                if p.load(Ordering::SeqCst) != u64::MAX {
-                    if solo.is_some() {
-                        return None;
-                    }
-                    solo = Some(i);
+        // Per-shard sprint horizon over the published peeks: the
+        // earliest instant any other shard's pending work could cause
+        // an import into shard `i` (∞ when nothing else is pending —
+        // the old solo-shard case, and the whole run for one shard).
+        // Every worker reads the same peeks and the same static matrix,
+        // so every worker reaches the same verdicts — no coordination
+        // beyond the barriers.
+        let horizon = |peeks: &[AtomicU64], i: usize| -> u64 {
+            let mut h = u64::MAX;
+            for (j, p) in peeks.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                let t = p.load(Ordering::SeqCst);
+                if t != u64::MAX {
+                    h = h.min(t.saturating_add(pair_lookahead[j * nshards + i]));
                 }
             }
-            solo
+            h
         };
 
         std::thread::scope(|scope| {
@@ -595,26 +652,37 @@ impl ShardedNetwork {
                 let mailboxes = &mailboxes;
                 let peeks = &peeks;
                 let abort_at = &abort_at;
-                let solo_shard = &solo_shard;
+                let horizon = &horizon;
                 scope.spawn(move || {
                     let mut window = init_window;
-                    let mut solo = solo_shard(peeks);
                     loop {
                         let win_deadline =
                             ((window + 1).saturating_mul(lookahead) - 1).min(deadline);
                         // Phase A: advance own shards through the window
-                        // (a lone shard sprints past it barrier-free —
-                        // until its first boundary export) and post
-                        // boundary events.
+                        // (a shard whose horizon clears the window
+                        // sprints past it barrier-free — until its first
+                        // boundary export) and post boundary events.
                         let ra = catch_unwind(AssertUnwindSafe(|| {
                             for (net, app) in chunk.iter_mut().zip(apps_chunk.iter_mut()) {
                                 let sid = net.shard_id();
-                                if solo == Some(sid as usize) {
-                                    net.run_exclusive(app, deadline);
+                                // Safe sprint bound: strictly before the
+                                // earliest possible import (equal-time
+                                // events dispatch in content-key order,
+                                // so the horizon instant itself must
+                                // stay unprocessed).
+                                let own_peek = peeks[sid as usize].load(Ordering::SeqCst);
+                                let sprint_deadline = horizon(peeks, sid as usize)
+                                    .saturating_sub(1)
+                                    .min(deadline);
+                                if sprint_deadline > win_deadline && own_peek <= sprint_deadline
+                                {
+                                    net.run_exclusive(app, sprint_deadline);
                                     // Windows the sprint coalesced (its
-                                    // first event was in `window`).
+                                    // first event sat in `own_peek`'s
+                                    // window).
                                     let w_end = net.sim.now() / lookahead;
-                                    net.metrics.windows_merged += w_end.saturating_sub(window);
+                                    net.metrics.windows_merged +=
+                                        w_end.saturating_sub(own_peek / lookahead);
                                 } else {
                                     net.run_window(app, win_deadline);
                                 }
@@ -666,10 +734,10 @@ impl ShardedNetwork {
                             }
                             break;
                         }
-                        // Every worker derives the same next window and
-                        // the same solo verdict. (peeks are stable here:
-                        // the next write happens in the next phase B,
-                        // behind the next barrier.)
+                        // Every worker derives the same next window, and
+                        // every phase A the same horizons. (peeks are
+                        // stable here: the next write happens in the
+                        // next phase B, behind the next barrier.)
                         let min = peeks
                             .iter()
                             .map(|p| p.load(Ordering::SeqCst))
@@ -679,7 +747,6 @@ impl ShardedNetwork {
                             break;
                         }
                         window = min / lookahead;
-                        solo = solo_shard(peeks);
                     }
                 });
             }
@@ -776,6 +843,43 @@ mod tests {
         assert!(merged > 0, "six-hop flight spans several 684 ns windows");
         // The flight takes > merged * lookahead ns by construction.
         assert!(net.now() / net.lookahead() >= merged);
+    }
+
+    #[test]
+    fn shard_state_vectors_are_owned_sized() {
+        // The domain refactor's acceptance: per-shard state vectors are
+        // sized by the owned node/link counts, not the full mesh, and
+        // the slices partition the mesh exactly.
+        let net = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+        let topo = net.topo.clone();
+        let (owner, s) = topo.partition(4);
+        assert_eq!(s as usize, net.shard_count());
+        let mut node_total = 0;
+        let mut link_total = 0;
+        for (i, sh) in net.shards().iter().enumerate() {
+            let owned_nodes = owner.iter().filter(|&&o| o == i as u32).count();
+            let owned_links = topo
+                .links()
+                .iter()
+                .filter(|l| owner[l.src.0 as usize] == i as u32)
+                .count();
+            assert!(owned_nodes * 2 < topo.node_count(), "shard {i} holds too much");
+            assert_eq!(sh.nodes.len(), owned_nodes, "shard {i} node vector");
+            assert_eq!(sh.links.len(), owned_links, "shard {i} link vector");
+            assert_eq!(sh.failed_links.len(), owned_links, "shard {i} failure flags");
+            assert_eq!(sh.eth.ports.len(), owned_nodes, "shard {i} NIC ports");
+            node_total += owned_nodes;
+            link_total += owned_links;
+        }
+        assert_eq!(node_total, topo.node_count());
+        assert_eq!(link_total, topo.link_count());
+        // Conservation: the per-shard slices sum to the serial engine's
+        // state exactly, and each shard holds roughly a quarter.
+        let serial = Network::new(SystemConfig::inc9000());
+        let per_shard = net.state_bytes_per_shard();
+        assert_eq!(per_shard.iter().sum::<u64>(), serial.state_bytes());
+        assert_eq!(net.metrics().state_bytes, serial.state_bytes());
+        assert!(per_shard.iter().all(|&b| b * 3 < serial.state_bytes()), "{per_shard:?}");
     }
 
     #[test]

@@ -32,11 +32,14 @@ use crate::topology::{Dir, LinkId, NodeId, Span, Topology};
 /// *first* (single-span steps inside the current cage), then jumps
 /// cage by cage — every step reduces [`Topology::z_hops`] by one, so
 /// the walk is monotone and lands exactly.
+/// `failed` is a link-failure predicate rather than a slice: the
+/// caller's failure flags are domain-indexed (shard-local state — see
+/// `network::domain`), so the router asks instead of indexing.
 pub fn dimension_ordered_next(
     topo: &Topology,
     here: NodeId,
     dst: NodeId,
-    failed: &[bool],
+    failed: &impl Fn(LinkId) -> bool,
 ) -> Option<LinkId> {
     let hc = topo.coord(here);
     let dc = topo.coord(dst);
@@ -89,7 +92,7 @@ pub fn dimension_ordered_next(
                 .copied()
                 .find(|&l| {
                     let info = topo.link(l);
-                    info.dir == dir && info.span == span && !failed[l.0 as usize]
+                    info.dir == dir && info.span == span && !failed(l)
                 })
             {
                 return Some(l);
@@ -113,7 +116,7 @@ pub fn multicast_partition(
     topo: &Topology,
     here: NodeId,
     dsts: &[NodeId],
-    failed: &[bool],
+    failed: &impl Fn(LinkId) -> bool,
 ) -> (bool, Vec<(LinkId, Vec<NodeId>)>) {
     let mut local = false;
     let mut groups: Vec<(LinkId, Vec<NodeId>)> = Vec::new();
@@ -138,8 +141,8 @@ mod tests {
     use crate::config::SystemPreset;
     use crate::topology::Coord;
 
-    fn no_fail(t: &Topology) -> Vec<bool> {
-        vec![false; t.link_count()]
+    fn no_fail(_l: LinkId) -> bool {
+        false
     }
 
     #[test]
@@ -147,7 +150,7 @@ mod tests {
         let t = Topology::preset(SystemPreset::Card);
         let here = t.id(Coord { x: 0, y: 0, z: 0 });
         let dst = t.id(Coord { x: 1, y: 2, z: 1 });
-        let failed = no_fail(&t);
+        let failed = no_fail;
         let l = dimension_ordered_next(&t, here, dst, &failed).unwrap();
         assert_eq!(t.link(l).dir, Dir::XPlus, "x corrected first");
     }
@@ -157,7 +160,7 @@ mod tests {
         let t = Topology::preset(SystemPreset::Inc3000);
         let here = t.id(Coord { x: 0, y: 0, z: 0 });
         let dst = t.id(Coord { x: 7, y: 0, z: 0 });
-        let failed = no_fail(&t);
+        let failed = no_fail;
         let l = dimension_ordered_next(&t, here, dst, &failed).unwrap();
         assert_eq!(t.link(l).span, Span::Multi);
     }
@@ -165,7 +168,7 @@ mod tests {
     #[test]
     fn dimension_order_crosses_cages_offset_first() {
         let t = Topology::preset(SystemPreset::Inc9000);
-        let failed = no_fail(&t);
+        let failed = no_fail;
         // z = 2 → z = 3: different cages, offsets 2 vs 0. No direct
         // link exists; the rule aligns the offset first (backwards!).
         let here = t.id(Coord { x: 0, y: 0, z: 2 });
@@ -198,7 +201,7 @@ mod tests {
         // Two destinations both east: one copy on the +x link.
         let d1 = t.id(Coord { x: 2, y: 0, z: 0 });
         let d2 = t.id(Coord { x: 2, y: 1, z: 0 });
-        let failed = no_fail(&t);
+        let failed = no_fail;
         let (local, groups) = multicast_partition(&t, here, &[d1, d2], &failed);
         assert!(!local);
         assert_eq!(groups.len(), 1, "shared prefix must use one copy");
@@ -210,11 +213,10 @@ mod tests {
         let t = Topology::preset(SystemPreset::Inc3000);
         let here = t.id(Coord { x: 0, y: 0, z: 0 });
         let dst = t.id(Coord { x: 6, y: 0, z: 0 });
-        let mut failed = no_fail(&t);
-        let pref = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        let pref = dimension_ordered_next(&t, here, dst, &no_fail).unwrap();
         assert_eq!(t.link(pref).span, Span::Multi);
-        failed[pref.0 as usize] = true;
-        let alt = dimension_ordered_next(&t, here, dst, &failed).unwrap();
+        let alt =
+            dimension_ordered_next(&t, here, dst, &|l: LinkId| l == pref).unwrap();
         assert_ne!(alt, pref);
         assert_eq!(t.link(alt).dir, Dir::XPlus);
         assert_eq!(t.link(alt).span, Span::Single);

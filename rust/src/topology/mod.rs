@@ -287,6 +287,57 @@ impl Topology {
         }
     }
 
+    /// Nodes of `shard` that touch another shard: incident (as source
+    /// or destination) to at least one link whose other end a different
+    /// shard owns. Any minimal path between two shards enters and
+    /// leaves through boundary nodes, so pairwise shard distances can
+    /// be computed over boundary sets alone (see
+    /// [`Topology::shard_hop_matrix`]).
+    pub fn boundary_nodes(&self, owner: &[u32], shard: u32) -> Vec<NodeId> {
+        self.nodes()
+            .filter(|&n| {
+                owner[n.0 as usize] == shard
+                    && (self
+                        .out_links(n)
+                        .iter()
+                        .any(|&l| owner[self.link(l).dst.0 as usize] != shard)
+                        || self
+                            .in_links(n)
+                            .iter()
+                            .any(|&l| owner[self.link(l).src.0 as usize] != shard))
+            })
+            .collect()
+    }
+
+    /// Pairwise minimum link-hop distance between shards, as a flat
+    /// `shards × shards` row-major matrix: entry `[i * shards + j]` is
+    /// the minimum [`Topology::min_hops`] over (boundary node of `i`,
+    /// boundary node of `j`) pairs — the fewest links any causal chain
+    /// must cross to carry influence from shard `i` into shard `j`
+    /// (0 on the diagonal). Every fabric event crossing one link costs
+    /// at least one router latency, so `distance × router_latency` is a
+    /// sound per-pair lookahead for the sharded engine's multi-shard
+    /// epoch batching (see `network::sharded`).
+    pub fn shard_hop_matrix(&self, owner: &[u32], shards: u32) -> Vec<u32> {
+        let s = shards as usize;
+        let boundary: Vec<Vec<NodeId>> =
+            (0..shards).map(|i| self.boundary_nodes(owner, i)).collect();
+        let mut m = vec![0u32; s * s];
+        for i in 0..s {
+            for j in (i + 1)..s {
+                let mut best = u32::MAX;
+                for &a in &boundary[i] {
+                    for &b in &boundary[j] {
+                        best = best.min(self.min_hops(a, b));
+                    }
+                }
+                m[i * s + j] = best;
+                m[j * s + i] = best;
+            }
+        }
+        m
+    }
+
     /// Number of unidirectional links a card presents to the rest of the
     /// system *by design* (its connector capacity): every node face link
     /// plus every multi-span link, regardless of whether a neighbor card
@@ -522,6 +573,55 @@ mod tests {
         }
         // 16 cards over 4 shards: 4 cards = 108 nodes each.
         assert!(per_shard.iter().all(|&c| c == 108), "{per_shard:?}");
+    }
+
+    #[test]
+    fn shard_hop_matrix_counts_cage_distances() {
+        // Inc9000, one shard per cage: adjacent cages are one multi-span
+        // z hop apart, and distance grows by one per cage boundary.
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let (owner, s) = t.partition(4);
+        let m = t.shard_hop_matrix(&owner, s);
+        let d = |i: usize, j: usize| m[i * s as usize + j];
+        for i in 0..4 {
+            assert_eq!(d(i, i), 0);
+            for j in 0..4 {
+                if i != j {
+                    assert_eq!(d(i, j), (i as u32).abs_diff(j as u32), "cages {i}->{j}");
+                    assert_eq!(d(i, j), d(j, i), "symmetric");
+                }
+            }
+        }
+        // Inc3000 per-card sharding: opposite corner cards of the 4x4
+        // card grid are 3 + 3 multi/single hops apart.
+        let t3 = Topology::preset(SystemPreset::Inc3000);
+        let (owner3, s3) = t3.partition(16);
+        let m3 = t3.shard_hop_matrix(&owner3, s3);
+        assert_eq!(m3[15], 6, "card (0,0) -> card (3,3)");
+        assert_eq!(m3[1], 1, "adjacent cards touch");
+        // Every off-diagonal distance is at least one link.
+        for i in 0..s3 as usize {
+            for j in 0..s3 as usize {
+                assert_eq!(m3[i * 16 + j] == 0, i == j);
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_nodes_touch_other_shards() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let (owner, _) = t.partition(4);
+        let b0 = t.boundary_nodes(&owner, 0);
+        assert!(!b0.is_empty());
+        for n in b0 {
+            assert_eq!(owner[n.0 as usize], 0);
+            let crosses = t
+                .out_links(n)
+                .iter()
+                .any(|&l| owner[t.link(l).dst.0 as usize] != 0)
+                || t.in_links(n).iter().any(|&l| owner[t.link(l).src.0 as usize] != 0);
+            assert!(crosses, "{n} listed as boundary without a crossing link");
+        }
     }
 
     #[test]

@@ -83,10 +83,10 @@ struct LearnerApp {
 }
 
 impl App for LearnerApp {
-    fn on_message(&mut self, net: &mut Network, ep: Endpoint, _msg: &Message) {
-        // Callback-consumed endpoint: keep the recv inbox from growing.
-        net.recv(&ep);
+    fn on_message(&mut self, _net: &mut Network, _ep: Endpoint, _msg: &Message) -> bool {
         self.received += 1;
+        // Consumed: the record never enters the recv inbox.
+        true
     }
 }
 

@@ -288,9 +288,7 @@ impl App for DistributedMcts {
     /// leader is a rollout result, a message arriving anywhere else is
     /// a task at that worker. (Mode-generic: whichever channel carries
     /// the message, the payload layout is the same.)
-    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) {
-        // Callback-consumed endpoint: keep the recv inbox from growing.
-        net.recv(&ep);
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
         let node = ep.node;
         if node != self.leader {
             // Worker: run the rollout on the FPGA (modeled compute
@@ -324,6 +322,8 @@ impl App for DistributedMcts {
                 self.dispatch(net, widx);
             }
         }
+        // Consumed: tasks and results never enter the recv inboxes.
+        true
     }
 }
 

@@ -17,6 +17,7 @@
 
 use anyhow::Result;
 
+use crate::channels::endpoint::CommMode;
 use crate::coordinator::collectives::{mean_reduce, RingAllreduce};
 use crate::coordinator::Placement;
 use crate::network::Fabric;
@@ -35,6 +36,10 @@ pub struct TrainConfig {
     pub placement: Placement,
     /// Log every `log_every` steps.
     pub log_every: u32,
+    /// The virtual channel the gradient all-reduce travels over
+    /// (`repro train --comm pm|eth|fifo`): the §3 mode choice as a
+    /// training-time ablation. Postmaster by default.
+    pub comm: CommMode,
 }
 
 impl Default for TrainConfig {
@@ -46,6 +51,7 @@ impl Default for TrainConfig {
             seed: 7,
             placement: Placement::Block,
             log_every: 10,
+            comm: CommMode::Postmaster { queue: 0 },
         }
     }
 }
@@ -100,13 +106,19 @@ pub fn gen_batch(
 
 /// One training step's *fabric* side: close the compute window (all
 /// ranks compute in parallel), then all-reduce `grad_bytes` over the
-/// mesh. Shared by [`train`] and [`train_comm`]; returns the step's
-/// communication makespan.
-fn step_comm<F: Fabric>(net: &mut F, ranks: &[NodeId], grad_bytes: u64, compute_ns: Time) -> Time {
+/// mesh on the configured communication mode. Shared by [`train`] and
+/// [`train_comm`]; returns the step's communication makespan.
+fn step_comm<F: Fabric>(
+    net: &mut F,
+    ranks: &[NodeId],
+    grad_bytes: u64,
+    compute_ns: Time,
+    comm: CommMode,
+) -> Time {
     let t_compute_done = net.now() + compute_ns;
     net.advance_to(t_compute_done);
     if ranks.len() >= 2 {
-        RingAllreduce::new(net, ranks.to_vec(), grad_bytes).run(net).makespan
+        RingAllreduce::with_mode(net, ranks.to_vec(), grad_bytes, comm).run(net).makespan
     } else {
         0
     }
@@ -125,6 +137,8 @@ pub struct CommShape {
     /// Per-rank compute window per step, ns.
     pub compute_ns: Time,
     pub placement: Placement,
+    /// The virtual channel the gradient all-reduce rides.
+    pub comm: CommMode,
 }
 
 /// Result of a [`train_comm`] run (virtual-time split only).
@@ -142,7 +156,7 @@ pub fn train_comm<F: Fabric>(net: &mut F, shape: &CommShape) -> CommReport {
     let t_start = net.now();
     let mut vtime_comm: Time = 0;
     for _ in 0..shape.steps {
-        vtime_comm += step_comm(net, &ranks, shape.grad_bytes, shape.compute_ns);
+        vtime_comm += step_comm(net, &ranks, shape.grad_bytes, shape.compute_ns, shape.comm);
     }
     CommReport {
         vtime_total: net.now() - t_start,
@@ -213,7 +227,7 @@ pub fn train<F: Fabric>(net: &mut F, rt: &Runtime, cfg: &TrainConfig) -> Result<
             mean_grads.push(mean_reduce(per_rank));
         }
         vtime_compute += compute_ns;
-        vtime_comm += step_comm(net, &ranks, grad_bytes, compute_ns);
+        vtime_comm += step_comm(net, &ranks, grad_bytes, compute_ns, cfg.comm);
 
         // 3. Replicated SGD update.
         let mut inputs = params;

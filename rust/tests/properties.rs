@@ -3,12 +3,67 @@
 //! explicitly; failures print the seed for reproduction).
 
 use inc_sim::config::SystemPreset;
-use inc_sim::network::{App, Network, NullApp};
+use inc_sim::network::{App, Domain, Network, NullApp};
 use inc_sim::router::{Packet, Payload, Proto};
 use inc_sim::topology::{NodeId, Span, Topology};
 use inc_sim::util::SplitMix64;
 
 const CASES: u64 = 40;
+
+/// The shard-local state domains: for every preset and a sweep of shard
+/// counts, each shard's global↔local maps are bijections between its
+/// owned identifier set and a dense `0..count` range, and across shards
+/// they cover the owner map exactly — every node once (by its owner),
+/// every link once (by its transmit-side owner).
+#[test]
+fn prop_domain_maps_are_bijections_covering_the_owner_map() {
+    for preset in [SystemPreset::Card, SystemPreset::Inc3000, SystemPreset::Inc9000] {
+        let topo = Topology::preset(preset);
+        for shards in [1u32, 2, 3, 4, 7, 16] {
+            let (owner, s) = topo.partition(shards);
+            let mut node_owner_seen = vec![false; topo.node_count()];
+            let mut link_owner_seen = vec![false; topo.link_count()];
+            for shard in 0..s {
+                let d = Domain::owned(&topo, &owner, shard);
+                let ctx = format!("{preset:?} shards={s} shard={shard}");
+                // Injective + into the owned set: local → global → local
+                // round-trips, each global owned by this shard, no global
+                // claimed twice (across locals *or* shards).
+                for li in 0..d.node_count() {
+                    let g = d.node_at(li);
+                    assert_eq!(owner[g.0 as usize], shard, "{ctx}: {g} not owned");
+                    assert_eq!(d.node_index(g), li, "{ctx}: node map not inverse");
+                    assert!(d.owns_node(g), "{ctx}");
+                    assert!(!node_owner_seen[g.0 as usize], "{ctx}: {g} mapped twice");
+                    node_owner_seen[g.0 as usize] = true;
+                }
+                for li in 0..d.link_count() {
+                    let g = d.link_at(li);
+                    let src = topo.link(g).src;
+                    assert_eq!(owner[src.0 as usize], shard, "{ctx}: {g} tx not owned");
+                    assert_eq!(d.link_index(g), li, "{ctx}: link map not inverse");
+                    assert!(d.owns_link(g), "{ctx}");
+                    assert!(!link_owner_seen[g.0 as usize], "{ctx}: {g} mapped twice");
+                    link_owner_seen[g.0 as usize] = true;
+                }
+                // Surjective onto the owned counts.
+                assert_eq!(
+                    d.node_count(),
+                    owner.iter().filter(|&&o| o == shard).count(),
+                    "{ctx}: node count"
+                );
+                assert_eq!(
+                    d.link_count(),
+                    topo.links().iter().filter(|l| owner[l.src.0 as usize] == shard).count(),
+                    "{ctx}: link count"
+                );
+            }
+            // Covering exactly: union over shards = the whole mesh.
+            assert!(node_owner_seen.iter().all(|&b| b), "{preset:?} shards={s}: node gap");
+            assert!(link_owner_seen.iter().all(|&b| b), "{preset:?} shards={s}: link gap");
+        }
+    }
+}
 
 /// Directed routing delivers every packet, and hop counts are minimal on
 /// an idle mesh (per-packet hops ≤ min_hops can't be beaten; equality on

@@ -24,6 +24,7 @@ fn thirty_steps_reduce_loss_and_account_time() {
         seed: 7,
         placement: Placement::Block,
         log_every: 5,
+        ..Default::default()
     };
     let report = train(&mut net, &rt, &cfg).unwrap();
     assert!(
