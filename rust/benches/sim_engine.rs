@@ -21,6 +21,7 @@ use inc_sim::router::{Payload, Proto};
 use inc_sim::sim::{EventQueue, ReferenceQueue};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::chaos::{self, ChaosConfig, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 
 /// Numeric knob from the environment (CI's bench-smoke step shrinks the
@@ -409,10 +410,67 @@ fn main() {
         ));
     }
     json.truncate(json.len() - 2);
-    json.push_str("\n  ]\n}\n");
+    json.push_str("\n  ],\n");
+
+    // Chaos storm under SLOs (EXPERIMENTS.md E13): a seeded correlated
+    // link-failure storm on inc3000 with background Postmaster traffic,
+    // serial vs per-card sharded — delivered throughput and p99 latency
+    // *while links fail and heal*, plus the wall-clock cost of running
+    // the chaos harness on each engine. Byte-identity of the graded SLO
+    // report is asserted, same contract as the traffic sections.
+    let ccfg = ChaosConfig::new(Scenario::Storm, 42);
+    let chaos_sys = || {
+        let mut sys = SystemConfig::inc3000();
+        sys.rx_capacity = ccfg.suggested_rx_capacity();
+        sys
+    };
+    let (chaos_serial, chaos_serial_secs) = common::timed(|| {
+        let mut net = Network::new(chaos_sys());
+        chaos::run(&mut net, &ccfg, 1)
+    });
+    let (chaos_sharded, chaos_sharded_secs) = common::timed(|| {
+        let mut net = ShardedNetwork::new(chaos_sys(), 16);
+        let k = net.shard_count() as u32;
+        chaos::run(&mut net, &ccfg, k)
+    });
+    let chaos_match = {
+        let mut sh = chaos_sharded.clone();
+        sh.shards = chaos_serial.shards;
+        chaos_serial == sh
+    };
+    println!(
+        "chaos storm    {:.0} msg/s virtual under failures, p99 {} ns, \
+         convergence {} ns (serial {:.3} s, sharded {:.3} s, reports match: {chaos_match})",
+        chaos_serial.throughput_msgs_per_s(),
+        chaos_serial.p99_ns,
+        chaos_serial.convergence_ns,
+        chaos_serial_secs,
+        chaos_sharded_secs,
+    );
+    json.push_str(&format!(
+        "  \"chaos\": {{\"scenario\": \"storm\", \"seed\": {}, \
+         \"delivered\": {}, \"sent\": {}, \
+         \"delivered_msgs_per_s_virtual\": {:.1}, \"p50_ns\": {}, \"p99_ns\": {}, \
+         \"convergence_ns\": {}, \"dropped\": {}, \"stalled_ns\": {}, \
+         \"slo_pass\": {}, \"serial_secs\": {chaos_serial_secs:.4}, \
+         \"sharded_secs\": {chaos_sharded_secs:.4}, \"matches_serial\": {chaos_match}}}\n",
+        chaos_serial.seed,
+        chaos_serial.delivered,
+        chaos_serial.sent,
+        chaos_serial.throughput_msgs_per_s(),
+        chaos_serial.p50_ns,
+        chaos_serial.p99_ns,
+        chaos_serial.convergence_ns,
+        chaos_serial.dropped,
+        chaos_serial.stalled_ns,
+        chaos_serial.passed(),
+    ));
+    json.push_str("}\n");
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json");
     assert!(matches, "sharded run diverged from the serial oracle");
     assert!(app_matches, "sharded app workload diverged from the serial oracle");
+    assert!(chaos_match, "chaos SLO report diverged across engines");
+    assert!(chaos_serial.passed(), "chaos storm violated SLOs: {:?}", chaos_serial.violations());
 }

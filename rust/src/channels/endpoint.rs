@@ -127,6 +127,13 @@ pub struct ChannelCaps {
     /// Whether ARM software runs on the data path (the §3.1-vs-§3.2
     /// distinction that makes Ethernet the slow, compatible mode).
     pub cpu_on_path: bool,
+    /// Receive-buffer bound: how many complete messages the endpoint's
+    /// inbox holds before the mode's full-buffer semantics kick in
+    /// (Ethernet drops and counts; Postmaster/Bridge FIFO withhold
+    /// receive credit and charge the sender; NetTunnel rejects loudly).
+    /// `None` = not applicable (`Nfs` endpoints never receive). Fed
+    /// from [`SystemConfig::rx_capacity`].
+    pub rx_capacity: Option<u32>,
 }
 
 impl CommMode {
@@ -140,6 +147,7 @@ impl CommMode {
                 max_payload: None,
                 pair_setup: false,
                 cpu_on_path: true,
+                rx_capacity: Some(cfg.rx_capacity),
             },
             CommMode::Postmaster { .. } => ChannelCaps {
                 latency: LatencyClass::Low,
@@ -148,6 +156,7 @@ impl CommMode {
                 max_payload: Some(cfg.link.mtu - HEADER_BYTES),
                 pair_setup: false,
                 cpu_on_path: false,
+                rx_capacity: Some(cfg.rx_capacity),
             },
             CommMode::BridgeFifo { .. } => ChannelCaps {
                 latency: LatencyClass::Lowest,
@@ -156,6 +165,7 @@ impl CommMode {
                 max_payload: None,
                 pair_setup: true,
                 cpu_on_path: false,
+                rx_capacity: Some(cfg.rx_capacity),
             },
             CommMode::Nfs => ChannelCaps {
                 latency: LatencyClass::External,
@@ -164,6 +174,7 @@ impl CommMode {
                 max_payload: None,
                 pair_setup: false,
                 cpu_on_path: true,
+                rx_capacity: None,
             },
             CommMode::Tunnel { .. } => ChannelCaps {
                 latency: LatencyClass::Low,
@@ -172,6 +183,7 @@ impl CommMode {
                 max_payload: Some(8),
                 pair_setup: false,
                 cpu_on_path: false,
+                rx_capacity: Some(cfg.rx_capacity),
             },
         }
     }
@@ -292,6 +304,12 @@ pub(crate) struct CommState {
     fifo_buf: FxHashMap<(u32, u8), VecDeque<u64>>,
     /// Ethernet reassembly: (dst, src, msg seq) → fragments by index.
     eth_rx: FxHashMap<(u32, u32, u32), std::collections::BTreeMap<u16, Arc<Vec<u8>>>>,
+    /// Credit-withhold chain per backpressured endpoint: the virtual
+    /// time at which the receiver will have drained one more inbox slot
+    /// and re-issued credit. Each further record landing on the full
+    /// inbox queues behind this instant ([`SystemConfig::rx_drain_ns`]
+    /// apart); `recv` clears the chain. Keyed like `inbox`.
+    stall_release: FxHashMap<(u32, u16), Time>,
 }
 
 impl Network {
@@ -473,7 +491,11 @@ impl Network {
     ///
     /// [`App::on_message`]: crate::network::App::on_message
     pub fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
-        match self.comm.inbox.get_mut(&(ep.node.0, lane(&ep.mode))) {
+        let key = (ep.node.0, lane(&ep.mode));
+        // Draining the inbox re-issues receive credit: any
+        // credit-withhold chain on this endpoint ends here.
+        self.comm.stall_release.remove(&key);
+        match self.comm.inbox.get_mut(&key) {
             Some(q) => q.drain(..).collect(),
             None => Vec::new(),
         }
@@ -500,9 +522,66 @@ impl Network {
     /// Queue a delivered message for [`Network::recv`] (the
     /// not-consumed path of [`App::on_message`]).
     ///
+    /// The inbox is bounded at [`ChannelCaps::rx_capacity`]; at
+    /// capacity the mode's full-buffer semantics apply:
+    ///
+    /// * **Ethernet** — the NIC has nowhere to DMA the frame: the
+    ///   message is discarded and counted in [`Metrics::dropped`]
+    ///   (best-effort at the endpoint layer, exactly like a real NIC
+    ///   ring overflow; the fabric's credit domain below is unaffected).
+    /// * **Postmaster / Bridge FIFO** — delivery stays guaranteed: the
+    ///   record is accepted, but the receiver withholds its next credit
+    ///   until one slot drains, and the sender is charged the wait in
+    ///   [`Metrics::stalled_ns`] ([`SystemConfig::rx_drain_ns`] per
+    ///   queued-over record, chained). Accounting-only: packet timing is
+    ///   untouched, so the serial↔sharded byte-identity contract holds
+    ///   by construction.
+    /// * **NetTunnel / Nfs** — a mailbox register has exactly one
+    ///   producer slot and no flow control: overflowing it is a
+    ///   programming error, rejected loudly.
+    ///
     /// [`App::on_message`]: crate::network::App::on_message
+    /// [`Metrics::dropped`]: crate::metrics::Metrics::dropped
+    /// [`Metrics::stalled_ns`]: crate::metrics::Metrics::stalled_ns
     pub(crate) fn comm_inbox_push(&mut self, ep: &Endpoint, msg: Message) {
-        self.comm.inbox.entry((ep.node.0, lane(&ep.mode))).or_default().push_back(msg);
+        let key = (ep.node.0, lane(&ep.mode));
+        let cap = ep.mode.caps(&self.cfg).rx_capacity.unwrap_or(u32::MAX) as usize;
+        let q = self.comm.inbox.entry(key).or_default();
+        if q.len() >= cap {
+            match ep.mode {
+                CommMode::Ethernet { .. } => {
+                    self.metrics.dropped += 1;
+                    return;
+                }
+                CommMode::Postmaster { .. } | CommMode::BridgeFifo { .. } => {
+                    debug_assert!(
+                        q.len() < cap.saturating_mul(4).max(cap + 64),
+                        "runaway rx backlog on node {} lane {:#x}: {} queued messages \
+                         against rx_capacity {} — nothing is draining this endpoint",
+                        ep.node.0,
+                        key.1,
+                        q.len(),
+                        cap
+                    );
+                    q.push_back(msg);
+                    let now = self.sim.now();
+                    let rel = self.comm.stall_release.entry(key).or_insert(0);
+                    let release = (*rel).max(now) + self.cfg.rx_drain_ns;
+                    self.metrics.stalled_ns += release - now;
+                    *rel = release;
+                    return;
+                }
+                CommMode::Nfs | CommMode::Tunnel { .. } => panic!(
+                    "rx buffer overflow on node {} lane {:#x}: {} mailbox at rx_capacity {} \
+                     with no flow control — drain with recv or raise rx_capacity",
+                    ep.node.0,
+                    key.1,
+                    ep.mode.name(),
+                    cap
+                ),
+            }
+        }
+        q.push_back(msg);
     }
 
     pub(crate) fn comm_capture_pm(
@@ -749,6 +828,70 @@ mod tests {
             let left = net.recv(&eb);
             assert_eq!(left.len(), if consume { 0 } else { 2 });
         }
+    }
+
+    #[test]
+    fn ethernet_full_inbox_drops_and_counts() {
+        let mut cfg = SystemConfig::card();
+        cfg.rx_capacity = 2;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(0), NodeId(13));
+        let mode = CommMode::Ethernet { rx: RxMode::Interrupt };
+        let ea = net.open(a, mode);
+        let eb = net.open(b, mode);
+        for i in 0..5u8 {
+            net.send(&ea, b, Message::new(vec![i; 64]));
+        }
+        net.run_to_quiescence(&mut NullApp);
+        let got = net.recv(&eb);
+        assert_eq!(got.len(), 2, "inbox bounded at rx_capacity");
+        assert_eq!(net.metrics.dropped, 3, "overflow frames are counted, not lost silently");
+        assert_eq!(net.metrics.stalled_ns, 0, "best-effort mode never stalls the sender");
+    }
+
+    #[test]
+    fn postmaster_full_inbox_stalls_sender_but_delivers() {
+        let mut cfg = SystemConfig::card();
+        cfg.rx_capacity = 1;
+        let drain = cfg.rx_drain_ns;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(0), NodeId(9));
+        let mode = CommMode::Postmaster { queue: 0 };
+        let ea = net.open(a, mode);
+        let eb = net.open(b, mode);
+        for i in 0..4u8 {
+            net.send(&ea, b, Message::new(vec![i; 16]));
+        }
+        net.run_to_quiescence(&mut NullApp);
+        let got = net.recv(&eb);
+        assert_eq!(got.len(), 4, "guaranteed mode never drops");
+        assert!(
+            net.metrics.stalled_ns >= 3 * drain,
+            "3 over-capacity records chain at least one drain interval each \
+             (stalled_ns={})",
+            net.metrics.stalled_ns
+        );
+        assert_eq!(net.metrics.dropped, 0);
+        // Credit was re-issued by recv: fresh traffic stalls afresh, it
+        // does not extend the old chain.
+        net.send(&ea, b, Message::new(vec![9; 16]));
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.recv(&eb).len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "rx buffer overflow")]
+    fn tunnel_full_inbox_rejects_loudly() {
+        let mut cfg = SystemConfig::card();
+        cfg.rx_capacity = 1;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(2), NodeId(19));
+        let mode = CommMode::Tunnel { addr: crate::node::regs::SCRATCH0 };
+        let ea = net.open(a, mode);
+        net.open(b, mode);
+        net.send(&ea, b, Message::new(vec![1]));
+        net.send(&ea, b, Message::new(vec![2]));
+        net.run_to_quiescence(&mut NullApp);
     }
 
     #[test]

@@ -227,6 +227,21 @@ pub struct SystemConfig {
     /// ([`crate::network::sharded::ShardedNetwork`]): 0 = one per shard,
     /// capped at the machine's available parallelism.
     pub sim_threads: usize,
+    /// Per-endpoint receive-buffer bound, in queued messages
+    /// ([`crate::channels::ChannelCaps::rx_capacity`]). When an inbox is
+    /// at capacity the mode's full-buffer semantics apply: internal
+    /// Ethernet drops the message ([`crate::metrics::Metrics::dropped`]),
+    /// Postmaster and Bridge FIFO withhold receive credit and charge the
+    /// sender ([`crate::metrics::Metrics::stalled_ns`]), NFS and
+    /// NetTunnel reject loudly. The default is sized so ordinary
+    /// workloads never hit it — chaos scenarios shrink it to study
+    /// backpressure (`repro chaos --rx-cap N`).
+    pub rx_capacity: u32,
+    /// Virtual time a credit-withheld sender is charged per record that
+    /// lands on a full guaranteed-delivery inbox: the receiver must
+    /// drain one message slot before re-issuing credit. Accounting-only
+    /// (the record is still delivered; packet timing is unchanged).
+    pub rx_drain_ns: Time,
     /// DRAM capacity per node, bytes (1 GB, §2).
     pub dram_bytes: u64,
 }
@@ -243,6 +258,8 @@ impl SystemConfig {
             bridge_fifo_logic: 250,
             tunnel_exec_latency: 100,
             sim_threads: 0,
+            rx_capacity: 65_536,
+            rx_drain_ns: 500,
             dram_bytes: 1 << 30,
         }
     }

@@ -17,7 +17,7 @@ use inc_sim::network::{Fabric, Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::{Coord, NodeId, Topology};
 use inc_sim::util::SplitMix64;
-use inc_sim::workload::{learners, mcts, training};
+use inc_sim::workload::{chaos, learners, mcts, training};
 
 const USAGE: &str = "\
 repro — INC-Sim: IBM Neural Computer reproduction
@@ -42,6 +42,14 @@ COMMANDS
               distributed MCTS (E9)
   learners    [--preset P] [--shards K] [--comm M]
               learner-overlap experiment (E8)
+  chaos       [--scenario storm|flap|partition|drop|hotspot] [--seed S]
+              [--preset P] [--shards K] [--comm M] [--ticks N] [--rx-cap N]
+              [--out FILE]
+              seeded chaos scenario graded against SLOs (E13): deterministic
+              fault script + background traffic; reports delivered
+              throughput, p50/p99 latency, reroute convergence, drop/stall
+              counts; --out writes the SLO report JSON; --rx-cap bounds
+              the per-endpoint receive buffers (default: tiny for hotspot)
 
 The workload subcommands accept --shards like traffic does: every
 workload runs on either engine through the Fabric trait, with
@@ -159,6 +167,7 @@ fn main() -> Result<()> {
             args.get("shards", 1u32),
             args.comm(),
         ),
+        "chaos" => run_chaos(&args),
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprintln!("unknown command {other:?}\n{USAGE}");
@@ -448,6 +457,67 @@ fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32, co
         r.makespan as f64 / 1e6,
         r.throughput
     );
+}
+
+/// `repro chaos` — one seeded chaos scenario, graded against its SLOs
+/// (EXPERIMENTS.md E13). Exits non-zero on SLO violation so CI can gate
+/// on it.
+fn run_chaos(args: &Args) {
+    let scenario = {
+        let s = args.get_opt("scenario").unwrap_or_else(|| "storm".into());
+        chaos::Scenario::parse(&s).unwrap_or_else(|| {
+            eprintln!("unknown scenario {s:?}; use storm | flap | partition | drop | hotspot");
+            std::process::exit(2);
+        })
+    };
+    let preset = args.preset(SystemPreset::Card);
+    let shards = args.get("shards", 1u32);
+    let mut ccfg = chaos::ChaosConfig::new(scenario, args.get("seed", 42u64));
+    ccfg.comm = args.comm();
+    ccfg.ticks = args.get("ticks", ccfg.ticks);
+    let mut sys = SystemConfig::new(preset);
+    sys.rx_capacity = args.get("rx-cap", ccfg.suggested_rx_capacity());
+    let (report, engine) = if shards == 1 {
+        let mut net = Network::new(sys);
+        (chaos::run(&mut net, &ccfg, 1), "serial".to_string())
+    } else {
+        let mut net =
+            ShardedNetwork::new(sys, if shards == 0 { u32::MAX } else { shards });
+        let label = format!("sharded x{}", net.shard_count());
+        let k = net.shard_count();
+        (chaos::run(&mut net, &ccfg, k), label)
+    };
+    println!(
+        "chaos [{engine}, {preset:?}, comm {}] scenario {} seed {}:",
+        ccfg.comm.name(),
+        report.scenario,
+        report.seed
+    );
+    println!(
+        "  delivered {}/{} msgs ({:.0} msg/s virtual), p50 {} ns, p99 {} ns",
+        report.delivered,
+        report.sent,
+        report.throughput_msgs_per_s(),
+        report.p50_ns,
+        report.p99_ns
+    );
+    println!(
+        "  reroute convergence {} ns, rx drops {}, sender stall {} ns",
+        report.convergence_ns, report.dropped, report.stalled_ns
+    );
+    if let Some(path) = args.get_opt("out") {
+        std::fs::write(&path, report.to_json()).expect("write SLO report");
+        println!("  SLO report -> {path}");
+    }
+    match report.violations().as_slice() {
+        [] => println!("  SLO: PASS"),
+        v => {
+            for viol in v {
+                eprintln!("  SLO VIOLATION: {viol}");
+            }
+            std::process::exit(1);
+        }
+    }
 }
 
 fn run_learners(preset: SystemPreset, shards: u32, comm: CommMode) {

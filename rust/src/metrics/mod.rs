@@ -129,6 +129,23 @@ pub struct Metrics {
     pub bytes_delivered: u64,
     /// Events where a packet had to queue on a busy/credit-blocked link.
     pub link_stalls: u64,
+    /// Messages discarded at a full bounded receive buffer
+    /// ([`crate::channels::ChannelCaps::rx_capacity`]). Only modes with
+    /// `Reliability::BestEffort` semantics at the inbox (internal
+    /// Ethernet) drop; guaranteed modes stall instead. Fabric behavior:
+    /// kept by [`Metrics::fabric_view`].
+    pub dropped: u64,
+    /// Virtual time senders spent withheld by receive-side credit
+    /// backpressure (Postmaster / Bridge-FIFO inbox at `rx_capacity`).
+    /// Fabric behavior: kept by [`Metrics::fabric_view`].
+    pub stalled_ns: u64,
+    /// Worst-case reroute convergence observed by a chaos scenario: the
+    /// longest gap between a scripted fault and the first delivery
+    /// routed after it ([`crate::workload::chaos`]). Merged by **max**
+    /// (it is a fabric-wide worst case, not a per-shard sum), so the
+    /// sharded aggregate equals the serial engine's figure. Kept by
+    /// [`Metrics::fabric_view`].
+    pub reroute_convergence_ns: u64,
     /// No-op `Drain` events the pending-drain flag kept out of the event
     /// queue (an idle link with nothing queued schedules no drain).
     pub drains_suppressed: u64,
@@ -173,6 +190,9 @@ impl Metrics {
         self.multicast_copies += other.multicast_copies;
         self.bytes_delivered += other.bytes_delivered;
         self.link_stalls += other.link_stalls;
+        self.dropped += other.dropped;
+        self.stalled_ns += other.stalled_ns;
+        self.reroute_convergence_ns = self.reroute_convergence_ns.max(other.reroute_convergence_ns);
         self.drains_suppressed += other.drains_suppressed;
         self.windows_merged += other.windows_merged;
         self.state_bytes += other.state_bytes;
@@ -221,6 +241,18 @@ impl Metrics {
             self.link_stalls,
             self.drains_suppressed
         ));
+        if self.dropped > 0 {
+            s.push_str(&format!("  rx-buffer drops={}\n", self.dropped));
+        }
+        if self.stalled_ns > 0 {
+            s.push_str(&format!("  sender stall (credit withhold)={}ns\n", self.stalled_ns));
+        }
+        if self.reroute_convergence_ns > 0 {
+            s.push_str(&format!(
+                "  reroute convergence={}ns\n",
+                self.reroute_convergence_ns
+            ));
+        }
         if self.windows_merged > 0 {
             s.push_str(&format!("  lockstep windows merged={}\n", self.windows_merged));
         }
@@ -299,13 +331,49 @@ mod tests {
         }
         whole.link_stalls = 3;
         whole.drains_suppressed = 5;
+        whole.dropped = 4;
+        whole.stalled_ns = 900;
         a.link_stalls = 1;
         b.link_stalls = 2;
         a.drains_suppressed = 5;
+        a.dropped = 1;
+        b.dropped = 3;
+        a.stalled_ns = 500;
+        b.stalled_ns = 400;
         let mut merged = Metrics::new();
         merged.merge(&a);
         merged.merge(&b);
         assert_eq!(merged, whole);
+    }
+
+    #[test]
+    fn reroute_convergence_merges_by_max() {
+        // A fabric-wide worst case: the aggregate of per-shard blocks
+        // must equal the serial engine's single figure, which is the
+        // maximum over faults — not a sum over shards.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.reroute_convergence_ns = 12_000;
+        b.reroute_convergence_ns = 48_000;
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.reroute_convergence_ns, 48_000);
+        // And it is fabric behavior: the view keeps it.
+        assert_eq!(merged.fabric_view().reroute_convergence_ns, 48_000);
+    }
+
+    #[test]
+    fn backpressure_counters_are_fabric_behavior() {
+        let mut m = Metrics::new();
+        m.dropped = 2;
+        m.stalled_ns = 1_500;
+        let f = m.fabric_view();
+        assert_eq!(f.dropped, 2);
+        assert_eq!(f.stalled_ns, 1_500);
+        let r = m.report();
+        assert!(r.contains("rx-buffer drops=2"));
+        assert!(r.contains("credit withhold)=1500ns"));
     }
 
     #[test]

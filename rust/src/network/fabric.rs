@@ -139,6 +139,14 @@ pub trait Fabric {
     fn fail_link(&mut self, l: LinkId);
     /// See [`Network::repair_link`].
     fn repair_link(&mut self, l: LinkId);
+    /// Record a measured worst-case reroute-convergence figure into
+    /// [`Metrics::reroute_convergence_ns`] (max-combined with any prior
+    /// figure — it is a fabric-wide worst case). Called by the chaos
+    /// harness ([`crate::workload::chaos`]) after it reduces per-fault
+    /// first-delivery times; a driver-context call, identical on both
+    /// engines so the figure participates in the byte-identity
+    /// contract.
+    fn record_reroute_convergence(&mut self, ns: Time);
 
     // -- communication modes: the unified Endpoint API --------------------
     //
@@ -258,6 +266,9 @@ impl Fabric for Network {
     fn repair_link(&mut self, l: LinkId) {
         Network::repair_link(self, l)
     }
+    fn record_reroute_convergence(&mut self, ns: Time) {
+        self.metrics.reroute_convergence_ns = self.metrics.reroute_convergence_ns.max(ns);
+    }
 
     fn open(&mut self, node: NodeId, mode: CommMode) -> Endpoint {
         Network::open(self, node, mode)
@@ -376,6 +387,9 @@ impl Fabric for ShardedNetwork {
     }
     fn repair_link(&mut self, l: LinkId) {
         ShardedNetwork::repair_link(self, l)
+    }
+    fn record_reroute_convergence(&mut self, ns: Time) {
+        ShardedNetwork::record_reroute_convergence(self, ns)
     }
 
     fn open(&mut self, node: NodeId, mode: CommMode) -> Endpoint {

@@ -228,6 +228,18 @@ impl ShardedNetwork {
         &mut self.shards[s]
     }
 
+    /// Record a reroute-convergence figure (see
+    /// [`crate::network::Fabric::record_reroute_convergence`]). Stored
+    /// on shard 0 only: [`Metrics::merge`] combines the field by max,
+    /// so the aggregate equals the serial engine's figure instead of
+    /// multiplying it by the shard count.
+    ///
+    /// [`Metrics::merge`]: crate::metrics::Metrics::merge
+    pub fn record_reroute_convergence(&mut self, ns: crate::sim::Time) {
+        let m = &mut self.shards[0].metrics;
+        m.reroute_convergence_ns = m.reroute_convergence_ns.max(ns);
+    }
+
     /// Run `f` against the shard owning `node` with the global
     /// packet-id cursor synced in and back out, so id assignment
     /// matches a serial run call for call.

@@ -1,0 +1,559 @@
+//! Chaos & resilience harness (EXPERIMENTS.md E13).
+//!
+//! `repro chaos --scenario storm|flap|partition|drop|hotspot --seed S`
+//! composes a deterministic fault script ([`scenario`]) with a seeded
+//! background traffic schedule over any preset, any communication mode
+//! and either engine, and grades the outcome against per-scenario SLOs:
+//! delivered throughput, p50/p99 packet latency, worst-case reroute
+//! convergence, drop and stall counts.
+//!
+//! # Determinism (the whole point)
+//!
+//! Every input to the run — fault script, traffic pair set, per-tick
+//! send instants, payloads — is a pure function of
+//! `(preset, scenario, seed, config)`. Faults are applied at tick
+//! boundaries in *driver context* (between [`Fabric::run_until`]
+//! windows), where both engines' clocks sit on exactly the same
+//! instant, so the serial and sharded engines replay byte-identical
+//! experiments: same delivery trace, same [`Metrics::fabric_view`],
+//! same [`SloReport`] (`tests/sharded_differential.rs`). A chaos run is
+//! therefore *reproducible evidence*: quote `(scenario, seed)` and
+//! anyone can replay the identical failure storm.
+//!
+//! # What convergence means here
+//!
+//! [`Metrics::reroute_convergence_ns`] is measured at the workload
+//! layer: for every scripted fault instant, the gap until the *first
+//! message delivery anywhere in the fabric* after it. It is a liveness
+//! figure — "after a fault, how long until the fabric demonstrably
+//! delivers again" — not a per-flow path-repair time. The app records
+//! first-delivery times per fault with a monotone covered-pointer
+//! (cheap: O(1) amortized per delivery), partitions reduce by
+//! elementwise minimum, and the harness folds the worst case into the
+//! metrics block via [`Fabric::record_reroute_convergence`], inside the
+//! byte-identity contract.
+//!
+//! # Backpressure coupling
+//!
+//! The app deliberately leaves messages *unconsumed* (`on_message`
+//! returns `false`), so every delivery lands in the endpoint's bounded
+//! receive buffer ([`crate::channels::ChannelCaps::rx_capacity`]) and
+//! the per-mode full-buffer semantics engage for real: the `hotspot`
+//! scenario aims all senders at one sink and drains it only every few
+//! ticks, so a small `rx_capacity` (see
+//! [`ChaosConfig::suggested_rx_capacity`]) produces non-zero
+//! [`Metrics::dropped`] (Ethernet) or [`Metrics::stalled_ns`]
+//! (Postmaster / Bridge-FIFO) — asserted by the `expect_backpressure`
+//! SLO.
+
+pub mod scenario;
+
+use std::sync::Arc;
+
+use crate::channels::endpoint::{CommMode, Endpoint, Message};
+use crate::metrics::LatencyHist;
+use crate::network::{App, Fabric, Network, ShardableApp};
+use crate::sim::Time;
+use crate::topology::NodeId;
+use crate::util::{mix64, SplitMix64};
+
+pub use scenario::{FaultEvent, FaultKind, FaultScript, Scenario};
+
+/// Per-scenario service-level objectives the run is graded against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloSpec {
+    /// Worst acceptable reroute convergence (ns).
+    pub max_convergence_ns: Time,
+    /// Minimum app-level delivery ratio, in permille (1000 = every
+    /// message the harness sent was seen by the app).
+    pub min_delivery_permille: u32,
+    /// Worst acceptable p99 end-to-end packet latency (ns).
+    pub max_p99_ns: Time,
+    /// The scenario is *supposed* to trip the bounded receive buffers:
+    /// pass requires `dropped > 0 || stalled_ns > 0`.
+    pub expect_backpressure: bool,
+}
+
+impl SloSpec {
+    /// Default objectives for `scenario` on a `tick_ns` grid: the
+    /// fabric must demonstrably deliver within 4 ticks of any fault,
+    /// lose nothing at app level, and keep p99 under 2^18 ns.
+    pub fn default_for(sc: Scenario, tick_ns: Time) -> Self {
+        SloSpec {
+            max_convergence_ns: 4 * tick_ns,
+            min_delivery_permille: 1000,
+            max_p99_ns: 1 << 18,
+            expect_backpressure: sc == Scenario::Hotspot,
+        }
+    }
+}
+
+/// Chaos run parameters. Everything that shapes traffic or faults is
+/// part of the experiment's identity — two runs with equal configs and
+/// seeds are byte-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    pub scenario: Scenario,
+    pub seed: u64,
+    /// The virtual channel background traffic rides.
+    pub comm: CommMode,
+    /// Traffic window in ticks (faults are staggered inside it).
+    pub ticks: u64,
+    /// Tick width, ns: the fault-application and drain cadence.
+    pub tick_ns: Time,
+    /// Seeded (src, dst) pairs sending each tick (hotspot uses
+    /// [`ChaosConfig::HOTSPOT_SENDERS`] instead).
+    pub pairs: usize,
+    /// Messages per pair per tick, spread inside the tick.
+    pub msgs_per_tick: usize,
+    pub payload_bytes: usize,
+    /// Hotspot only: the sink is drained every this many ticks (every
+    /// tick for the other scenarios), letting its inbox actually fill.
+    pub drain_every: u64,
+    pub slo: SloSpec,
+}
+
+impl ChaosConfig {
+    /// Sender pairs during `hotspot` (kept small so the sink's backlog
+    /// stays under the runaway-backlog debug assertion while still
+    /// overflowing a small `rx_capacity`).
+    pub const HOTSPOT_SENDERS: usize = 4;
+
+    pub fn new(scenario: Scenario, seed: u64) -> Self {
+        let tick_ns = 50_000;
+        ChaosConfig {
+            scenario,
+            seed,
+            comm: CommMode::Postmaster { queue: 0 },
+            ticks: 30,
+            tick_ns,
+            pairs: 24,
+            msgs_per_tick: 2,
+            payload_bytes: 64,
+            drain_every: 4,
+            slo: SloSpec::default_for(scenario, tick_ns),
+        }
+    }
+
+    /// The receive-buffer bound that makes this scenario interesting:
+    /// tiny for `hotspot` (so the sink overflows), the system default
+    /// otherwise. Drivers apply this to `SystemConfig::rx_capacity`
+    /// before building the engines.
+    pub fn suggested_rx_capacity(&self) -> u32 {
+        if self.scenario == Scenario::Hotspot {
+            8
+        } else {
+            65_536
+        }
+    }
+}
+
+/// The background-traffic app: counts app-level deliveries and records
+/// per-fault first-delivery times (see the module docs). Messages are
+/// left unconsumed so the bounded receive buffers see every delivery.
+pub struct ChaosApp {
+    /// Distinct scripted fault instants, ascending (shared, immutable).
+    fault_at: Arc<Vec<Time>>,
+    /// First delivery observed at or after each fault instant.
+    first_after: Vec<Option<Time>>,
+    /// `first_after[..covered]` are all `Some` (monotone pointer).
+    covered: usize,
+    pub received: u64,
+    pub bytes: u64,
+}
+
+impl ChaosApp {
+    pub fn new(fault_at: Arc<Vec<Time>>) -> Self {
+        let n = fault_at.len();
+        ChaosApp { fault_at, first_after: vec![None; n], covered: 0, received: 0, bytes: 0 }
+    }
+
+    /// Worst-case gap between a fault and the first delivery after it;
+    /// faults with no delivery observed count up to `end` (both engines
+    /// finish on the same clock, so this stays byte-identical).
+    pub fn convergence_ns(&self, end: Time) -> Time {
+        self.fault_at
+            .iter()
+            .zip(&self.first_after)
+            .map(|(&at, first)| first.unwrap_or(end).saturating_sub(at))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl App for ChaosApp {
+    fn on_message(&mut self, net: &mut Network, _ep: Endpoint, msg: &Message) -> bool {
+        self.received += 1;
+        self.bytes += msg.data.len() as u64;
+        let now = net.now();
+        while self.covered < self.fault_at.len() && self.fault_at[self.covered] <= now {
+            self.first_after[self.covered] = Some(now);
+            self.covered += 1;
+        }
+        // Not consumed: the message proceeds into the endpoint's
+        // bounded inbox, so backpressure semantics stay live.
+        false
+    }
+}
+
+impl ShardableApp for ChaosApp {
+    fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
+        ChaosApp::new(self.fault_at.clone())
+    }
+
+    fn reduce(&mut self, part: Self) {
+        self.received += part.received;
+        self.bytes += part.bytes;
+        for (mine, theirs) in self.first_after.iter_mut().zip(part.first_after) {
+            *mine = match (*mine, theirs) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        self.covered = self.first_after.iter().take_while(|f| f.is_some()).count();
+    }
+}
+
+/// The graded outcome of one chaos run. Every field is deterministic,
+/// so differential tests compare two engines' reports with `==`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SloReport {
+    pub scenario: &'static str,
+    pub seed: u64,
+    pub shards: u32,
+    /// Messages the harness scheduled (after cut/exclusion filtering).
+    pub sent: u64,
+    /// App-level deliveries observed.
+    pub delivered: u64,
+    pub bytes_delivered: u64,
+    /// Final virtual clock (the run starts at 0 on a fresh fabric).
+    pub elapsed_ns: Time,
+    pub p50_ns: Time,
+    pub p99_ns: Time,
+    pub convergence_ns: Time,
+    pub dropped: u64,
+    pub stalled_ns: u64,
+    pub slo: SloSpec,
+}
+
+impl SloReport {
+    /// Delivered messages per virtual second.
+    pub fn throughput_msgs_per_s(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            0.0
+        } else {
+            self.delivered as f64 * 1e9 / self.elapsed_ns as f64
+        }
+    }
+
+    /// All SLO violations, empty when the run passes.
+    pub fn violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if self.convergence_ns > self.slo.max_convergence_ns {
+            v.push(format!(
+                "reroute convergence {}ns exceeds SLO {}ns",
+                self.convergence_ns, self.slo.max_convergence_ns
+            ));
+        }
+        if self.delivered * 1000 < self.sent * self.slo.min_delivery_permille as u64 {
+            v.push(format!(
+                "delivered {}/{} below SLO {}permille",
+                self.delivered, self.sent, self.slo.min_delivery_permille
+            ));
+        }
+        if self.p99_ns > self.slo.max_p99_ns {
+            v.push(format!("p99 {}ns exceeds SLO {}ns", self.p99_ns, self.slo.max_p99_ns));
+        }
+        if self.slo.expect_backpressure && self.dropped == 0 && self.stalled_ns == 0 {
+            v.push("expected bounded-buffer backpressure, saw none".into());
+        }
+        v
+    }
+
+    pub fn passed(&self) -> bool {
+        self.violations().is_empty()
+    }
+
+    /// Hand-built JSON (same idiom as `benches/`), one object per run —
+    /// CI uploads this next to `BENCH_sim.json`.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"scenario\": \"{}\",\n  \"seed\": {},\n  \"shards\": {},\n  \
+             \"sent\": {},\n  \"delivered\": {},\n  \"bytes_delivered\": {},\n  \
+             \"elapsed_ns\": {},\n  \"throughput_msgs_per_s\": {:.1},\n  \
+             \"p50_ns\": {},\n  \"p99_ns\": {},\n  \"convergence_ns\": {},\n  \
+             \"dropped\": {},\n  \"stalled_ns\": {},\n  \
+             \"slo\": {{\"max_convergence_ns\": {}, \"min_delivery_permille\": {}, \
+             \"max_p99_ns\": {}, \"expect_backpressure\": {}}},\n  \
+             \"violations\": [{}],\n  \"passed\": {}\n}}\n",
+            self.scenario,
+            self.seed,
+            self.shards,
+            self.sent,
+            self.delivered,
+            self.bytes_delivered,
+            self.elapsed_ns,
+            self.throughput_msgs_per_s(),
+            self.p50_ns,
+            self.p99_ns,
+            self.convergence_ns,
+            self.dropped,
+            self.stalled_ns,
+            self.slo.max_convergence_ns,
+            self.slo.min_delivery_permille,
+            self.slo.max_p99_ns,
+            self.slo.expect_backpressure,
+            self.violations()
+                .iter()
+                .map(|v| format!("\"{v}\""))
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.passed(),
+        )
+    }
+}
+
+/// Seeded traffic pair set: distinct `(src, dst)` pairs drawn from the
+/// non-excluded nodes; during `hotspot` every destination is the sink.
+fn traffic_pairs(
+    nodes: &[NodeId],
+    script: &FaultScript,
+    cfg: &ChaosConfig,
+) -> Vec<(NodeId, NodeId)> {
+    let want = if script.hotspot.is_some() { ChaosConfig::HOTSPOT_SENDERS } else { cfg.pairs };
+    let mut rng = SplitMix64::new(mix64(cfg.seed ^ 0xC4A0_5EED));
+    let mut pairs: Vec<(NodeId, NodeId)> = Vec::with_capacity(want);
+    for _ in 0..want * 32 {
+        if pairs.len() == want {
+            break;
+        }
+        let src = nodes[rng.gen_range(nodes.len())];
+        let dst = match script.hotspot {
+            Some(sink) => sink,
+            None => nodes[rng.gen_range(nodes.len())],
+        };
+        if src != dst && !pairs.contains(&(src, dst)) {
+            pairs.push((src, dst));
+        }
+    }
+    assert!(pairs.len() >= 2, "could not seed a traffic pair set");
+    pairs
+}
+
+/// Run the chaos scenario on either engine and grade it. The fabric
+/// must be fresh (clock at 0, empty metrics): a chaos run *is* the
+/// experiment, not a phase of one.
+pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport {
+    let topo = net.topo().clone();
+    let script = cfg.scenario.script(&topo, cfg.seed, cfg.ticks, cfg.tick_ns);
+    let cut = script.cut.clone();
+
+    // Candidate traffic nodes: everything but dropped victims and the
+    // hotspot sink (the sink only receives).
+    let nodes: Vec<NodeId> = topo
+        .nodes()
+        .filter(|n| !script.excluded.contains(n) && script.hotspot != Some(*n))
+        .collect();
+    let pairs = traffic_pairs(&nodes, &script, cfg);
+
+    // One endpoint per participating node (sources send, destinations
+    // are drained); pair-setup modes connect exactly the pairs used.
+    let mut eps: std::collections::BTreeMap<u32, Endpoint> = std::collections::BTreeMap::new();
+    for &(src, dst) in &pairs {
+        eps.entry(src.0).or_insert_with(|| net.open(src, cfg.comm));
+        eps.entry(dst.0).or_insert_with(|| net.open(dst, cfg.comm));
+    }
+    if let Some(sink) = script.hotspot {
+        eps.entry(sink.0).or_insert_with(|| net.open(sink, cfg.comm));
+    }
+    if net.caps(cfg.comm).pair_setup {
+        for &(src, dst) in &pairs {
+            net.connect(&eps[&src.0], dst);
+        }
+    }
+
+    let fault_at: Arc<Vec<Time>> = Arc::new({
+        let mut ts: Vec<Time> = script.events.iter().map(|e| e.at).collect();
+        ts.dedup(); // already sorted
+        ts
+    });
+    let mut app = ChaosApp::new(fault_at.clone());
+
+    // Run at least two ticks past the last scripted fault so every
+    // fault has post-fault traffic to converge on.
+    let last_event_tick = script.horizon() / cfg.tick_ns;
+    let run_ticks = cfg.ticks.max(last_event_tick + 2);
+    let dests: Vec<NodeId> = pairs.iter().map(|&(_, d)| d).collect();
+
+    let mut sent = 0u64;
+    let mut next_event = 0usize;
+    let mut payload_rng = SplitMix64::new(mix64(cfg.seed ^ 0x7AFF_1C5E));
+    for tick in 0..run_ticks {
+        let t0 = tick * cfg.tick_ns;
+        // Apply scripted faults due at this boundary (driver context:
+        // both engines' clocks sit exactly on t0 here).
+        let due_end = script.events[next_event..]
+            .iter()
+            .take_while(|e| e.at <= t0)
+            .count()
+            + next_event;
+        // A partition cut must land on a quiet fabric: an in-flight
+        // packet can *overshoot* the plane via a multi-span (3-hop)
+        // link while still making minimal progress, and once every
+        // cross link is down it would be stranded on the wrong side.
+        // Quiescing first (identically on both engines) removes that
+        // class; the connected scenarios need no guard — the router
+        // detours in-flight packets around any connectivity-safe
+        // script.
+        if cut.is_some()
+            && script.events[next_event..due_end]
+                .iter()
+                .any(|e| matches!(e.kind, FaultKind::Fail(_)))
+        {
+            net.run(&mut app);
+        }
+        for e in &script.events[next_event..due_end] {
+            match e.kind {
+                FaultKind::Fail(l) => net.fail_link(l),
+                FaultKind::Repair(l) => net.repair_link(l),
+            }
+        }
+        next_event = due_end;
+        // Seeded sends, spread inside the tick. Cross-cut pairs stay
+        // silent until the partition heals (conservatively from t=0,
+        // so no cross-cut packet is ever in flight when the plane
+        // drops).
+        for (src, dst) in &pairs {
+            if let Some((side, heal_at)) = &cut {
+                if side[src.0 as usize] != side[dst.0 as usize] && t0 < *heal_at {
+                    continue;
+                }
+            }
+            for k in 0..cfg.msgs_per_tick {
+                let at = t0 + cfg.tick_ns * (k as Time + 1) / (cfg.msgs_per_tick as Time + 1);
+                let fill = (payload_rng.next_u64() & 0xFF) as u8;
+                net.send_at(at, &eps[&src.0], *dst, Message::new(vec![fill; cfg.payload_bytes]));
+                sent += 1;
+            }
+        }
+        net.run_until(&mut app, t0 + cfg.tick_ns);
+        // Drain destinations — except the hotspot sink, which is only
+        // drained every `drain_every` ticks so its bounded inbox fills.
+        let drain_sink = script.hotspot.is_none() || (tick + 1) % cfg.drain_every == 0;
+        for dst in &dests {
+            if script.hotspot == Some(*dst) && !drain_sink {
+                continue;
+            }
+            net.recv(&eps[&dst.0]);
+        }
+    }
+    // Let in-flight traffic land, then drain everything.
+    net.run(&mut app);
+    for dst in &dests {
+        net.recv(&eps[&dst.0]);
+    }
+
+    let end = net.now();
+    let convergence = app.convergence_ns(end);
+    net.record_reroute_convergence(convergence);
+
+    let m = net.metrics();
+    let mut all = LatencyHist::new();
+    for h in m.packet_latency.values() {
+        all.merge(h);
+    }
+    SloReport {
+        scenario: cfg.scenario.name(),
+        seed: cfg.seed,
+        shards,
+        sent,
+        delivered: app.received,
+        bytes_delivered: app.bytes,
+        elapsed_ns: end,
+        p50_ns: all.percentile(0.50),
+        p99_ns: all.percentile(0.99),
+        convergence_ns: convergence,
+        dropped: m.dropped,
+        stalled_ns: m.stalled_ns,
+        slo: cfg.slo,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::ethernet::RxMode;
+    use crate::config::{SystemConfig, SystemPreset};
+
+    fn net_with_rx(preset: SystemPreset, rx: u32) -> Network {
+        let mut cfg = SystemConfig::new(preset);
+        cfg.rx_capacity = rx;
+        Network::new(cfg)
+    }
+
+    #[test]
+    fn storm_converges_and_delivers_everything() {
+        let cfg = ChaosConfig::new(Scenario::Storm, 42);
+        let mut net = net_with_rx(SystemPreset::Card, cfg.suggested_rx_capacity());
+        let report = run(&mut net, &cfg, 1);
+        assert_eq!(report.delivered, report.sent, "app-level loss under storm");
+        assert!(report.passed(), "storm violated SLOs: {:?}", report.violations());
+        assert!(report.convergence_ns > 0, "storm scripted no measurable fault");
+    }
+
+    #[test]
+    fn hotspot_trips_backpressure_per_mode() {
+        // Postmaster: guaranteed mode — the full sink inbox withholds
+        // sender credits (stall accounting), drops nothing.
+        let cfg = ChaosConfig::new(Scenario::Hotspot, 7);
+        let mut net = net_with_rx(SystemPreset::Card, cfg.suggested_rx_capacity());
+        let pm = run(&mut net, &cfg, 1);
+        assert!(pm.stalled_ns > 0, "bounded PM inbox never stalled a sender");
+        assert_eq!(pm.dropped, 0, "guaranteed mode must not drop");
+        assert!(pm.passed(), "hotspot(pm) violated SLOs: {:?}", pm.violations());
+
+        // Ethernet: best-effort — the full sink inbox drops frames and
+        // counts them; the app still observed every message.
+        let mut cfg_eth = ChaosConfig::new(Scenario::Hotspot, 7);
+        cfg_eth.comm = CommMode::Ethernet { rx: RxMode::Interrupt };
+        let mut net = net_with_rx(SystemPreset::Card, cfg_eth.suggested_rx_capacity());
+        let eth = run(&mut net, &cfg_eth, 1);
+        assert!(eth.dropped > 0, "bounded Ethernet inbox never dropped");
+        assert_eq!(eth.stalled_ns, 0, "best-effort mode must not stall");
+        assert_eq!(eth.delivered, eth.sent, "drops are post-delivery (NIC ring overflow)");
+    }
+
+    #[test]
+    fn partition_heals_within_slo() {
+        let cfg = ChaosConfig::new(Scenario::Partition, 3);
+        let mut net = net_with_rx(SystemPreset::Card, cfg.suggested_rx_capacity());
+        let report = run(&mut net, &cfg, 1);
+        assert_eq!(report.delivered, report.sent);
+        assert!(report.passed(), "partition violated SLOs: {:?}", report.violations());
+    }
+
+    #[test]
+    fn every_scenario_produces_a_graded_report() {
+        for sc in Scenario::ALL {
+            let cfg = ChaosConfig::new(sc, 11);
+            let mut net = net_with_rx(SystemPreset::Card, cfg.suggested_rx_capacity());
+            let report = run(&mut net, &cfg, 1);
+            assert!(report.sent > 0, "{}: no traffic", sc.name());
+            assert_eq!(report.delivered, report.sent, "{}: app-level loss", sc.name());
+            assert!(report.passed(), "{}: {:?}", sc.name(), report.violations());
+            let json = report.to_json();
+            assert!(json.contains(&format!("\"scenario\": \"{}\"", sc.name())), "{json}");
+            assert!(json.contains("\"passed\": true"), "{json}");
+        }
+    }
+
+    #[test]
+    fn identical_seeds_reproduce_identical_reports() {
+        let cfg = ChaosConfig::new(Scenario::Flap, 9);
+        let mut a = net_with_rx(SystemPreset::Card, cfg.suggested_rx_capacity());
+        let mut b = net_with_rx(SystemPreset::Card, cfg.suggested_rx_capacity());
+        let ra = run(&mut a, &cfg, 1);
+        let rb = run(&mut b, &cfg, 1);
+        assert_eq!(ra, rb, "chaos run is not a pure function of its seed");
+    }
+}

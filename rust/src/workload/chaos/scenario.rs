@@ -1,0 +1,480 @@
+//! Deterministic fault scripts: the scenario registry of the chaos
+//! harness (EXPERIMENTS.md E13).
+//!
+//! A scenario compiles, from `(topology, seed, tick grid)` alone, into
+//! a [`FaultScript`]: a time-sorted list of `fail_link`/`repair_link`
+//! events plus the traffic constraints the script imposes (nodes that
+//! must not source/sink traffic, the partition membership during a
+//! cut). Scripts are pure functions of their inputs — no RNG stream is
+//! consumed at run time — so the serial and sharded engines replay the
+//! *identical* fault sequence at the identical virtual instants, and a
+//! `(scenario, seed)` pair names one reproducible experiment forever
+//! (the seed discipline of E13).
+//!
+//! Every script is compiled connectivity-safe: the builder tracks the
+//! union of links it has scripted to fail and skips any fault that
+//! could disconnect the mesh (minus deliberately dropped nodes) at any
+//! instant. The adaptive router panics on a fully-unreachable
+//! destination by design — chaos measures degradation, not undefined
+//! behavior. Node drops are two-phase for the same reason: inbound
+//! links are severed two ticks before outbound ones, so a packet
+//! already committed toward the dying node can still transit out.
+
+use std::sync::Arc;
+
+use crate::sim::Time;
+use crate::topology::{LinkId, NodeId, Topology};
+use crate::util::mix64;
+
+/// One scripted fault, applied by the harness at the tick boundary
+/// `at` (scripts emit tick-aligned times only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: Time,
+    pub kind: FaultKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Fail(LinkId),
+    Repair(LinkId),
+}
+
+/// A compiled scenario: the fault timeline plus traffic constraints.
+#[derive(Debug, Clone)]
+pub struct FaultScript {
+    /// Fault events, sorted by `at` (ties in script order).
+    pub events: Vec<FaultEvent>,
+    /// Nodes that must never source or sink harness traffic (dropped
+    /// nodes: a packet addressed to a severed node could never be
+    /// delivered).
+    pub excluded: Vec<NodeId>,
+    /// Partition side per node and the heal instant, if the scenario
+    /// splits the mesh: `(side[], heal_at)`. Traffic pairs stay
+    /// same-side until `heal_at` (conservative: also before the cut, so
+    /// no cross-cut packet can be in flight when the plane goes down).
+    pub cut: Option<(Vec<u8>, Time)>,
+    /// Hot-spot sink every sender aims at, if the scenario congests one.
+    pub hotspot: Option<NodeId>,
+}
+
+impl FaultScript {
+    /// Last scripted instant (0 when the script is fault-free).
+    pub fn horizon(&self) -> Time {
+        self.events.last().map_or(0, |e| e.at)
+    }
+}
+
+/// The scenario registry (`repro chaos --scenario <name>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Correlated failure storm: bursts of link losses clustered on
+    /// seeded cards (one card's power/clock domain failing takes
+    /// several of its links at once), staggered over the run and
+    /// repaired a quarter-run later.
+    Storm,
+    /// NIC flaps: seeded nodes cyclically lose all but their first
+    /// link pair, then recover — connectivity degrades, never severs.
+    Flap,
+    /// Partition-and-heal: every link crossing a seeded x-plane fails
+    /// at once, the mesh runs split, then heals.
+    Partition,
+    /// Node drop: seeded nodes die permanently (two-phase: inbound
+    /// links first, outbound two ticks later); their traffic is
+    /// excluded and the rest of the mesh routes around the holes.
+    Drop,
+    /// Hot-spot congestion: no link faults — every sender aims at one
+    /// seeded sink whose bounded inbox backpressures or drops.
+    Hotspot,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "storm" => Some(Scenario::Storm),
+            "flap" => Some(Scenario::Flap),
+            "partition" => Some(Scenario::Partition),
+            "drop" => Some(Scenario::Drop),
+            "hotspot" => Some(Scenario::Hotspot),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Storm => "storm",
+            Scenario::Flap => "flap",
+            Scenario::Partition => "partition",
+            Scenario::Drop => "drop",
+            Scenario::Hotspot => "hotspot",
+        }
+    }
+
+    pub const ALL: [Scenario; 5] =
+        [Scenario::Storm, Scenario::Flap, Scenario::Partition, Scenario::Drop, Scenario::Hotspot];
+
+    /// Compile the scenario into a fault script on `topo`. `ticks` ×
+    /// `tick_ns` is the traffic window the faults are staggered over;
+    /// all event times are tick-aligned so both engines apply them at
+    /// identical driver-context instants.
+    pub fn script(
+        &self,
+        topo: &Arc<Topology>,
+        seed: u64,
+        ticks: u64,
+        tick_ns: Time,
+    ) -> FaultScript {
+        let h = |k: u64| mix64(seed ^ self.ordinal() ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let ticks = ticks.max(8);
+        let span = ticks * tick_ns;
+        let align = |t: Time| (t / tick_ns).clamp(1, ticks - 1) * tick_ns;
+        let empty = FaultScript { events: vec![], excluded: vec![], cut: None, hotspot: None };
+        match self {
+            Scenario::Storm => {
+                let cards = topo.cards();
+                // A quarter of the cards (at least one) storm, each
+                // burst taking up to 6 of the card's links at once. The
+                // tracker accumulates across bursts (it never replays
+                // the scripted repairs), so the mesh stays connected
+                // under *any* overlap of burst windows — connectivity
+                // is monotone in the live-link set.
+                let bursts = (cards.len() / 4).max(1) as u64;
+                let mut live = LiveLinks::new(topo);
+                let mut events = Vec::new();
+                for b in 0..bursts {
+                    let card = cards[(h(b) % cards.len() as u64) as usize];
+                    let fail_at = align(span * (1 + b) / (bursts + 2));
+                    let heal_at = align(fail_at + span / 4);
+                    for (i, &n) in topo.card_nodes(card).iter().enumerate() {
+                        let out = topo.out_links(n);
+                        let l = out[(h(b ^ ((i as u64) << 32)) % out.len() as u64) as usize];
+                        if live.fail_count_since(fail_at) < 6 && live.fail_if_safe(topo, l, fail_at)
+                        {
+                            events.push(FaultEvent { at: fail_at, kind: FaultKind::Fail(l) });
+                            events.push(FaultEvent { at: heal_at, kind: FaultKind::Repair(l) });
+                        }
+                    }
+                }
+                finish(events, empty)
+            }
+            Scenario::Flap => {
+                let n = topo.node_count() as u64;
+                let cycles = 2u64;
+                // Non-overlapping down-windows (3 ticks apart, 2 ticks
+                // down), so two flappers can never be dark at once and
+                // each flap alone keeps the mesh connected (one link
+                // pair stays up; the mesh minus one node is connected).
+                let flappers = (n / 64).max(2).min(((ticks.saturating_sub(2)) / (3 * cycles)).max(1));
+                let mut events = Vec::new();
+                let mut slot = 0u64;
+                for f in 0..flappers {
+                    let node = NodeId((h(f) % n) as u32);
+                    let down: Vec<LinkId> = topo.out_links(node)[1..]
+                        .iter()
+                        .flat_map(|&l| [l, reverse(topo, l)])
+                        .collect();
+                    for _ in 0..cycles {
+                        let t0 = align((2 + 3 * slot) * tick_ns);
+                        let t1 = align(t0 + 2 * tick_ns);
+                        slot += 1;
+                        for &l in &down {
+                            events.push(FaultEvent { at: t0, kind: FaultKind::Fail(l) });
+                            events.push(FaultEvent { at: t1, kind: FaultKind::Repair(l) });
+                        }
+                    }
+                }
+                finish(events, empty)
+            }
+            Scenario::Partition => {
+                let (dx, _, _) = topo.dims();
+                // Cut plane strictly inside the mesh: left = x < cut_x.
+                let cut_x = 1 + (h(1) % (dx as u64 - 1)) as u32;
+                let cut_at = align(span / 3);
+                let heal_at = align(2 * span / 3);
+                let mut events = Vec::new();
+                for l in topo.links() {
+                    let (a, b) = (topo.coord(l.src).x < cut_x, topo.coord(l.dst).x < cut_x);
+                    if a != b {
+                        events.push(FaultEvent { at: cut_at, kind: FaultKind::Fail(l.id) });
+                        events.push(FaultEvent { at: heal_at, kind: FaultKind::Repair(l.id) });
+                    }
+                }
+                let side: Vec<u8> =
+                    topo.nodes().map(|x| u8::from(topo.coord(x).x < cut_x)).collect();
+                finish(events, FaultScript { cut: Some((side, heal_at)), ..empty })
+            }
+            Scenario::Drop => {
+                let n = topo.node_count() as u64;
+                let drops = (n / 216).max(1);
+                let mut live = LiveLinks::new(topo);
+                let mut events = Vec::new();
+                let mut excluded = Vec::new();
+                for d in 0..drops {
+                    let victim = NodeId((h(d ^ 0xDEAD) % n) as u32);
+                    if excluded.contains(&victim) {
+                        continue;
+                    }
+                    let at = align(span * (1 + d) / (drops + 2));
+                    let ins: Vec<LinkId> = topo.in_links(victim).to_vec();
+                    let outs: Vec<LinkId> = topo.out_links(victim).to_vec();
+                    let all: Vec<LinkId> = ins.iter().chain(outs.iter()).copied().collect();
+                    // Sever only if the *rest* of the mesh stays whole.
+                    if live.fail_all_if_safe(topo, &all, &[&excluded[..], &[victim]].concat()) {
+                        excluded.push(victim);
+                        for &l in &ins {
+                            events.push(FaultEvent { at, kind: FaultKind::Fail(l) });
+                        }
+                        // Outbound two ticks later: packets already
+                        // committed inward can still transit out.
+                        let at2 = align(at + 2 * tick_ns).max(at);
+                        for &l in &outs {
+                            events.push(FaultEvent { at: at2, kind: FaultKind::Fail(l) });
+                        }
+                    }
+                }
+                finish(events, FaultScript { excluded, ..empty })
+            }
+            Scenario::Hotspot => {
+                let sink = NodeId((h(7) % topo.node_count() as u64) as u32);
+                FaultScript { hotspot: Some(sink), ..empty }
+            }
+        }
+    }
+
+    fn ordinal(&self) -> u64 {
+        match self {
+            Scenario::Storm => 0x5701,
+            Scenario::Flap => 0xF1A2,
+            Scenario::Partition => 0x9A37,
+            Scenario::Drop => 0xD009,
+            Scenario::Hotspot => 0x0407,
+        }
+    }
+}
+
+fn finish(mut events: Vec<FaultEvent>, mut script: FaultScript) -> FaultScript {
+    events.sort_by_key(|e| e.at);
+    script.events = events;
+    script
+}
+
+/// The reverse twin of `l` (every mesh link has one; a topology
+/// invariant tested in `tests/properties.rs`).
+pub fn reverse(topo: &Topology, l: LinkId) -> LinkId {
+    let info = topo.link(l);
+    topo.out_links(info.dst)
+        .iter()
+        .copied()
+        .find(|&r| {
+            let ri = topo.link(r);
+            ri.dst == info.src && ri.span == info.span
+        })
+        .expect("mesh link without a reverse twin")
+}
+
+/// Is the mesh connected over live links, ignoring the deliberately
+/// severed `skip` nodes? BFS from the lowest non-skipped node.
+pub fn connected(topo: &Topology, failed: &[bool], skip: &[NodeId]) -> bool {
+    let n = topo.node_count();
+    let mut seen = vec![false; n];
+    for &s in skip {
+        seen[s.0 as usize] = true; // never enter severed nodes
+    }
+    let Some(start) = (0..n as u32).map(NodeId).find(|x| !skip.contains(x)) else {
+        return true;
+    };
+    let mut stack = vec![start];
+    seen[start.0 as usize] = true;
+    let mut count = 1usize;
+    while let Some(x) = stack.pop() {
+        for &l in topo.out_links(x) {
+            if failed[l.0 as usize] {
+                continue;
+            }
+            let d = topo.link(l).dst;
+            if !seen[d.0 as usize] {
+                seen[d.0 as usize] = true;
+                count += 1;
+                stack.push(d);
+            }
+        }
+    }
+    count == n - skip.len()
+}
+
+/// Script-compile-time connectivity tracker: admits candidate faults
+/// only while the mesh (minus deliberate victims) stays connected
+/// under the *union* of everything admitted so far.
+struct LiveLinks {
+    failed: Vec<bool>,
+    stamps: Vec<Time>,
+}
+
+impl LiveLinks {
+    fn new(topo: &Topology) -> Self {
+        LiveLinks { failed: vec![false; topo.link_count()], stamps: Vec::new() }
+    }
+
+    /// How many admitted faults carry stamp `at` (per-burst size cap).
+    fn fail_count_since(&self, at: Time) -> usize {
+        self.stamps.iter().filter(|&&s| s == at).count()
+    }
+
+    /// Fail `l` iff the mesh stays connected *and* `l`'s source keeps a
+    /// live out-link; report whether it did. The out-degree guard
+    /// matters because failures are per-direction: a node can stay
+    /// BFS-reachable (live in-links) with every out-link dead, and a
+    /// packet arriving there would have nowhere to go.
+    fn fail_if_safe(&mut self, topo: &Topology, l: LinkId, stamp: Time) -> bool {
+        if self.failed[l.0 as usize] {
+            return false;
+        }
+        self.failed[l.0 as usize] = true;
+        let src = topo.link(l).src;
+        let src_alive = topo.out_links(src).iter().any(|&o| !self.failed[o.0 as usize]);
+        if src_alive && connected(topo, &self.failed, &[]) {
+            self.stamps.push(stamp);
+            true
+        } else {
+            self.failed[l.0 as usize] = false;
+            false
+        }
+    }
+
+    /// Fail the whole set iff the mesh minus `skip` stays connected.
+    fn fail_all_if_safe(&mut self, topo: &Topology, ls: &[LinkId], skip: &[NodeId]) -> bool {
+        for &l in ls {
+            self.failed[l.0 as usize] = true;
+        }
+        if connected(topo, &self.failed, skip) {
+            true
+        } else {
+            for &l in ls {
+                self.failed[l.0 as usize] = false;
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemPreset;
+
+    #[test]
+    fn scripts_are_pure_functions_of_their_inputs() {
+        let topo = Arc::new(Topology::preset(SystemPreset::Inc3000));
+        for sc in Scenario::ALL {
+            let a = sc.script(&topo, 42, 30, 50_000);
+            let b = sc.script(&topo, 42, 30, 50_000);
+            assert_eq!(a.events, b.events, "{}", sc.name());
+            assert_eq!(a.excluded, b.excluded, "{}", sc.name());
+            assert_eq!(a.hotspot, b.hotspot, "{}", sc.name());
+        }
+    }
+
+    #[test]
+    fn scripted_storms_never_disconnect_the_mesh() {
+        // Replay every scenario's fault timeline instant by instant and
+        // assert live connectivity throughout — the property the
+        // builders promise the router.
+        for preset in [SystemPreset::Card, SystemPreset::Inc3000] {
+            let topo = Arc::new(Topology::preset(preset));
+            for sc in Scenario::ALL {
+                for seed in [1u64, 7, 42] {
+                    let s = sc.script(&topo, seed, 30, 50_000);
+                    let mut failed = vec![false; topo.link_count()];
+                    let skip = if sc == Scenario::Partition { None } else { Some(&s.excluded) };
+                    let mut i = 0;
+                    while i < s.events.len() {
+                        let t = s.events[i].at;
+                        while i < s.events.len() && s.events[i].at == t {
+                            match s.events[i].kind {
+                                FaultKind::Fail(l) => failed[l.0 as usize] = true,
+                                FaultKind::Repair(l) => failed[l.0 as usize] = false,
+                            }
+                            i += 1;
+                        }
+                        if let Some(excl) = skip {
+                            assert!(
+                                connected(&topo, &failed, excl),
+                                "{preset:?} {} seed {seed}: mesh disconnected at t={t}",
+                                sc.name()
+                            );
+                            // Directed-failure trap: no surviving node
+                            // may ever be left without a live out-link.
+                            for x in topo.nodes().filter(|x| !excl.contains(x)) {
+                                assert!(
+                                    topo.out_links(x)
+                                        .iter()
+                                        .any(|&l| !failed[l.0 as usize]),
+                                    "{preset:?} {} seed {seed}: {x:?} has no live \
+                                     out-link at t={t}",
+                                    sc.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_script_cuts_exactly_the_plane_and_heals() {
+        let topo = Arc::new(Topology::preset(SystemPreset::Card));
+        let s = Scenario::Partition.script(&topo, 5, 30, 50_000);
+        let (side, heal_at) = s.cut.clone().expect("partition publishes its cut");
+        assert!(s.events.iter().all(|e| match e.kind {
+            FaultKind::Fail(l) | FaultKind::Repair(l) => {
+                let li = topo.link(l);
+                side[li.src.0 as usize] != side[li.dst.0 as usize]
+            }
+        }));
+        let fails = s.events.iter().filter(|e| matches!(e.kind, FaultKind::Fail(_))).count();
+        let repairs = s.events.iter().filter(|e| matches!(e.kind, FaultKind::Repair(_))).count();
+        assert_eq!(fails, repairs, "every cut link heals");
+        assert!(fails > 0);
+        assert!(s.events.iter().all(|e| e.at <= heal_at));
+        // Both sides non-empty.
+        assert!(side.iter().any(|&s| s == 0) && side.iter().any(|&s| s == 1));
+    }
+
+    #[test]
+    fn drop_script_severs_victims_in_two_phases() {
+        let topo = Arc::new(Topology::preset(SystemPreset::Inc3000));
+        let s = Scenario::Drop.script(&topo, 9, 30, 50_000);
+        assert!(!s.excluded.is_empty());
+        for &v in &s.excluded {
+            let in_t: Vec<Time> = s
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, FaultKind::Fail(l) if topo.link(l).dst == v))
+                .map(|e| e.at)
+                .collect();
+            let out_t: Vec<Time> = s
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, FaultKind::Fail(l) if topo.link(l).src == v))
+                .map(|e| e.at)
+                .collect();
+            assert_eq!(in_t.len(), topo.in_links(v).len());
+            assert_eq!(out_t.len(), topo.out_links(v).len());
+            let in_max = in_t.iter().max().unwrap();
+            let out_min = out_t.iter().min().unwrap();
+            assert!(in_max < out_min, "inbound severed strictly before outbound");
+        }
+    }
+
+    #[test]
+    fn events_are_tick_aligned_and_sorted() {
+        let topo = Arc::new(Topology::preset(SystemPreset::Inc3000));
+        let tick = 50_000;
+        for sc in Scenario::ALL {
+            let s = sc.script(&topo, 3, 30, tick);
+            assert!(s.events.windows(2).all(|w| w[0].at <= w[1].at), "{}", sc.name());
+            assert!(s.events.iter().all(|e| e.at % tick == 0), "{}", sc.name());
+        }
+    }
+}

@@ -12,6 +12,11 @@
 //! * [`mcts`] — distributed Monte Carlo Tree Search, the intro's example
 //!   of an algorithm ill-suited to SIMD hardware: a leader node expands
 //!   a UCB tree and farms rollouts to workers over Postmaster (E9).
+//! * [`chaos`] — the resilience suite (E13): seeded deterministic fault
+//!   scripts (failure storms, NIC flaps, partition-and-heal, node
+//!   drops, hot-spot congestion) composed with background traffic and
+//!   graded against per-scenario SLOs — delivered throughput, p50/p99
+//!   latency, reroute convergence, bounded-buffer drop/stall counts.
 //!
 //! Every workload is written against the engine-agnostic
 //! [`crate::network::Fabric`] trait and implements
@@ -23,6 +28,7 @@
 //! ([`crate::channels::CommMode`]; `repro learners|mcts --comm
 //! pm|eth|fifo`) rather than baked into the call sites.
 
+pub mod chaos;
 pub mod learners;
 pub mod mcts;
 pub mod training;

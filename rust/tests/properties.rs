@@ -2,11 +2,13 @@
 //! the offline environment has no proptest, so cases are generated
 //! explicitly; failures print the seed for reproduction).
 
-use inc_sim::config::SystemPreset;
-use inc_sim::network::{App, Domain, Network, NullApp};
+use inc_sim::config::{SystemConfig, SystemPreset};
+use inc_sim::network::sharded::ShardedNetwork;
+use inc_sim::network::{App, Domain, Fabric, Network, NullApp};
 use inc_sim::router::{Packet, Payload, Proto};
 use inc_sim::topology::{NodeId, Span, Topology};
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::chaos::{self, ChaosConfig, FaultKind, Scenario};
 
 const CASES: u64 = 40;
 
@@ -304,5 +306,109 @@ fn prop_deterministic_replay() {
     };
     for seed in 0..10 {
         assert_eq!(run(seed), run(seed), "seed {seed} not deterministic");
+    }
+}
+
+/// Chaos storm resilience (E13): any scripted `fail_link` storm leaves
+/// the mesh connected by construction, and under the *union* of every
+/// scripted failure (the worst instant any overlap of burst windows can
+/// produce) every sampled node pair still delivers — on the serial
+/// engine and on 4- and 16-shard engines alike.
+#[test]
+fn prop_storm_degraded_mesh_still_delivers_every_pair() {
+    fn deliver_all<F: Fabric>(net: &mut F, pairs: &[(NodeId, NodeId)], ctx: &str) {
+        for &(s, d) in pairs {
+            net.send_directed(s, d, Proto::Raw { tag: 13 }, Payload::Empty);
+        }
+        net.run(&mut NullApp);
+        assert_eq!(
+            net.metrics().packets_delivered,
+            pairs.len() as u64,
+            "{ctx}: a pair failed to deliver through the degraded mesh"
+        );
+    }
+    for preset in [SystemPreset::Card, SystemPreset::Inc3000] {
+        let topo = Topology::preset(preset);
+        for seed in 0..6u64 {
+            let script = Scenario::Storm.script(&std::sync::Arc::new(topo.clone()), seed, 30, 50_000);
+            // Union of every scripted failure, repairs ignored: the
+            // worst mesh any instant of the storm can reach.
+            let mut failed = vec![false; topo.link_count()];
+            for e in &script.events {
+                if let FaultKind::Fail(l) = e.kind {
+                    failed[l.0 as usize] = true;
+                }
+            }
+            assert!(
+                chaos::scenario::connected(&topo, &failed, &[]),
+                "{preset:?} seed {seed}: storm union disconnected the mesh"
+            );
+            // Seeded pair sample (every pair on Card is overkill; the
+            // sample crosses cards and the failure clusters).
+            let mut rng = SplitMix64::new(seed ^ 0x57AB);
+            let n = topo.node_count();
+            let mut pairs = Vec::new();
+            while pairs.len() < 48 {
+                let s = NodeId(rng.gen_range(n) as u32);
+                let mut d = NodeId(rng.gen_range(n) as u32);
+                if d == s {
+                    d = NodeId((d.0 + 1) % n as u32);
+                }
+                pairs.push((s, d));
+            }
+            for shards in [1u32, 4, 16] {
+                let ctx = format!("{preset:?} seed {seed} shards={shards}");
+                if shards == 1 {
+                    let mut net = Network::new(SystemConfig::new(preset));
+                    for (i, f) in failed.iter().enumerate() {
+                        if *f {
+                            Fabric::fail_link(&mut net, inc_sim::topology::LinkId(i as u32));
+                        }
+                    }
+                    deliver_all(&mut net, &pairs, &ctx);
+                } else {
+                    let mut net = ShardedNetwork::new(SystemConfig::new(preset), shards);
+                    for (i, f) in failed.iter().enumerate() {
+                        if *f {
+                            Fabric::fail_link(&mut net, inc_sim::topology::LinkId(i as u32));
+                        }
+                    }
+                    deliver_all(&mut net, &pairs, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// The full storm harness converges within its SLO bound on every
+/// engine: presets × shards {1, 4, 16}, several seeds — delivered
+/// ratio 1.0 and reroute convergence under `max_convergence_ns`.
+#[test]
+fn prop_storm_harness_meets_slo_across_engines() {
+    for preset in [SystemPreset::Card, SystemPreset::Inc3000] {
+        for seed in [3u64, 17] {
+            let ccfg = ChaosConfig::new(Scenario::Storm, seed);
+            for shards in [1u32, 4, 16] {
+                let mut sys = SystemConfig::new(preset);
+                sys.rx_capacity = ccfg.suggested_rx_capacity();
+                let report = if shards == 1 {
+                    let mut net = Network::new(sys);
+                    chaos::run(&mut net, &ccfg, 1)
+                } else {
+                    let mut net = ShardedNetwork::new(sys, shards);
+                    let k = net.shard_count();
+                    chaos::run(&mut net, &ccfg, k)
+                };
+                let ctx = format!("{preset:?} seed {seed} shards={shards}");
+                assert_eq!(report.delivered, report.sent, "{ctx}: app-level loss");
+                assert!(
+                    report.convergence_ns <= report.slo.max_convergence_ns,
+                    "{ctx}: convergence {}ns breaks SLO {}ns",
+                    report.convergence_ns,
+                    report.slo.max_convergence_ns
+                );
+                assert!(report.passed(), "{ctx}: {:?}", report.violations());
+            }
+        }
     }
 }

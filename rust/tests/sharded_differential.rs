@@ -23,6 +23,7 @@ use inc_sim::network::{Delivery, Fabric, Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::chaos::{self, ChaosConfig, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 use inc_sim::workload::mcts::{DistributedMcts, Game};
 use inc_sim::workload::training::{train_comm, CommShape};
@@ -576,4 +577,95 @@ fn ethernet_and_nfs_cross_shard_identical() {
     );
     assert_eq!(sharded.eth_external().files.get("ckpt.bin"), Some(&50_000));
     assert_same_outcome(&mut serial, &mut sharded, "ethernet/nfs");
+}
+
+// ---------------------------------------------------------------------
+// Chaos differentials (E13): a seeded fault script + background traffic
+// is one deterministic experiment — the serial and sharded engines must
+// replay it byte-identically *including* the graded SLO report, the
+// reroute-convergence figure and the bounded-buffer drop/stall counts.
+// ---------------------------------------------------------------------
+
+/// Run one chaos scenario on both engines with identical configs and
+/// compare the full outcome: SLO report (`==`), sorted trace, fabric
+/// metrics, final clock. Returns the (identical) report.
+fn assert_chaos_equivalent(
+    preset: SystemPreset,
+    shards: u32,
+    scenario: Scenario,
+    seed: u64,
+) -> chaos::SloReport {
+    let ccfg = ChaosConfig::new(scenario, seed);
+    let mut sys = SystemConfig::new(preset);
+    sys.rx_capacity = ccfg.suggested_rx_capacity();
+
+    let mut serial = Network::new(sys.clone());
+    Fabric::enable_trace(&mut serial);
+    let rs = chaos::run(&mut serial, &ccfg, 1);
+
+    let mut sharded = ShardedNetwork::new(sys, shards);
+    sharded.enable_trace();
+    let k = sharded.shard_count();
+    let mut rp = chaos::run(&mut sharded, &ccfg, k);
+
+    let ctx = format!("chaos {} {preset:?} shards={k} seed={seed}", scenario.name());
+    // The shard count is presentation metadata, not an observable.
+    rp.shards = 1;
+    assert_eq!(rs, rp, "{ctx}: SLO reports differ");
+    assert_same_outcome(&mut serial, &mut sharded, &ctx);
+    assert!(rs.passed(), "{ctx}: SLO violations {:?}", rs.violations());
+    rs
+}
+
+#[test]
+fn chaos_storm_byte_identical_across_shard_counts() {
+    // The acceptance gate: identical delivery traces, SLO metrics and
+    // drop/stall counts at shards {2, 4, 16}.
+    let r2 = assert_chaos_equivalent(SystemPreset::Inc9000, 2, Scenario::Storm, 42);
+    let r4 = assert_chaos_equivalent(SystemPreset::Inc9000, 4, Scenario::Storm, 42);
+    assert_eq!(r2, r4, "storm outcome depends on the shard count");
+    assert_chaos_equivalent(SystemPreset::Inc3000, 16, Scenario::Storm, 42);
+}
+
+#[test]
+fn chaos_flap_and_partition_byte_identical() {
+    assert_chaos_equivalent(SystemPreset::Inc3000, 16, Scenario::Flap, 7);
+    let r = assert_chaos_equivalent(SystemPreset::Inc3000, 16, Scenario::Partition, 7);
+    assert!(r.convergence_ns > 0, "partition scripted no measurable fault");
+    assert_chaos_equivalent(SystemPreset::Inc9000, 4, Scenario::Partition, 3);
+}
+
+#[test]
+fn chaos_drop_byte_identical() {
+    let r = assert_chaos_equivalent(SystemPreset::Inc3000, 16, Scenario::Drop, 9);
+    assert_eq!(r.delivered, r.sent, "drop scenario lost surviving-pair traffic");
+}
+
+#[test]
+fn chaos_hotspot_backpressure_byte_identical() {
+    // The bounded receive buffers must *change behavior* (non-zero
+    // stall accounting under Postmaster) and still match byte-for-byte
+    // across engines — stalls are destination-local accounting, so
+    // owner-shard enforcement keeps them identical.
+    let pm = assert_chaos_equivalent(SystemPreset::Inc3000, 16, Scenario::Hotspot, 5);
+    assert!(pm.stalled_ns > 0, "hotspot never tripped credit-withhold backpressure");
+    assert_eq!(pm.dropped, 0, "guaranteed mode dropped");
+
+    // Same storm over best-effort Ethernet: drops instead of stalls.
+    let mut ccfg = ChaosConfig::new(Scenario::Hotspot, 5);
+    ccfg.comm = CommMode::Ethernet { rx: RxMode::Interrupt };
+    let mut sys = SystemConfig::new(SystemPreset::Inc3000);
+    sys.rx_capacity = ccfg.suggested_rx_capacity();
+    let mut serial = Network::new(sys.clone());
+    Fabric::enable_trace(&mut serial);
+    let rs = chaos::run(&mut serial, &ccfg, 1);
+    let mut sharded = ShardedNetwork::new(sys, 16);
+    sharded.enable_trace();
+    let k = sharded.shard_count();
+    let mut rp = chaos::run(&mut sharded, &ccfg, k);
+    rp.shards = 1;
+    assert_eq!(rs, rp, "hotspot(eth) SLO reports differ");
+    assert_same_outcome(&mut serial, &mut sharded, "chaos hotspot eth");
+    assert!(rs.dropped > 0, "bounded Ethernet inbox never dropped");
+    assert_eq!(rs.stalled_ns, 0, "best-effort mode stalled");
 }
