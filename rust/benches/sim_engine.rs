@@ -12,7 +12,7 @@
 mod common;
 
 use inc_sim::channels::ethernet::RxMode;
-use inc_sim::channels::{CommMode, Message};
+use inc_sim::channels::{CommMode, Message, ReliableParams};
 use inc_sim::config::SystemConfig;
 use inc_sim::coordinator::{Placement, RingAllreduce};
 use inc_sim::network::sharded::ShardedNetwork;
@@ -21,6 +21,7 @@ use inc_sim::router::{Payload, Proto};
 use inc_sim::sim::{EventQueue, ReferenceQueue};
 use inc_sim::topology::NodeId;
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::chaos::workloads::{run_workload, ChaosWorkload, WorkloadChaosConfig};
 use inc_sim::workload::chaos::{self, ChaosConfig, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 
@@ -453,7 +454,7 @@ fn main() {
          \"delivered_msgs_per_s_virtual\": {:.1}, \"p50_ns\": {}, \"p99_ns\": {}, \
          \"convergence_ns\": {}, \"dropped\": {}, \"stalled_ns\": {}, \
          \"slo_pass\": {}, \"serial_secs\": {chaos_serial_secs:.4}, \
-         \"sharded_secs\": {chaos_sharded_secs:.4}, \"matches_serial\": {chaos_match}}}\n",
+         \"sharded_secs\": {chaos_sharded_secs:.4}, \"matches_serial\": {chaos_match}}},\n",
         chaos_serial.seed,
         chaos_serial.delivered,
         chaos_serial.sent,
@@ -465,6 +466,64 @@ fn main() {
         chaos_serial.stalled_ns,
         chaos_serial.passed(),
     ));
+
+    // Reliable-transport overhead (EXPERIMENTS.md §Reliable transport,
+    // E14 acceptance): the same ring all-reduce raw vs over the
+    // ack/retransmit transport on a healthy fabric — framing + ack cost
+    // with zero retransmits — then under the drop scenario's scripted
+    // node death, where the loss is real and the retransmit/liveness
+    // machinery has to pay its way.
+    let rel_bytes = 256 * 1024u64;
+    let pm = CommMode::Postmaster { queue: 0 };
+    let raw_stats = {
+        let mut net = Network::card();
+        let ranks = Placement::Scattered.select(&net.topo, 8);
+        RingAllreduce::with_mode(&mut net, ranks, rel_bytes, pm).run(&mut net)
+    };
+    let (rel_stats, rel_acks, rel_rtx) = {
+        let mut net = Network::card();
+        let ranks = Placement::Scattered.select(&net.topo, 8);
+        let stats = RingAllreduce::with_mode_reliable(
+            &mut net,
+            ranks,
+            rel_bytes,
+            pm,
+            ReliableParams::default(),
+            0,
+        )
+        .run(&mut net);
+        (stats, net.metrics.acks, net.metrics.retransmits)
+    };
+    let rel_overhead = rel_stats.makespan as f64 / raw_stats.makespan as f64;
+    let drop_cfg = WorkloadChaosConfig::new(ChaosWorkload::Allreduce, Scenario::Drop, 42);
+    let (drop_report, drop_secs) = common::timed(|| {
+        let mut net = Network::new(drop_cfg.system_config());
+        run_workload(&mut net, &drop_cfg, 1)
+    });
+    println!(
+        "reliable xfer  all-reduce {rel_bytes} B: {rel_overhead:.2}x makespan at 0% loss \
+         ({} vs {} µs, {rel_acks} acks, {rel_rtx} retransmits); under drop: \
+         {} retransmits, {} death(s) detected, passed: {}",
+        rel_stats.makespan / 1000,
+        raw_stats.makespan / 1000,
+        drop_report.retransmits,
+        drop_report.peers_declared_down,
+        drop_report.passed(),
+    );
+    json.push_str(&format!(
+        "  \"reliable\": {{\"allreduce_bytes\": {rel_bytes}, \
+         \"raw_makespan_ns\": {}, \"reliable_makespan_ns\": {}, \
+         \"overhead\": {rel_overhead:.3}, \"acks\": {rel_acks}, \
+         \"retransmits_no_loss\": {rel_rtx}, \"drop_retransmits\": {}, \
+         \"drop_peers_declared_down\": {}, \"drop_elapsed_ns\": {}, \
+         \"drop_secs\": {drop_secs:.4}, \"drop_passed\": {}}}\n",
+        raw_stats.makespan,
+        rel_stats.makespan,
+        drop_report.retransmits,
+        drop_report.peers_declared_down,
+        drop_report.elapsed_ns,
+        drop_report.passed(),
+    ));
     json.push_str("}\n");
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
@@ -473,4 +532,8 @@ fn main() {
     assert!(app_matches, "sharded app workload diverged from the serial oracle");
     assert!(chaos_match, "chaos SLO report diverged across engines");
     assert!(chaos_serial.passed(), "chaos storm violated SLOs: {:?}", chaos_serial.violations());
+    assert_eq!(rel_rtx, 0, "reliable all-reduce retransmitted on a healthy fabric");
+    assert!(rel_acks > 0, "reliable all-reduce produced no acks");
+    assert!(drop_report.retransmits > 0, "drop scenario forced no retransmission");
+    assert!(drop_report.passed(), "reliable all-reduce under drop: {:?}", drop_report.violations());
 }

@@ -247,9 +247,7 @@ impl Network {
             self.app_scope(app, |net, app| {
                 app.on_fifo(net, node, channel, &released);
                 for (ep, msg) in captured {
-                    if !app.on_message(net, ep, &msg) {
-                        net.comm_inbox_push(&ep, msg);
-                    }
+                    net.comm_deliver(app, ep, msg);
                 }
             });
         }
@@ -277,9 +275,7 @@ impl Network {
         self.app_scope(app, |net, app| {
             app.on_fifo(net, node, channel, words);
             for (ep, msg) in captured {
-                if !app.on_message(net, ep, &msg) {
-                    net.comm_inbox_push(&ep, msg);
-                }
+                net.comm_deliver(app, ep, msg);
             }
         });
     }

@@ -264,7 +264,7 @@ const LANE_FIFO: u16 = 0x200;
 const LANE_NFS: u16 = 0x300;
 const LANE_TUNNEL: u16 = 0x400;
 
-fn lane(mode: &CommMode) -> u16 {
+pub(crate) fn lane(mode: &CommMode) -> u16 {
     match mode {
         CommMode::Ethernet { .. } => LANE_ETH,
         CommMode::Postmaster { queue } => LANE_PM | *queue as u16,
@@ -292,6 +292,10 @@ fn eth_tag_decode(tag: u64) -> (u32, u16, u16) {
 pub(crate) struct CommState {
     /// Open endpoints: (node, lane) → registered mode.
     open: FxHashMap<(u32, u16), CommMode>,
+    /// Per-endpoint receive-capacity overrides
+    /// ([`Network::open_with_rx_capacity`]): (node, lane) → bound that
+    /// replaces [`SystemConfig::rx_capacity`] for this endpoint only.
+    rx_cap_override: FxHashMap<(u32, u16), u32>,
     /// Complete inbound messages per endpoint, in delivery order.
     inbox: FxHashMap<(u32, u16), VecDeque<Message>>,
     /// Per-node outbound message sequence (all modes share it).
@@ -352,6 +356,38 @@ impl Network {
         }
         self.comm.open.insert(key, mode);
         Endpoint { node, mode }
+    }
+
+    /// [`Network::open`], with a receive-buffer bound overriding
+    /// [`SystemConfig::rx_capacity`] **for this endpoint only** — a
+    /// hotspot sink can run a tiny inbox to study backpressure without
+    /// shrinking every other endpoint's buffer. Idempotent like `open`;
+    /// re-opening with a different override panics (the bound is part
+    /// of the endpoint's identity, like its mode).
+    pub fn open_with_rx_capacity(&mut self, node: NodeId, mode: CommMode, cap: u32) -> Endpoint {
+        let ep = self.open(node, mode);
+        let key = (node.0, lane(&mode));
+        if let Some(prev) = self.comm.rx_cap_override.insert(key, cap) {
+            assert_eq!(
+                prev, cap,
+                "endpoint at {node} already open with a different rx_capacity override"
+            );
+        }
+        ep
+    }
+
+    /// The receive-buffer bound in force at `ep`: its per-endpoint
+    /// override if one was set, the global [`SystemConfig::rx_capacity`]
+    /// otherwise (`None` for modes that never receive).
+    pub fn rx_capacity_of(&self, ep: &Endpoint) -> Option<u32> {
+        let base = ep.mode.caps(&self.cfg).rx_capacity?;
+        Some(
+            self.comm
+                .rx_cap_override
+                .get(&(ep.node.0, lane(&ep.mode)))
+                .copied()
+                .unwrap_or(base),
+        )
     }
 
     /// Per-pair setup where [`ChannelCaps::pair_setup`] requires it:
@@ -501,6 +537,13 @@ impl Network {
         }
     }
 
+    /// Registered mode of the open endpoint on `(node, lane)`, if any
+    /// (the reliable transport reconstructs `Endpoint` handles from its
+    /// flow keys).
+    pub(crate) fn comm_open_mode(&self, node: NodeId, lane: u16) -> Option<CommMode> {
+        self.comm.open.get(&(node.0, lane)).copied()
+    }
+
     /// Advance `node`'s outbound message sequence (shared by all of the
     /// node's endpoints; per-node, so both engines agree).
     pub(crate) fn comm_next_msg_seq(&mut self, node: NodeId) -> u32 {
@@ -545,7 +588,7 @@ impl Network {
     /// [`Metrics::stalled_ns`]: crate::metrics::Metrics::stalled_ns
     pub(crate) fn comm_inbox_push(&mut self, ep: &Endpoint, msg: Message) {
         let key = (ep.node.0, lane(&ep.mode));
-        let cap = ep.mode.caps(&self.cfg).rx_capacity.unwrap_or(u32::MAX) as usize;
+        let cap = self.rx_capacity_of(ep).unwrap_or(u32::MAX) as usize;
         let q = self.comm.inbox.entry(key).or_default();
         if q.len() >= cap {
             match ep.mode {
@@ -902,6 +945,30 @@ mod tests {
         let ea = net.open(NodeId(0), mode);
         net.open(NodeId(1), mode);
         net.send(&ea, NodeId(1), Message::new(vec![0; 4096]));
+    }
+
+    #[test]
+    fn per_endpoint_rx_capacity_override_is_local() {
+        // Global capacity 2; one sink overridden down to 1. Only the
+        // overridden endpoint's overflow semantics change.
+        let mut cfg = SystemConfig::card();
+        cfg.rx_capacity = 2;
+        let mut net = Network::new(cfg);
+        let (a, b, c) = (NodeId(0), NodeId(13), NodeId(26));
+        let mode = CommMode::Ethernet { rx: RxMode::Interrupt };
+        let ea = net.open(a, mode);
+        let eb = net.open_with_rx_capacity(b, mode, 1);
+        let ec = net.open(c, mode);
+        assert_eq!(net.rx_capacity_of(&eb), Some(1));
+        assert_eq!(net.rx_capacity_of(&ec), Some(2));
+        for i in 0..3u8 {
+            net.send(&ea, b, Message::new(vec![i; 16]));
+            net.send(&ea, c, Message::new(vec![i; 16]));
+        }
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.recv(&eb).len(), 1, "override bounds the sink at 1");
+        assert_eq!(net.recv(&ec).len(), 2, "everyone else keeps the global bound");
+        assert_eq!(net.metrics.dropped, 3, "2 dropped at b + 1 dropped at c");
     }
 
     #[test]

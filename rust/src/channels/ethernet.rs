@@ -303,9 +303,7 @@ impl Network {
         self.app_scope(app, |net, app| {
             app.on_eth(net, node, &frame);
             if let Some((ep, msg)) = captured {
-                if !app.on_message(net, ep, &msg) {
-                    net.comm_inbox_push(&ep, msg);
-                }
+                net.comm_deliver(app, ep, msg);
             }
         });
     }

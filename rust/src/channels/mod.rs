@@ -52,7 +52,9 @@ pub mod bridge_fifo;
 pub mod endpoint;
 pub mod ethernet;
 pub mod postmaster;
+pub mod reliable;
 
 pub use endpoint::{
     ChannelCaps, CommMode, Endpoint, LatencyClass, Message, MsgId, MsgOrdering, Reliability,
 };
+pub use reliable::{ReliableParams, RELIABLE_HEADER_BYTES};

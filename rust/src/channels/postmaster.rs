@@ -184,9 +184,7 @@ impl Network {
         self.app_scope(app, |net, app| {
             app.on_postmaster(net, node, queue, &record);
             if let Some((ep, msg)) = captured {
-                if !app.on_message(net, ep, &msg) {
-                    net.comm_inbox_push(&ep, msg);
-                }
+                net.comm_deliver(app, ep, msg);
             }
         });
     }

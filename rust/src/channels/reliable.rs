@@ -1,0 +1,774 @@
+//! Reliable delivery over lossy channels: ack/retransmit endpoints
+//! with failure detection.
+//!
+//! The paper's Table 1 marks Internal Ethernet *unreliable* — the INC
+//! software stack is expected to layer recovery on top of the raw
+//! channels. This module is that layer, written once against the
+//! [`Endpoint`] API so any unordered [`CommMode`] (Ethernet,
+//! Postmaster) can carry it:
+//!
+//! * **Sequencing** — every data message on a (node, lane, peer) flow
+//!   carries a per-flow sequence number; the receiver delivers in
+//!   order, buffers out-of-order arrivals (bounded by the endpoint's
+//!   receive capacity), and suppresses duplicates
+//!   ([`Metrics::duplicates_dropped`]).
+//! * **Cumulative acks** — each data or heartbeat frame is answered
+//!   with the receiver's next-expected sequence
+//!   ([`Metrics::acks`]); everything below it leaves the sender's
+//!   retransmit queue.
+//! * **Timeout retransmit** — a per-flow timer
+//!   ([`ReliableParams::rto_ns`], exponential backoff to
+//!   [`ReliableParams::rto_max_ns`]) re-sends the whole unacked
+//!   window ([`Metrics::retransmits`]); after
+//!   [`ReliableParams::max_retries`] consecutive timeouts the peer is
+//!   declared down instead of retrying forever.
+//! * **Heartbeat liveness** — [`Network::reliable_watch`] monitors a
+//!   peer with periodic heartbeats even when no data flows; silence
+//!   past [`ReliableParams::liveness_ns`] declares the peer down.
+//! * **`PeerDown`** — surfaces as [`App::on_peer_down`]
+//!   ([`Metrics::peers_declared_down`]) exactly once per (endpoint,
+//!   peer); the app re-places undelivered work with
+//!   [`Network::reliable_take_unacked`] (learners move records to a
+//!   live sink, the ring all-reduce shrinks the ring, MCTS re-issues
+//!   rollouts).
+//!
+//! # Determinism
+//!
+//! Everything is scheduled through the fabric's keyed event queue:
+//! retransmit and heartbeat timers ride [`Network::timer_at`] with a
+//! reserved tag space ([`RELIABLE_TIMER_MARK`], intercepted before
+//! [`App::on_timer`]), protocol sends draw per-node app packet ids,
+//! and every piece of flow state is keyed by the node that owns it —
+//! so the serial and sharded engines run the protocol byte-identically
+//! (`tests/sharded_differential.rs`). Timers are never cancelled;
+//! an armed-flag per flow makes stale firings no-ops, so the schedule
+//! is a pure function of the flow's local history.
+//!
+//! # Wire framing
+//!
+//! Prepended to the underlying mode's payload; lanes carrying frames
+//! the transport does not recognize pass them through to the app
+//! untouched, so reliable and raw traffic coexist on one lane.
+//!
+//! | frame | bytes |
+//! |---|---|
+//! | data | `[0xD1][seq: u64 LE][payload…]` |
+//! | ack | `[0xA1][next expected seq: u64 LE]` |
+//! | heartbeat | `[0xB1]` |
+//!
+//! [`Metrics::acks`]: crate::metrics::Metrics::acks
+//! [`Metrics::retransmits`]: crate::metrics::Metrics::retransmits
+//! [`Metrics::duplicates_dropped`]: crate::metrics::Metrics::duplicates_dropped
+//! [`Metrics::peers_declared_down`]: crate::metrics::Metrics::peers_declared_down
+//! [`App::on_timer`]: crate::network::App::on_timer
+//! [`App::on_peer_down`]: crate::network::App::on_peer_down
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::channels::endpoint::{lane, CommMode, Endpoint, Message, MsgId, MsgOrdering};
+use crate::network::{App, Network};
+use crate::sim::Time;
+use crate::topology::NodeId;
+use crate::util::FxHashMap;
+
+/// Reliable timers carry this mark in their tag; the fabric's `Timer`
+/// handler routes marked tags to the transport instead of
+/// [`App::on_timer`](crate::network::App::on_timer). App tags must stay
+/// below it (they always have: workload tags are small integers).
+pub const RELIABLE_TIMER_MARK: u64 = 1 << 63;
+
+const KIND_RETX: u64 = 1;
+const KIND_HEARTBEAT: u64 = 2;
+
+/// Tag layout: `MARK | kind << 56 | lane << 40 | peer`. The event key
+/// truncates tags to 24 bits (see `network::key_timer`) — colliding
+/// same-instant timers at one node fall back to that node's schedule
+/// order, which both engines share.
+fn timer_tag(kind: u64, lane: u16, peer: u32) -> u64 {
+    RELIABLE_TIMER_MARK | (kind << 56) | ((lane as u64) << 40) | peer as u64
+}
+
+fn timer_tag_decode(tag: u64) -> (u64, u16, u32) {
+    ((tag >> 56) & 0x7F, (tag >> 40) as u16, tag as u32 & 0xFF_FFFF_FF)
+}
+
+const FRAME_DATA: u8 = 0xD1;
+const FRAME_ACK: u8 = 0xA1;
+const FRAME_HEARTBEAT: u8 = 0xB1;
+
+/// Bytes the data-frame header adds on top of the app payload (callers
+/// sizing messages against [`crate::channels::ChannelCaps::max_payload`]
+/// subtract this).
+pub const RELIABLE_HEADER_BYTES: u32 = 9;
+
+/// Retransmit / liveness tuning of one reliable endpoint. All values
+/// are virtual-time constants, so a parameter set is part of the
+/// deterministic run definition — record it with the seed
+/// (EXPERIMENTS.md §Reliable transport).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReliableParams {
+    /// Initial retransmit timeout per flow, ns. Must exceed the mode's
+    /// loaded round-trip time or every message is sent twice.
+    pub rto_ns: Time,
+    /// Exponential-backoff cap: the timeout doubles per consecutive
+    /// timeout up to this, ns.
+    pub rto_max_ns: Time,
+    /// Consecutive timeouts on one flow before the peer is declared
+    /// down. The retry budget bounds how long a flow can stay on fire:
+    /// detection takes at most `Σ min(rto·2^i, rto_max)` over the
+    /// budget.
+    pub max_retries: u32,
+    /// Heartbeat period for watched peers
+    /// ([`Network::reliable_watch`]), ns.
+    pub heartbeat_ns: Time,
+    /// Silence threshold on a watched peer before it is declared down,
+    /// ns. Must exceed the worst-case heartbeat round trip under the
+    /// congestion being survived (and, for partition scenarios, the
+    /// partition span — unless declaring a temporarily unreachable
+    /// peer down is the intent).
+    pub liveness_ns: Time,
+}
+
+impl Default for ReliableParams {
+    fn default() -> Self {
+        ReliableParams {
+            rto_ns: 150_000,
+            rto_max_ns: 1_200_000,
+            max_retries: 10,
+            heartbeat_ns: 100_000,
+            liveness_ns: 600_000,
+        }
+    }
+}
+
+/// Sender side of one (node, lane, peer) flow.
+#[derive(Debug, Default)]
+struct FlowTx {
+    next_seq: u64,
+    /// Sent, unacknowledged payloads by sequence (app payload, without
+    /// the frame header — retransmits re-frame, take-unacked returns
+    /// them as messages).
+    unacked: BTreeMap<u64, Arc<Vec<u8>>>,
+    /// Current timeout (backs off while timeouts are consecutive).
+    rto: Time,
+    timeouts: u32,
+    armed: bool,
+}
+
+/// Receiver side of one (node, lane, peer) flow.
+#[derive(Debug, Default)]
+struct FlowRx {
+    /// Everything below this sequence has been delivered in order.
+    next_expected: u64,
+    /// Out-of-order buffer, bounded by the endpoint's receive capacity.
+    ooo: BTreeMap<u64, Message>,
+}
+
+/// Liveness bookkeeping for one (node, lane, peer).
+#[derive(Debug, Default)]
+struct PeerMeta {
+    last_heard: Time,
+    down: bool,
+    /// Heartbeat monitor re-arms while `now < watch_until`.
+    watch_until: Time,
+    hb_armed: bool,
+}
+
+/// All reliable-transport state of one [`Network`] (one per shard on
+/// the sharded engine; every map is keyed by the owning node, so state
+/// never crosses a shard boundary — except the registry, which is
+/// replicated like the endpoint-mode registry).
+#[derive(Debug, Default)]
+pub(crate) struct ReliableState {
+    /// Registered reliable endpoints: (node, lane) → params.
+    /// Replicated on every shard (send-side asserts consult it).
+    reg: FxHashMap<(u32, u16), ReliableParams>,
+    tx: FxHashMap<(u32, u16, u32), FlowTx>,
+    rx: FxHashMap<(u32, u16, u32), FlowRx>,
+    peers: FxHashMap<(u32, u16, u32), PeerMeta>,
+}
+
+fn frame_data(seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(9 + payload.len());
+    v.push(FRAME_DATA);
+    v.extend_from_slice(&seq.to_le_bytes());
+    v.extend_from_slice(payload);
+    v
+}
+
+fn frame_ack(cum: u64) -> Vec<u8> {
+    let mut v = Vec::with_capacity(9);
+    v.push(FRAME_ACK);
+    v.extend_from_slice(&cum.to_le_bytes());
+    v
+}
+
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("length checked by caller"))
+}
+
+impl Network {
+    /// Open `node`'s endpoint on `mode` and register it with the
+    /// reliable transport under `params`. Both flow directions need the
+    /// registration: senders frame and retransmit, receivers reorder,
+    /// ack and deduplicate — so **every** party of a reliable
+    /// conversation opens with this (a data frame landing on an
+    /// unregistered endpoint would reach the app with its header
+    /// bytes). Idempotent like [`Network::open`]; re-registering with
+    /// different params panics.
+    ///
+    /// Only modes with unordered delivery and room for the frame header
+    /// qualify: Bridge FIFO is already per-pair ordered and lossless
+    /// end-to-end, NFS endpoints never receive, and NetTunnel's 8-byte
+    /// mailbox cannot carry a header.
+    pub fn reliable_open(
+        &mut self,
+        node: NodeId,
+        mode: CommMode,
+        params: ReliableParams,
+    ) -> Endpoint {
+        let caps = mode.caps(&self.cfg);
+        assert!(
+            caps.ordering == MsgOrdering::Unordered
+                && caps.rx_capacity.is_some()
+                && caps.max_payload.map_or(true, |m| m > RELIABLE_HEADER_BYTES),
+            "{} cannot carry the reliable transport (needs unordered delivery, \
+             a receive path, and room for the {RELIABLE_HEADER_BYTES}-byte header)",
+            mode.name()
+        );
+        let ep = self.open(node, mode);
+        let key = (node.0, lane(&mode));
+        if let Some(prev) = self.rel.reg.insert(key, params) {
+            assert_eq!(
+                prev, params,
+                "reliable endpoint at {node} already registered with different params"
+            );
+        }
+        ep
+    }
+
+    /// Whether `(ep.node, ep-lane)` is registered with the transport.
+    pub fn is_reliable(&self, ep: &Endpoint) -> bool {
+        self.rel.reg.contains_key(&(ep.node.0, lane(&ep.mode)))
+    }
+
+    /// Whether the transport at `ep` has declared `peer` down.
+    pub fn reliable_is_down(&self, ep: &Endpoint, peer: NodeId) -> bool {
+        self.rel
+            .peers
+            .get(&(ep.node.0, lane(&ep.mode), peer.0))
+            .is_some_and(|m| m.down)
+    }
+
+    /// Send `msg` from `ep` to `dst` reliably, now.
+    pub fn reliable_send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        let now = self.now();
+        self.reliable_send_at(now, ep, dst, msg)
+    }
+
+    /// Send `msg` from `ep` to `dst` reliably, produced at `at ≥ now`:
+    /// the payload is framed with the flow's next sequence number,
+    /// queued for retransmit until acknowledged, and the flow's
+    /// retransmit timer is armed. Panics if either end is not
+    /// registered ([`Network::reliable_open`]) or the peer is already
+    /// declared down (re-place via
+    /// [`Network::reliable_take_unacked`] instead).
+    pub fn reliable_send_at(
+        &mut self,
+        at: Time,
+        ep: &Endpoint,
+        dst: NodeId,
+        msg: Message,
+    ) -> MsgId {
+        let l = lane(&ep.mode);
+        let params = *self
+            .rel
+            .reg
+            .get(&(ep.node.0, l))
+            .unwrap_or_else(|| panic!("reliable endpoint not open at {}", ep.node));
+        assert!(
+            self.rel.reg.contains_key(&(dst.0, l)),
+            "reliable peer endpoint not open at {dst}"
+        );
+        assert!(
+            !self.reliable_is_down(ep, dst),
+            "reliable send from {} to {dst}, which is declared down",
+            ep.node
+        );
+        let flow = self.rel.tx.entry((ep.node.0, l, dst.0)).or_default();
+        let seq = flow.next_seq;
+        flow.next_seq += 1;
+        flow.unacked.insert(seq, msg.data.clone());
+        let arm = if flow.armed {
+            None
+        } else {
+            flow.armed = true;
+            if flow.rto == 0 {
+                flow.rto = params.rto_ns;
+            }
+            Some(at + flow.rto)
+        };
+        if let Some(deadline) = arm {
+            self.timer_at(deadline, ep.node, timer_tag(KIND_RETX, l, dst.0));
+        }
+        self.send_at(at, ep, dst, Message::new(frame_data(seq, &msg.data)))
+    }
+
+    /// Monitor `peer`'s liveness from `ep` with periodic heartbeats
+    /// until virtual time `until` (bounding the monitor keeps runs
+    /// quiescing — pass the workload's horizon plus slack). Heartbeats
+    /// elicit acks, so a live peer refreshes the monitor even with no
+    /// data flowing; silence past [`ReliableParams::liveness_ns`]
+    /// declares the peer down. Idempotent; re-watching extends the
+    /// window.
+    pub fn reliable_watch(&mut self, ep: &Endpoint, peer: NodeId, until: Time) {
+        let l = lane(&ep.mode);
+        let params = *self
+            .rel
+            .reg
+            .get(&(ep.node.0, l))
+            .unwrap_or_else(|| panic!("reliable endpoint not open at {}", ep.node));
+        let now = self.now();
+        let meta = self.rel.peers.entry((ep.node.0, l, peer.0)).or_default();
+        meta.last_heard = meta.last_heard.max(now);
+        meta.watch_until = meta.watch_until.max(until);
+        if meta.down || meta.hb_armed {
+            return;
+        }
+        meta.hb_armed = true;
+        self.timer_at(
+            now + params.heartbeat_ns,
+            ep.node,
+            timer_tag(KIND_HEARTBEAT, l, peer.0),
+        );
+    }
+
+    /// Drain and return the payloads sent from `ep` to `peer` that were
+    /// never acknowledged, in send order — the re-placement hook for
+    /// [`App::on_peer_down`](crate::network::App::on_peer_down)
+    /// (learners re-send them to a live sink; under the two-phase chaos
+    /// node death, unacked ⟺ undelivered, so re-placement is exact).
+    pub fn reliable_take_unacked(&mut self, ep: &Endpoint, peer: NodeId) -> Vec<Message> {
+        match self.rel.tx.get_mut(&(ep.node.0, lane(&ep.mode), peer.0)) {
+            Some(flow) => std::mem::take(&mut flow.unacked)
+                .into_values()
+                .map(|data| Message { from: NodeId(u32::MAX), data })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// A reliable timer fired at `node` (routed here by the fabric's
+    /// `Timer` handler).
+    pub(crate) fn reliable_timer(&mut self, node: NodeId, tag: u64, app: &mut dyn App) {
+        let (kind, l, peer) = timer_tag_decode(tag);
+        match kind {
+            KIND_RETX => self.retx_timer(node, l, peer, app),
+            KIND_HEARTBEAT => self.heartbeat_timer(node, l, peer, app),
+            _ => panic!("unknown reliable timer kind {kind}"),
+        }
+    }
+
+    fn retx_timer(&mut self, node: NodeId, l: u16, peer: u32, app: &mut dyn App) {
+        let params = self.rel.reg[&(node.0, l)];
+        let Some(flow) = self.rel.tx.get_mut(&(node.0, l, peer)) else { return };
+        flow.armed = false;
+        if flow.unacked.is_empty() {
+            // Everything acked since this timer was armed: the flow
+            // goes idle; the next send arms a fresh timer.
+            flow.rto = params.rto_ns;
+            flow.timeouts = 0;
+            return;
+        }
+        if self.rel.peers.get(&(node.0, l, peer)).is_some_and(|m| m.down) {
+            return;
+        }
+        flow.timeouts += 1;
+        if flow.timeouts > params.max_retries {
+            // Retry budget exhausted: stop retrying, surface PeerDown.
+            // The unacked queue stays for reliable_take_unacked.
+            self.declare_down(node, l, peer, app);
+            return;
+        }
+        // Go-back-all retransmit of the unacked window, oldest first
+        // (the receiver's duplicate suppression absorbs whatever the
+        // loss didn't actually take), then back off and re-arm.
+        let resend: Vec<(u64, Arc<Vec<u8>>)> =
+            flow.unacked.iter().map(|(s, d)| (*s, d.clone())).collect();
+        flow.rto = (flow.rto.saturating_mul(2)).min(params.rto_max_ns);
+        flow.armed = true;
+        let rto = flow.rto;
+        let ep = self.reliable_ep(node, l);
+        let now = self.now();
+        for (seq, data) in resend {
+            self.metrics.retransmits += 1;
+            self.send_at(now, &ep, NodeId(peer), Message::new(frame_data(seq, &data)));
+        }
+        self.timer_at(now + rto, node, timer_tag(KIND_RETX, l, peer));
+    }
+
+    fn heartbeat_timer(&mut self, node: NodeId, l: u16, peer: u32, app: &mut dyn App) {
+        let params = self.rel.reg[&(node.0, l)];
+        let now = self.now();
+        let Some(meta) = self.rel.peers.get_mut(&(node.0, l, peer)) else { return };
+        meta.hb_armed = false;
+        if meta.down || now >= meta.watch_until {
+            return;
+        }
+        if now.saturating_sub(meta.last_heard) > params.liveness_ns {
+            self.declare_down(node, l, peer, app);
+            return;
+        }
+        meta.hb_armed = true;
+        let ep = self.reliable_ep(node, l);
+        self.send_at(now, &ep, NodeId(peer), Message::new(vec![FRAME_HEARTBEAT]));
+        self.timer_at(now + params.heartbeat_ns, node, timer_tag(KIND_HEARTBEAT, l, peer));
+    }
+
+    fn declare_down(&mut self, node: NodeId, l: u16, peer: u32, app: &mut dyn App) {
+        let meta = self.rel.peers.entry((node.0, l, peer)).or_default();
+        if meta.down {
+            return;
+        }
+        meta.down = true;
+        self.metrics.peers_declared_down += 1;
+        let ep = self.reliable_ep(node, l);
+        self.app_scope(app, |net, app| app.on_peer_down(net, ep, NodeId(peer)));
+    }
+
+    fn reliable_ep(&self, node: NodeId, l: u16) -> Endpoint {
+        let mode = self
+            .comm_open_mode(node, l)
+            .unwrap_or_else(|| panic!("reliable lane {l:#x} not open at {node}"));
+        Endpoint { node, mode }
+    }
+
+    /// Unified delivery: every channel's capture path hands complete
+    /// endpoint messages here. Reliable lanes run the protocol receive
+    /// side; everything else (and frames the transport does not
+    /// recognize) keeps the plain contract — `App::on_message`, then
+    /// the recv inbox unless consumed.
+    pub(crate) fn comm_deliver(&mut self, app: &mut dyn App, ep: Endpoint, msg: Message) {
+        if self.is_reliable(&ep) {
+            self.reliable_rx(app, ep, msg);
+        } else if !app.on_message(self, ep, &msg) {
+            self.comm_inbox_push(&ep, msg);
+        }
+    }
+
+    fn reliable_rx(&mut self, app: &mut dyn App, ep: Endpoint, msg: Message) {
+        let l = lane(&ep.mode);
+        let peer = msg.from;
+        let now = self.now();
+        let kind = msg.data.first().copied();
+        match kind {
+            Some(FRAME_DATA) if msg.data.len() >= 9 => {
+                self.touch_peer(ep.node, l, peer, now);
+                let seq = read_u64(&msg.data[1..9]);
+                let payload =
+                    Message { from: peer, data: Arc::new(msg.data[9..].to_vec()) };
+                let window = self.rx_capacity_of(&ep).unwrap_or(u32::MAX) as usize;
+                let flow = self.rel.rx.entry((ep.node.0, l, peer.0)).or_default();
+                if seq < flow.next_expected || flow.ooo.contains_key(&seq) {
+                    // The retransmit raced the original (or our ack was
+                    // lost): suppress, re-ack so the sender stops.
+                    self.metrics.duplicates_dropped += 1;
+                } else if seq == flow.next_expected {
+                    flow.next_expected += 1;
+                    // Release the in-order run the buffer was holding.
+                    let mut run = vec![payload];
+                    while let Some(m) = flow.ooo.remove(&flow.next_expected) {
+                        flow.next_expected += 1;
+                        run.push(m);
+                    }
+                    for m in run {
+                        if !app.on_message(self, ep, &m) {
+                            self.comm_inbox_push(&ep, m);
+                        }
+                    }
+                } else if flow.ooo.len() >= window {
+                    // Reorder buffer full: shed the segment (counted as
+                    // a drop); the cumulative ack below keeps the
+                    // sender retransmitting it.
+                    self.metrics.dropped += 1;
+                } else {
+                    flow.ooo.insert(seq, payload);
+                }
+                let cum = self.rel.rx[&(ep.node.0, l, peer.0)].next_expected;
+                self.send_ack(&ep, peer, cum);
+            }
+            Some(FRAME_ACK) if msg.data.len() >= 9 => {
+                self.touch_peer(ep.node, l, peer, now);
+                let cum = read_u64(&msg.data[1..9]);
+                if let Some(flow) = self.rel.tx.get_mut(&(ep.node.0, l, peer.0)) {
+                    let before = flow.unacked.len();
+                    flow.unacked = flow.unacked.split_off(&cum);
+                    if flow.unacked.len() < before {
+                        // Forward progress resets the backoff.
+                        flow.timeouts = 0;
+                        flow.rto = self.rel.reg[&(ep.node.0, l)].rto_ns;
+                    }
+                }
+            }
+            Some(FRAME_HEARTBEAT) => {
+                self.touch_peer(ep.node, l, peer, now);
+                let cum = self
+                    .rel
+                    .rx
+                    .get(&(ep.node.0, l, peer.0))
+                    .map_or(0, |f| f.next_expected);
+                self.send_ack(&ep, peer, cum);
+            }
+            // Not a transport frame: raw traffic sharing the lane.
+            _ => {
+                if !app.on_message(self, ep, &msg) {
+                    self.comm_inbox_push(&ep, msg);
+                }
+            }
+        }
+    }
+
+    fn touch_peer(&mut self, node: NodeId, l: u16, peer: NodeId, now: Time) {
+        let meta = self.rel.peers.entry((node.0, l, peer.0)).or_default();
+        meta.last_heard = meta.last_heard.max(now);
+    }
+
+    fn send_ack(&mut self, ep: &Endpoint, peer: NodeId, cum: u64) {
+        self.metrics.acks += 1;
+        let now = self.now();
+        self.send_at(now, ep, peer, Message::new(frame_ack(cum)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::ethernet::RxMode;
+    use crate::config::SystemConfig;
+
+    fn pm() -> CommMode {
+        CommMode::Postmaster { queue: 5 }
+    }
+
+    struct Collect {
+        got: Vec<(u32, Vec<u8>)>,
+        downs: Vec<(u32, u32)>,
+    }
+    impl Collect {
+        fn new() -> Self {
+            Collect { got: Vec::new(), downs: Vec::new() }
+        }
+    }
+    impl App for Collect {
+        fn on_message(&mut self, _net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
+            self.got.push((ep.node.0, msg.data.to_vec()));
+            true
+        }
+        fn on_peer_down(&mut self, _net: &mut Network, ep: Endpoint, peer: NodeId) {
+            self.downs.push((ep.node.0, peer.0));
+        }
+    }
+
+    #[test]
+    fn lossless_flow_delivers_in_order_with_acks() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(26));
+        let p = ReliableParams::default();
+        let ea = net.reliable_open(a, pm(), p);
+        net.reliable_open(b, pm(), p);
+        for i in 0..10u8 {
+            net.reliable_send(&ea, b, Message::new(vec![i; 8]));
+        }
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.got.len(), 10);
+        for (i, (node, data)) in app.got.iter().enumerate() {
+            assert_eq!(*node, b.0);
+            assert_eq!(*data, vec![i as u8; 8], "in-order, header stripped");
+        }
+        assert_eq!(net.metrics.acks, 10, "one cumulative ack per data frame");
+        assert_eq!(net.metrics.retransmits, 0, "nothing lost, nothing resent");
+        assert_eq!(net.metrics.duplicates_dropped, 0);
+        assert_eq!(net.metrics.peers_declared_down, 0);
+        assert!(
+            net.rel.tx[&(a.0, lane(&pm()), b.0)].unacked.is_empty(),
+            "acks cleared the retransmit queue"
+        );
+    }
+
+    #[test]
+    fn spurious_timeout_is_absorbed_by_duplicate_suppression() {
+        // An RTO shorter than the path's round trip forces retransmits
+        // of frames that were never lost; the receiver must still
+        // deliver exactly once.
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(26));
+        let p = ReliableParams { rto_ns: 2_000, ..ReliableParams::default() };
+        let ea = net.reliable_open(a, pm(), p);
+        net.reliable_open(b, pm(), p);
+        for i in 0..5u8 {
+            net.reliable_send(&ea, b, Message::new(vec![i; 8]));
+        }
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.got.len(), 5, "exactly once despite retransmits");
+        assert!(net.metrics.retransmits > 0, "the tiny RTO must have fired");
+        assert_eq!(
+            net.metrics.duplicates_dropped, net.metrics.retransmits,
+            "every spurious retransmit was suppressed at the receiver"
+        );
+        assert_eq!(net.metrics.peers_declared_down, 0, "progress resets the budget");
+    }
+
+    #[test]
+    fn lost_frames_are_retransmitted_until_delivered() {
+        // Ethernet + a sink inbox of 0 would drop at the endpoint
+        // layer, but reliable delivery happens above the inbox (the
+        // callback consumes). Instead, force real loss: drop every
+        // packet once via a dead destination... simplest deterministic
+        // loss: drop_unroutable with the receiver's links failed for a
+        // while, then repaired.
+        let mut cfg = SystemConfig::card();
+        cfg.drop_unroutable = true;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(0), NodeId(26));
+        let p = ReliableParams { rto_ns: 20_000, ..ReliableParams::default() };
+        let ea = net.reliable_open(a, pm(), p);
+        net.reliable_open(b, pm(), p);
+        // Fail all of b's inbound links: frames to b wander and die.
+        let dead = net.topo.in_links(b).to_vec();
+        for &l in &dead {
+            net.fail_link(l);
+        }
+        for i in 0..4u8 {
+            net.reliable_send(&ea, b, Message::new(vec![i; 8]));
+        }
+        let mut app = Collect::new();
+        net.run_until(&mut app, 60_000);
+        assert!(app.got.is_empty(), "nothing can reach b yet");
+        assert!(net.metrics.dropped > 0, "frames died at the hop budget");
+        for &l in &dead {
+            net.repair_link(l);
+        }
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.got.len(), 4, "retransmits recovered every message, once");
+        assert!(net.metrics.retransmits > 0);
+        assert_eq!(net.metrics.peers_declared_down, 0);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_declares_peer_down_and_surfaces_unacked() {
+        let mut cfg = SystemConfig::card();
+        cfg.drop_unroutable = true;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(0), NodeId(26));
+        let p = ReliableParams { rto_ns: 10_000, max_retries: 3, ..ReliableParams::default() };
+        let ea = net.reliable_open(a, pm(), p);
+        net.reliable_open(b, pm(), p);
+        // b is gone entirely (all inbound links dead, permanently).
+        let dead = net.topo.in_links(b).to_vec();
+        for &l in &dead {
+            net.fail_link(l);
+        }
+        net.reliable_send(&ea, b, Message::new(vec![7; 8]));
+        net.reliable_send(&ea, b, Message::new(vec![8; 8]));
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.downs, vec![(a.0, b.0)], "sender declared b down, once");
+        assert_eq!(net.metrics.peers_declared_down, 1);
+        assert!(net.reliable_is_down(&ea, b));
+        let unacked = net.reliable_take_unacked(&ea, b);
+        assert_eq!(unacked.len(), 2, "undelivered payloads surfaced for re-placement");
+        assert_eq!(*unacked[0].data, vec![7; 8]);
+        assert_eq!(*unacked[1].data, vec![8; 8]);
+        assert!(net.reliable_take_unacked(&ea, b).is_empty(), "take drains");
+    }
+
+    #[test]
+    fn heartbeat_watch_detects_a_silent_peer_without_data() {
+        let mut cfg = SystemConfig::card();
+        cfg.drop_unroutable = true;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(0), NodeId(26));
+        let p = ReliableParams {
+            heartbeat_ns: 20_000,
+            liveness_ns: 100_000,
+            ..ReliableParams::default()
+        };
+        let ea = net.reliable_open(a, pm(), p);
+        net.reliable_open(b, pm(), p);
+        for l in net.topo.in_links(b).to_vec() {
+            net.fail_link(l);
+        }
+        net.reliable_watch(&ea, b, 1_000_000);
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.downs, vec![(a.0, b.0)], "silence past the threshold → down");
+        // And the monitor stopped: the run quiesced (we got here).
+    }
+
+    #[test]
+    fn heartbeat_watch_keeps_a_live_peer_up_and_quiesces_at_the_bound() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(26));
+        let p = ReliableParams {
+            heartbeat_ns: 20_000,
+            liveness_ns: 100_000,
+            ..ReliableParams::default()
+        };
+        let ea = net.reliable_open(a, pm(), p);
+        net.reliable_open(b, pm(), p);
+        net.reliable_watch(&ea, b, 500_000);
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert!(app.downs.is_empty(), "acked heartbeats keep the peer alive");
+        assert!(net.now() >= 500_000, "monitor ran to its bound");
+        assert!(net.metrics.acks > 0, "heartbeats elicited acks");
+    }
+
+    #[test]
+    fn ethernet_mode_carries_the_transport_too() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(13));
+        let p = ReliableParams::default();
+        let mode = CommMode::Ethernet { rx: RxMode::Interrupt };
+        let ea = net.reliable_open(a, mode, p);
+        net.reliable_open(b, mode, p);
+        // Multi-frame message: framing sits above reassembly.
+        let payload: Vec<u8> = (0..4000u32).map(|i| i as u8).collect();
+        net.reliable_send(&ea, b, Message::new(payload.clone()));
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.got.len(), 1);
+        assert_eq!(app.got[0].1, payload);
+        assert_eq!(net.metrics.acks, 1);
+    }
+
+    #[test]
+    fn raw_traffic_passes_through_a_reliable_lane() {
+        let mut net = Network::card();
+        let (a, b) = (NodeId(0), NodeId(9));
+        let mode = pm();
+        let ea = net.open(a, mode);
+        net.reliable_open(b, mode, ReliableParams::default());
+        // A plain (unframed) send into a reliable receiver: first byte
+        // is not a frame marker, so it reaches the app untouched.
+        net.send(&ea, b, Message::new(vec![1, 2, 3]));
+        let mut app = Collect::new();
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.got, vec![(b.0, vec![1, 2, 3])]);
+        assert_eq!(net.metrics.acks, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot carry the reliable transport")]
+    fn fifo_mode_is_rejected() {
+        let mut net = Network::card();
+        net.reliable_open(
+            NodeId(0),
+            CommMode::BridgeFifo { width_bits: 64 },
+            ReliableParams::default(),
+        );
+    }
+}

@@ -242,6 +242,17 @@ pub struct SystemConfig {
     /// drain one message slot before re-issuing credit. Accounting-only
     /// (the record is still delivered; packet timing is unchanged).
     pub rx_drain_ns: Time,
+    /// Lossy-routing mode for chaos / reliable-transport studies. The
+    /// router normally treats an unroutable packet as a programming
+    /// error and panics (hop-budget livelock, fully disconnected node).
+    /// With this flag set, such packets are *dropped* instead — counted
+    /// in [`crate::metrics::Metrics::dropped`] — which is what a real
+    /// mesh does when a destination dies mid-flight. Both drop
+    /// decisions are local to the routing node (its own out-links and
+    /// its own hop counter), so serial and sharded engines drop the
+    /// same packets at the same instants and stay byte-identical.
+    /// Default `false`: ordinary runs keep the loud-failure contract.
+    pub drop_unroutable: bool,
     /// DRAM capacity per node, bytes (1 GB, §2).
     pub dram_bytes: u64,
 }
@@ -260,6 +271,7 @@ impl SystemConfig {
             sim_threads: 0,
             rx_capacity: 65_536,
             rx_drain_ns: 500,
+            drop_unroutable: false,
             dram_bytes: 1 << 30,
         }
     }

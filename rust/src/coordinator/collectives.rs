@@ -13,24 +13,49 @@
 //! ([`RingAllreduce::with_mode`]) — Postmaster DMA by default, whose
 //! per-record payload cap sets the fragment size; over internal
 //! Ethernet or Bridge FIFO a chunk rides as one natively-segmented
-//! message. The final fragment of a chunk carries a one-byte marker,
-//! and receipt of the marker advances the receiving rank — the same
-//! protocol whichever channel carries it. (Unlike the old
-//! `Payload::Synthetic` raw-packet transport, fragments carry real
-//! bytes — the price of mode genericity; the app *consumes* every
-//! message in its `on_message` callback, so a run retains only the
-//! in-flight window instead of filling the recv inboxes.)
+//! message. The final fragment of a chunk carries a marker with the
+//! sender's current forward value, and receipt of the marker advances
+//! the receiving rank — the same protocol whichever channel carries it.
+//!
+//! # The reduced value is real
+//!
+//! Each rank contributes a deterministic 64-bit value; markers carry a
+//! forwarding chain (each rank re-sends the value it last received), so
+//! after the k−1 reduce-scatter steps every rank has accumulated every
+//! other rank's contribution exactly once — [`RingAllreduce::reduced`]
+//! must equal the sum over participating ranks, and the chaos harness
+//! checks exactly that ("training completes with the correct result").
+//!
+//! # Reliable mode: the ring shrinks instead of hanging
+//!
+//! With [`RingAllreduce::with_mode_reliable`] every rank's endpoint
+//! runs the ack/retransmit transport ([`crate::channels::reliable`])
+//! and watches its current ring successor's liveness. When a rank dies
+//! mid-collective (chaos `drop` scenario), either the transport's retry
+//! budget or the heartbeat monitor surfaces
+//! [`App::on_peer_down`] at the dead rank's predecessor, which removes
+//! the victim from the ring, broadcasts a `RESTART` carrying the dead
+//! set to every survivor, and every survivor restarts the collective
+//! over the shrunk ring. Restarts are *epoch*-stamped (epoch = number
+//! of known-dead ranks): markers from older epochs are ignored, markers
+//! from newer epochs are buffered until the local rank catches up, so
+//! overlapping restarts converge. The survivors' reduced value is the
+//! sum over survivors — degraded membership, correct arithmetic.
 //!
 //! As a [`ShardableApp`], per-rank receive state lives with the rank's
 //! node (so each sharded partition only ever touches its own ranks) and
 //! the aggregate stats are sum-reduced. A sharded run is byte-identical
 //! to a serial one (all traffic uses the endpoint sends' per-node app
 //! id space; see `tests/sharded_differential.rs`).
+//!
+//! [`App::on_peer_down`]: crate::network::App::on_peer_down
 
 use crate::channels::endpoint::{CommMode, Endpoint, Message};
+use crate::channels::reliable::{ReliableParams, RELIABLE_HEADER_BYTES};
 use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
+use crate::util::rng::mix64;
 
 /// Outcome of a simulated collective.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,25 +65,60 @@ pub struct CollectiveStats {
     /// Payload bytes handed to the channel (excluding per-mode framing
     /// and packet headers).
     pub bytes_on_wire: u64,
-    /// Chunk-messages sent (pre-fragmentation).
+    /// Chunk-messages sent (pre-fragmentation; restarts send more).
     pub messages: u64,
 }
+
+/// Fragment-payload markers (first byte of every chunk fragment).
+const FRAG_MID: u8 = 0;
+/// Final fragment of a chunk: `[1][epoch][forward value: u64 LE]…`.
+const FRAG_LAST: u8 = 1;
+/// Ring-restart control message: `[2][dead-rank bitmap: u64 LE]`.
+const CTL_RESTART: u8 = 2;
 
 /// Event-driven ring all-reduce over `ranks`.
 pub struct RingAllreduce {
     ranks: Vec<NodeId>,
     /// rank index by node id.
     index: Vec<Option<usize>>,
-    /// Chunks received by each rank so far.
+    /// Deterministic per-rank contribution to the reduction.
+    contrib: Vec<u64>,
+    /// Chunk-markers received by each rank in its current epoch.
     received: Vec<u32>,
-    /// Total steps each rank must receive: 2(k−1).
-    total_steps: u32,
+    /// Sum of marker values accumulated during the current epoch's
+    /// reduce-scatter phase (the rank's reduced value is `contrib +
+    /// acc_recv`; wrapping arithmetic throughout).
+    acc_recv: Vec<u64>,
+    /// Value each rank forwards in its next marker (the forwarding
+    /// chain: initially the rank's own contribution, then whatever it
+    /// last received).
+    fwd: Vec<u64>,
+    /// Each rank's knowledge of dead ranks, as a rank-index bitmap
+    /// (reliable mode; epoch = popcount).
+    dead: Vec<u64>,
+    /// Whether each rank has completed its current epoch.
+    done: Vec<bool>,
+    /// Markers from future epochs, buffered until the rank restarts
+    /// into them: per rank, `(epoch, value)` in arrival order.
+    future: Vec<Vec<(u8, u64)>>,
+    /// Ranks this instance's shard owns (sharded partitions; the parent
+    /// owns every rank). A rank's dynamic state only ever mutates in
+    /// callbacks at its own node, so reduction adopts each rank's state
+    /// wholesale from its owning partition — stable across repeated
+    /// window runs, not just one run-to-quiescence.
+    owned: Vec<bool>,
     chunk_bytes: u32,
-    /// Fragment size: the mode's max payload (chunks over unbounded
+    /// Fragment size: the mode's max payload — minus the reliable
+    /// transport's frame header in reliable mode (chunks over unbounded
     /// modes travel as one message).
     frag_bytes: u32,
     mode: CommMode,
-    done_ranks: usize,
+    /// Run over the reliable transport, shrinking the ring on
+    /// `PeerDown`.
+    reliable: Option<ReliableParams>,
+    /// Liveness-watch bound (reliable mode): successors are monitored
+    /// until this virtual time.
+    watch_until: Time,
     pub stats: CollectiveStats,
 }
 
@@ -78,73 +138,326 @@ impl RingAllreduce {
         bytes: u64,
         mode: CommMode,
     ) -> Self {
+        Self::build(net, ranks, bytes, mode, None, 0)
+    }
+
+    /// Prepare an all-reduce over the **reliable** transport: the mode
+    /// must be one the transport supports (unordered, with room for its
+    /// frame header — Postmaster or Ethernet), every rank watches its
+    /// ring successor's liveness until `watch_until`, and a dead rank
+    /// shrinks the ring instead of hanging it (module docs).
+    pub fn with_mode_reliable<F: Fabric>(
+        net: &mut F,
+        ranks: Vec<NodeId>,
+        bytes: u64,
+        mode: CommMode,
+        params: ReliableParams,
+        watch_until: Time,
+    ) -> Self {
+        Self::build(net, ranks, bytes, mode, Some(params), watch_until)
+    }
+
+    fn build<F: Fabric>(
+        net: &mut F,
+        ranks: Vec<NodeId>,
+        bytes: u64,
+        mode: CommMode,
+        reliable: Option<ReliableParams>,
+        watch_until: Time,
+    ) -> Self {
         assert!(ranks.len() >= 2, "all-reduce needs ≥2 ranks");
-        let k = ranks.len() as u64;
-        let chunk_bytes = (bytes / k).max(1) as u32;
+        let k = ranks.len();
+        let chunk_bytes = (bytes / k as u64).max(1) as u32;
         let caps = net.caps(mode);
-        let frag_bytes = caps.max_payload.unwrap_or(chunk_bytes).max(1);
+        let frag_payload = caps
+            .max_payload
+            .map(|m| if reliable.is_some() { m - RELIABLE_HEADER_BYTES } else { m });
+        let frag_bytes = frag_payload.unwrap_or(chunk_bytes).max(1);
+        if reliable.is_some() {
+            assert!(k <= 64, "reliable ring membership is a 64-bit rank bitmap");
+            assert!(
+                chunk_bytes >= 10 && frag_bytes >= 10,
+                "reliable ring markers carry an epoch and a value (10 B); \
+                 raise bytes or lower the rank count"
+            );
+        }
         let mut index = vec![None; net.topo().node_count()];
         for (i, r) in ranks.iter().enumerate() {
             index[r.0 as usize] = Some(i);
         }
-        let eps: Vec<Endpoint> = ranks.iter().map(|&r| net.open(r, mode)).collect();
+        for &r in &ranks {
+            match reliable {
+                Some(p) => {
+                    net.reliable_open(r, mode, p);
+                }
+                None => {
+                    net.open(r, mode);
+                }
+            }
+        }
         if caps.pair_setup {
-            for (i, ep) in eps.iter().enumerate() {
-                net.connect(ep, ranks[(i + 1) % ranks.len()]);
+            for (i, &r) in ranks.iter().enumerate() {
+                let ep = Endpoint { node: r, mode };
+                net.connect(&ep, ranks[(i + 1) % k]);
             }
         }
         RingAllreduce {
-            total_steps: 2 * (ranks.len() as u32 - 1),
+            contrib: (0..k).map(|i| mix64(0xC0_11EC_71FE ^ i as u64)).collect(),
+            received: vec![0; k],
+            acc_recv: vec![0; k],
+            fwd: (0..k).map(|i| mix64(0xC0_11EC_71FE ^ i as u64)).collect(),
+            dead: vec![0; k],
+            done: vec![false; k],
+            future: vec![Vec::new(); k],
+            owned: vec![true; k],
             ranks,
             index,
-            received: vec![],
             chunk_bytes,
             frag_bytes,
             mode,
-            done_ranks: 0,
+            reliable,
+            watch_until,
             stats: CollectiveStats { makespan: 0, bytes_on_wire: 0, messages: 0 },
         }
     }
 
-    /// Kick off the first step and run the fabric to completion.
-    /// Returns the stats; the makespan is the virtual-time cost of the
-    /// all-reduce.
-    pub fn run<F: Fabric>(mut self, net: &mut F) -> CollectiveStats {
-        let t0 = net.now();
-        self.received = vec![0; self.ranks.len()];
+    /// Dead ranks across the *survivors'* views (rank-index bitmap).
+    /// A dying rank can mis-declare a live peer dead — its own inbound
+    /// links go first under the two-phase chaos death, so acks stop
+    /// reaching it while it still retries — so the union is taken in
+    /// two passes: first over every rank's view (identifying the exiled
+    /// set), then again over only the ranks outside it, discarding the
+    /// exiles' poisoned claims.
+    pub fn dead_union(&self) -> u64 {
+        let raw = self.dead.iter().fold(0, |a, &b| a | b);
+        self.dead
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| raw & (1 << i) == 0)
+            .fold(0, |a, (_, &b)| a | b)
+    }
+
+    /// `rank`'s reduced value: its contribution plus everything it
+    /// accumulated over its final epoch.
+    pub fn reduced(&self, rank: usize) -> u64 {
+        self.contrib[rank].wrapping_add(self.acc_recv[rank])
+    }
+
+    /// The correct reduction over the surviving membership: the sum of
+    /// the contributions of every rank not in [`RingAllreduce::dead_union`].
+    pub fn expected_sum(&self) -> u64 {
+        let dead = self.dead_union();
+        (0..self.ranks.len())
+            .filter(|&i| dead & (1 << i) == 0)
+            .fold(0u64, |a, i| a.wrapping_add(self.contrib[i]))
+    }
+
+    /// Whether every surviving rank has completed (its current epoch).
+    /// Meaningful on the parent app after the run (sharded partitions
+    /// have been reduced back by then).
+    pub fn is_complete(&self) -> bool {
+        let dead = self.dead_union();
+        (0..self.ranks.len()).all(|i| self.done[i] || dead & (1 << i) != 0)
+    }
+
+    /// Panic unless every survivor completed **and** holds exactly the
+    /// sum over survivors — the chaos-harness acceptance check. (Chunks
+    /// under 10 B have no room for a marker value, so the degenerate
+    /// tiny-chunk case only checks completion.)
+    pub fn assert_reduced(&self) {
+        assert!(self.is_complete(), "all-reduce did not complete on every survivor");
+        if !self.marker_room() {
+            return;
+        }
+        let dead = self.dead_union();
+        let want = self.expected_sum();
+        for i in 0..self.ranks.len() {
+            if dead & (1 << i) == 0 {
+                assert_eq!(
+                    self.reduced(i),
+                    want,
+                    "rank {i} reduced to the wrong value (dead set {dead:#b})"
+                );
+            }
+        }
+    }
+
+    /// Kick off every rank's first step (and, in reliable mode, its
+    /// successor liveness watch). Driver context; the harness runs the
+    /// fabric afterwards (stepped or to quiescence).
+    pub fn kickoff<F: Fabric>(&mut self, net: &mut F) {
         let ranks = self.ranks.clone();
-        for &r in &ranks {
+        for (i, &r) in ranks.iter().enumerate() {
+            if self.reliable.is_some() {
+                let ep = Endpoint { node: r, mode: self.mode };
+                net.reliable_watch(&ep, ranks[(i + 1) % ranks.len()], self.watch_until);
+            }
             self.send_step(net, r);
         }
+    }
+
+    /// Kick off and run the fabric to completion. Returns the stats;
+    /// the makespan is the virtual-time cost of the all-reduce.
+    pub fn run<F: Fabric>(mut self, net: &mut F) -> CollectiveStats {
+        let t0 = net.now();
+        self.kickoff(net);
         net.run(&mut self);
-        assert_eq!(self.done_ranks, self.ranks.len(), "all-reduce did not complete");
+        self.assert_reduced();
         self.stats.makespan = net.now() - t0;
         self.stats
     }
 
+    /// Whether markers can carry a forward value (10 B of room in the
+    /// final fragment): true for every realistic configuration; false
+    /// only for sub-10-byte chunks or payload caps (e.g. the 8 B
+    /// NetTunnel), where the collective degrades to completion-only.
+    fn marker_room(&self) -> bool {
+        self.frag_bytes >= 10 && self.chunk_bytes >= 10
+    }
+
+    /// `rank`'s current ring successor under its own dead set (`None`
+    /// once no other rank is live).
+    fn successor(&self, rank: usize) -> Option<NodeId> {
+        let k = self.ranks.len();
+        let dead = self.dead[rank];
+        (1..k)
+            .map(|s| (rank + s) % k)
+            .find(|&j| dead & (1 << j) == 0)
+            .map(|j| self.ranks[j])
+    }
+
+    /// Live membership size under `rank`'s own dead set.
+    fn live(&self, rank: usize) -> u32 {
+        self.ranks.len() as u32 - self.dead[rank].count_ones()
+    }
+
     /// Send rank `node`'s current chunk to its ring successor, as
     /// fragments of at most the mode's max payload; the *last* fragment
-    /// carries the one-byte step marker, and its receipt advances the
-    /// receiver. Called from driver context (kickoff) and from
-    /// `on_message` callbacks at `node` — the endpoint sends' per-node
-    /// app ids keep serial and sharded runs identical.
+    /// carries the step marker — epoch, plus the rank's forward value
+    /// when the fragment has room (≥ 10 B; always true in reliable
+    /// mode) — and its receipt advances the receiver. Called from
+    /// driver context (kickoff) and from `on_message` callbacks at
+    /// `node` — the endpoint sends' per-node app ids keep serial and
+    /// sharded runs identical.
     fn send_step<F: Fabric>(&mut self, net: &mut F, node: NodeId) {
         let rank = self.index[node.0 as usize].expect("send_step at non-rank");
-        let next = self.ranks[(rank + 1) % self.ranks.len()];
+        let Some(next) = self.successor(rank) else { return };
         let ep = Endpoint { node, mode: self.mode };
         let now = net.now();
+        let epoch = self.dead[rank].count_ones() as u8;
         let mut left = self.chunk_bytes;
         while left > 0 {
-            let take = left.min(self.frag_bytes);
-            let mut data = vec![0u8; take as usize];
-            if take == left {
-                data[0] = 1; // final fragment of this chunk
+            let mut take = left.min(self.frag_bytes);
+            if self.marker_room() && take < left && left - take < 10 {
+                // Never strand a final fragment too small for its
+                // marker value: shorten this fragment instead.
+                take = left - 10;
             }
-            net.send_at(now, &ep, next, Message::new(data));
+            let mut data = vec![0u8; take as usize];
+            data[0] = FRAG_MID;
+            if take == left {
+                data[0] = FRAG_LAST;
+                if take >= 10 {
+                    data[1] = epoch;
+                    data[2..10].copy_from_slice(&self.fwd[rank].to_le_bytes());
+                }
+            }
+            if self.reliable.is_some() {
+                net.reliable_send_at(now, &ep, next, Message::new(data));
+            } else {
+                net.send_at(now, &ep, next, Message::new(data));
+            }
             self.stats.bytes_on_wire += take as u64;
             left -= take;
         }
         self.stats.messages += 1;
+    }
+
+    /// A step marker landed at `node` (already filtered to this rank's
+    /// current epoch).
+    fn on_marker<F: Fabric>(&mut self, net: &mut F, node: NodeId, value: u64) {
+        let rank = self.index[node.0 as usize].expect("collective message at non-rank");
+        let live = self.live(rank);
+        let total = 2 * (live - 1);
+        self.received[rank] += 1;
+        let r = self.received[rank];
+        if r > total {
+            return;
+        }
+        // Reduce-scatter phase: the value received at step s is the
+        // contribution of the rank s hops back — the first live−1 of
+        // them cover every other live rank exactly once. The all-gather
+        // phase keeps the traffic pattern but the arithmetic is done.
+        if r < live {
+            self.acc_recv[rank] = self.acc_recv[rank].wrapping_add(value);
+        }
+        if r < total {
+            self.fwd[rank] = value;
+            self.send_step(net, node);
+        } else {
+            self.done[rank] = true;
+        }
+    }
+
+    /// Restart `node`'s rank into its current epoch: reset the
+    /// arithmetic, re-watch the (possibly new) successor, resend the
+    /// first step, then replay any buffered markers that were already
+    /// waiting for this epoch.
+    fn restart<F: Fabric>(&mut self, net: &mut F, node: NodeId) {
+        let rank = self.index[node.0 as usize].expect("restart at non-rank");
+        self.received[rank] = 0;
+        self.acc_recv[rank] = 0;
+        self.fwd[rank] = self.contrib[rank];
+        self.done[rank] = false;
+        if self.dead[rank] & (1 << rank) != 0 {
+            // Exiled: the survivors declared this rank dead (it was
+            // unreachable long enough). Stop participating — its value
+            // is excluded from the check either way.
+            self.done[rank] = true;
+            return;
+        }
+        if self.live(rank) < 2 {
+            // A ring of one has nothing to reduce with.
+            self.done[rank] = true;
+            return;
+        }
+        let ep = Endpoint { node, mode: self.mode };
+        if self.reliable.is_some() {
+            let succ = self.successor(rank).expect("live ≥ 2 has a successor");
+            net.reliable_watch(&ep, succ, self.watch_until);
+        }
+        self.send_step(net, node);
+        let epoch = self.dead[rank].count_ones() as u8;
+        let buffered = std::mem::take(&mut self.future[rank]);
+        for (e, v) in buffered {
+            match e.cmp(&epoch) {
+                std::cmp::Ordering::Equal => self.on_marker(net, node, v),
+                std::cmp::Ordering::Greater => self.future[rank].push((e, v)),
+                std::cmp::Ordering::Less => {}
+            }
+        }
+    }
+
+    /// `rank` (at `node`) learned of newly dead ranks: merge, tell the
+    /// survivors, restart.
+    fn on_dead_info<F: Fabric>(&mut self, net: &mut F, node: NodeId, bitmap: u64) {
+        let rank = self.index[node.0 as usize].expect("ring control at non-rank");
+        let merged = self.dead[rank] | bitmap;
+        if merged == self.dead[rank] {
+            return;
+        }
+        self.dead[rank] = merged;
+        let ep = Endpoint { node, mode: self.mode };
+        let now = net.now();
+        let mut ctl = vec![CTL_RESTART];
+        ctl.extend_from_slice(&merged.to_le_bytes());
+        for (j, &r) in self.ranks.clone().iter().enumerate() {
+            if j == rank || merged & (1 << j) != 0 || net.reliable_is_down(&ep, r) {
+                continue;
+            }
+            net.reliable_send_at(now, &ep, r, Message::new(ctl.clone()));
+        }
+        self.restart(net, node);
     }
 }
 
@@ -152,46 +465,92 @@ impl App for RingAllreduce {
     fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
         // Every fragment is consumed on delivery, so a run retains only
         // the in-flight window instead of every fragment it ever moved.
-        if msg.data.first() != Some(&1) {
-            return true; // mid-chunk fragment
-        }
         let node = ep.node;
-        let rank = self.index[node.0 as usize].expect("collective message at non-rank");
-        self.received[rank] += 1;
-        let r = self.received[rank];
-        if r < self.total_steps {
-            self.send_step(net, node);
-        } else if r == self.total_steps {
-            self.done_ranks += 1;
+        match msg.data.first() {
+            Some(&FRAG_LAST) => {
+                let (epoch, value) = if msg.data.len() >= 10 {
+                    (
+                        msg.data[1],
+                        u64::from_le_bytes(msg.data[2..10].try_into().expect("len checked")),
+                    )
+                } else {
+                    (0, 0)
+                };
+                let rank = self.index[node.0 as usize].expect("collective message at non-rank");
+                let mine = self.dead[rank].count_ones() as u8;
+                if epoch < mine {
+                    // Stale marker from before a restart this rank has
+                    // already performed.
+                } else if epoch > mine {
+                    // The sender knows of deaths this rank hasn't
+                    // learned yet; hold the marker until it catches up.
+                    self.future[rank].push((epoch, value));
+                } else {
+                    self.on_marker(net, node, value);
+                }
+            }
+            Some(&CTL_RESTART) if msg.data.len() >= 9 => {
+                let bm = u64::from_le_bytes(msg.data[1..9].try_into().expect("len checked"));
+                self.on_dead_info(net, node, bm);
+            }
+            _ => {} // mid-chunk fragment: pure traffic
         }
         true
+    }
+
+    fn on_peer_down(&mut self, net: &mut Network, ep: Endpoint, peer: NodeId) {
+        let Some(rank) = self.index[ep.node.0 as usize] else { return };
+        let Some(pr) = self.index[peer.0 as usize] else { return };
+        if self.dead[rank] & (1 << pr) != 0 {
+            return;
+        }
+        // The in-flight chunk to the dead successor is obsolete — the
+        // restart regenerates the traffic over the shrunk ring.
+        let _ = net.reliable_take_unacked(&ep, peer);
+        self.on_dead_info(net, ep.node, self.dead[rank] | (1 << pr));
     }
 }
 
 impl ShardableApp for RingAllreduce {
-    /// Partitions carry *deltas*: per-rank receive counters restart at
-    /// zero (a rank's counter is only ever advanced by callbacks at
-    /// that rank's node, i.e. on exactly one shard) and the stats
-    /// accumulated so far — the kickoff sends — stay with the parent.
-    fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
+    /// Each partition continues from the parent's full state; a rank's
+    /// dynamic state only ever mutates in callbacks at its own node
+    /// (exactly one shard), so reduction adopts each rank's state
+    /// wholesale from the partition that owns it. Only the stats are
+    /// deltas (zeroed per partition, summed back) — this keeps the app
+    /// correct across repeated window runs, which the chaos harness
+    /// relies on.
+    fn partition(&self, shard: u32, owner: &[u32]) -> Self {
         RingAllreduce {
             ranks: self.ranks.clone(),
             index: self.index.clone(),
-            received: vec![0; self.ranks.len()],
-            total_steps: self.total_steps,
+            contrib: self.contrib.clone(),
+            received: self.received.clone(),
+            acc_recv: self.acc_recv.clone(),
+            fwd: self.fwd.clone(),
+            dead: self.dead.clone(),
+            done: self.done.clone(),
+            future: self.future.clone(),
+            owned: self.ranks.iter().map(|r| owner[r.0 as usize] == shard).collect(),
             chunk_bytes: self.chunk_bytes,
             frag_bytes: self.frag_bytes,
             mode: self.mode,
-            done_ranks: 0,
+            reliable: self.reliable,
+            watch_until: self.watch_until,
             stats: CollectiveStats { makespan: 0, bytes_on_wire: 0, messages: 0 },
         }
     }
 
     fn reduce(&mut self, part: Self) {
-        for (a, b) in self.received.iter_mut().zip(&part.received) {
-            *a += *b;
+        for i in 0..self.ranks.len() {
+            if part.owned[i] {
+                self.received[i] = part.received[i];
+                self.acc_recv[i] = part.acc_recv[i];
+                self.fwd[i] = part.fwd[i];
+                self.dead[i] = part.dead[i];
+                self.done[i] = part.done[i];
+                self.future[i] = part.future[i].clone();
+            }
         }
-        self.done_ranks += part.done_ranks;
         self.stats.bytes_on_wire += part.stats.bytes_on_wire;
         self.stats.messages += part.stats.messages;
     }
@@ -220,6 +579,7 @@ pub fn mean_reduce(mut grads: Vec<Vec<f32>>) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::channels::ethernet::RxMode;
+    use crate::config::SystemConfig;
     use crate::coordinator::Placement;
 
     #[test]
@@ -244,6 +604,18 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_reduces_to_the_sum_of_contributions() {
+        // run() asserts each rank's reduced value equals the sum; this
+        // test additionally pins the arithmetic shape down.
+        let mut net = Network::card();
+        let ranks = Placement::Block.select(&net.topo, 6);
+        let ar = RingAllreduce::new(&mut net, ranks, 64 * 1024);
+        let want = (0..6).fold(0u64, |a, i| a.wrapping_add(mix64(0xC0_11EC_71FE ^ i)));
+        assert_eq!(ar.expected_sum(), want);
+        ar.run(&mut net);
+    }
+
+    #[test]
     fn allreduce_is_mode_generic() {
         // Same collective over all three modes: same message count,
         // mode-dependent makespan with the software path slowest.
@@ -262,6 +634,69 @@ mod tests {
         assert_eq!(pm.bytes_on_wire, eth.bytes_on_wire);
         assert!(pm.makespan < eth.makespan, "pm {} vs eth {}", pm.makespan, eth.makespan);
         assert!(fifo.makespan < eth.makespan, "fifo {} vs eth {}", fifo.makespan, eth.makespan);
+    }
+
+    #[test]
+    fn reliable_allreduce_matches_raw_result_without_faults() {
+        // On a healthy mesh the reliable transport must be invisible to
+        // the collective's outcome (same sum), just costlier (acks).
+        let mut net = Network::card();
+        let ranks = Placement::Block.select(&net.topo, 4);
+        let stats = RingAllreduce::with_mode_reliable(
+            &mut net,
+            ranks,
+            64 * 1024,
+            CommMode::Postmaster { queue: 0 },
+            ReliableParams::default(),
+            2_000_000,
+        )
+        .run(&mut net);
+        assert_eq!(stats.messages, 4 * 2 * 3);
+        assert!(net.metrics.acks > 0, "reliable mode must have acked data");
+        assert_eq!(net.metrics.peers_declared_down, 0);
+    }
+
+    #[test]
+    fn reliable_allreduce_shrinks_ring_when_a_rank_dies() {
+        // Kill one rank mid-collective (inbound first, outbound later —
+        // the chaos drop pattern): the survivors must detect it, shrink
+        // the ring, and reduce to the survivors' sum.
+        let mut cfg = SystemConfig::card();
+        cfg.drop_unroutable = true;
+        let mut net = Network::new(cfg);
+        let ranks = Placement::Block.select(&net.topo, 4);
+        let victim = ranks[2];
+        let params = ReliableParams {
+            rto_ns: 30_000,
+            max_retries: 4,
+            heartbeat_ns: 50_000,
+            liveness_ns: 300_000,
+            ..ReliableParams::default()
+        };
+        let mut ar = RingAllreduce::with_mode_reliable(
+            &mut net,
+            ranks.clone(),
+            64 * 1024,
+            CommMode::Postmaster { queue: 0 },
+            params,
+            20_000_000,
+        );
+        let t0 = net.now();
+        ar.kickoff(&mut net);
+        net.run_until(&mut ar, t0 + 10_000);
+        for &l in &net.topo.in_links(victim).to_vec() {
+            net.fail_link(l);
+        }
+        net.run_until(&mut ar, t0 + 30_000);
+        for &l in &net.topo.out_links(victim).to_vec() {
+            net.fail_link(l);
+        }
+        net.run_to_quiescence(&mut ar);
+        let vi = ranks.iter().position(|&r| r == victim).unwrap();
+        assert_eq!(ar.dead_union(), 1 << vi, "exactly the victim declared dead");
+        ar.assert_reduced();
+        assert!(net.metrics.peers_declared_down > 0);
+        assert!(net.metrics.retransmits > 0, "detection went through the retry path");
     }
 
     #[test]

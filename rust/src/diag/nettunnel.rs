@@ -62,9 +62,7 @@ impl Network {
                         self.comm_capture_tunnel(node, packet.src, addr, value)
                     {
                         self.app_scope(app, |net, app| {
-                            if !app.on_message(net, ep, &msg) {
-                                net.comm_inbox_push(&ep, msg);
-                            }
+                            net.comm_deliver(app, ep, msg);
                         });
                     }
                 } else {

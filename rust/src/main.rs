@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use inc_sim::channels::ethernet::RxMode;
-use inc_sim::channels::CommMode;
+use inc_sim::channels::{CommMode, ReliableParams};
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::diag::sandbox::PcieSandbox;
 use inc_sim::network::sharded::ShardedNetwork;
@@ -17,6 +17,7 @@ use inc_sim::network::{Fabric, Network, NullApp};
 use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::{Coord, NodeId, Topology};
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::chaos::workloads;
 use inc_sim::workload::{chaos, learners, mcts, training};
 
 const USAGE: &str = "\
@@ -36,30 +37,43 @@ COMMANDS
               per-cage parallel engine (K=0 picks the preset's natural
               shard count, 1 forces the serial engine)
   train       [--ranks N] [--steps N] [--lr F] [--preset P] [--shards K] [--comm M]
+              [--reliable]
               data-parallel LM training (E10); --comm picks the channel
               the gradient all-reduce rides
   mcts        [--workers N] [--rollouts N] [--preset P] [--shards K] [--comm M]
+              [--reliable]
               distributed MCTS (E9)
-  learners    [--preset P] [--shards K] [--comm M]
+  learners    [--preset P] [--shards K] [--comm M] [--reliable]
               learner-overlap experiment (E8)
-  chaos       [--scenario storm|flap|partition|drop|hotspot] [--seed S]
+  chaos       [--scenario storm|flap|partition|drop|hotspot|all] [--seed S]
               [--preset P] [--shards K] [--comm M] [--ticks N] [--rx-cap N]
-              [--out FILE]
+              [--workload learners|allreduce|mcts] [--out FILE]
               seeded chaos scenario graded against SLOs (E13): deterministic
               fault script + background traffic; reports delivered
               throughput, p50/p99 latency, reroute convergence, drop/stall
               counts; --out writes the SLO report JSON; --rx-cap bounds
-              the per-endpoint receive buffers (default: tiny for hotspot)
+              the per-endpoint receive buffers (default: tiny for hotspot).
+              --workload rides a real workload (over the reliable
+              transport) through the scenario instead of background
+              traffic (E14; storm|partition|drop only). --scenario all
+              sweeps every background scenario plus every workload x
+              scenario pairing into one combined JSON report, exiting
+              nonzero if anything violates its SLO
 
 The workload subcommands accept --shards like traffic does: every
 workload runs on either engine through the Fabric trait, with
 byte-identical results. --comm pm|eth|fifo picks the virtual channel
 the workload's messages travel over (first-class communication modes;
 default pm = Postmaster DMA, eth = internal Ethernet, fifo = Bridge
-FIFO).
+FIFO). --reliable runs the workload's traffic over the ack/retransmit
+transport (EXPERIMENTS.md §Reliable transport) — same answer on a
+healthy fabric, plus framing/ack overhead; needs pm or eth (the Bridge
+FIFO is already ordered and lossless).
 ";
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
+/// Tiny flag parser: `--key value` pairs after the subcommand; a
+/// `--key` directly followed by another `--flag` (or nothing) is a
+/// bare boolean flag.
 struct Args {
     flags: std::collections::HashMap<String, String>,
 }
@@ -70,7 +84,7 @@ impl Args {
         let mut i = 0;
         while i < args.len() {
             if let Some(key) = args[i].strip_prefix("--") {
-                if i + 1 < args.len() {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                     flags.insert(key.to_string(), args[i + 1].clone());
                     i += 2;
                 } else {
@@ -83,6 +97,19 @@ impl Args {
             }
         }
         Args { flags }
+    }
+
+    /// Bare boolean flag: present (alone or with a truthy value).
+    fn flag(&self, key: &str) -> bool {
+        match self.flags.get(key).map(String::as_str) {
+            None => false,
+            Some("" | "true" | "1" | "yes") => true,
+            Some("false" | "0" | "no") => false,
+            Some(v) => {
+                eprintln!("bad value for --{key}: {v:?} (boolean flag)");
+                std::process::exit(2);
+            }
+        }
     }
 
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
@@ -154,6 +181,7 @@ fn main() -> Result<()> {
             args.preset(SystemPreset::Card),
             args.get("shards", 1u32),
             args.comm(),
+            reliable_params(&args),
         )?,
         "mcts" => run_mcts(
             args.get("workers", 8usize),
@@ -161,11 +189,13 @@ fn main() -> Result<()> {
             args.preset(SystemPreset::Card),
             args.get("shards", 1u32),
             args.comm(),
+            reliable_params(&args),
         ),
         "learners" => run_learners(
             args.preset(SystemPreset::Card),
             args.get("shards", 1u32),
             args.comm(),
+            reliable_params(&args),
         ),
         "chaos" => run_chaos(&args),
         "help" | "--help" | "-h" => print!("{USAGE}"),
@@ -366,6 +396,22 @@ fn sandbox(p: SystemPreset, script: Option<String>) {
     }
 }
 
+/// `--reliable` → the transport parameters for a workload run, after
+/// checking the channel can actually carry the transport.
+fn reliable_params(args: &Args) -> Option<ReliableParams> {
+    if !args.flag("reliable") {
+        return None;
+    }
+    if matches!(args.comm(), CommMode::BridgeFifo { .. }) {
+        eprintln!(
+            "--reliable needs an unordered channel (pm | eth); the Bridge FIFO \
+             is already ordered and lossless end-to-end"
+        );
+        std::process::exit(2);
+    }
+    Some(ReliableParams::default())
+}
+
 /// Build a sharded engine for a workload run: K=0 picks the preset's
 /// natural shard count.
 fn sharded_engine(preset: SystemPreset, shards: u32) -> ShardedNetwork {
@@ -382,9 +428,10 @@ fn train(
     preset: SystemPreset,
     shards: u32,
     comm: CommMode,
+    reliable: Option<ReliableParams>,
 ) -> Result<()> {
     let rt = inc_sim::runtime::load_default()?;
-    let cfg = training::TrainConfig { ranks, steps, lr, comm, ..Default::default() };
+    let cfg = training::TrainConfig { ranks, steps, lr, comm, reliable, ..Default::default() };
     let report = if shards == 1 {
         let mut net = Network::new(SystemConfig::new(preset));
         training::train(&mut net, &rt, &cfg)?
@@ -399,12 +446,13 @@ fn train(
         training::train(&mut net, &rt, &cfg)?
     };
     println!(
-        "model {} — {} params, {} ranks, {} steps, all-reduce over {}",
+        "model {} — {} params, {} ranks, {} steps, all-reduce over {}{}",
         rt.manifest.model,
         report.params,
         ranks,
         steps,
-        comm.name()
+        comm.name(),
+        if reliable.is_some() { " (reliable)" } else { "" }
     );
     println!("{:>6} {:>10} {:>12}", "step", "loss", "vtime ms");
     for p in &report.curve {
@@ -421,7 +469,14 @@ fn train(
     Ok(())
 }
 
-fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32, comm: CommMode) {
+fn run_mcts(
+    workers: usize,
+    rollouts: u64,
+    preset: SystemPreset,
+    shards: u32,
+    comm: CommMode,
+    reliable: Option<ReliableParams>,
+) {
     // Leader at node 0; workers strided across the node space so larger
     // presets (and the sharded engine) see cross-card/cage task traffic.
     fn go<F: Fabric>(
@@ -429,24 +484,40 @@ fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32, co
         workers: usize,
         rollouts: u64,
         comm: CommMode,
+        reliable: Option<ReliableParams>,
     ) -> mcts::MctsResult {
         let nn = net.topo().node_count() as u32;
         let stride = ((nn - 1) / (workers as u32).max(1)).max(1);
         let ws: Vec<NodeId> = (0..workers as u32).map(|i| NodeId(1 + i * stride)).collect();
         let game = mcts::Game { depth: 6, branching: 3, seed: 42 };
-        mcts::DistributedMcts::with_mode(net, game, NodeId(0), ws, comm).search(net, rollouts)
+        // Liveness watching off (`watch_until` 0): no faults here, the
+        // transport contributes framing/ack/retransmit cover only.
+        let m = match reliable {
+            Some(p) => mcts::DistributedMcts::with_mode_reliable(
+                net,
+                game,
+                NodeId(0),
+                ws,
+                comm,
+                p,
+                0,
+            ),
+            None => mcts::DistributedMcts::with_mode(net, game, NodeId(0), ws, comm),
+        };
+        m.search(net, rollouts)
     }
     let (r, engine) = if shards == 1 {
         let mut net = Network::new(SystemConfig::new(preset));
-        (go(&mut net, workers, rollouts, comm), "serial".to_string())
+        (go(&mut net, workers, rollouts, comm, reliable), "serial".to_string())
     } else {
         let mut net = sharded_engine(preset, shards);
         let label = format!("sharded x{}", net.shard_count());
-        (go(&mut net, workers, rollouts, comm), label)
+        (go(&mut net, workers, rollouts, comm, reliable), label)
     };
     println!(
-        "mcts [{engine}, comm {}]: {} rollouts on {} workers -> best path {:?} (value {:.3})",
+        "mcts [{engine}, comm {}{}]: {} rollouts on {} workers -> best path {:?} (value {:.3})",
         comm.name(),
+        if reliable.is_some() { ", reliable" } else { "" },
         r.rollouts,
         workers,
         r.best_path,
@@ -460,16 +531,46 @@ fn run_mcts(workers: usize, rollouts: u64, preset: SystemPreset, shards: u32, co
 }
 
 /// `repro chaos` — one seeded chaos scenario, graded against its SLOs
-/// (EXPERIMENTS.md E13). Exits non-zero on SLO violation so CI can gate
+/// (EXPERIMENTS.md E13), a real workload riding a scenario over the
+/// reliable transport (`--workload`, E14), or the full combined sweep
+/// (`--scenario all`). Exits non-zero on any violation so CI can gate
 /// on it.
 fn run_chaos(args: &Args) {
-    let scenario = {
-        let s = args.get_opt("scenario").unwrap_or_else(|| "storm".into());
-        chaos::Scenario::parse(&s).unwrap_or_else(|| {
-            eprintln!("unknown scenario {s:?}; use storm | flap | partition | drop | hotspot");
-            std::process::exit(2);
-        })
-    };
+    let scen_s = args.get_opt("scenario").unwrap_or_else(|| "storm".into());
+    if scen_s.eq_ignore_ascii_case("all") {
+        return run_chaos_all(args);
+    }
+    let scenario = chaos::Scenario::parse(&scen_s).unwrap_or_else(|| {
+        eprintln!(
+            "unknown scenario {scen_s:?}; use storm | flap | partition | drop | hotspot | all"
+        );
+        std::process::exit(2);
+    });
+    if let Some(w) = args.get_opt("workload") {
+        return run_chaos_workload(args, &w, scenario);
+    }
+    let report = run_background_scenario(args, scenario, true);
+    if let Some(path) = args.get_opt("out") {
+        std::fs::write(&path, report.to_json()).expect("write SLO report");
+        println!("  SLO report -> {path}");
+    }
+    match report.violations().as_slice() {
+        [] => println!("  SLO: PASS"),
+        v => {
+            for viol in v {
+                eprintln!("  SLO VIOLATION: {viol}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
+/// One background-traffic chaos run on the configured preset/engine.
+fn run_background_scenario(
+    args: &Args,
+    scenario: chaos::Scenario,
+    verbose: bool,
+) -> chaos::SloReport {
     let preset = args.preset(SystemPreset::Card);
     let shards = args.get("shards", 1u32);
     let mut ccfg = chaos::ChaosConfig::new(scenario, args.get("seed", 42u64));
@@ -493,40 +594,158 @@ fn run_chaos(args: &Args) {
         report.scenario,
         report.seed
     );
+    if verbose {
+        println!(
+            "  delivered {}/{} msgs ({:.0} msg/s virtual), p50 {} ns, p99 {} ns",
+            report.delivered,
+            report.sent,
+            report.throughput_msgs_per_s(),
+            report.p50_ns,
+            report.p99_ns
+        );
+        println!(
+            "  reroute convergence {} ns, rx drops {}, sender stall {} ns",
+            report.convergence_ns, report.dropped, report.stalled_ns
+        );
+    }
+    report
+}
+
+/// One workload-chaos run (E14): the named workload rides the scenario
+/// over the reliable transport on its own Card fabric.
+fn run_chaos_workload(args: &Args, workload: &str, scenario: chaos::Scenario) {
+    let w = workloads::ChaosWorkload::parse(workload).unwrap_or_else(|| {
+        eprintln!("unknown workload {workload:?}; use learners | allreduce | mcts");
+        std::process::exit(2);
+    });
+    if !workloads::WORKLOAD_SCENARIOS.contains(&scenario) {
+        eprintln!(
+            "workload chaos runs under storm | partition | drop, not {}",
+            scenario.name()
+        );
+        std::process::exit(2);
+    }
+    let cfg = workloads::WorkloadChaosConfig::new(w, scenario, args.get("seed", 42u64));
+    let (report, engine) = run_one_workload(&cfg, args.get("shards", 1u32));
     println!(
-        "  delivered {}/{} msgs ({:.0} msg/s virtual), p50 {} ns, p99 {} ns",
-        report.delivered,
-        report.sent,
-        report.throughput_msgs_per_s(),
-        report.p50_ns,
-        report.p99_ns
+        "chaos [{engine}] workload {} scenario {} seed {}:",
+        report.workload, report.scenario, report.seed
     );
     println!(
-        "  reroute convergence {} ns, rx drops {}, sender stall {} ns",
-        report.convergence_ns, report.dropped, report.stalled_ns
+        "  {}/{} units, {} replaced; retransmits {}, acks {}, dup-dropped {}, \
+         peers down {}",
+        report.delivered,
+        report.expected,
+        report.replaced,
+        report.retransmits,
+        report.acks,
+        report.duplicates_dropped,
+        report.peers_declared_down
     );
     if let Some(path) = args.get_opt("out") {
-        std::fs::write(&path, report.to_json()).expect("write SLO report");
-        println!("  SLO report -> {path}");
+        std::fs::write(&path, report.to_json()).expect("write workload report");
+        println!("  report -> {path}");
     }
     match report.violations().as_slice() {
-        [] => println!("  SLO: PASS"),
+        [] => println!("  verdict: PASS"),
         v => {
             for viol in v {
-                eprintln!("  SLO VIOLATION: {viol}");
+                eprintln!("  VIOLATION: {viol}");
             }
             std::process::exit(1);
         }
     }
 }
 
-fn run_learners(preset: SystemPreset, shards: u32, comm: CommMode) {
+/// Run one workload-chaos experiment on the requested engine.
+fn run_one_workload(
+    cfg: &workloads::WorkloadChaosConfig,
+    shards: u32,
+) -> (workloads::WorkloadReport, String) {
+    if shards == 1 {
+        let mut net = Network::new(cfg.system_config());
+        (workloads::run_workload(&mut net, cfg, 1), "serial".to_string())
+    } else {
+        let mut net = ShardedNetwork::new(
+            cfg.system_config(),
+            if shards == 0 { u32::MAX } else { shards },
+        );
+        let k = net.shard_count();
+        (workloads::run_workload(&mut net, cfg, k), format!("sharded x{k}"))
+    }
+}
+
+/// `repro chaos --scenario all` — the full E13+E14 sweep: every
+/// background scenario, then every workload x scenario pairing, folded
+/// into one combined JSON report (`--out`); exits non-zero if any run
+/// violates its SLO.
+fn run_chaos_all(args: &Args) {
+    let seed = args.get("seed", 42u64);
+    let shards = args.get("shards", 1u32);
+    let mut jsons: Vec<String> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for sc in chaos::Scenario::ALL {
+        let report = run_background_scenario(args, sc, false);
+        for v in report.violations() {
+            failures.push(format!("{}: {v}", sc.name()));
+        }
+        println!("  {}", if report.passed() { "PASS" } else { "FAIL" });
+        jsons.push(report.to_json().trim_end().to_string());
+    }
+    for w in workloads::ChaosWorkload::ALL {
+        for sc in workloads::WORKLOAD_SCENARIOS {
+            let cfg = workloads::WorkloadChaosConfig::new(w, sc, seed);
+            let (report, engine) = run_one_workload(&cfg, shards);
+            let label = format!("{}/{}", report.workload, report.scenario);
+            println!(
+                "chaos [{engine}] workload {} seed {}: {}",
+                label,
+                seed,
+                if report.passed() { "PASS" } else { "FAIL" }
+            );
+            for v in report.violations() {
+                failures.push(format!("{label}: {v}"));
+            }
+            jsons.push(report.to_json().trim_end().to_string());
+        }
+    }
+    let combined = format!(
+        "{{\n\"runs\": [\n{}\n],\n\"passed\": {}\n}}\n",
+        jsons.join(",\n"),
+        failures.is_empty()
+    );
+    if let Some(path) = args.get_opt("out") {
+        std::fs::write(&path, &combined).expect("write combined chaos report");
+        println!("combined report -> {path}");
+    }
+    if failures.is_empty() {
+        println!("chaos sweep: {} runs, all PASS", jsons.len());
+    } else {
+        for f in &failures {
+            eprintln!("VIOLATION: {f}");
+        }
+        eprintln!(
+            "chaos sweep: {} violation(s) across {} runs",
+            failures.len(),
+            jsons.len()
+        );
+        std::process::exit(1);
+    }
+}
+
+fn run_learners(
+    preset: SystemPreset,
+    shards: u32,
+    comm: CommMode,
+    reliable: Option<ReliableParams>,
+) {
     // Spread the learner grid across the whole mesh so cards/cages (and
     // shard boundaries) sit between neighbors.
     let nn = preset.node_count() as usize;
     let cfg = learners::LearnerConfig {
         stride: (nn / 27).max(1),
         comm,
+        reliable,
         ..learners::LearnerConfig::default()
     };
     let (streamed, aggregated, engine) = if shards == 1 {
@@ -539,8 +758,9 @@ fn run_learners(preset: SystemPreset, shards: u32, comm: CommMode) {
         (s, a, "sharded".to_string())
     };
     println!(
-        "distributed learners [{engine}, comm {}], {} outputs/step/node of {} B:",
+        "distributed learners [{engine}, comm {}{}], {} outputs/step/node of {} B:",
         comm.name(),
+        if reliable.is_some() { ", reliable" } else { "" },
         cfg.outputs_per_step,
         cfg.record_bytes
     );

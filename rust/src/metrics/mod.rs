@@ -146,6 +146,19 @@ pub struct Metrics {
     /// sharded aggregate equals the serial engine's figure. Kept by
     /// [`Metrics::fabric_view`].
     pub reroute_convergence_ns: u64,
+    /// Data segments the reliable transport re-sent after a retransmit
+    /// timeout ([`crate::channels::reliable`]). Fabric behavior: kept
+    /// by [`Metrics::fabric_view`], like the other reliable counters.
+    pub retransmits: u64,
+    /// Cumulative-ack control messages the reliable transport sent.
+    pub acks: u64,
+    /// Duplicate data segments the reliable receiver suppressed (the
+    /// retransmit raced the original, or an ack was lost).
+    pub duplicates_dropped: u64,
+    /// Peers a reliable endpoint's liveness monitor declared down
+    /// (retry budget exhausted or heartbeat silence past the
+    /// threshold). Surfaced to apps via `App::on_peer_down`.
+    pub peers_declared_down: u64,
     /// No-op `Drain` events the pending-drain flag kept out of the event
     /// queue (an idle link with nothing queued schedules no drain).
     pub drains_suppressed: u64,
@@ -193,6 +206,10 @@ impl Metrics {
         self.dropped += other.dropped;
         self.stalled_ns += other.stalled_ns;
         self.reroute_convergence_ns = self.reroute_convergence_ns.max(other.reroute_convergence_ns);
+        self.retransmits += other.retransmits;
+        self.acks += other.acks;
+        self.duplicates_dropped += other.duplicates_dropped;
+        self.peers_declared_down += other.peers_declared_down;
         self.drains_suppressed += other.drains_suppressed;
         self.windows_merged += other.windows_merged;
         self.state_bytes += other.state_bytes;
@@ -251,6 +268,12 @@ impl Metrics {
             s.push_str(&format!(
                 "  reroute convergence={}ns\n",
                 self.reroute_convergence_ns
+            ));
+        }
+        if self.retransmits + self.acks + self.duplicates_dropped + self.peers_declared_down > 0 {
+            s.push_str(&format!(
+                "  reliable: retransmits={} acks={} duplicates dropped={} peers declared down={}\n",
+                self.retransmits, self.acks, self.duplicates_dropped, self.peers_declared_down
             ));
         }
         if self.windows_merged > 0 {
@@ -392,6 +415,34 @@ mod tests {
         // Per-mode totals are fabric behavior: the view keeps them, so
         // cross-engine equality covers them too.
         assert_eq!(merged.fabric_view().mode_traffic, merged.mode_traffic);
+    }
+
+    #[test]
+    fn reliable_counters_merge_and_survive_fabric_view() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.retransmits = 3;
+        a.acks = 40;
+        b.acks = 2;
+        b.duplicates_dropped = 1;
+        b.peers_declared_down = 1;
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.retransmits, 3);
+        assert_eq!(merged.acks, 42);
+        assert_eq!(merged.duplicates_dropped, 1);
+        assert_eq!(merged.peers_declared_down, 1);
+        // Reliable-transport activity is fabric behavior: the
+        // cross-engine byte-identity contract covers it.
+        let f = merged.fabric_view();
+        assert_eq!(
+            (f.retransmits, f.acks, f.duplicates_dropped, f.peers_declared_down),
+            (3, 42, 1, 1)
+        );
+        let r = merged.report();
+        assert!(r.contains("retransmits=3"));
+        assert!(r.contains("peers declared down=1"));
     }
 
     #[test]

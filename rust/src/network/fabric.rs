@@ -56,6 +56,7 @@ use std::sync::Arc;
 
 use crate::channels::endpoint::{ChannelCaps, CommMode, Endpoint, Message, MsgId};
 use crate::channels::ethernet::{EthFrame, RxMode};
+use crate::channels::reliable::ReliableParams;
 use crate::channels::postmaster::PmRecord;
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
@@ -170,6 +171,27 @@ pub trait Fabric {
     fn caps(&self, mode: CommMode) -> ChannelCaps {
         mode.caps(self.config())
     }
+    /// See [`Network::open_with_rx_capacity`]: `open` with a
+    /// per-endpoint receive-buffer bound.
+    fn open_with_rx_capacity(&mut self, node: NodeId, mode: CommMode, cap: u32) -> Endpoint;
+
+    // -- reliable transport (see `channels::reliable`) --------------------
+
+    /// See [`Network::reliable_open`]: open + register with the
+    /// ack/retransmit transport.
+    fn reliable_open(&mut self, node: NodeId, mode: CommMode, params: ReliableParams)
+        -> Endpoint;
+    /// See [`Network::reliable_send`].
+    fn reliable_send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId;
+    /// See [`Network::reliable_send_at`].
+    fn reliable_send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId;
+    /// See [`Network::reliable_watch`]: heartbeat liveness monitoring.
+    fn reliable_watch(&mut self, ep: &Endpoint, peer: NodeId, until: Time);
+    /// See [`Network::reliable_is_down`].
+    fn reliable_is_down(&self, ep: &Endpoint, peer: NodeId) -> bool;
+    /// See [`Network::reliable_take_unacked`]: drain undelivered
+    /// payloads of a downed peer for re-placement.
+    fn reliable_take_unacked(&mut self, ep: &Endpoint, peer: NodeId) -> Vec<Message>;
 
     // -- virtual channels (legacy per-channel shims) ----------------------
 
@@ -284,6 +306,33 @@ impl Fabric for Network {
     }
     fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
         Network::recv(self, ep)
+    }
+    fn open_with_rx_capacity(&mut self, node: NodeId, mode: CommMode, cap: u32) -> Endpoint {
+        Network::open_with_rx_capacity(self, node, mode, cap)
+    }
+
+    fn reliable_open(
+        &mut self,
+        node: NodeId,
+        mode: CommMode,
+        params: ReliableParams,
+    ) -> Endpoint {
+        Network::reliable_open(self, node, mode, params)
+    }
+    fn reliable_send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        Network::reliable_send(self, ep, dst, msg)
+    }
+    fn reliable_send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        Network::reliable_send_at(self, at, ep, dst, msg)
+    }
+    fn reliable_watch(&mut self, ep: &Endpoint, peer: NodeId, until: Time) {
+        Network::reliable_watch(self, ep, peer, until)
+    }
+    fn reliable_is_down(&self, ep: &Endpoint, peer: NodeId) -> bool {
+        Network::reliable_is_down(self, ep, peer)
+    }
+    fn reliable_take_unacked(&mut self, ep: &Endpoint, peer: NodeId) -> Vec<Message> {
+        Network::reliable_take_unacked(self, ep, peer)
     }
 
     fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {
@@ -406,6 +455,33 @@ impl Fabric for ShardedNetwork {
     }
     fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
         ShardedNetwork::recv(self, ep)
+    }
+    fn open_with_rx_capacity(&mut self, node: NodeId, mode: CommMode, cap: u32) -> Endpoint {
+        ShardedNetwork::open_with_rx_capacity(self, node, mode, cap)
+    }
+
+    fn reliable_open(
+        &mut self,
+        node: NodeId,
+        mode: CommMode,
+        params: ReliableParams,
+    ) -> Endpoint {
+        ShardedNetwork::reliable_open(self, node, mode, params)
+    }
+    fn reliable_send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        ShardedNetwork::reliable_send(self, ep, dst, msg)
+    }
+    fn reliable_send_at(&mut self, at: Time, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        ShardedNetwork::reliable_send_at(self, at, ep, dst, msg)
+    }
+    fn reliable_watch(&mut self, ep: &Endpoint, peer: NodeId, until: Time) {
+        ShardedNetwork::reliable_watch(self, ep, peer, until)
+    }
+    fn reliable_is_down(&self, ep: &Endpoint, peer: NodeId) -> bool {
+        ShardedNetwork::reliable_is_down(self, ep, peer)
+    }
+    fn reliable_take_unacked(&mut self, ep: &Endpoint, peer: NodeId) -> Vec<Message> {
+        ShardedNetwork::reliable_take_unacked(self, ep, peer)
     }
 
     fn fifo_connect(&mut self, src: NodeId, dst: NodeId, channel: u8, width_bits: u8) {

@@ -298,6 +298,13 @@ pub trait App {
     fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
         false
     }
+    /// The reliable transport at `ep` declared `peer` down: its retry
+    /// budget was exhausted or its heartbeat silence crossed the
+    /// liveness threshold ([`crate::channels::reliable`]). Fires once
+    /// per (endpoint, peer), at `ep.node`, under the usual per-node
+    /// contract. Undelivered payloads are available for re-placement
+    /// via [`Network::reliable_take_unacked`].
+    fn on_peer_down(&mut self, net: &mut Network, ep: Endpoint, peer: NodeId) {}
 }
 
 /// An [`App`] that does nothing (inbox-driven workloads).
@@ -342,6 +349,10 @@ pub struct Network {
     /// Endpoint-layer state (open lanes, inboxes, reassembly; see
     /// [`crate::channels::endpoint`]).
     pub(crate) comm: CommState,
+    /// Reliable-transport state (flow windows, retransmit queues, peer
+    /// liveness; see [`crate::channels::reliable`]). Like `comm`, every
+    /// piece is keyed by the node that owns it.
+    pub(crate) rel: crate::channels::reliable::ReliableState,
     /// Set when this `Network` is one shard of a sharded run.
     pub(crate) shard_ctx: Option<ShardCtx>,
     /// Per-node counters behind [`Network::app_packet_id`]
@@ -399,6 +410,7 @@ impl Network {
             failed_links: vec![false; domain.link_count()],
             trace: None,
             comm: CommState::default(),
+            rel: crate::channels::reliable::ReliableState::default(),
             shard_ctx: None,
             app_seq: vec![0; domain.node_count()],
             in_app: false,
@@ -736,7 +748,15 @@ impl Network {
                 self.tunnel_exec(node, pkt, app)
             }
             Event::Timer { node, tag } => {
-                self.app_scope(app, |net, app| app.on_timer(net, node, tag))
+                // Reliable-transport timers (retransmit / heartbeat) are
+                // fabric protocol machinery, not app timers: they carry a
+                // reserved tag mark and are handled by the transport —
+                // which may surface `on_peer_down` to the app.
+                if tag & crate::channels::reliable::RELIABLE_TIMER_MARK != 0 {
+                    self.reliable_timer(node, tag, app)
+                } else {
+                    self.app_scope(app, |net, app| app.on_timer(net, node, tag))
+                }
             }
         }
     }
@@ -806,12 +826,26 @@ impl Network {
                         .min_by_key(|&l| self.topo.min_hops(self.topo.link(l).dst, dst))
                 };
                 // Livelock guard (misrouting around defects is bounded).
+                // Both this check and the no-live-out-link case below are
+                // decided from `here`'s own hop counter and out-links —
+                // never from remote state — so under `drop_unroutable`
+                // serial and sharded engines drop the same packets at
+                // the same instants (the sharded failure flags are
+                // domain-sized; only local decisions are possible).
                 let budget = 4 * self.topo.min_hops(src, dst) + 64;
                 if hops > budget {
+                    if self.cfg.drop_unroutable {
+                        self.metrics.dropped += 1;
+                        self.packets.free(packet);
+                        return;
+                    }
                     panic!("packet {id} exceeded hop budget (defect livelock?)");
                 }
                 if let Some(l) = chosen {
                     self.link_send(l, packet);
+                } else if self.cfg.drop_unroutable {
+                    self.metrics.dropped += 1;
+                    self.packets.free(packet);
                 } else {
                     panic!("node {here} fully disconnected; cannot route {id}");
                 }

@@ -116,6 +116,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::channels::endpoint::{CommMode, Endpoint, Message, MsgId};
+use crate::channels::reliable::ReliableParams;
 use crate::config::SystemConfig;
 use crate::metrics::Metrics;
 use crate::network::{
@@ -365,6 +366,67 @@ impl ShardedNetwork {
     /// See [`Network::recv`] (drains the owning shard's inbox).
     pub fn recv(&mut self, ep: &Endpoint) -> Vec<Message> {
         self.shard_mut(ep.node).recv(ep)
+    }
+
+    /// See [`Network::open_with_rx_capacity`] (registered on every
+    /// shard, like [`ShardedNetwork::open`]).
+    pub fn open_with_rx_capacity(&mut self, node: NodeId, mode: CommMode, cap: u32) -> Endpoint {
+        let mut ep = Endpoint { node, mode };
+        for sh in &mut self.shards {
+            ep = sh.open_with_rx_capacity(node, mode, cap);
+        }
+        ep
+    }
+
+    /// See [`Network::reliable_open`] (registered on every shard, like
+    /// [`ShardedNetwork::open`]; the transport's *flow* state still
+    /// lives only on the owning shard — sends and deliveries all
+    /// execute there).
+    pub fn reliable_open(
+        &mut self,
+        node: NodeId,
+        mode: CommMode,
+        params: ReliableParams,
+    ) -> Endpoint {
+        let mut ep = Endpoint { node, mode };
+        for sh in &mut self.shards {
+            ep = sh.reliable_open(node, mode, params);
+        }
+        ep
+    }
+
+    /// See [`Network::reliable_send`].
+    pub fn reliable_send(&mut self, ep: &Endpoint, dst: NodeId, msg: Message) -> MsgId {
+        let now = self.now();
+        self.reliable_send_at(now, ep, dst, msg)
+    }
+
+    /// See [`Network::reliable_send_at`] (routed to the shard owning
+    /// `ep.node`, where the flow's retransmit queue and timers live;
+    /// per-node ids throughout, so no cursor sync is needed).
+    pub fn reliable_send_at(
+        &mut self,
+        at: Time,
+        ep: &Endpoint,
+        dst: NodeId,
+        msg: Message,
+    ) -> MsgId {
+        self.shard_mut(ep.node).reliable_send_at(at, ep, dst, msg)
+    }
+
+    /// See [`Network::reliable_watch`].
+    pub fn reliable_watch(&mut self, ep: &Endpoint, peer: NodeId, until: Time) {
+        self.shard_mut(ep.node).reliable_watch(ep, peer, until)
+    }
+
+    /// See [`Network::reliable_is_down`].
+    pub fn reliable_is_down(&self, ep: &Endpoint, peer: NodeId) -> bool {
+        self.shards[self.shard_of(ep.node)].reliable_is_down(ep, peer)
+    }
+
+    /// See [`Network::reliable_take_unacked`].
+    pub fn reliable_take_unacked(&mut self, ep: &Endpoint, peer: NodeId) -> Vec<Message> {
+        self.shard_mut(ep.node).reliable_take_unacked(ep, peer)
     }
 
     /// See [`Network::tunnel_write`].

@@ -47,6 +47,7 @@
 //! SLO.
 
 pub mod scenario;
+pub mod workloads;
 
 use std::sync::Arc;
 
@@ -62,8 +63,15 @@ pub use scenario::{FaultEvent, FaultKind, FaultScript, Scenario};
 /// Per-scenario service-level objectives the run is graded against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SloSpec {
-    /// Worst acceptable reroute convergence (ns).
+    /// Worst acceptable reroute convergence (ns): first delivery
+    /// *anywhere* after each fault.
     pub max_convergence_ns: Time,
+    /// Worst acceptable per-flow convergence (ns): for every traffic
+    /// pair, the first delivery *on that pair* after each fault. Much
+    /// looser than the global figure — one healthy flow cannot mask a
+    /// stalled one, but a flow that is deliberately silent (cross-cut
+    /// during a partition) legitimately takes until the heal.
+    pub max_pair_convergence_ns: Time,
     /// Minimum app-level delivery ratio, in permille (1000 = every
     /// message the harness sent was seen by the app).
     pub min_delivery_permille: u32,
@@ -75,12 +83,21 @@ pub struct SloSpec {
 }
 
 impl SloSpec {
-    /// Default objectives for `scenario` on a `tick_ns` grid: the
-    /// fabric must demonstrably deliver within 4 ticks of any fault,
-    /// lose nothing at app level, and keep p99 under 2^18 ns.
-    pub fn default_for(sc: Scenario, tick_ns: Time) -> Self {
+    /// Default objectives for `scenario` on a `ticks` × `tick_ns` grid:
+    /// the fabric must demonstrably deliver within 4 ticks of any fault
+    /// (and every individual flow within 8 — except under a partition,
+    /// where cross-cut flows legitimately wait out the cut, roughly a
+    /// third of the run), lose nothing at app level, and keep p99 under
+    /// 2^18 ns.
+    pub fn default_for(sc: Scenario, ticks: u64, tick_ns: Time) -> Self {
+        let span = ticks.max(8) * tick_ns;
         SloSpec {
             max_convergence_ns: 4 * tick_ns,
+            max_pair_convergence_ns: if sc == Scenario::Partition {
+                span / 3 + 8 * tick_ns
+            } else {
+                8 * tick_ns
+            },
             min_delivery_permille: 1000,
             max_p99_ns: 1 << 18,
             expect_backpressure: sc == Scenario::Hotspot,
@@ -131,7 +148,7 @@ impl ChaosConfig {
             msgs_per_tick: 2,
             payload_bytes: 64,
             drain_every: 4,
-            slo: SloSpec::default_for(scenario, tick_ns),
+            slo: SloSpec::default_for(scenario, 30, tick_ns),
         }
     }
 
@@ -149,46 +166,88 @@ impl ChaosConfig {
 }
 
 /// The background-traffic app: counts app-level deliveries and records
-/// per-fault first-delivery times (see the module docs). Messages are
-/// left unconsumed so the bounded receive buffers see every delivery.
+/// **per-flow** per-fault first-delivery times — for every traffic
+/// pair, its own monotone covered-pointer over the fault instants (so a
+/// healthy flow cannot mask a stalled one; see the module docs).
+/// Messages are left unconsumed so the bounded receive buffers see
+/// every delivery.
 pub struct ChaosApp {
     /// Distinct scripted fault instants, ascending (shared, immutable).
     fault_at: Arc<Vec<Time>>,
-    /// First delivery observed at or after each fault instant.
-    first_after: Vec<Option<Time>>,
-    /// `first_after[..covered]` are all `Some` (monotone pointer).
-    covered: usize,
+    /// The traffic pair set (shared, immutable); a delivery is mapped
+    /// to its pair by `(msg.from, ep.node)`.
+    pairs: Arc<Vec<(NodeId, NodeId)>>,
+    /// Per pair: first delivery observed at or after each fault
+    /// instant, with its monotone covered-pointer.
+    first_after: Vec<Vec<Option<Time>>>,
+    covered: Vec<usize>,
     pub received: u64,
     pub bytes: u64,
 }
 
 impl ChaosApp {
-    pub fn new(fault_at: Arc<Vec<Time>>) -> Self {
+    pub fn new(fault_at: Arc<Vec<Time>>, pairs: Arc<Vec<(NodeId, NodeId)>>) -> Self {
         let n = fault_at.len();
-        ChaosApp { fault_at, first_after: vec![None; n], covered: 0, received: 0, bytes: 0 }
+        let p = pairs.len();
+        ChaosApp {
+            fault_at,
+            pairs,
+            first_after: vec![vec![None; n]; p],
+            covered: vec![0; p],
+            received: 0,
+            bytes: 0,
+        }
     }
 
-    /// Worst-case gap between a fault and the first delivery after it;
-    /// faults with no delivery observed count up to `end` (both engines
-    /// finish on the same clock, so this stays byte-identical).
-    pub fn convergence_ns(&self, end: Time) -> Time {
-        self.fault_at
+    /// Per-pair worst-case gap between a fault and the first delivery
+    /// on that pair after it; faults with no delivery observed count up
+    /// to `end` (both engines finish on the same clock, so this stays
+    /// byte-identical). One entry per traffic pair.
+    pub fn pair_convergence_ns(&self, end: Time) -> Vec<Time> {
+        self.first_after
             .iter()
-            .zip(&self.first_after)
-            .map(|(&at, first)| first.unwrap_or(end).saturating_sub(at))
+            .map(|per_fault| {
+                self.fault_at
+                    .iter()
+                    .zip(per_fault)
+                    .map(|(&at, first)| first.unwrap_or(end).saturating_sub(at))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Global convergence: first delivery *anywhere* after each fault,
+    /// worst case over faults. Derived exactly from the per-pair data
+    /// (elementwise minimum over pairs), since every delivery belongs
+    /// to a pair.
+    pub fn convergence_ns(&self, end: Time) -> Time {
+        (0..self.fault_at.len())
+            .map(|f| {
+                let first = self
+                    .first_after
+                    .iter()
+                    .filter_map(|per_fault| per_fault[f])
+                    .min()
+                    .unwrap_or(end);
+                first.saturating_sub(self.fault_at[f])
+            })
             .max()
             .unwrap_or(0)
     }
 }
 
 impl App for ChaosApp {
-    fn on_message(&mut self, net: &mut Network, _ep: Endpoint, msg: &Message) -> bool {
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
         self.received += 1;
         self.bytes += msg.data.len() as u64;
-        let now = net.now();
-        while self.covered < self.fault_at.len() && self.fault_at[self.covered] <= now {
-            self.first_after[self.covered] = Some(now);
-            self.covered += 1;
+        if let Some(p) = self.pairs.iter().position(|&(s, d)| s == msg.from && d == ep.node) {
+            let now = net.now();
+            while self.covered[p] < self.fault_at.len() && self.fault_at[self.covered[p]] <= now
+            {
+                self.first_after[p][self.covered[p]] = Some(now);
+                self.covered[p] += 1;
+            }
         }
         // Not consumed: the message proceeds into the endpoint's
         // bounded inbox, so backpressure semantics stay live.
@@ -198,19 +257,21 @@ impl App for ChaosApp {
 
 impl ShardableApp for ChaosApp {
     fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
-        ChaosApp::new(self.fault_at.clone())
+        ChaosApp::new(self.fault_at.clone(), self.pairs.clone())
     }
 
     fn reduce(&mut self, part: Self) {
         self.received += part.received;
         self.bytes += part.bytes;
-        for (mine, theirs) in self.first_after.iter_mut().zip(part.first_after) {
-            *mine = match (*mine, theirs) {
-                (Some(a), Some(b)) => Some(a.min(b)),
-                (a, b) => a.or(b),
-            };
+        for (p, theirs) in part.first_after.into_iter().enumerate() {
+            for (mine, other) in self.first_after[p].iter_mut().zip(theirs) {
+                *mine = match (*mine, other) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+            self.covered[p] = self.first_after[p].iter().take_while(|f| f.is_some()).count();
         }
-        self.covered = self.first_after.iter().take_while(|f| f.is_some()).count();
     }
 }
 
@@ -231,6 +292,11 @@ pub struct SloReport {
     pub p50_ns: Time,
     pub p99_ns: Time,
     pub convergence_ns: Time,
+    /// Worst per-flow convergence: the slowest (src, dst) pair's worst
+    /// fault-to-first-delivery gap.
+    pub worst_pair_convergence_ns: Time,
+    /// p99 across the pairs' convergence figures.
+    pub p99_pair_convergence_ns: Time,
     pub dropped: u64,
     pub stalled_ns: u64,
     pub slo: SloSpec,
@@ -261,6 +327,12 @@ impl SloReport {
                 self.delivered, self.sent, self.slo.min_delivery_permille
             ));
         }
+        if self.worst_pair_convergence_ns > self.slo.max_pair_convergence_ns {
+            v.push(format!(
+                "worst pair convergence {}ns exceeds SLO {}ns",
+                self.worst_pair_convergence_ns, self.slo.max_pair_convergence_ns
+            ));
+        }
         if self.p99_ns > self.slo.max_p99_ns {
             v.push(format!("p99 {}ns exceeds SLO {}ns", self.p99_ns, self.slo.max_p99_ns));
         }
@@ -282,8 +354,10 @@ impl SloReport {
              \"sent\": {},\n  \"delivered\": {},\n  \"bytes_delivered\": {},\n  \
              \"elapsed_ns\": {},\n  \"throughput_msgs_per_s\": {:.1},\n  \
              \"p50_ns\": {},\n  \"p99_ns\": {},\n  \"convergence_ns\": {},\n  \
+             \"worst_pair_convergence_ns\": {},\n  \"p99_pair_convergence_ns\": {},\n  \
              \"dropped\": {},\n  \"stalled_ns\": {},\n  \
-             \"slo\": {{\"max_convergence_ns\": {}, \"min_delivery_permille\": {}, \
+             \"slo\": {{\"max_convergence_ns\": {}, \"max_pair_convergence_ns\": {}, \
+             \"min_delivery_permille\": {}, \
              \"max_p99_ns\": {}, \"expect_backpressure\": {}}},\n  \
              \"violations\": [{}],\n  \"passed\": {}\n}}\n",
             self.scenario,
@@ -297,9 +371,12 @@ impl SloReport {
             self.p50_ns,
             self.p99_ns,
             self.convergence_ns,
+            self.worst_pair_convergence_ns,
+            self.p99_pair_convergence_ns,
             self.dropped,
             self.stalled_ns,
             self.slo.max_convergence_ns,
+            self.slo.max_pair_convergence_ns,
             self.slo.min_delivery_permille,
             self.slo.max_p99_ns,
             self.slo.expect_backpressure,
@@ -354,12 +431,12 @@ pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport 
         .nodes()
         .filter(|n| !script.excluded.contains(n) && script.hotspot != Some(*n))
         .collect();
-    let pairs = traffic_pairs(&nodes, &script, cfg);
+    let pairs = Arc::new(traffic_pairs(&nodes, &script, cfg));
 
     // One endpoint per participating node (sources send, destinations
     // are drained); pair-setup modes connect exactly the pairs used.
     let mut eps: std::collections::BTreeMap<u32, Endpoint> = std::collections::BTreeMap::new();
-    for &(src, dst) in &pairs {
+    for &(src, dst) in pairs.iter() {
         eps.entry(src.0).or_insert_with(|| net.open(src, cfg.comm));
         eps.entry(dst.0).or_insert_with(|| net.open(dst, cfg.comm));
     }
@@ -367,7 +444,7 @@ pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport 
         eps.entry(sink.0).or_insert_with(|| net.open(sink, cfg.comm));
     }
     if net.caps(cfg.comm).pair_setup {
-        for &(src, dst) in &pairs {
+        for &(src, dst) in pairs.iter() {
             net.connect(&eps[&src.0], dst);
         }
     }
@@ -377,7 +454,7 @@ pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport 
         ts.dedup(); // already sorted
         ts
     });
-    let mut app = ChaosApp::new(fault_at.clone());
+    let mut app = ChaosApp::new(fault_at.clone(), pairs.clone());
 
     // Run at least two ticks past the last scripted fault so every
     // fault has post-fault traffic to converge on.
@@ -423,7 +500,7 @@ pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport 
         // silent until the partition heals (conservatively from t=0,
         // so no cross-cut packet is ever in flight when the plane
         // drops).
-        for (src, dst) in &pairs {
+        for (src, dst) in pairs.iter() {
             if let Some((side, heal_at)) = &cut {
                 if side[src.0 as usize] != side[dst.0 as usize] && t0 < *heal_at {
                     continue;
@@ -457,6 +534,13 @@ pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport 
     let convergence = app.convergence_ns(end);
     net.record_reroute_convergence(convergence);
 
+    // Per-pair convergence: how long until *each* (src, dst) pair saw
+    // post-fault traffic again, graded at the worst pair and p99-pair.
+    let mut pair_conv = app.pair_convergence_ns(end);
+    pair_conv.sort_unstable();
+    let worst_pair = pair_conv.last().copied().unwrap_or(0);
+    let p99_pair = pair_conv[((pair_conv.len() * 99).div_ceil(100)).saturating_sub(1)];
+
     let m = net.metrics();
     let mut all = LatencyHist::new();
     for h in m.packet_latency.values() {
@@ -473,6 +557,8 @@ pub fn run<F: Fabric>(net: &mut F, cfg: &ChaosConfig, shards: u32) -> SloReport 
         p50_ns: all.percentile(0.50),
         p99_ns: all.percentile(0.99),
         convergence_ns: convergence,
+        worst_pair_convergence_ns: worst_pair,
+        p99_pair_convergence_ns: p99_pair,
         dropped: m.dropped,
         stalled_ns: m.stalled_ns,
         slo: cfg.slo,
@@ -499,6 +585,12 @@ mod tests {
         assert_eq!(report.delivered, report.sent, "app-level loss under storm");
         assert!(report.passed(), "storm violated SLOs: {:?}", report.violations());
         assert!(report.convergence_ns > 0, "storm scripted no measurable fault");
+        // Per-pair convergence brackets the aggregate: the worst pair is
+        // at least as slow as the slowest fault's fastest pair, and the
+        // p99 pair never exceeds the worst.
+        assert!(report.worst_pair_convergence_ns >= report.convergence_ns);
+        assert!(report.p99_pair_convergence_ns <= report.worst_pair_convergence_ns);
+        assert!(report.p99_pair_convergence_ns > 0);
     }
 
     #[test]

@@ -258,6 +258,42 @@ fn finish(mut events: Vec<FaultEvent>, mut script: FaultScript) -> FaultScript {
     script
 }
 
+/// Compile a drop script for *chosen* victims — workload chaos, where
+/// the dying node must be a specific rank/learner/worker rather than a
+/// seeded bystander. Deaths are two-phase like [`Scenario::Drop`]
+/// (inbound at `at`, outbound two ticks later) and connectivity-checked
+/// the same way: a victim whose removal would disconnect the surviving
+/// mesh is silently skipped, so callers must take the victim set from
+/// the returned `excluded`, not from their request.
+pub fn targeted_drop(
+    topo: &Arc<Topology>,
+    victims: &[NodeId],
+    at: Time,
+    tick_ns: Time,
+) -> FaultScript {
+    let mut live = LiveLinks::new(topo);
+    let mut events = Vec::new();
+    let mut excluded: Vec<NodeId> = Vec::new();
+    for &victim in victims {
+        if excluded.contains(&victim) {
+            continue;
+        }
+        let ins: Vec<LinkId> = topo.in_links(victim).to_vec();
+        let outs: Vec<LinkId> = topo.out_links(victim).to_vec();
+        let all: Vec<LinkId> = ins.iter().chain(outs.iter()).copied().collect();
+        if live.fail_all_if_safe(topo, &all, &[&excluded[..], &[victim]].concat()) {
+            excluded.push(victim);
+            for &l in &ins {
+                events.push(FaultEvent { at, kind: FaultKind::Fail(l) });
+            }
+            for &l in &outs {
+                events.push(FaultEvent { at: at + 2 * tick_ns, kind: FaultKind::Fail(l) });
+            }
+        }
+    }
+    finish(events, FaultScript { events: vec![], excluded, cut: None, hotspot: None })
+}
+
 /// The reverse twin of `l` (every mesh link has one; a topology
 /// invariant tested in `tests/properties.rs`).
 pub fn reverse(topo: &Topology, l: LinkId) -> LinkId {
@@ -465,6 +501,40 @@ mod tests {
             let out_min = out_t.iter().min().unwrap();
             assert!(in_max < out_min, "inbound severed strictly before outbound");
         }
+    }
+
+    #[test]
+    fn targeted_drop_severs_the_requested_victims_in_two_phases() {
+        let topo = Arc::new(Topology::preset(SystemPreset::Card));
+        let victims = [NodeId(5), NodeId(13)];
+        let s = targeted_drop(&topo, &victims, 200_000, 50_000);
+        assert_eq!(s.excluded, victims.to_vec(), "Card survives losing two nodes");
+        for &v in &s.excluded {
+            let in_t: Vec<Time> = s
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, FaultKind::Fail(l) if topo.link(l).dst == v))
+                .map(|e| e.at)
+                .collect();
+            let out_t: Vec<Time> = s
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, FaultKind::Fail(l) if topo.link(l).src == v))
+                .map(|e| e.at)
+                .collect();
+            assert_eq!(in_t.len(), topo.in_links(v).len());
+            assert_eq!(out_t.len(), topo.out_links(v).len());
+            assert!(in_t.iter().all(|&t| t == 200_000));
+            assert!(out_t.iter().all(|&t| t == 300_000));
+        }
+        // Replayed, the survivors stay connected.
+        let mut failed = vec![false; topo.link_count()];
+        for e in &s.events {
+            if let FaultKind::Fail(l) = e.kind {
+                failed[l.0 as usize] = true;
+            }
+        }
+        assert!(connected(&topo, &failed, &s.excluded));
     }
 
     #[test]

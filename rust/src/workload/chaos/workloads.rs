@@ -1,0 +1,521 @@
+//! Workload chaos: the *real* workloads — streamed learners, the ring
+//! all-reduce, distributed MCTS — run over the reliable transport while
+//! a scripted fault scenario tears at the fabric (EXPERIMENTS.md E14).
+//!
+//! Where the background-traffic harness ([`super`]) measures the
+//! *fabric* (latency, convergence, backpressure), this one grades
+//! end-to-end application guarantees: the workload completes, its
+//! answer is correct for the surviving membership, the recovery
+//! machinery actually engaged (retransmits, failure declarations), and
+//! it never misfired (no false peer deaths under storm or partition).
+//! Runs are byte-identical across engines and shard counts
+//! (`tests/sharded_differential.rs`).
+//!
+//! Scenario → workload contract:
+//! * `storm` — link bursts reroute traffic; the run must stay lossless
+//!   with **zero** failure declarations.
+//! * `partition` — the mesh splits for ~⅓ of the run; cross-cut flows
+//!   stall, retransmit and recover after the heal. The per-scenario
+//!   [`ReliableParams`] keep the liveness threshold above the cut span,
+//!   so a temporarily unreachable peer is never declared dead.
+//! * `drop` — a scripted *participant* dies two-phase mid-run
+//!   ([`targeted_drop`]); the survivors must detect it, re-place or
+//!   shrink, and still finish with the right answer.
+
+use std::sync::Arc;
+
+use crate::channels::endpoint::CommMode;
+use crate::channels::reliable::ReliableParams;
+use crate::config::SystemConfig;
+use crate::coordinator::collectives::RingAllreduce;
+use crate::network::{Fabric, ShardableApp};
+use crate::sim::Time;
+use crate::topology::{NodeId, Topology};
+use crate::workload::learners::{LearnerConfig, Learners, SendStrategy};
+use crate::workload::mcts::{DistributedMcts, Game};
+
+use super::scenario::{targeted_drop, FaultKind, FaultScript, Scenario};
+
+/// Which workload rides the storm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosWorkload {
+    Learners,
+    Allreduce,
+    Mcts,
+}
+
+impl ChaosWorkload {
+    pub const ALL: [ChaosWorkload; 3] =
+        [ChaosWorkload::Learners, ChaosWorkload::Allreduce, ChaosWorkload::Mcts];
+
+    pub fn parse(s: &str) -> Option<ChaosWorkload> {
+        match s.to_ascii_lowercase().as_str() {
+            "learners" => Some(ChaosWorkload::Learners),
+            "allreduce" => Some(ChaosWorkload::Allreduce),
+            "mcts" => Some(ChaosWorkload::Mcts),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosWorkload::Learners => "learners",
+            ChaosWorkload::Allreduce => "allreduce",
+            ChaosWorkload::Mcts => "mcts",
+        }
+    }
+}
+
+/// The scenarios a workload runs under. `hotspot` and `flap` stay
+/// background-traffic-only: the hotspot sink's drain cadence and the
+/// flappers' NIC-local droughts don't compose with a workload's own
+/// schedule.
+pub const WORKLOAD_SCENARIOS: [Scenario; 3] =
+    [Scenario::Storm, Scenario::Partition, Scenario::Drop];
+
+/// One workload-chaos experiment's identity: everything that shapes
+/// placement, schedule, faults or transport tuning. Equal configs on a
+/// fresh fabric produce byte-identical [`WorkloadReport`]s.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadChaosConfig {
+    pub workload: ChaosWorkload,
+    pub scenario: Scenario,
+    pub seed: u64,
+    /// Fault/tick grid the scenario script is staggered over.
+    pub ticks: u64,
+    pub tick_ns: Time,
+}
+
+impl WorkloadChaosConfig {
+    pub fn new(workload: ChaosWorkload, scenario: Scenario, seed: u64) -> Self {
+        assert!(
+            WORKLOAD_SCENARIOS.contains(&scenario),
+            "workload chaos supports storm|partition|drop, not {}",
+            scenario.name()
+        );
+        WorkloadChaosConfig { workload, scenario, seed, ticks: 24, tick_ns: 50_000 }
+    }
+
+    /// Per-scenario transport tuning (recorded with the seed — part of
+    /// the run's identity, EXPERIMENTS.md §Reliable transport). A
+    /// partition must not look like a death: its liveness threshold
+    /// exceeds the cut span (~⅓ of the run) with margin, and the
+    /// default retry budget's cumulative backoff (~9.5 ms) dwarfs the
+    /// outage. The drop scenario tightens both so detection lands well
+    /// inside the run.
+    pub fn reliable_params(&self) -> ReliableParams {
+        match self.scenario {
+            Scenario::Partition => {
+                ReliableParams { liveness_ns: 2_500_000, ..ReliableParams::default() }
+            }
+            Scenario::Drop => ReliableParams {
+                rto_ns: 30_000,
+                max_retries: 4,
+                heartbeat_ns: 50_000,
+                liveness_ns: 300_000,
+                ..ReliableParams::default()
+            },
+            _ => ReliableParams::default(),
+        }
+    }
+
+    /// The system a workload-chaos run wants: Card preset with
+    /// `drop_unroutable` — node deaths and partition cuts strand
+    /// packets, and the transport (not a panic) is the recovery path.
+    pub fn system_config(&self) -> SystemConfig {
+        let mut cfg = SystemConfig::card();
+        cfg.drop_unroutable = true;
+        cfg
+    }
+}
+
+/// The graded outcome of one workload-chaos run; field-for-field
+/// deterministic, so differential tests compare engines with `==`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadReport {
+    pub workload: &'static str,
+    pub scenario: &'static str,
+    pub seed: u64,
+    pub shards: u32,
+    /// The workload ran to completion on the surviving membership.
+    pub completed: bool,
+    /// The completed answer was right — per-workload: every live record
+    /// delivered exactly once (learners), every survivor holding the
+    /// survivors' sum (all-reduce), every rollout accounted for (MCTS) —
+    /// with exactly the scripted membership change and no other.
+    pub correct: bool,
+    /// Work units expected / observed (records, surviving ranks,
+    /// rollouts).
+    pub expected: u64,
+    pub delivered: u64,
+    /// Records re-placed onto a live peer after a death (learners; the
+    /// other workloads re-place internally).
+    pub replaced: u64,
+    pub elapsed_ns: Time,
+    pub retransmits: u64,
+    pub acks: u64,
+    pub duplicates_dropped: u64,
+    pub peers_declared_down: u64,
+    pub dropped: u64,
+    /// The scenario is supposed to force retransmission.
+    pub expect_retransmits: bool,
+    /// The scenario is supposed to kill a participant.
+    pub expect_peers_down: bool,
+}
+
+impl WorkloadReport {
+    pub fn violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if !self.completed {
+            v.push(format!(
+                "workload did not complete ({} of {} units)",
+                self.delivered, self.expected
+            ));
+        }
+        if self.completed && !self.correct {
+            v.push("workload completed with a wrong answer or membership".into());
+        }
+        if self.acks == 0 {
+            v.push("reliable transport saw no acks (workload bypassed it?)".into());
+        }
+        if self.expect_retransmits && self.retransmits == 0 {
+            v.push("scenario scripted loss but nothing was retransmitted".into());
+        }
+        if self.expect_peers_down && self.peers_declared_down == 0 {
+            v.push("scripted death was never detected".into());
+        }
+        if !self.expect_peers_down && self.peers_declared_down > 0 {
+            v.push(format!(
+                "false failure detection: {} peer(s) declared down",
+                self.peers_declared_down
+            ));
+        }
+        v
+    }
+
+    pub fn passed(&self) -> bool {
+        self.violations().is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"workload\": \"{}\",\n  \"scenario\": \"{}\",\n  \"seed\": {},\n  \
+             \"shards\": {},\n  \"completed\": {},\n  \"correct\": {},\n  \
+             \"expected\": {},\n  \"delivered\": {},\n  \"replaced\": {},\n  \
+             \"elapsed_ns\": {},\n  \"retransmits\": {},\n  \"acks\": {},\n  \
+             \"duplicates_dropped\": {},\n  \"peers_declared_down\": {},\n  \
+             \"dropped\": {},\n  \"violations\": [{}],\n  \"passed\": {}\n}}",
+            self.workload,
+            self.scenario,
+            self.seed,
+            self.shards,
+            self.completed,
+            self.correct,
+            self.expected,
+            self.delivered,
+            self.replaced,
+            self.elapsed_ns,
+            self.retransmits,
+            self.acks,
+            self.duplicates_dropped,
+            self.peers_declared_down,
+            self.dropped,
+            self.violations()
+                .iter()
+                .map(|v| format!("\"{v}\""))
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.passed(),
+        )
+    }
+}
+
+/// The scenario's fault script, with the drop victim chosen *by the
+/// workload* (its placement decides who dies) instead of seeded.
+fn script_for(
+    cfg: &WorkloadChaosConfig,
+    topo: &Arc<Topology>,
+    victim: NodeId,
+    death_tick: u64,
+) -> FaultScript {
+    match cfg.scenario {
+        Scenario::Drop => {
+            let s = targeted_drop(topo, &[victim], death_tick * cfg.tick_ns, cfg.tick_ns);
+            assert_eq!(s.excluded, vec![victim], "drop victim must be severable");
+            s
+        }
+        sc => sc.script(topo, cfg.seed, cfg.ticks, cfg.tick_ns),
+    }
+}
+
+/// Apply the script at tick boundaries (driver context: both engines'
+/// clocks sit exactly on the boundary) while the workload runs in
+/// `run_until` windows. `on_tick` fires right after the boundary's
+/// faults land — production scheduling goes there. The final
+/// run-to-quiescence drains retransmit tails, re-placements and the
+/// liveness watches' bounded horizon.
+fn drive<F: Fabric, A: ShardableApp>(
+    net: &mut F,
+    app: &mut A,
+    script: &FaultScript,
+    ticks: u64,
+    tick_ns: Time,
+    mut on_tick: impl FnMut(&mut F, u64),
+) {
+    let run_ticks = ticks.max(script.horizon() / tick_ns + 2);
+    let mut next = 0usize;
+    for tick in 0..run_ticks {
+        let t0 = tick * tick_ns;
+        while next < script.events.len() && script.events[next].at <= t0 {
+            match script.events[next].kind {
+                FaultKind::Fail(l) => net.fail_link(l),
+                FaultKind::Repair(l) => net.repair_link(l),
+            }
+            next += 1;
+        }
+        on_tick(net, tick);
+        net.run_until(app, t0 + tick_ns);
+    }
+    net.run(app);
+}
+
+/// Run one workload-chaos experiment on a **fresh** fabric (clock 0,
+/// empty metrics; `drop_unroutable` must be set — see
+/// [`WorkloadChaosConfig::system_config`]) and grade it.
+pub fn run_workload<F: Fabric>(
+    net: &mut F,
+    cfg: &WorkloadChaosConfig,
+    shards: u32,
+) -> WorkloadReport {
+    assert!(
+        net.config().drop_unroutable,
+        "workload chaos needs drop_unroutable (WorkloadChaosConfig::system_config)"
+    );
+    let topo = net.topo().clone();
+    let params = cfg.reliable_params();
+    // Liveness watches outlive the scripted window with slack, so a
+    // death after the last scheduled send still gets detected.
+    let watch_until = cfg.ticks * cfg.tick_ns + 4_000_000;
+    let (completed, correct, expected, delivered, replaced) = match cfg.workload {
+        ChaosWorkload::Learners => run_learners(net, cfg, &topo, params),
+        ChaosWorkload::Allreduce => run_allreduce(net, cfg, &topo, params, watch_until),
+        ChaosWorkload::Mcts => run_mcts(net, cfg, &topo, params, watch_until),
+    };
+    let m = net.metrics();
+    WorkloadReport {
+        workload: cfg.workload.name(),
+        scenario: cfg.scenario.name(),
+        seed: cfg.seed,
+        shards,
+        completed,
+        correct,
+        expected,
+        delivered,
+        replaced,
+        elapsed_ns: net.now(),
+        retransmits: m.retransmits,
+        acks: m.acks,
+        duplicates_dropped: m.duplicates_dropped,
+        peers_declared_down: m.peers_declared_down,
+        dropped: m.dropped,
+        // The all-reduce can finish before a partition's cut lands, so
+        // only the continuously-producing workloads must retransmit
+        // there; a drop always strands something.
+        expect_retransmits: matches!(
+            (cfg.scenario, cfg.workload),
+            (Scenario::Drop, _)
+                | (Scenario::Partition, ChaosWorkload::Learners | ChaosWorkload::Mcts)
+        ),
+        expect_peers_down: cfg.scenario == Scenario::Drop,
+    }
+}
+
+/// Streamed learners (E8's grid) producing a step per tick; under
+/// `drop`, learner 3 dies at tick 8 and its senders re-place.
+fn run_learners<F: Fabric>(
+    net: &mut F,
+    cfg: &WorkloadChaosConfig,
+    topo: &Arc<Topology>,
+    params: ReliableParams,
+) -> (bool, bool, u64, u64, u64) {
+    let lcfg = LearnerConfig {
+        learners: 8,
+        outputs_per_step: 8,
+        record_bytes: 64,
+        compute_ns: cfg.tick_ns,
+        steps: 20,
+        // Stride 2 spreads the grid across x-planes (Card: x = id mod
+        // 3), so a partition cut always separates some learner pairs.
+        stride: 2,
+        comm: CommMode::Postmaster { queue: 0 },
+        reliable: Some(params),
+    };
+    let grid = Learners::setup(net, lcfg);
+    let victim_idx = 3;
+    let death_tick = 8u64;
+    let script = script_for(cfg, topo, grid.nodes[victim_idx], death_tick);
+    let mut app = grid.app_for(0);
+    let mut scheduled = 0u64;
+    drive(net, &mut app, &script, cfg.ticks, cfg.tick_ns, |net, tick| {
+        if tick >= lcfg.steps as u64 {
+            return;
+        }
+        // A dead learner stops producing (driver knowledge: the script
+        // says when the node crashes). It stops two ticks *early* so
+        // the acks for its final step return before its inbound links
+        // die — otherwise its delivered-but-unacked records would be
+        // re-placed as duplicates, which no protocol can distinguish.
+        let skip: &[NodeId] = if cfg.scenario == Scenario::Drop && tick + 2 > death_tick {
+            &script.excluded
+        } else {
+            &[]
+        };
+        scheduled +=
+            grid.schedule_step_at(net, tick * cfg.tick_ns, SendStrategy::Streamed, skip);
+    });
+    app.expected = scheduled;
+    // Exactly-once: every scheduled record lands precisely once — the
+    // two-phase death makes unacked ⟺ undelivered, so re-placement
+    // neither loses nor duplicates.
+    let completed = app.received == app.expected;
+    let correct = match cfg.scenario {
+        Scenario::Drop => completed && app.dead[victim_idx] && app.replaced > 0,
+        _ => completed && !app.any_dead() && app.replaced == 0,
+    };
+    (completed, correct, app.expected, app.received, app.replaced)
+}
+
+/// Ring all-reduce (1 MiB over 4 ranks straddling every cut plane);
+/// under `drop`, rank 2 dies at tick 1 and the ring must shrink.
+fn run_allreduce<F: Fabric>(
+    net: &mut F,
+    cfg: &WorkloadChaosConfig,
+    topo: &Arc<Topology>,
+    params: ReliableParams,
+    watch_until: Time,
+) -> (bool, bool, u64, u64, u64) {
+    // Card corners: x = 0, 2, 0, 2 — on both sides of any x-plane cut.
+    let ranks = vec![NodeId(0), NodeId(2), NodeId(24), NodeId(26)];
+    let victim_idx = 2usize;
+    let mut ar = RingAllreduce::with_mode_reliable(
+        net,
+        ranks.clone(),
+        1 << 20,
+        CommMode::Postmaster { queue: 0 },
+        params,
+        watch_until,
+    );
+    let script = script_for(cfg, topo, ranks[victim_idx], 1);
+    ar.kickoff(net);
+    drive(net, &mut ar, &script, cfg.ticks, cfg.tick_ns, |_, _| {});
+    let dead = ar.dead_union();
+    let completed = ar.is_complete();
+    let want = ar.expected_sum();
+    let survivors: Vec<usize> =
+        (0..ranks.len()).filter(|&i| dead & (1 << i) == 0).collect();
+    let delivered = survivors.iter().filter(|&&i| ar.reduced(i) == want).count() as u64;
+    let expected = survivors.len() as u64;
+    let membership_right = match cfg.scenario {
+        Scenario::Drop => dead == 1 << victim_idx,
+        _ => dead == 0,
+    };
+    let correct = completed && membership_right && delivered == expected;
+    (completed, correct, expected, delivered, 0)
+}
+
+/// Distributed MCTS (240 rollouts, 6 workers around a leader); under
+/// `drop`, worker 2 dies at tick 8 and the leader re-dispatches.
+fn run_mcts<F: Fabric>(
+    net: &mut F,
+    cfg: &WorkloadChaosConfig,
+    topo: &Arc<Topology>,
+    params: ReliableParams,
+    watch_until: Time,
+) -> (bool, bool, u64, u64, u64) {
+    let leader = NodeId(0);
+    let workers: Vec<NodeId> = (1..=6).map(NodeId).collect();
+    let victim_idx = 2usize;
+    let rollouts = 240u64;
+    let game = Game { depth: 6, branching: 3, seed: 42 };
+    let mut mcts = DistributedMcts::with_mode_reliable(
+        net,
+        game,
+        leader,
+        workers.clone(),
+        CommMode::Postmaster { queue: 1 },
+        params,
+        watch_until,
+    );
+    let script = script_for(cfg, topo, workers[victim_idx], 8);
+    mcts.kickoff(net, rollouts);
+    drive(net, &mut mcts, &script, cfg.ticks, cfg.tick_ns, |_, _| {});
+    let completed = mcts.is_complete();
+    let delivered = mcts.rollouts_done;
+    let deaths = mcts.dead_workers().iter().filter(|&&d| d).count();
+    let membership_right = match cfg.scenario {
+        Scenario::Drop => deaths == 1 && mcts.dead_workers()[victim_idx],
+        _ => deaths == 0,
+    };
+    let correct = completed && delivered == rollouts && membership_right;
+    (completed, correct, rollouts, delivered, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Network;
+
+    fn run_one(w: ChaosWorkload, sc: Scenario, seed: u64) -> WorkloadReport {
+        let cfg = WorkloadChaosConfig::new(w, sc, seed);
+        let mut net = Network::new(cfg.system_config());
+        run_workload(&mut net, &cfg, 1)
+    }
+
+    #[test]
+    fn every_workload_survives_every_scenario() {
+        for w in ChaosWorkload::ALL {
+            for sc in WORKLOAD_SCENARIOS {
+                let r = run_one(w, sc, 7);
+                assert!(
+                    r.passed(),
+                    "{}/{}: {:?}",
+                    r.workload,
+                    r.scenario,
+                    r.violations()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drop_scenario_engages_the_recovery_machinery() {
+        let r = run_one(ChaosWorkload::Learners, Scenario::Drop, 3);
+        assert!(r.peers_declared_down > 0, "the death was never detected");
+        assert!(r.retransmits > 0, "stranded records were never retried");
+        assert!(r.replaced > 0, "undelivered records were never re-placed");
+        assert_eq!(r.delivered, r.expected, "exactly-once violated");
+    }
+
+    #[test]
+    fn allreduce_shrinks_instead_of_hanging() {
+        let r = run_one(ChaosWorkload::Allreduce, Scenario::Drop, 11);
+        assert!(r.passed(), "{:?}", r.violations());
+        assert_eq!(r.expected, 3, "the ring shrank to the three survivors");
+        assert_eq!(r.delivered, 3, "every survivor holds the survivors' sum");
+    }
+
+    #[test]
+    fn reports_are_pure_functions_of_their_config() {
+        let a = run_one(ChaosWorkload::Mcts, Scenario::Partition, 9);
+        let b = run_one(ChaosWorkload::Mcts, Scenario::Partition, 9);
+        assert_eq!(a, b, "workload chaos is not a pure function of its seed");
+    }
+
+    #[test]
+    fn report_json_carries_the_verdict() {
+        let r = run_one(ChaosWorkload::Allreduce, Scenario::Storm, 5);
+        let json = r.to_json();
+        assert!(json.contains("\"workload\": \"allreduce\""), "{json}");
+        assert!(json.contains("\"passed\": true"), "{json}");
+    }
+}

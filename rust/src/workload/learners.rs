@@ -20,8 +20,24 @@
 //! over Postmaster DMA (the paper's recommendation), internal Ethernet
 //! or Bridge FIFO — `repro learners --comm pm|eth|fifo` — and the
 //! per-mode makespans quantify *why* §3.2 recommends Postmaster.
+//!
+//! # Reliable mode: work re-placement
+//!
+//! With [`LearnerConfig::reliable`] set, records ride the
+//! ack/retransmit transport ([`crate::channels::reliable`]). When a
+//! learner dies (chaos `drop`), each sender discovers it independently
+//! — its retry budget for that peer exhausts — and *re-places* the
+//! undelivered records ([`crate::network::Network::reliable_take_unacked`])
+//! on the next live learner. The chaos two-phase node death makes
+//! "unacked" coincide exactly with "undelivered", so every record from
+//! a live learner is processed exactly once, just possibly elsewhere.
+//! Re-placement targets are chosen from *node-local* transport state
+//! ([`crate::network::Network::reliable_is_down`] at the declaring
+//! endpoint), never from globally-merged knowledge — the serial and
+//! sharded engines see identical locals, keeping runs byte-identical.
 
 use crate::channels::endpoint::{CommMode, Endpoint, Message};
+use crate::channels::reliable::ReliableParams;
 use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -54,6 +70,9 @@ pub struct LearnerConfig {
     pub stride: usize,
     /// The virtual channel the records travel over.
     pub comm: CommMode,
+    /// Run over the reliable transport (module docs); the mode must be
+    /// one the transport accepts (Postmaster or Ethernet).
+    pub reliable: Option<ReliableParams>,
 }
 
 impl Default for LearnerConfig {
@@ -66,6 +85,7 @@ impl Default for LearnerConfig {
             steps: 4,
             stride: 1,
             comm: CommMode::Postmaster { queue: 0 },
+            reliable: None,
         }
     }
 }
@@ -77,9 +97,35 @@ pub struct StepStats {
     pub records: u64,
 }
 
-struct LearnerApp {
-    expected: u64,
-    received: u64,
+/// The receive/re-place half of the workload: counts landed records
+/// and, in reliable mode, re-places a dead peer's undelivered ones.
+pub struct LearnerApp {
+    pub expected: u64,
+    pub received: u64,
+    /// Records re-sent to a different learner after their original
+    /// target died.
+    pub replaced: u64,
+    /// Learners some sender has declared dead (reporting only — never
+    /// consulted for traffic decisions; see module docs).
+    pub dead: Vec<bool>,
+    nodes: Vec<NodeId>,
+}
+
+impl LearnerApp {
+    fn new(nodes: Vec<NodeId>, expected: u64) -> Self {
+        LearnerApp {
+            expected,
+            received: 0,
+            replaced: 0,
+            dead: vec![false; nodes.len()],
+            nodes,
+        }
+    }
+
+    /// Whether any learner was declared dead during the step.
+    pub fn any_dead(&self) -> bool {
+        self.dead.iter().any(|&d| d)
+    }
 }
 
 impl App for LearnerApp {
@@ -88,14 +134,49 @@ impl App for LearnerApp {
         // Consumed: the record never enters the recv inbox.
         true
     }
+
+    fn on_peer_down(&mut self, net: &mut Network, ep: Endpoint, peer: NodeId) {
+        let Some(pi) = self.nodes.iter().position(|&n| n == peer) else { return };
+        self.dead[pi] = true;
+        let msgs = net.reliable_take_unacked(&ep, peer);
+        if msgs.is_empty() {
+            return;
+        }
+        // Next learner after the dead one that *this endpoint* still
+        // believes live — node-local state, identical on both engines.
+        let k = self.nodes.len();
+        let target = (1..k)
+            .map(|s| self.nodes[(pi + s) % k])
+            .find(|&c| c != ep.node && !net.reliable_is_down(&ep, c));
+        match target {
+            Some(t) => {
+                let now = net.now();
+                for m in msgs {
+                    net.reliable_send_at(now, &ep, t, m);
+                    self.replaced += 1;
+                }
+            }
+            None => {
+                // Everyone else is gone: process the work locally.
+                for _ in msgs {
+                    self.received += 1;
+                    self.replaced += 1;
+                }
+            }
+        }
+    }
 }
 
 impl ShardableApp for LearnerApp {
     fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
-        LearnerApp { expected: 0, received: 0 }
+        LearnerApp::new(self.nodes.clone(), 0)
     }
     fn reduce(&mut self, part: Self) {
         self.received += part.received;
+        self.replaced += part.replaced;
+        for (d, p) in self.dead.iter_mut().zip(&part.dead) {
+            *d |= p;
+        }
     }
 }
 
@@ -110,50 +191,141 @@ fn dst_of(nodes: &[NodeId], i: usize, k: usize) -> NodeId {
     }
 }
 
-/// Run the workload on either engine; returns per-step stats.
-pub fn run<F: Fabric>(
-    net: &mut F,
-    cfg: LearnerConfig,
-    strategy: SendStrategy,
-) -> Vec<StepStats> {
-    let nodes: Vec<NodeId> =
-        net.topo().nodes().step_by(cfg.stride.max(1)).take(cfg.learners).collect();
-    assert!(nodes.len() >= 2, "need at least two learners");
-    let eps: Vec<Endpoint> = nodes.iter().map(|&n| net.open(n, cfg.comm)).collect();
-    if net.caps(cfg.comm).pair_setup {
-        // Pre-establish exactly the pairs the schedule uses.
-        for i in 0..nodes.len() {
-            for k in 0..cfg.outputs_per_step {
-                net.connect(&eps[i], dst_of(&nodes, i, k));
+/// A placed learner grid with open endpoints: the setup half of
+/// [`run`], split out so harnesses (chaos) can interleave fault
+/// injection with stepped execution.
+pub struct Learners {
+    pub cfg: LearnerConfig,
+    pub nodes: Vec<NodeId>,
+}
+
+impl Learners {
+    /// Select nodes and open (plain or reliable) endpoints at each.
+    pub fn setup<F: Fabric>(net: &mut F, cfg: LearnerConfig) -> Self {
+        let nodes: Vec<NodeId> =
+            net.topo().nodes().step_by(cfg.stride.max(1)).take(cfg.learners).collect();
+        assert!(nodes.len() >= 2, "need at least two learners");
+        for &n in &nodes {
+            match cfg.reliable {
+                Some(p) => {
+                    net.reliable_open(n, cfg.comm, p);
+                }
+                None => {
+                    net.open(n, cfg.comm);
+                }
             }
         }
+        if net.caps(cfg.comm).pair_setup {
+            // Pre-establish exactly the pairs the schedule uses.
+            for i in 0..nodes.len() {
+                let ep = Endpoint { node: nodes[i], mode: cfg.comm };
+                for k in 0..cfg.outputs_per_step {
+                    net.connect(&ep, dst_of(&nodes, i, k));
+                }
+            }
+        }
+        Learners { cfg, nodes }
     }
-    let mut out = Vec::with_capacity(cfg.steps as usize);
-    for _step in 0..cfg.steps {
+
+    /// Schedule one step's record sends (each at its production time)
+    /// and return the app that counts them down. The caller runs the
+    /// fabric — to quiescence, or in windows with faults in between.
+    pub fn schedule_step<F: Fabric>(&self, net: &mut F, strategy: SendStrategy) -> LearnerApp {
         let t0 = net.now();
-        // Each learner sends `outputs_per_step` records round-robin to
-        // the other learners, each produced at its production time.
+        let records = self.schedule_step_at(net, t0, strategy, &[]);
+        LearnerApp::new(self.nodes.clone(), records)
+    }
+
+    /// Schedule one step's sends on an *explicit* step origin `t0`
+    /// (must be ≥ the fabric clock). Harnesses that drive steps on a
+    /// tick grid (workload chaos) call this per tick and keep one
+    /// accumulated [`LearnerApp`]; returns the records scheduled.
+    ///
+    /// `skip` names learners that have stopped producing (the chaos
+    /// script's dead nodes — driver knowledge, identical on both
+    /// engines): a crashed FPGA emits no records. In reliable mode a
+    /// *live* producer also re-places, at production time, any record
+    /// whose target it has already declared dead — the same node-local
+    /// next-live rule the `on_peer_down` hook uses, so engines stay
+    /// byte-identical.
+    pub fn schedule_step_at<F: Fabric>(
+        &self,
+        net: &mut F,
+        t0: Time,
+        strategy: SendStrategy,
+        skip: &[NodeId],
+    ) -> u64 {
+        let cfg = &self.cfg;
+        let kn = self.nodes.len();
         let mut records = 0u64;
-        for i in 0..nodes.len() {
+        for i in 0..kn {
+            if skip.contains(&self.nodes[i]) {
+                continue;
+            }
+            let ep = Endpoint { node: self.nodes[i], mode: cfg.comm };
             for k in 0..cfg.outputs_per_step {
-                let dst = dst_of(&nodes, i, k);
+                let want = dst_of(&self.nodes, i, k);
+                let dst = if cfg.reliable.is_some() {
+                    let pi = self
+                        .nodes
+                        .iter()
+                        .position(|&n| n == want)
+                        .expect("record target is a learner");
+                    (0..kn)
+                        .map(|s| self.nodes[(pi + s) % kn])
+                        .find(|&c| c != ep.node && !net.reliable_is_down(&ep, c))
+                } else {
+                    Some(want)
+                };
+                let Some(dst) = dst else { continue };
                 let at = match strategy {
                     SendStrategy::Streamed => {
                         t0 + cfg.compute_ns * (k as Time + 1) / cfg.outputs_per_step as Time
                     }
                     SendStrategy::Aggregated => t0 + cfg.compute_ns,
                 };
-                net.send_at(at, &eps[i], dst, Message::new(vec![k as u8; cfg.record_bytes]));
+                let msg = Message::new(vec![k as u8; cfg.record_bytes]);
+                if cfg.reliable.is_some() {
+                    net.reliable_send_at(at, &ep, dst, msg);
+                } else {
+                    net.send_at(at, &ep, dst, msg);
+                }
                 records += 1;
             }
         }
-        let mut app = LearnerApp { expected: records, received: 0 };
+        records
+    }
+
+    /// The app sized for `steps` scheduled steps (workload-chaos
+    /// harness: one app across the whole grid of steps).
+    pub fn app_for(&self, records: u64) -> LearnerApp {
+        LearnerApp::new(self.nodes.clone(), records)
+    }
+}
+
+/// Run the workload on either engine; returns per-step stats.
+pub fn run<F: Fabric>(
+    net: &mut F,
+    cfg: LearnerConfig,
+    strategy: SendStrategy,
+) -> Vec<StepStats> {
+    let grid = Learners::setup(net, cfg);
+    let mut out = Vec::with_capacity(cfg.steps as usize);
+    for _step in 0..cfg.steps {
+        let t0 = net.now();
+        let mut app = grid.schedule_step(net, strategy);
         net.run(&mut app);
-        assert_eq!(app.received, app.expected, "lost learner records");
+        if app.any_dead() {
+            // Peers died mid-step: every record either landed (possibly
+            // re-placed) or originated at a dead learner.
+            assert!(app.received <= app.expected, "duplicated learner records");
+        } else {
+            assert_eq!(app.received, app.expected, "lost learner records");
+        }
         // The step ends when compute is done AND all records landed.
         let end = net.now().max(t0 + cfg.compute_ns);
         net.advance_to(end);
-        out.push(StepStats { makespan: end - t0, records });
+        out.push(StepStats { makespan: end - t0, records: app.expected });
     }
     out
 }
@@ -175,6 +347,7 @@ pub fn overlap_advantage<F: Fabric>(net_factory: impl Fn() -> F, cfg: LearnerCon
 mod tests {
     use super::*;
     use crate::channels::ethernet::RxMode;
+    use crate::config::SystemConfig;
 
     #[test]
     fn streamed_overlaps_and_wins() {
@@ -222,5 +395,65 @@ mod tests {
         // The §3.1-vs-§3.2 claim: the software-path mode is the slow one.
         assert!(pm < eth, "pm {pm} vs eth {eth}");
         assert!(fifo < eth, "fifo {fifo} vs eth {eth}");
+    }
+
+    #[test]
+    fn reliable_mode_is_lossless_without_faults() {
+        let mut net = Network::card();
+        let cfg = LearnerConfig {
+            steps: 2,
+            reliable: Some(ReliableParams::default()),
+            ..Default::default()
+        };
+        let stats = run(&mut net, cfg, SendStrategy::Streamed);
+        assert_eq!(stats[0].records, 27 * 16);
+        assert!(net.metrics.acks > 0);
+        assert_eq!(net.metrics.peers_declared_down, 0);
+    }
+
+    #[test]
+    fn dead_learner_work_is_replaced() {
+        // Kill one learner mid-step: its senders' retry budgets exhaust,
+        // the undelivered records re-place onto live learners, and the
+        // step still closes with every live record delivered once.
+        let mut cfg_sys = SystemConfig::card();
+        cfg_sys.drop_unroutable = true;
+        let mut net = Network::new(cfg_sys);
+        let cfg = LearnerConfig {
+            learners: 8,
+            steps: 1,
+            reliable: Some(ReliableParams {
+                rto_ns: 30_000,
+                max_retries: 3,
+                ..ReliableParams::default()
+            }),
+            ..Default::default()
+        };
+        let grid = Learners::setup(&mut net, cfg);
+        let victim = grid.nodes[3];
+        let mut app = grid.schedule_step(&mut net, SendStrategy::Aggregated);
+        // Two-phase death right as the aggregated burst launches.
+        net.run_until(&mut app, cfg.compute_ns + 5_000);
+        for &l in &net.topo.in_links(victim).to_vec() {
+            net.fail_link(l);
+        }
+        net.run_until(&mut app, cfg.compute_ns + 6_000);
+        for &l in &net.topo.out_links(victim).to_vec() {
+            net.fail_link(l);
+        }
+        net.run_to_quiescence(&mut app);
+        assert!(app.dead[3], "the victim must be declared dead");
+        assert!(app.replaced > 0, "undelivered records must be re-placed");
+        assert!(net.metrics.retransmits > 0);
+        assert!(
+            app.received <= app.expected,
+            "exactly-once violated: {} > {}",
+            app.received,
+            app.expected
+        );
+        // Everything a live learner sent arrived somewhere: only the
+        // victim's own outputs can be missing.
+        let per = cfg.outputs_per_step as u64;
+        assert!(app.received >= app.expected - per, "lost live records");
     }
 }

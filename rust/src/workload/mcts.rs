@@ -15,8 +15,25 @@
 //! branching-`b`, with leaf payoffs from a seeded hash so every run is
 //! deterministic and the optimum is known — the search must actually
 //! find it (tested below).
+//!
+//! # Reliable mode: rollout re-dispatch
+//!
+//! With [`DistributedMcts::with_mode_reliable`] tasks and results ride
+//! the ack/retransmit transport and the leader heartbeat-watches every
+//! worker. A dead worker (chaos `drop`) surfaces as
+//! [`crate::network::App::on_peer_down`] at the leader — via retry
+//! exhaustion when tasks were in flight, via the liveness watch when
+//! the worker died *between* accepting a task and replying — and the
+//! leader re-dispatches all of that worker's outstanding rollouts to
+//! live workers (same nonce, same tree position). A transport-level ack
+//! is not rollout completion, so a nonce can briefly race its own
+//! re-dispatch; the leader's pending-map removal is the exactly-once
+//! gate and late duplicates are dropped. Every decision uses
+//! leader-local state only, so serial and sharded runs stay
+//! byte-identical.
 
 use crate::channels::endpoint::{CommMode, Endpoint, Message};
+use crate::channels::reliable::ReliableParams;
 use crate::network::{App, Fabric, Network, ShardableApp};
 use crate::sim::Time;
 use crate::topology::NodeId;
@@ -93,15 +110,29 @@ pub struct DistributedMcts {
     inflight: Vec<u32>,
     /// Pending (arena index) for each outstanding task nonce.
     pending: std::collections::HashMap<u64, usize>,
+    /// Nonces currently assigned to each worker, in issue order — what
+    /// the leader re-dispatches when that worker dies.
+    outstanding: Vec<Vec<u64>>,
+    /// Workers the leader has declared dead (leader-local knowledge).
+    dead_workers: Vec<bool>,
     next_nonce: u64,
     pub rollouts_done: u64,
     rollouts_target: u64,
+    /// Virtual time of the most recent completed rollout (the reliable
+    /// mode's makespan endpoint — quiescence there includes the liveness
+    /// watch horizon).
+    last_done_at: Time,
     /// Rollout compute time on a worker's FPGA, ns.
     pub rollout_ns: Time,
     /// Max outstanding tasks per worker.
     pub pipeline_depth: u32,
     /// The channel tasks and results travel over.
     mode: CommMode,
+    /// Run over the reliable transport, re-dispatching a dead worker's
+    /// rollouts (module docs).
+    reliable: Option<ReliableParams>,
+    /// Liveness-watch bound for the leader's worker watches.
+    watch_until: Time,
     /// Whether this instance (or partition) owns the leader's state —
     /// true for the parent app; among sharded partitions, true exactly
     /// for the shard owning the leader node.
@@ -135,14 +166,46 @@ impl DistributedMcts {
         workers: Vec<NodeId>,
         mode: CommMode,
     ) -> Self {
+        Self::build(net, game, leader, workers, mode, None, 0)
+    }
+
+    /// Build the search over the **reliable** transport: the mode must
+    /// be one the transport accepts (Postmaster or Ethernet), and the
+    /// leader watches every worker's liveness until `watch_until` so a
+    /// worker dying between task and reply still gets detected.
+    pub fn with_mode_reliable<F: Fabric>(
+        net: &mut F,
+        game: Game,
+        leader: NodeId,
+        workers: Vec<NodeId>,
+        mode: CommMode,
+        params: ReliableParams,
+        watch_until: Time,
+    ) -> Self {
+        Self::build(net, game, leader, workers, mode, Some(params), watch_until)
+    }
+
+    fn build<F: Fabric>(
+        net: &mut F,
+        game: Game,
+        leader: NodeId,
+        workers: Vec<NodeId>,
+        mode: CommMode,
+        reliable: Option<ReliableParams>,
+        watch_until: Time,
+    ) -> Self {
         assert!(!workers.is_empty());
         // Messages dispatch on node identity (leader = result, anything
         // else = task), so the leader cannot double as a worker.
         assert!(!workers.contains(&leader), "leader cannot be one of the workers");
         let pair_setup = net.caps(mode).pair_setup;
-        let lep = net.open(leader, mode);
+        let open = |net: &mut F, n: NodeId| match reliable {
+            Some(p) => net.reliable_open(n, mode, p),
+            None => net.open(n, mode),
+        };
+        let lep = open(net, leader);
         for &w in &workers {
-            let wep = net.open(w, mode);
+            let wep = open(net, w);
             if pair_setup {
                 net.connect(&lep, w);
                 net.connect(&wep, leader);
@@ -152,6 +215,8 @@ impl DistributedMcts {
             game,
             leader,
             inflight: vec![0; workers.len()],
+            outstanding: vec![Vec::new(); workers.len()],
+            dead_workers: vec![false; workers.len()],
             workers,
             arena: vec![TreeNode::default()],
             paths: vec![vec![]],
@@ -159,9 +224,12 @@ impl DistributedMcts {
             next_nonce: 1,
             rollouts_done: 0,
             rollouts_target: 0,
+            last_done_at: 0,
             rollout_ns: 20_000,
             pipeline_depth: 4,
             mode,
+            reliable,
+            watch_until,
             owns_leader: true,
         }
     }
@@ -170,15 +238,7 @@ impl DistributedMcts {
     /// action path found.
     pub fn search<F: Fabric>(mut self, net: &mut F, rollouts: u64) -> MctsResult {
         let t0 = net.now();
-        self.rollouts_target = rollouts;
-        // Prime every worker's pipeline.
-        for w in 0..self.workers.len() {
-            for _ in 0..self.pipeline_depth {
-                if self.issued() < self.rollouts_target {
-                    self.dispatch(net, w);
-                }
-            }
-        }
+        self.kickoff(net, rollouts);
         net.run(&mut self);
         assert_eq!(self.rollouts_done, rollouts, "lost rollouts");
         // Extract the visit-greedy path.
@@ -194,7 +254,13 @@ impl DistributedMcts {
             best_path.push(k as u32);
             idx = c;
         }
-        let makespan = net.now() - t0;
+        // With a liveness watch, quiescence includes the watch horizon;
+        // the search itself ends at the last completed rollout.
+        let makespan = if self.reliable.is_some() {
+            self.last_done_at.max(t0) - t0
+        } else {
+            net.now() - t0
+        };
         let root = &self.arena[0];
         MctsResult {
             best_value: root.value_sum / root.visits.max(1) as f64,
@@ -203,6 +269,37 @@ impl DistributedMcts {
             makespan,
             throughput: rollouts as f64 / (makespan as f64 / 1e9),
         }
+    }
+
+    /// Set the rollout target, watch worker liveness (reliable mode)
+    /// and prime every worker's pipeline. Driver context; the caller
+    /// runs the fabric (stepped or to quiescence).
+    pub fn kickoff<F: Fabric>(&mut self, net: &mut F, rollouts: u64) {
+        self.rollouts_target = rollouts;
+        if self.reliable.is_some() {
+            let lep = Endpoint { node: self.leader, mode: self.mode };
+            for &w in &self.workers.clone() {
+                net.reliable_watch(&lep, w, self.watch_until);
+            }
+        }
+        for w in 0..self.workers.len() {
+            for _ in 0..self.pipeline_depth {
+                if self.issued() < self.rollouts_target {
+                    self.dispatch(net, w);
+                }
+            }
+        }
+    }
+
+    /// Whether the search hit its rollout target (meaningful on the
+    /// parent app after the run).
+    pub fn is_complete(&self) -> bool {
+        self.rollouts_done >= self.rollouts_target
+    }
+
+    /// Workers the leader declared dead, by index.
+    pub fn dead_workers(&self) -> &[bool] {
+        &self.dead_workers
     }
 
     fn issued(&self) -> u64 {
@@ -258,14 +355,27 @@ impl DistributedMcts {
         let nonce = self.next_nonce;
         self.next_nonce += 1;
         self.pending.insert(nonce, idx);
+        self.send_task(net, w, nonce, idx);
+    }
+
+    /// Emit the task message for `nonce` (tree position `idx`) to
+    /// worker `w`: `[nonce, worker idx, path...]` — small by design.
+    /// Used both for fresh dispatches and for re-dispatching a dead
+    /// worker's outstanding rollouts.
+    fn send_task<F: Fabric>(&mut self, net: &mut F, w: usize, nonce: u64, idx: usize) {
         self.inflight[w] += 1;
-        // Task message: [nonce, worker idx, path...] — small by design.
+        self.outstanding[w].push(nonce);
         let mut data = nonce.to_le_bytes().to_vec();
         data.extend((w as u64).to_le_bytes());
         data.extend(self.paths[idx].iter().flat_map(|a| a.to_le_bytes()));
         let now = net.now();
         let ep = Endpoint { node: self.leader, mode: self.mode };
-        net.send_at(now, &ep, self.workers[w], Message::new(data));
+        let msg = Message::new(data);
+        if self.reliable.is_some() {
+            net.reliable_send_at(now, &ep, self.workers[w], msg);
+        } else {
+            net.send_at(now, &ep, self.workers[w], msg);
+        }
     }
 
     fn backup(&mut self, idx: usize, value: f64) {
@@ -307,23 +417,79 @@ impl App for DistributedMcts {
             // Reply after the rollout compute window.
             let leader = self.leader;
             let at = net.now() + self.rollout_ns;
-            net.send_at(at, &Endpoint { node, mode: self.mode }, leader, Message::new(data));
+            let ep = Endpoint { node, mode: self.mode };
+            let reply = Message::new(data);
+            if self.reliable.is_some() {
+                net.reliable_send_at(at, &ep, leader, reply);
+            } else {
+                net.send_at(at, &ep, leader, reply);
+            }
         } else {
             // Leader: backup + keep the worker's pipeline full.
             let nonce = u64::from_le_bytes(msg.data[0..8].try_into().unwrap());
             let widx = u64::from_le_bytes(msg.data[8..16].try_into().unwrap()) as usize;
             let value =
                 f64::from_bits(u64::from_le_bytes(msg.data[16..24].try_into().unwrap()));
-            let idx = self.pending.remove(&nonce).expect("unknown rollout result");
-            self.inflight[widx] -= 1;
+            // The pending-map removal is the exactly-once gate: a
+            // re-dispatched rollout can race the original's late reply,
+            // and whichever lands second is dropped here.
+            let Some(idx) = self.pending.remove(&nonce) else {
+                assert!(self.reliable.is_some(), "unknown rollout result");
+                return true;
+            };
+            // Late replies from a since-declared-dead worker have had
+            // their bookkeeping zeroed already.
+            if self.inflight[widx] > 0 {
+                self.inflight[widx] -= 1;
+            }
+            self.outstanding[widx].retain(|&n| n != nonce);
             self.rollouts_done += 1;
+            self.last_done_at = net.now();
             self.backup(idx, value);
-            if self.issued() < self.rollouts_target {
+            if self.issued() < self.rollouts_target && !self.dead_workers[widx] {
                 self.dispatch(net, widx);
             }
         }
         // Consumed: tasks and results never enter the recv inboxes.
         true
+    }
+
+    /// A worker died (retry exhaustion or missed heartbeats at the
+    /// leader's endpoint): re-dispatch everything it still owed to the
+    /// remaining live workers, round-robin. Leader-local state only —
+    /// both engines decide identically.
+    fn on_peer_down(&mut self, net: &mut Network, ep: Endpoint, peer: NodeId) {
+        if ep.node != self.leader {
+            // A dying worker may "detect" the leader with its own dead
+            // uplink; only the leader re-places work.
+            return;
+        }
+        let Some(w) = self.workers.iter().position(|&n| n == peer) else { return };
+        if self.dead_workers[w] {
+            return;
+        }
+        self.dead_workers[w] = true;
+        // Undelivered task frames are re-generated below.
+        let _ = net.reliable_take_unacked(&ep, peer);
+        let owed = std::mem::take(&mut self.outstanding[w]);
+        self.inflight[w] = 0;
+        let live: Vec<usize> =
+            (0..self.workers.len()).filter(|&j| !self.dead_workers[j]).collect();
+        for (i, nonce) in owed.into_iter().enumerate() {
+            // Replies that landed before the declaration already
+            // cleared their nonce from pending.
+            let Some(&idx) = self.pending.get(&nonce) else { continue };
+            if let Some(&tgt) = live.get(i % live.len().max(1)) {
+                self.send_task(net, tgt, nonce, idx);
+            } else {
+                // No workers left: the leader runs the rollout itself.
+                let value = self.game.rollout(&self.paths[idx].clone(), nonce);
+                self.pending.remove(&nonce);
+                self.rollouts_done += 1;
+                self.last_done_at = net.now();
+                self.backup(idx, value);
+            }
+        }
     }
 }
 
@@ -336,13 +502,18 @@ impl ShardableApp for DistributedMcts {
             arena: self.arena.clone(),
             paths: self.paths.clone(),
             inflight: self.inflight.clone(),
+            outstanding: self.outstanding.clone(),
+            dead_workers: self.dead_workers.clone(),
             pending: self.pending.clone(),
             next_nonce: self.next_nonce,
             rollouts_done: self.rollouts_done,
             rollouts_target: self.rollouts_target,
+            last_done_at: self.last_done_at,
             rollout_ns: self.rollout_ns,
             pipeline_depth: self.pipeline_depth,
             mode: self.mode,
+            reliable: self.reliable,
+            watch_until: self.watch_until,
             owns_leader: owner[self.leader.0 as usize] == shard,
         }
     }
@@ -355,9 +526,12 @@ impl ShardableApp for DistributedMcts {
             self.arena = part.arena;
             self.paths = part.paths;
             self.inflight = part.inflight;
+            self.outstanding = part.outstanding;
+            self.dead_workers = part.dead_workers;
             self.pending = part.pending;
             self.next_nonce = part.next_nonce;
             self.rollouts_done = part.rollouts_done;
+            self.last_done_at = part.last_done_at;
         }
     }
 }
@@ -424,6 +598,76 @@ mod tests {
             fifo.makespan,
             eth.makespan
         );
+    }
+
+    #[test]
+    fn reliable_search_matches_raw_answer_without_faults() {
+        let run = |reliable: bool| {
+            let mut net = Network::card();
+            let ws: Vec<NodeId> = (1..=6).map(NodeId).collect();
+            let game = Game { depth: 4, branching: 3, seed: 42 };
+            let mode = CommMode::Postmaster { queue: 1 };
+            let mcts = if reliable {
+                DistributedMcts::with_mode_reliable(
+                    &mut net,
+                    game,
+                    NodeId(0),
+                    ws,
+                    mode,
+                    ReliableParams::default(),
+                    50_000_000,
+                )
+            } else {
+                DistributedMcts::with_mode(&mut net, game, NodeId(0), ws, mode)
+            };
+            mcts.search(&mut net, 600)
+        };
+        let raw = run(false);
+        let rel = run(true);
+        assert_eq!(rel.rollouts, 600);
+        assert_eq!(rel.best_path, raw.best_path, "transport must not change the answer");
+    }
+
+    #[test]
+    fn dead_worker_rollouts_are_redispatched() {
+        use crate::config::SystemConfig;
+        let mut cfg = SystemConfig::card();
+        cfg.drop_unroutable = true;
+        let mut net = Network::new(cfg);
+        let ws: Vec<NodeId> = (1..=6).map(NodeId).collect();
+        let victim = ws[2];
+        let game = Game { depth: 4, branching: 3, seed: 42 };
+        let params = ReliableParams {
+            rto_ns: 30_000,
+            max_retries: 3,
+            heartbeat_ns: 50_000,
+            liveness_ns: 400_000,
+            ..ReliableParams::default()
+        };
+        let mut mcts = DistributedMcts::with_mode_reliable(
+            &mut net,
+            game,
+            NodeId(0),
+            ws,
+            CommMode::Postmaster { queue: 1 },
+            params,
+            200_000_000,
+        );
+        mcts.kickoff(&mut net, 400);
+        // Two-phase death mid-search.
+        net.run_until(&mut mcts, 150_000);
+        for &l in &net.topo.in_links(victim).to_vec() {
+            net.fail_link(l);
+        }
+        net.run_until(&mut mcts, 152_000);
+        for &l in &net.topo.out_links(victim).to_vec() {
+            net.fail_link(l);
+        }
+        net.run_to_quiescence(&mut mcts);
+        assert!(mcts.is_complete(), "search must survive a dead worker");
+        assert_eq!(mcts.rollouts_done, 400, "exactly-once rollout accounting");
+        assert!(mcts.dead_workers()[2], "the victim must be declared dead");
+        assert!(net.metrics.peers_declared_down > 0);
     }
 
     #[test]

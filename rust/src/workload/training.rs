@@ -18,6 +18,7 @@
 use anyhow::Result;
 
 use crate::channels::endpoint::CommMode;
+use crate::channels::reliable::ReliableParams;
 use crate::coordinator::collectives::{mean_reduce, RingAllreduce};
 use crate::coordinator::Placement;
 use crate::network::Fabric;
@@ -40,6 +41,10 @@ pub struct TrainConfig {
     /// (`repro train --comm pm|eth|fifo`): the §3 mode choice as a
     /// training-time ablation. Postmaster by default.
     pub comm: CommMode,
+    /// Run the gradient all-reduce over the ack/retransmit transport
+    /// (`repro train --reliable`): the E14 overhead ablation — same
+    /// answer, plus the transport's framing and ack traffic.
+    pub reliable: Option<ReliableParams>,
 }
 
 impl Default for TrainConfig {
@@ -52,6 +57,7 @@ impl Default for TrainConfig {
             placement: Placement::Block,
             log_every: 10,
             comm: CommMode::Postmaster { queue: 0 },
+            reliable: None,
         }
     }
 }
@@ -114,11 +120,21 @@ fn step_comm<F: Fabric>(
     grad_bytes: u64,
     compute_ns: Time,
     comm: CommMode,
+    reliable: Option<ReliableParams>,
 ) -> Time {
     let t_compute_done = net.now() + compute_ns;
     net.advance_to(t_compute_done);
     if ranks.len() >= 2 {
-        RingAllreduce::with_mode(net, ranks.to_vec(), grad_bytes, comm).run(net).makespan
+        // Liveness watching stays off (`watch_until` 0): training trusts
+        // the driver for membership; the transport contributes framing,
+        // acks and retransmit cover only.
+        let ar = match reliable {
+            Some(p) => {
+                RingAllreduce::with_mode_reliable(net, ranks.to_vec(), grad_bytes, comm, p, 0)
+            }
+            None => RingAllreduce::with_mode(net, ranks.to_vec(), grad_bytes, comm),
+        };
+        ar.run(net).makespan
     } else {
         0
     }
@@ -156,7 +172,8 @@ pub fn train_comm<F: Fabric>(net: &mut F, shape: &CommShape) -> CommReport {
     let t_start = net.now();
     let mut vtime_comm: Time = 0;
     for _ in 0..shape.steps {
-        vtime_comm += step_comm(net, &ranks, shape.grad_bytes, shape.compute_ns, shape.comm);
+        vtime_comm +=
+            step_comm(net, &ranks, shape.grad_bytes, shape.compute_ns, shape.comm, None);
     }
     CommReport {
         vtime_total: net.now() - t_start,
@@ -227,7 +244,7 @@ pub fn train<F: Fabric>(net: &mut F, rt: &Runtime, cfg: &TrainConfig) -> Result<
             mean_grads.push(mean_reduce(per_rank));
         }
         vtime_compute += compute_ns;
-        vtime_comm += step_comm(net, &ranks, grad_bytes, compute_ns, cfg.comm);
+        vtime_comm += step_comm(net, &ranks, grad_bytes, compute_ns, cfg.comm, cfg.reliable);
 
         // 3. Replicated SGD update.
         let mut inputs = params;

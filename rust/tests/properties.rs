@@ -2,12 +2,15 @@
 //! the offline environment has no proptest, so cases are generated
 //! explicitly; failures print the seed for reproduction).
 
+use inc_sim::channels::{CommMode, Endpoint, Message, ReliableParams};
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::network::sharded::ShardedNetwork;
 use inc_sim::network::{App, Domain, Fabric, Network, NullApp};
 use inc_sim::router::{Packet, Payload, Proto};
 use inc_sim::topology::{NodeId, Span, Topology};
 use inc_sim::util::SplitMix64;
+use inc_sim::workload::chaos::scenario::targeted_drop;
+use inc_sim::workload::chaos::workloads::{run_workload, ChaosWorkload, WorkloadChaosConfig};
 use inc_sim::workload::chaos::{self, ChaosConfig, FaultKind, Scenario};
 
 const CASES: u64 = 40;
@@ -410,5 +413,192 @@ fn prop_storm_harness_meets_slo_across_engines() {
                 assert!(report.passed(), "{ctx}: {:?}", report.violations());
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reliable transport properties (E14): exactly-once-or-peer-down.
+// ---------------------------------------------------------------------
+
+/// Counts app-level arrivals by (sender, tick) key and collects what the
+/// transport hands back when a peer is declared down.
+#[derive(Default)]
+struct ExactlyOnce {
+    got: std::collections::BTreeMap<(u8, u8), u32>,
+    recovered: Vec<(u8, u8)>,
+    downs: u32,
+}
+
+impl App for ExactlyOnce {
+    fn on_message(&mut self, _net: &mut Network, _ep: Endpoint, msg: &Message) -> bool {
+        *self.got.entry((msg.data[0], msg.data[1])).or_insert(0) += 1;
+        true
+    }
+    fn on_peer_down(&mut self, net: &mut Network, ep: Endpoint, peer: NodeId) {
+        self.downs += 1;
+        for m in net.reliable_take_unacked(&ep, peer) {
+            self.recovered.push((m.data[0], m.data[1]));
+        }
+    }
+}
+
+/// Under seeded storm scripts (link bursts, connectivity-preserving by
+/// construction) the reliable transport delivers every record **exactly
+/// once** — the retransmit path may engage, the duplicate-suppression
+/// path absorbs the races, and nobody is ever declared down.
+#[test]
+fn prop_reliable_exactly_once_under_storm() {
+    const TICK: u64 = 50_000;
+    const TICKS: u64 = 30;
+    let participants = [0u32, 4, 8, 13, 17, 21, 24, 26].map(NodeId);
+    let mut total_acks = 0u64;
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xE1);
+        let mut sys = SystemConfig::card();
+        sys.drop_unroutable = true;
+        let mut net = Network::new(sys);
+        let script = Scenario::Storm.script(&net.topo.clone(), seed, TICKS, TICK);
+        let eps: Vec<Endpoint> = participants
+            .iter()
+            .map(|&n| {
+                net.reliable_open(n, CommMode::Postmaster { queue: 0 }, ReliableParams::default())
+            })
+            .collect();
+        let mut app = ExactlyOnce::default();
+        let mut sent = std::collections::BTreeSet::new();
+        let mut next = 0usize;
+        for tick in 0..TICKS {
+            let t0 = tick * TICK;
+            while next < script.events.len() && script.events[next].at <= t0 {
+                match script.events[next].kind {
+                    FaultKind::Fail(l) => net.fail_link(l),
+                    FaultKind::Repair(l) => net.repair_link(l),
+                }
+                next += 1;
+            }
+            for (i, ep) in eps.iter().enumerate() {
+                let mut d = rng.gen_range(participants.len());
+                if d == i {
+                    d = (d + 1) % participants.len();
+                }
+                let key = (i as u8, tick as u8);
+                net.reliable_send_at(t0, ep, participants[d], Message::new(vec![key.0, key.1]));
+                sent.insert(key);
+            }
+            Fabric::run_until(&mut net, &mut app, t0 + TICK);
+        }
+        net.run_to_quiescence(&mut app);
+        for &key in &sent {
+            assert_eq!(
+                app.got.get(&key).copied().unwrap_or(0),
+                1,
+                "seed {seed}: record {key:?} not delivered exactly once"
+            );
+        }
+        assert_eq!(app.got.len(), sent.len(), "seed {seed}: phantom records arrived");
+        assert_eq!(app.downs, 0, "seed {seed}: storm falsely declared a peer down");
+        assert_eq!(net.metrics.peers_declared_down, 0, "seed {seed}");
+        total_acks += net.metrics.acks;
+    }
+    assert!(total_acks > 0, "the reliable transport never engaged");
+}
+
+/// With a targeted two-phase death mid-run, every record a live sender
+/// produced is **either** delivered exactly once **or** handed back by
+/// `reliable_take_unacked` after the peer-down declaration — each record
+/// exactly one of the two, no record neither. (The two-phase death is
+/// what makes the dichotomy exact: inbound links die first, so every
+/// delivered record's ack still returns and unacked ⟺ undelivered.)
+#[test]
+fn prop_reliable_exactly_once_or_peer_down_under_targeted_death() {
+    const TICK: u64 = 50_000;
+    const TICKS: u64 = 30;
+    const DEATH_TICK: u64 = 6;
+    for seed in 0..6u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xDEAD);
+        let mut sys = SystemConfig::card();
+        sys.drop_unroutable = true;
+        let mut net = Network::new(sys);
+        let n = net.topo.node_count();
+        let victim = NodeId(13);
+        let mut senders = std::collections::BTreeSet::new();
+        while senders.len() < 6 {
+            let c = NodeId(rng.gen_range(n) as u32);
+            if c != victim {
+                senders.insert(c);
+            }
+        }
+        let senders: Vec<NodeId> = senders.into_iter().collect();
+        let script = targeted_drop(&net.topo.clone(), &[victim], DEATH_TICK * TICK, TICK);
+        assert_eq!(script.excluded, vec![victim], "seed {seed}: victim not severable");
+        let params = ReliableParams {
+            rto_ns: 30_000,
+            max_retries: 4,
+            heartbeat_ns: 50_000,
+            liveness_ns: 300_000,
+            ..ReliableParams::default()
+        };
+        let pm = CommMode::Postmaster { queue: 0 };
+        net.reliable_open(victim, pm, params);
+        let eps: Vec<Endpoint> =
+            senders.iter().map(|&s| net.reliable_open(s, pm, params)).collect();
+        let mut app = ExactlyOnce::default();
+        let mut sent = std::collections::BTreeSet::new();
+        let mut next = 0usize;
+        for tick in 0..TICKS {
+            let t0 = tick * TICK;
+            while next < script.events.len() && script.events[next].at <= t0 {
+                match script.events[next].kind {
+                    FaultKind::Fail(l) => net.fail_link(l),
+                    FaultKind::Repair(l) => net.repair_link(l),
+                }
+                next += 1;
+            }
+            for (i, ep) in eps.iter().enumerate() {
+                // A sender stops once it has declared the victim down
+                // (the send API refuses dead peers by contract).
+                if !net.reliable_is_down(ep, victim) {
+                    let key = (i as u8, tick as u8);
+                    net.reliable_send_at(t0, ep, victim, Message::new(vec![key.0, key.1]));
+                    sent.insert(key);
+                }
+            }
+            Fabric::run_until(&mut net, &mut app, t0 + TICK);
+        }
+        net.run_to_quiescence(&mut app);
+        // Every sender kept sending into the dead inbox, so every sender
+        // must eventually exhaust its retry budget and declare.
+        assert_eq!(app.downs as usize, senders.len(), "seed {seed}: missing declarations");
+        assert!(net.metrics.retransmits > 0, "seed {seed}: the death forced no retransmits");
+        let recovered: std::collections::BTreeSet<(u8, u8)> =
+            app.recovered.iter().copied().collect();
+        assert_eq!(recovered.len(), app.recovered.len(), "seed {seed}: duplicate recovery");
+        for &key in &sent {
+            let delivered = app.got.get(&key).copied().unwrap_or(0);
+            assert!(delivered <= 1, "seed {seed}: record {key:?} duplicated to the app");
+            assert!(
+                (delivered == 1) ^ recovered.contains(&key),
+                "seed {seed}: record {key:?} violated exactly-once-or-peer-down \
+                 (delivered={delivered}, recovered={})",
+                recovered.contains(&key)
+            );
+        }
+        assert_eq!(app.got.len(), sent.len().min(app.got.len()), "seed {seed}: phantom records");
+        assert!(app.got.keys().all(|k| sent.contains(k)), "seed {seed}: unknown record");
+    }
+}
+
+/// The workload-chaos harness holds the same guarantee end-to-end: the
+/// learner grid over seeded storms delivers every scheduled record
+/// exactly once with zero failure declarations, for every storm seed.
+#[test]
+fn prop_reliable_learners_exactly_once_across_storm_seeds() {
+    for seed in 0..6u64 {
+        let cfg = WorkloadChaosConfig::new(ChaosWorkload::Learners, Scenario::Storm, seed);
+        let mut net = Network::new(cfg.system_config());
+        let r = run_workload(&mut net, &cfg, 1);
+        assert_eq!(r.delivered, r.expected, "seed {seed}: exactly-once violated");
+        assert_eq!(r.peers_declared_down, 0, "seed {seed}: false death under storm");
+        assert!(r.passed(), "seed {seed}: {:?}", r.violations());
     }
 }
