@@ -13,7 +13,7 @@ mod common;
 
 use inc_sim::channels::ethernet::RxMode;
 use inc_sim::channels::{CommMode, Message, ReliableParams};
-use inc_sim::config::SystemConfig;
+use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::coordinator::{Placement, RingAllreduce};
 use inc_sim::network::sharded::ShardedNetwork;
 use inc_sim::network::{Fabric, Network, NullApp};
@@ -24,6 +24,7 @@ use inc_sim::util::SplitMix64;
 use inc_sim::workload::chaos::workloads::{run_workload, ChaosWorkload, WorkloadChaosConfig};
 use inc_sim::workload::chaos::{self, ChaosConfig, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
+use inc_sim::workload::serving::{self, ServingConfig};
 
 /// Numeric knob from the environment (CI's bench-smoke step shrinks the
 /// run with BENCH_EVENTS / BENCH_PACKETS; defaults are the full run).
@@ -467,6 +468,106 @@ fn main() {
         chaos_serial.passed(),
     ));
 
+    // Open-loop inference serving (EXPERIMENTS.md E15): external
+    // clients reach the mesh through the gateway NAT at a configured
+    // offered rate; frontends fan requests out to workers. Per preset:
+    // p50/p99/p999 latency and sustained throughput, serial vs sharded
+    // with the serving reports asserted byte-identical. Inc27000 runs
+    // at 64 shards — far beyond any host's core count, i.e. the epoch
+    // work-stealing regime — and can be shrunk or skipped in CI via
+    // BENCH_MEGA_REQUESTS (0 skips the mega preset entirely).
+    let serve_requests = env_u64("BENCH_SERVE_REQUESTS", 400);
+    let mega_requests = env_u64("BENCH_MEGA_REQUESTS", 200);
+    let mut serving_match = true;
+    json.push_str("  \"serving\": [\n");
+    for (name, preset, shards, requests, stride, rate) in [
+        ("card", SystemPreset::Card, 1u32, serve_requests, 1usize, 50_000.0),
+        ("inc3000", SystemPreset::Inc3000, 16, serve_requests, 19, 100_000.0),
+        ("inc27000", SystemPreset::Inc27000, 64, mega_requests, 997, 100_000.0),
+    ] {
+        if requests == 0 {
+            println!("serving {name:<9} skipped (requests knob set to 0)");
+            continue;
+        }
+        let cfg = ServingConfig { requests, rate_per_s: rate, stride, ..ServingConfig::default() };
+        let (rep, serial_secs) = common::timed(|| {
+            let mut net = Network::new(SystemConfig::new(preset));
+            serving::run(&mut net, cfg)
+        });
+        let (matches, sharded_secs) = if shards > 1 {
+            let (srep, secs) = common::timed(|| {
+                let mut net = ShardedNetwork::new(SystemConfig::new(preset), shards);
+                serving::run(&mut net, cfg)
+            });
+            (srep == rep, secs)
+        } else {
+            (true, serial_secs)
+        };
+        serving_match &= matches;
+        println!(
+            "serving {name:<9} {requests} reqs @ {rate:.0}/s: p50 {:.1} µs, p99 {:.1} µs, \
+             p999 {:.1} µs, {:.0} req/s sustained (serial {serial_secs:.3} s, \
+             sharded×{shards} {sharded_secs:.3} s, match: {matches})",
+            rep.p50_ns as f64 / 1e3,
+            rep.p99_ns as f64 / 1e3,
+            rep.p999_ns as f64 / 1e3,
+            rep.throughput_rps,
+        );
+        json.push_str(&format!(
+            "    {{\"preset\": \"{name}\", \"shards\": {shards}, \"requests\": {requests}, \
+             \"offered_rps\": {:.0}, \"p50_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}, \
+             \"throughput_rps\": {:.0}, \"serial_secs\": {serial_secs:.4}, \
+             \"sharded_secs\": {sharded_secs:.4}, \"matches_serial\": {matches}}},\n",
+            rep.offered_rps, rep.p50_ns, rep.p99_ns, rep.p999_ns, rep.throughput_rps,
+        ));
+    }
+    json.truncate(json.len() - 2);
+    json.push_str("\n  ],\n");
+
+    // Saturation sweep on the card (E15 protocol): offered rate swept
+    // across ~an order of magnitude; the reported saturation point is
+    // the highest sustained throughput.
+    let sweep_rates = [25_000.0, 50_000.0, 100_000.0, 200_000.0];
+    let sat_cfg =
+        ServingConfig { requests: serve_requests.min(200).max(1), ..ServingConfig::default() };
+    let (sat_rps, sat_reps) = serving::saturation_sweep(Network::card, sat_cfg, &sweep_rates);
+    println!(
+        "serving saturation (card): {sat_rps:.0} req/s across offered {:?} req/s",
+        sweep_rates.map(|r| r as u64),
+    );
+    json.push_str(&format!(
+        "  \"serving_saturation\": {{\"preset\": \"card\", \"requests\": {}, \
+         \"rates\": [{}], \"throughput_rps\": [{}], \"saturation_rps\": {sat_rps:.0}}},\n",
+        sat_cfg.requests,
+        sweep_rates.map(|r| format!("{r:.0}")).join(", "),
+        sat_reps.iter().map(|r| format!("{:.0}", r.throughput_rps)).collect::<Vec<_>>().join(", "),
+    ));
+
+    // O(owned) acceptance on the mega mesh: with 27 648 nodes split 64
+    // ways, each shard's global→local index maps must scale with the
+    // ~432-node owned subset — not the global mesh, which is what the
+    // old dense Vec remap tables cost on every shard.
+    let (mega_index_bytes, mega_owned_bound) = {
+        let mnet = ShardedNetwork::new(SystemConfig::new(SystemPreset::Inc27000), 64);
+        let worst = mnet
+            .shards()
+            .iter()
+            .map(|s| (s.domain.index_bytes(), s.domain.node_count(), s.domain.link_count()))
+            .max()
+            .unwrap();
+        (worst.0, 64 * (worst.1 + worst.2) as u64 + 4096)
+    };
+    println!(
+        "inc27000 domains: worst shard index maps {:.1} KB (O(owned) bound {:.1} KB, 64 shards)",
+        mega_index_bytes as f64 / 1e3,
+        mega_owned_bound as f64 / 1e3,
+    );
+    json.push_str(&format!(
+        "  \"inc27000_domain\": {{\"shards\": 64, \
+         \"shard_index_map_bytes\": {mega_index_bytes}, \
+         \"owned_bound_bytes\": {mega_owned_bound}}},\n"
+    ));
+
     // Reliable-transport overhead (EXPERIMENTS.md §Reliable transport,
     // E14 acceptance): the same ring all-reduce raw vs over the
     // ack/retransmit transport on a healthy fabric — framing + ack cost
@@ -530,6 +631,12 @@ fn main() {
     println!("wrote BENCH_sim.json");
     assert!(matches, "sharded run diverged from the serial oracle");
     assert!(app_matches, "sharded app workload diverged from the serial oracle");
+    assert!(serving_match, "sharded serving report diverged from the serial oracle");
+    assert!(
+        mega_index_bytes <= mega_owned_bound,
+        "inc27000 per-shard index maps are not O(owned): {mega_index_bytes} B > \
+         bound {mega_owned_bound} B"
+    );
     assert!(chaos_match, "chaos SLO report diverged across engines");
     assert!(chaos_serial.passed(), "chaos storm violated SLOs: {:?}", chaos_serial.violations());
     assert_eq!(rel_rtx, 0, "reliable all-reduce retransmitted on a healthy fabric");

@@ -424,25 +424,44 @@ impl Network {
         }
     }
 
-    /// Deliver an external frame to an internal node through NAT.
+    /// Deliver an external frame to an internal node through NAT, the
+    /// frame reaching the physical port at the current instant.
     pub fn external_ingress(&mut self, external_port: u16, bytes: u32, tag: u64) -> bool {
+        let now = self.now();
+        self.external_ingress_at(now, external_port, bytes, tag)
+    }
+
+    /// Deliver an external frame to an internal node through NAT, the
+    /// frame reaching the physical port at absolute time `at` (≥ now).
+    /// Open-loop workloads ([`crate::workload::serving`]) precompute an
+    /// arrival schedule in driver context and feed it through here in
+    /// ascending order — the physical 1 GbE port serializes arrivals
+    /// from `max(at, port busy)`, so a burst queues on the wire exactly
+    /// as it would at the real gateway. Returns `false` (frame dropped
+    /// at the gateway) when no NAT entry maps `external_port`.
+    pub fn external_ingress_at(
+        &mut self,
+        at: Time,
+        external_port: u16,
+        bytes: u32,
+        tag: u64,
+    ) -> bool {
         let Some(&(node, _iport)) = self.eth.external.nat.get(&external_port) else {
             return false; // no forwarding entry: dropped at the gateway
         };
         let gw = self.gateway();
         // Physical-port serialization first.
         let wire = bytes + ETH_OVERHEAD;
-        let now = self.now();
         let ext = &mut self.eth.external;
-        let start = now.max(ext.ext_busy_until);
+        let start = at.max(ext.ext_busy_until);
         ext.ext_busy_until = start + wire as u64 * EXT_NS_PER_BYTE;
         // Then the gateway forwards over the internal fabric.
-        let at = ext.ext_busy_until;
+        let deliver_at = ext.ext_busy_until;
         self.metrics.record_mode("ethernet", bytes as u64);
         let id = self.next_packet_id();
         let frame =
-            Box::new(EthFrame { id, src: gw, dst: node, bytes, tag, t_created: now, data: None });
-        self.sim.at_keyed(at, crate::network::key_eth(gw), Event::EthTx { frame });
+            Box::new(EthFrame { id, src: gw, dst: node, bytes, tag, t_created: at, data: None });
+        self.sim.at_keyed(deliver_at, crate::network::key_eth(gw), Event::EthTx { frame });
         true
     }
 }

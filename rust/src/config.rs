@@ -160,25 +160,51 @@ impl Default for RingBusTiming {
     }
 }
 
-/// Which machine to build (Fig 2).
+/// Which machine to build (Fig 2). Every preset is a card grid — a
+/// mesh is `cards × 3` nodes per axis — so `dims`, `node_count`,
+/// `card_count` and cage structure stay closed-form for arbitrary
+/// sizes: the named presets are fixed points in the same
+/// [`SystemPreset::Custom`] parameter space (§2.1: the 3d mesh
+/// "scales to hundreds of thousands of nodes").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SystemPreset {
-    /// One card: 3×3×3 = 27 nodes (Fig 2c).
+    /// One card — the INC 300: 3×3×3 = 27 nodes (Fig 2c).
     Card,
     /// INC 3000: 16 cards on one backplane, 12×12×3 = 432 nodes (Fig 2b).
     Inc3000,
     /// INC 9000: four cages, 12×12×12 = 1728 nodes (Fig 2a, "not yet built").
     Inc9000,
+    /// Synthetic mega mesh: 16 cages of 8×8 cards, 24×24×48 = 27 648
+    /// nodes — one order of magnitude past INC 9000, following the
+    /// paper's cage-stacking rules.
+    Inc27000,
+    /// Synthetic mega mesh: 16 cages of 16×16 cards, 48×48×48 =
+    /// 110 592 nodes — the §2.1 "hundreds of thousands of nodes" scale.
+    Inc100k,
+    /// An arbitrary card grid (`cards` per axis; a card is 3×3×3
+    /// nodes, a cage is one z layer of cards).
+    Custom { cards: (u32, u32, u32) },
 }
 
 impl SystemPreset {
+    /// Card-grid dimensions (cards per axis) — the shared closed form
+    /// every named preset reduces to.
+    pub fn cards_dims(self) -> (u32, u32, u32) {
+        match self {
+            SystemPreset::Card => (1, 1, 1),
+            SystemPreset::Inc3000 => (4, 4, 1),
+            SystemPreset::Inc9000 => (4, 4, 4),
+            SystemPreset::Inc27000 => (8, 8, 16),
+            SystemPreset::Inc100k => (16, 16, 16),
+            SystemPreset::Custom { cards } => cards,
+        }
+    }
+
     /// Mesh dimensions (x, y, z).
     pub fn dims(self) -> (u32, u32, u32) {
-        match self {
-            SystemPreset::Card => (3, 3, 3),
-            SystemPreset::Inc3000 => (12, 12, 3),
-            SystemPreset::Inc9000 => (12, 12, 12),
-        }
+        let (cx, cy, cz) = self.cards_dims();
+        assert!(cx > 0 && cy > 0 && cz > 0, "degenerate card grid {:?}", (cx, cy, cz));
+        (cx * 3, cy * 3, cz * 3)
     }
 
     pub fn node_count(self) -> u32 {
@@ -190,11 +216,26 @@ impl SystemPreset {
         self.node_count() / 27
     }
 
+    /// Parse a preset name, a node count, or a `CXxCYxCZ` card grid
+    /// (e.g. `8x8x16`). `inc300` is the single-card machine's product
+    /// name (Fig 2c) — an alias of `card`, kept deliberately.
     pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "card" | "inc300" | "27" => Some(SystemPreset::Card),
-            "inc3000" | "3000" | "432" => Some(SystemPreset::Inc3000),
-            "inc9000" | "9000" | "1728" => Some(SystemPreset::Inc9000),
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "card" | "inc300" | "27" => return Some(SystemPreset::Card),
+            "inc3000" | "3000" | "432" => return Some(SystemPreset::Inc3000),
+            "inc9000" | "9000" | "1728" => return Some(SystemPreset::Inc9000),
+            "inc27000" | "27000" | "27648" => return Some(SystemPreset::Inc27000),
+            "inc100k" | "100k" | "110592" => return Some(SystemPreset::Inc100k),
+            _ => {}
+        }
+        let mut it = s.split('x').map(|p| p.parse::<u32>().ok());
+        match (it.next(), it.next(), it.next(), it.next()) {
+            (Some(Some(cx)), Some(Some(cy)), Some(Some(cz)), None)
+                if cx > 0 && cy > 0 && cz > 0 =>
+            {
+                Some(SystemPreset::Custom { cards: (cx, cy, cz) })
+            }
             _ => None,
         }
     }
@@ -253,6 +294,19 @@ pub struct SystemConfig {
     /// same packets at the same instants and stay byte-identical.
     /// Default `false`: ordinary runs keep the loud-failure contract.
     pub drop_unroutable: bool,
+    /// Per-link-transmission random loss probability (0.0 = lossless).
+    /// When a packet is about to start serializing onto a link, a
+    /// stateless [`crate::util::mix64`] of (seed, packet id, link) is
+    /// compared against this threshold; on loss the link eats the
+    /// packet before any credits are consumed, counted in
+    /// [`crate::metrics::Metrics::link_loss`]. There is no RNG stream,
+    /// so the drop decision is a pure function of packet identity —
+    /// independent of dispatch order and of *when* the attempt happens
+    /// (ready link vs later drain), keeping serial and sharded engines
+    /// byte-identical. Pair with the reliable transport
+    /// ([`crate::channels::reliable`]) to exercise retransmission
+    /// without scripted chaos faults (`repro chaos --scenario loss`).
+    pub drop_probability: f64,
     /// DRAM capacity per node, bytes (1 GB, §2).
     pub dram_bytes: u64,
 }
@@ -272,6 +326,7 @@ impl SystemConfig {
             rx_capacity: 65_536,
             rx_drain_ns: 500,
             drop_unroutable: false,
+            drop_probability: 0.0,
             dram_bytes: 1 << 30,
         }
     }
@@ -323,11 +378,51 @@ mod tests {
         assert_eq!(SystemPreset::Card.node_count(), 27);
         assert_eq!(SystemPreset::Inc3000.node_count(), 432);
         assert_eq!(SystemPreset::Inc9000.node_count(), 1728);
+        assert_eq!(SystemPreset::Inc27000.node_count(), 27_648);
+        assert_eq!(SystemPreset::Inc100k.node_count(), 110_592);
         assert_eq!(SystemPreset::Inc3000.card_count(), 16);
         assert_eq!(SystemPreset::Inc9000.card_count(), 64);
+        assert_eq!(SystemPreset::Inc27000.card_count(), 1024);
+        assert_eq!(SystemPreset::Inc100k.card_count(), 4096);
         assert_eq!(SystemPreset::parse("inc3000"), Some(SystemPreset::Inc3000));
         assert_eq!(SystemPreset::parse("CARD"), Some(SystemPreset::Card));
         assert_eq!(SystemPreset::parse("bogus"), None);
+    }
+
+    #[test]
+    fn preset_parse_round_trips() {
+        // Every named preset parses back from its canonical name, and
+        // the mega presets are fixed points of the shared Custom card
+        // grid (closed-form dims/card_count, no special cases).
+        let named = [
+            ("card", SystemPreset::Card),
+            ("inc3000", SystemPreset::Inc3000),
+            ("inc9000", SystemPreset::Inc9000),
+            ("inc27000", SystemPreset::Inc27000),
+            ("inc100k", SystemPreset::Inc100k),
+        ];
+        for (name, preset) in named {
+            assert_eq!(SystemPreset::parse(name), Some(preset), "{name}");
+            // Node-count aliases round-trip too.
+            let count = preset.node_count().to_string();
+            assert_eq!(SystemPreset::parse(&count), Some(preset), "{count}");
+            // The equivalent Custom grid agrees on every closed form.
+            let custom = SystemPreset::Custom { cards: preset.cards_dims() };
+            assert_eq!(custom.dims(), preset.dims());
+            assert_eq!(custom.node_count(), preset.node_count());
+            assert_eq!(custom.card_count(), preset.card_count());
+        }
+        // `inc300` is the single-card machine's product name.
+        assert_eq!(SystemPreset::parse("inc300"), Some(SystemPreset::Card));
+        // Card-grid syntax.
+        assert_eq!(
+            SystemPreset::parse("8x8x16"),
+            Some(SystemPreset::Custom { cards: (8, 8, 16) })
+        );
+        assert_eq!(SystemPreset::parse("8x8x16").unwrap().node_count(), 27_648);
+        assert_eq!(SystemPreset::parse("0x2x2"), None, "degenerate grid");
+        assert_eq!(SystemPreset::parse("2x2"), None, "missing axis");
+        assert_eq!(SystemPreset::parse("2x2x2x2"), None, "extra axis");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! Subcommands map one-to-one onto the paper's artifacts (DESIGN.md §4):
 //! `topo` (Fig 1/2), `table1` (Table 1), `bisection` (§2.3), `programming`
 //! (§4.3), `channels` (Figs 3–5), `sandbox` (§4.3 interactive utility),
-//! `train` / `mcts` / `learners` (the machine-intelligence workloads).
+//! `train` / `mcts` / `learners` / `serve` (the machine-intelligence
+//! workloads).
 //! Argument parsing is hand-rolled (offline build, no clap).
 
 use anyhow::Result;
@@ -18,7 +19,7 @@ use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::{Coord, NodeId, Topology};
 use inc_sim::util::SplitMix64;
 use inc_sim::workload::chaos::workloads;
-use inc_sim::workload::{chaos, learners, mcts, training};
+use inc_sim::workload::{chaos, learners, mcts, serving, training};
 
 const USAGE: &str = "\
 repro — INC-Sim: IBM Neural Computer reproduction
@@ -45,7 +46,20 @@ COMMANDS
               distributed MCTS (E9)
   learners    [--preset P] [--shards K] [--comm M] [--reliable]
               learner-overlap experiment (E8)
-  chaos       [--scenario storm|flap|partition|drop|hotspot|all] [--seed S]
+  serve       [--preset P] [--shards K] [--arrivals poisson|burst|diurnal]
+              [--rate R] [--requests N] [--frontends N] [--workers N]
+              [--fanout N] [--comm M] [--sweep]
+              open-loop inference serving through the gateway NAT (E15):
+              a precomputed Poisson/bursty/diurnal arrival schedule enters
+              via external Ethernet, frontends fan each request out to
+              workers, and p50/p99/p999 latency is measured from the
+              scheduled arrival (no coordinated omission). --sweep runs an
+              offered-rate sweep (x0.25..x4 of --rate) on fresh fabrics
+              and reports saturation throughput. K>1 replays the same run
+              on the serial engine and exits nonzero unless the delivery
+              trace, metrics and clocks are byte-identical
+  chaos       [--scenario storm|flap|partition|drop|hotspot|loss|all]
+              [--seed S] [--loss P]
               [--preset P] [--shards K] [--comm M] [--ticks N] [--rx-cap N]
               [--workload learners|allreduce|mcts] [--out FILE]
               seeded chaos scenario graded against SLOs (E13): deterministic
@@ -58,7 +72,10 @@ COMMANDS
               traffic (E14; storm|partition|drop only). --scenario all
               sweeps every background scenario plus every workload x
               scenario pairing into one combined JSON report, exiting
-              nonzero if anything violates its SLO
+              nonzero if anything violates its SLO. The loss scenario
+              scripts no link faults: it raises the fabric's seeded
+              per-(packet, link) drop probability instead (default 0.01;
+              override with --loss P) and grades delivery >= 90%
 
 The workload subcommands accept --shards like traffic does: every
 workload runs on either engine through the Fabric trait, with
@@ -129,7 +146,10 @@ impl Args {
     fn preset(&self, default: SystemPreset) -> SystemPreset {
         match self.flags.get("preset") {
             Some(s) => SystemPreset::parse(s).unwrap_or_else(|| {
-                eprintln!("unknown preset {s}; use card | inc3000 | inc9000");
+                eprintln!(
+                    "unknown preset {s}; use card | inc3000 | inc9000 | inc27000 | \
+                     inc100k, or a CXxCYxCZ card grid (e.g. 4x4x8)"
+                );
                 std::process::exit(2);
             }),
             None => default,
@@ -197,6 +217,7 @@ fn main() -> Result<()> {
             args.comm(),
             reliable_params(&args),
         ),
+        "serve" => run_serve(&args),
         "chaos" => run_chaos(&args),
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
@@ -530,6 +551,130 @@ fn run_mcts(
     );
 }
 
+/// `repro serve` — the open-loop inference-serving workload (E15).
+/// With `--shards K>1` the run doubles as a byte-identity gate: the
+/// identical experiment replays on the serial engine and any
+/// divergence in the delivery trace, fabric-view metrics, final clock
+/// or serving report exits non-zero (CI smoke-tests exactly this).
+fn run_serve(args: &Args) {
+    let preset = args.preset(SystemPreset::Card);
+    let shards = args.get("shards", 1u32);
+    let arrivals_s = args.get_opt("arrivals").unwrap_or_else(|| "poisson".into());
+    let arrivals = serving::ArrivalProcess::parse(&arrivals_s.to_ascii_lowercase())
+        .unwrap_or_else(|| {
+            eprintln!("unknown arrival process {arrivals_s:?}; use poisson | burst | diurnal");
+            std::process::exit(2);
+        });
+    let d = serving::ServingConfig::default();
+    let nn = preset.node_count() as usize;
+    let cfg = serving::ServingConfig {
+        frontends: args.get("frontends", d.frontends),
+        workers: args.get("workers", d.workers),
+        fanout: args.get("fanout", d.fanout),
+        requests: args.get("requests", d.requests),
+        rate_per_s: args.get("rate", d.rate_per_s),
+        arrivals,
+        comm: args.comm(),
+        // Spread the pools across the mesh (and across shard
+        // boundaries) while leaving plenty of strided candidates.
+        stride: (nn / 128).max(1),
+        ..d
+    };
+    if args.flag("sweep") {
+        let rates: Vec<f64> =
+            [0.25, 0.5, 1.0, 2.0, 4.0].iter().map(|m| cfg.rate_per_s * m).collect();
+        let (sat, reports) = if shards == 1 {
+            serving::saturation_sweep(
+                move || Network::new(SystemConfig::new(preset)),
+                cfg,
+                &rates,
+            )
+        } else {
+            serving::saturation_sweep(move || sharded_engine(preset, shards), cfg, &rates)
+        };
+        println!(
+            "serving sweep [{preset:?}, {} arrivals, {} requests/point]:",
+            cfg.arrivals.name(),
+            cfg.requests
+        );
+        println!(
+            "{:>14} {:>15} {:>10} {:>10} {:>10}",
+            "offered req/s", "achieved req/s", "p50 ns", "p99 ns", "p999 ns"
+        );
+        for r in &reports {
+            println!(
+                "{:>14.0} {:>15.0} {:>10} {:>10} {:>10}",
+                r.offered_rps, r.throughput_rps, r.p50_ns, r.p99_ns, r.p999_ns
+            );
+        }
+        println!("saturation throughput: {sat:.0} req/s");
+        return;
+    }
+    let (report, engine) = if shards == 1 {
+        let mut net = Network::new(SystemConfig::new(preset));
+        (serving::run(&mut net, cfg), "serial".to_string())
+    } else {
+        let mut sharded = sharded_engine(preset, shards);
+        sharded.enable_trace();
+        let label = format!("sharded x{}", sharded.shard_count());
+        let rep = serving::run(&mut sharded, cfg);
+        // Byte-identity oracle: the same experiment, serial.
+        let mut serial = Network::new(SystemConfig::new(preset));
+        Fabric::enable_trace(&mut serial);
+        let srep = serving::run(&mut serial, cfg);
+        let mut bad = false;
+        let sh_trace = sharded.take_trace();
+        if sh_trace != serial.take_trace() {
+            eprintln!("BYTE-IDENTITY FAILURE: delivery traces differ");
+            bad = true;
+        }
+        if sharded.metrics().fabric_view() != serial.metrics.fabric_view() {
+            eprintln!("BYTE-IDENTITY FAILURE: fabric-view metrics differ");
+            bad = true;
+        }
+        if sharded.now() != serial.now() {
+            eprintln!("BYTE-IDENTITY FAILURE: final clocks differ");
+            bad = true;
+        }
+        if srep != rep {
+            eprintln!("BYTE-IDENTITY FAILURE: serving reports differ");
+            bad = true;
+        }
+        if bad {
+            std::process::exit(1);
+        }
+        (rep, label)
+    };
+    println!(
+        "serving [{engine}, {preset:?}, comm {}] {} x {} B requests, {} arrivals \
+         at {:.0} req/s:",
+        cfg.comm.name(),
+        report.issued,
+        cfg.request_bytes,
+        cfg.arrivals.name(),
+        report.offered_rps
+    );
+    println!(
+        "  completed {}/{}; latency p50 {} ns, p99 {} ns, p999 {} ns \
+         (mean {:.0} ns, max {} ns)",
+        report.completed,
+        report.issued,
+        report.p50_ns,
+        report.p99_ns,
+        report.p999_ns,
+        report.mean_ns,
+        report.max_ns
+    );
+    println!(
+        "  makespan {:.3} ms, achieved throughput {:.0} req/s",
+        report.makespan_ns as f64 / 1e6,
+        report.throughput_rps
+    );
+    if shards != 1 {
+        println!("  byte-identity vs serial engine: OK");
+    }
+}
+
 /// `repro chaos` — one seeded chaos scenario, graded against its SLOs
 /// (EXPERIMENTS.md E13), a real workload riding a scenario over the
 /// reliable transport (`--workload`, E14), or the full combined sweep
@@ -542,7 +687,8 @@ fn run_chaos(args: &Args) {
     }
     let scenario = chaos::Scenario::parse(&scen_s).unwrap_or_else(|| {
         eprintln!(
-            "unknown scenario {scen_s:?}; use storm | flap | partition | drop | hotspot | all"
+            "unknown scenario {scen_s:?}; use storm | flap | partition | drop | \
+             hotspot | loss | all"
         );
         std::process::exit(2);
     });
@@ -574,10 +720,15 @@ fn run_background_scenario(
     let preset = args.preset(SystemPreset::Card);
     let shards = args.get("shards", 1u32);
     let mut ccfg = chaos::ChaosConfig::new(scenario, args.get("seed", 42u64));
-    ccfg.comm = args.comm();
+    // Only override the scenario's channel when the user asked: loss
+    // defaults to best-effort Ethernet, everything else to Postmaster.
+    if args.get_opt("comm").is_some() {
+        ccfg.comm = args.comm();
+    }
     ccfg.ticks = args.get("ticks", ccfg.ticks);
     let mut sys = SystemConfig::new(preset);
     sys.rx_capacity = args.get("rx-cap", ccfg.suggested_rx_capacity());
+    sys.drop_probability = args.get("loss", scenario.suggested_drop_probability());
     let (report, engine) = if shards == 1 {
         let mut net = Network::new(sys);
         (chaos::run(&mut net, &ccfg, 1), "serial".to_string())

@@ -155,6 +155,13 @@ pub struct Metrics {
     /// Duplicate data segments the reliable receiver suppressed (the
     /// retransmit raced the original, or an ack was lost).
     pub duplicates_dropped: u64,
+    /// Packets dropped by the seeded per-link loss model
+    /// ([`crate::config::SystemConfig::drop_probability`]): the
+    /// transmit attempt was discarded before the wire, the packet
+    /// freed. Deterministic (a pure hash of seed, packet id and link),
+    /// so it is fabric behavior: kept by [`Metrics::fabric_view`] and
+    /// covered by the serial↔sharded byte-identity contract.
+    pub link_loss: u64,
     /// Peers a reliable endpoint's liveness monitor declared down
     /// (retry budget exhausted or heartbeat silence past the
     /// threshold). Surfaced to apps via `App::on_peer_down`.
@@ -209,6 +216,7 @@ impl Metrics {
         self.retransmits += other.retransmits;
         self.acks += other.acks;
         self.duplicates_dropped += other.duplicates_dropped;
+        self.link_loss += other.link_loss;
         self.peers_declared_down += other.peers_declared_down;
         self.drains_suppressed += other.drains_suppressed;
         self.windows_merged += other.windows_merged;
@@ -269,6 +277,9 @@ impl Metrics {
                 "  reroute convergence={}ns\n",
                 self.reroute_convergence_ns
             ));
+        }
+        if self.link_loss > 0 {
+            s.push_str(&format!("  link loss (seeded)={}\n", self.link_loss));
         }
         if self.retransmits + self.acks + self.duplicates_dropped + self.peers_declared_down > 0 {
             s.push_str(&format!(
@@ -423,9 +434,11 @@ mod tests {
         let mut b = Metrics::new();
         a.retransmits = 3;
         a.acks = 40;
+        a.link_loss = 5;
         b.acks = 2;
         b.duplicates_dropped = 1;
         b.peers_declared_down = 1;
+        b.link_loss = 2;
         let mut merged = Metrics::new();
         merged.merge(&a);
         merged.merge(&b);
@@ -433,16 +446,19 @@ mod tests {
         assert_eq!(merged.acks, 42);
         assert_eq!(merged.duplicates_dropped, 1);
         assert_eq!(merged.peers_declared_down, 1);
-        // Reliable-transport activity is fabric behavior: the
-        // cross-engine byte-identity contract covers it.
+        assert_eq!(merged.link_loss, 7);
+        // Reliable-transport activity (and the seeded loss that drives
+        // it) is fabric behavior: the cross-engine byte-identity
+        // contract covers it.
         let f = merged.fabric_view();
         assert_eq!(
-            (f.retransmits, f.acks, f.duplicates_dropped, f.peers_declared_down),
-            (3, 42, 1, 1)
+            (f.retransmits, f.acks, f.duplicates_dropped, f.peers_declared_down, f.link_loss),
+            (3, 42, 1, 1, 7)
         );
         let r = merged.report();
         assert!(r.contains("retransmits=3"));
         assert!(r.contains("peers declared down=1"));
+        assert!(r.contains("link loss (seeded)=7"));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Shard-local state domains: dense index remaps for per-shard state.
+//! Shard-local state domains: O(owned) index remaps for per-shard state.
 //!
 //! A [`Domain`] describes which slice of the mesh a [`Network`] holds
 //! dynamic state for, and how global identifiers map onto that state's
@@ -21,19 +21,30 @@
 //!
 //! The global↔local maps are **bijections** between the owned
 //! identifier set and `0..count` (property-tested in
-//! `tests/properties.rs`). Indexing state for an identifier the domain
-//! does not own is a bug — the shard would silently read idle state the
-//! owning shard is mutating — so [`Domain::node_index`] /
-//! [`Domain::link_index`] debug-assert ownership with a named-shard
-//! message, and in release builds the `u32::MAX` sentinel turns the
-//! mistake into an immediate out-of-bounds panic at the state vector
-//! instead of a silent wrong read.
+//! `tests/properties.rs`), stored in **O(owned)** space: a sorted
+//! local→global `Vec` per direction plus a deterministic
+//! [`FxHashMap`] for global→local. (The first version kept dense
+//! O(mesh) global→local vectors — ~4 B per mesh node and link,
+//! *replicated per shard*, which at the 100k-node presets would
+//! dominate every shard's actual dynamic state. Now a 64-shard
+//! Inc100k run pays per shard only for what the shard owns; the
+//! `inc9000_domain` / `serving` bench rows assert the scaling.)
+//!
+//! Indexing state for an identifier the domain does not own is a bug —
+//! the shard would silently read idle state the owning shard is
+//! mutating — so [`Domain::node_index`] / [`Domain::link_index`]
+//! debug-assert ownership with a named-shard message, and in release
+//! builds a missing map entry resolves to the `u32::MAX` sentinel,
+//! which turns the mistake into an immediate out-of-bounds panic at
+//! the state vector instead of a silent wrong read.
 //!
 //! [`Network`]: crate::network::Network
 //! [`sharded::ShardedNetwork`]: crate::network::sharded::ShardedNetwork
 //! [`Topology::partition`]: crate::topology::Topology::partition
+//! [`FxHashMap`]: crate::util::FxHashMap
 
 use crate::topology::{LinkId, NodeId, Topology};
+use crate::util::FxHashMap;
 
 /// Sentinel for "not owned by this domain" in the global→local maps.
 const UNOWNED: u32 = u32::MAX;
@@ -51,12 +62,15 @@ pub struct Domain {
 
 #[derive(Debug)]
 struct DomainMap {
-    /// Global node id → local index (`UNOWNED` if not owned).
-    node_local: Vec<u32>,
+    /// Global node id → local index; absent = not owned. O(owned)
+    /// entries (the deterministic [`crate::util::FxHashMap`] — no
+    /// RandomState, so iteration-free lookups cost the same on every
+    /// engine and run).
+    node_local: FxHashMap<u32, u32>,
     /// Local index → global node id.
     node_global: Vec<u32>,
-    /// Global link id → local index (`UNOWNED` if not owned).
-    link_local: Vec<u32>,
+    /// Global link id → local index; absent = not owned.
+    link_local: FxHashMap<u32, u32>,
     /// Local index → global link id.
     link_global: Vec<u32>,
 }
@@ -82,19 +96,19 @@ impl Domain {
     /// [`Topology::partition`]: crate::topology::Topology::partition
     pub fn owned(topo: &Topology, owner: &[u32], shard: u32) -> Domain {
         assert_eq!(owner.len(), topo.node_count(), "owner map does not cover the mesh");
-        let mut node_local = vec![UNOWNED; topo.node_count()];
+        let mut node_local = FxHashMap::default();
         let mut node_global = Vec::new();
         for n in 0..topo.node_count() {
             if owner[n] == shard {
-                node_local[n] = node_global.len() as u32;
+                node_local.insert(n as u32, node_global.len() as u32);
                 node_global.push(n as u32);
             }
         }
-        let mut link_local = vec![UNOWNED; topo.link_count()];
+        let mut link_local = FxHashMap::default();
         let mut link_global = Vec::new();
         for l in topo.links() {
             if owner[l.src.0 as usize] == shard {
-                link_local[l.id.0 as usize] = link_global.len() as u32;
+                link_local.insert(l.id.0, link_global.len() as u32);
                 link_global.push(l.id.0);
             }
         }
@@ -135,7 +149,7 @@ impl Domain {
     pub fn owns_node(&self, n: NodeId) -> bool {
         match &self.map {
             None => (n.0 as usize) < self.nodes_len,
-            Some(m) => m.node_local[n.0 as usize] != UNOWNED,
+            Some(m) => m.node_local.contains_key(&n.0),
         }
     }
 
@@ -144,7 +158,7 @@ impl Domain {
     pub fn owns_link(&self, l: LinkId) -> bool {
         match &self.map {
             None => (l.0 as usize) < self.links_len,
-            Some(m) => m.link_local[l.0 as usize] != UNOWNED,
+            Some(m) => m.link_local.contains_key(&l.0),
         }
     }
 
@@ -157,7 +171,7 @@ impl Domain {
         match &self.map {
             None => n.0 as usize,
             Some(m) => {
-                let local = m.node_local[n.0 as usize];
+                let local = m.node_local.get(&n.0).copied().unwrap_or(UNOWNED);
                 debug_assert_ne!(
                     local, UNOWNED,
                     "state of {n} indexed on shard {}, which does not own it",
@@ -175,7 +189,7 @@ impl Domain {
         match &self.map {
             None => l.0 as usize,
             Some(m) => {
-                let local = m.link_local[l.0 as usize];
+                let local = m.link_local.get(&l.0).copied().unwrap_or(UNOWNED);
                 debug_assert_ne!(
                     local, UNOWNED,
                     "state of {l} indexed on shard {}, which does not own its transmit side",
@@ -186,25 +200,28 @@ impl Domain {
         }
     }
 
-    /// Bookkeeping cost of the index maps themselves: an owned-subset
-    /// domain pays O(mesh) — 4 bytes per global node + 4 per global
-    /// link for the global→local direction, plus 4 per *owned* id for
-    /// the inverse — replicated per shard (0 for the full domain, which
-    /// maps by identity). This overhead is deliberately **not** part of
+    /// Bookkeeping cost of the index maps themselves: **O(owned)** — 4
+    /// bytes per owned id for each local→global vec plus ~9 bytes per
+    /// hash slot (u32 key + u32 value + 1 control byte, counted at the
+    /// maps' actual allocated capacity) for the global→local direction;
+    /// nothing scales with the mesh (0 for the full domain, which maps
+    /// by identity). This overhead is deliberately **not** part of
     /// `Network::state_bytes` (that figure is the dynamic fabric state,
     /// which partitions exactly across shards); the `inc9000_domain`
-    /// bench row reports it separately so the ~4 B/node+link per shard
-    /// is never hidden — it is two orders of magnitude below the
-    /// dynamic state it replaces (`LinkState`/`NodeState`/`EthPort` are
-    /// hundreds of bytes each).
+    /// and `serving` bench rows report it separately and assert it
+    /// stays proportional to the owned counts — it is two orders of
+    /// magnitude below the dynamic state it indexes
+    /// (`LinkState`/`NodeState`/`EthPort` are hundreds of bytes each).
     pub fn index_bytes(&self) -> u64 {
         match &self.map {
             None => 0,
-            Some(m) => ((m.node_local.len()
-                + m.node_global.len()
-                + m.link_local.len()
-                + m.link_global.len())
-                * std::mem::size_of::<u32>()) as u64,
+            Some(m) => {
+                let vecs = (m.node_global.len() + m.link_global.len())
+                    * std::mem::size_of::<u32>();
+                let slots = (m.node_local.capacity() + m.link_local.capacity())
+                    * (2 * std::mem::size_of::<u32>() + 1);
+                (vecs + slots) as u64
+            }
         }
     }
 
@@ -276,6 +293,31 @@ mod tests {
         // Every node and every link is owned by exactly one shard.
         assert_eq!(nodes_total, t.node_count());
         assert_eq!(links_total, t.link_count());
+    }
+
+    #[test]
+    fn index_maps_scale_with_owned_count_not_mesh() {
+        // One-card shards on a small mesh and on a mega mesh: the
+        // per-shard index cost depends on what the shard owns, not on
+        // how big the mesh around it is. (The dense-map version paid
+        // ~4 B × (27 648 nodes + links) ≈ 1.4 MB per Inc27000 shard;
+        // the O(owned) maps pay for 27 nodes + their links.)
+        let small = Topology::preset(SystemPreset::Inc3000);
+        let (owner_s, ss) = small.partition(16);
+        assert_eq!(ss, 16);
+        let mega = Topology::preset(SystemPreset::Inc27000);
+        let (owner_m, sm) = mega.partition(1024);
+        assert_eq!(sm, 1024, "one shard per card");
+        let ds = Domain::owned(&small, &owner_s, 0);
+        let dm = Domain::owned(&mega, &owner_m, 0);
+        assert_eq!(ds.node_count(), 27);
+        assert_eq!(dm.node_count(), 27);
+        let bound =
+            |d: &Domain| 32 * (d.node_count() + d.link_count()) as u64;
+        assert!(ds.index_bytes() <= bound(&ds), "{}", ds.index_bytes());
+        assert!(dm.index_bytes() <= bound(&dm), "{}", dm.index_bytes());
+        // In particular: far below even one byte per mesh node.
+        assert!(dm.index_bytes() < mega.node_count() as u64);
     }
 
     #[test]

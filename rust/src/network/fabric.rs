@@ -217,6 +217,18 @@ pub trait Fabric {
     fn eth_read(&mut self, node: NodeId) -> Vec<EthFrame>;
     /// See [`Network::nfs_put`].
     fn nfs_put(&mut self, node: NodeId, name: &str, size: u64);
+    /// See [`Network::gateway`]: the node carrying the physical
+    /// Ethernet port.
+    fn gateway(&self) -> NodeId;
+    /// See [`Network::nat_forward`]: install a NAT port-forwarding
+    /// entry at the gateway (driver context).
+    fn nat_forward(&mut self, external_port: u16, node: NodeId, internal_port: u16);
+    /// See [`Network::external_ingress_at`]: schedule an external frame
+    /// through the gateway's NAT, reaching the physical port at
+    /// absolute time `at` (driver context; open-loop workloads feed a
+    /// precomputed arrival schedule through here in ascending order).
+    fn external_ingress_at(&mut self, at: Time, external_port: u16, bytes: u32, tag: u64)
+        -> bool;
     /// See [`Network::tunnel_write`].
     fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64);
     /// See [`Network::tunnel_read`].
@@ -368,6 +380,21 @@ impl Fabric for Network {
     fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
         Network::nfs_put(self, node, name, size)
     }
+    fn gateway(&self) -> NodeId {
+        Network::gateway(self)
+    }
+    fn nat_forward(&mut self, external_port: u16, node: NodeId, internal_port: u16) {
+        Network::nat_forward(self, external_port, node, internal_port)
+    }
+    fn external_ingress_at(
+        &mut self,
+        at: Time,
+        external_port: u16,
+        bytes: u32,
+        tag: u64,
+    ) -> bool {
+        Network::external_ingress_at(self, at, external_port, bytes, tag)
+    }
     fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
         Network::tunnel_write(self, src, dst, addr, value)
     }
@@ -516,6 +543,21 @@ impl Fabric for ShardedNetwork {
     }
     fn nfs_put(&mut self, node: NodeId, name: &str, size: u64) {
         ShardedNetwork::nfs_put(self, node, name, size)
+    }
+    fn gateway(&self) -> NodeId {
+        ShardedNetwork::gateway(self)
+    }
+    fn nat_forward(&mut self, external_port: u16, node: NodeId, internal_port: u16) {
+        ShardedNetwork::nat_forward(self, external_port, node, internal_port)
+    }
+    fn external_ingress_at(
+        &mut self,
+        at: Time,
+        external_port: u16,
+        bytes: u32,
+        tag: u64,
+    ) -> bool {
+        ShardedNetwork::external_ingress_at(self, at, external_port, bytes, tag)
     }
     fn tunnel_write(&mut self, src: NodeId, dst: NodeId, addr: u64, value: u64) {
         ShardedNetwork::tunnel_write(self, src, dst, addr, value)

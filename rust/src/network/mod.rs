@@ -37,6 +37,11 @@
 //!   same-instant events dispatch in a content-determined order;
 //! * adaptive-routing tie-breaks hash the packet's identity
 //!   ([`crate::util::mix64`]) instead of drawing from an RNG stream;
+//! * the seeded loss model
+//!   ([`crate::config::SystemConfig::drop_probability`]) decides each
+//!   drop as a pure hash of (seed, packet id, link) — again no RNG
+//!   stream, so serial and sharded engines lose exactly the same
+//!   transmissions;
 //! * packet ids are assigned at the driver API (or derived from the
 //!   originating packet, e.g. NetTunnel replies), never from a global
 //!   counter inside an event handler. Traffic that [`App`] callbacks
@@ -427,10 +432,9 @@ impl Network {
     /// An engine-level figure: the serial engine reports the full mesh,
     /// each shard its owned slice, and the slices sum to the serial
     /// value exactly (every node and link is owned once). The domain's
-    /// own O(mesh) index maps are *not* included — they do not
-    /// partition (each shard carries a full global→local table) and are
-    /// accounted separately by [`Domain::index_bytes`], which the
-    /// `inc9000_domain` bench row reports alongside this. Tracked in
+    /// own O(owned) index maps are *not* included — they are accounted
+    /// separately by [`Domain::index_bytes`], which the `inc9000_domain`
+    /// bench row reports alongside this. Tracked in
     /// [`Metrics::state_bytes`].
     pub fn state_bytes(&self) -> u64 {
         (self.links.len() * std::mem::size_of::<LinkState>()
@@ -899,9 +903,42 @@ impl Network {
         }
     }
 
+    /// Seeded per-transmission loss ([`SystemConfig::drop_probability`]):
+    /// is this (packet, link) hand-off lost? A pure hash of (seed,
+    /// packet id, link) — no RNG stream, no state — so serial and
+    /// sharded engines lose exactly the same transmissions, and a
+    /// retransmitted segment (a fresh packet id) re-rolls the dice.
+    #[inline]
+    fn lossy_drop(&self, link: LinkId, packet_id: u64) -> bool {
+        let p = self.cfg.drop_probability;
+        if p <= 0.0 {
+            return false;
+        }
+        // `as` saturates: p = 1.0 maps to u64::MAX (drop everything).
+        let threshold = (p * u64::MAX as f64) as u64;
+        mix64(
+            self.cfg.seed
+                ^ 0xD6E8_FEB8_6659_FD93
+                ^ packet_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ link.0 as u64,
+        ) <= threshold
+    }
+
     /// Transmit `packet` on `link` now, or queue it if busy/out of credit.
     fn link_send(&mut self, link: LinkId, packet: PacketRef) {
-        let wire_bytes = self.packets.get(packet).wire_bytes;
+        let (wire_bytes, id) = {
+            let p = self.packets.get(packet);
+            (p.wire_bytes, p.id)
+        };
+        // Loss is decided when the packet is handed to the link — before
+        // any credits, queue slots or wire time are consumed, so a lost
+        // transmission costs the fabric nothing downstream and the
+        // receive side simply never hears of it.
+        if self.lossy_drop(link, id) {
+            self.metrics.link_loss += 1;
+            self.packets.free(packet);
+            return;
+        }
         let now = self.now();
         let li = self.domain.link_index(link);
         let st = &mut self.links[li];
@@ -1248,6 +1285,38 @@ mod tests {
             net.now()
         };
         assert_eq!(slow, base + 900);
+    }
+
+    #[test]
+    fn seeded_loss_is_deterministic_and_leak_free() {
+        let run = |p: f64| {
+            let mut cfg = SystemConfig::card();
+            cfg.drop_probability = p;
+            let mut net = Network::new(cfg);
+            let n = net.topo.node_count() as u32;
+            for i in 0..n {
+                net.send_directed(
+                    NodeId(i),
+                    NodeId((i + 13) % n),
+                    Proto::Raw { tag: 0 },
+                    Payload::bytes(vec![0u8; 128]),
+                );
+            }
+            net.run_to_quiescence(&mut NullApp);
+            (net.metrics.packets_delivered, net.metrics.link_loss, net.packets.live())
+        };
+        let (_, l0, live0) = run(0.0);
+        assert_eq!(l0, 0, "p=0 must be loss-free");
+        assert_eq!(live0, 0);
+        let (d1, l1, live1) = run(1.0);
+        assert_eq!(d1, 0, "p=1 loses every first transmission attempt");
+        assert!(l1 > 0);
+        assert_eq!(live1, 0, "lost packets must be freed, not leaked");
+        let (da, la, live_a) = run(0.3);
+        let (db, lb, _) = run(0.3);
+        assert_eq!((da, la), (db, lb), "loss is a pure function of seed, id and link");
+        assert!(da > 0 && la > 0, "p=0.3 should lose some and deliver some");
+        assert_eq!(live_a, 0);
     }
 
     #[test]

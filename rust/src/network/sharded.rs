@@ -28,6 +28,20 @@
 //! with no work are skipped (the next window index is derived from the
 //! global minimum pending-event time).
 //!
+//! # Work-stealing: shard counts beyond core counts
+//!
+//! Shards and worker threads are independent axes: `--shards 64` on an
+//! 8-core machine runs 64 shards on 8 workers. Within each phase of a
+//! window, workers *claim* shards off a shared atomic counter instead
+//! of walking fixed chunks, so a worker stuck in one shard's heavy
+//! window never idles the rest of the fleet behind a static
+//! assignment. Determinism is untouched: each shard is claimed by
+//! exactly one worker per phase, its per-shard computation depends
+//! only on its own state and the peeks published behind the previous
+//! barrier (not on *which* thread runs it), and the mailbox merge
+//! stays in canonical `(epoch, source shard, seq)` order because phase
+//! B sorts every inbox by source shard before importing.
+//!
 //! # Distance-aware multi-shard epoch batching
 //!
 //! On sparse traffic the cost is not the windows with work but the
@@ -82,10 +96,12 @@
 //! ([`crate::network::Domain`]): its `links`/`nodes`/`failed_links`/NIC
 //! vectors hold exactly the owned partition — node state for owned
 //! nodes, transmit-side link state for links leaving them — behind
-//! dense global↔local index maps, so a k-shard run holds ~1/k of the
-//! mesh state per shard (the per-shard slices sum to the serial
+//! O(owned) global↔local index maps, so a k-shard run holds ~1/k of
+//! the mesh state per shard with index overhead proportional to the
+//! owned counts, not the mesh (the per-shard slices sum to the serial
 //! engine's state exactly; [`Metrics::state_bytes`] and the
-//! `inc9000_domain` bench rows track the cut). Un-owned state simply
+//! `inc9000_domain` bench rows track the cut — what makes the
+//! `Inc27000`/`Inc100k` mega presets affordable at 64 shards). Un-owned state simply
 //! does not exist on a shard: indexing it debug-asserts with the shard
 //! named, and panics out of bounds in release, instead of silently
 //! reading an idle full-mesh copy as the pre-domain engine did.
@@ -112,7 +128,7 @@
 //! [`Metrics::fabric_view`]: crate::metrics::Metrics::fabric_view
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use crate::channels::endpoint::{CommMode, Endpoint, Message, MsgId};
@@ -153,9 +169,10 @@ pub struct ShardedNetwork {
 }
 
 impl ShardedNetwork {
-    /// Build a sharded system. `shards` is clamped to the natural unit
-    /// count of the preset (4 cages for `Inc9000`, 16 cards for
-    /// `Inc3000`, 1 for `Card`).
+    /// Build a sharded system. `shards` is clamped to the card count of
+    /// the preset (16 for `Inc3000`, 64 for `Inc9000`, 1024 for
+    /// `Inc27000`, 1 for `Card`); requests at or below the cage count
+    /// still partition cage-granular (4 cages for `Inc9000`).
     pub fn new(cfg: SystemConfig, shards: u32) -> Self {
         let topo = Arc::new(Topology::preset(cfg.preset));
         let (owner, count) = topo.partition(shards);
@@ -493,6 +510,27 @@ impl ShardedNetwork {
         self.topo.gateway_node((0, 0, 0))
     }
 
+    /// See [`Network::nat_forward`]: the NAT table lives on the
+    /// gateway's shard (ingress frames are created there).
+    pub fn nat_forward(&mut self, external_port: u16, node: NodeId, internal_port: u16) {
+        let gw = self.gateway();
+        self.shard_mut(gw).nat_forward(external_port, node, internal_port);
+    }
+
+    /// See [`Network::external_ingress_at`]: runs on the gateway's
+    /// shard with the global packet-id cursor synced in and out, so
+    /// ingress frames carry the ids a serial run would assign.
+    pub fn external_ingress_at(
+        &mut self,
+        at: Time,
+        external_port: u16,
+        bytes: u32,
+        tag: u64,
+    ) -> bool {
+        let gw = self.gateway();
+        self.with_shard(gw, |n| n.external_ingress_at(at, external_port, bytes, tag))
+    }
+
     /// The external world behind the gateway's physical port (NFS files,
     /// NAT table, egress counters) — it lives on the gateway's shard.
     pub fn eth_external(&self) -> &crate::channels::ethernet::ExternalWorld {
@@ -666,13 +704,13 @@ impl ShardedNetwork {
         }
         let init_window = first / lookahead;
 
-        // Balanced chunks: `workers` is already clamped to the shard
-        // count, and the remainder is spread one-per-chunk so exactly
-        // `workers` threads run (e.g. 4 shards / 3 workers = 2+1+1).
-        let nchunks = self.workers;
-        let base = nshards / nchunks;
-        let rem = nshards % nchunks;
-        let barrier = Barrier::new(nchunks);
+        // Work-stealing over shards (module docs): `workers` is clamped
+        // to the shard count but may be far below it (`--shards 64` on
+        // 8 cores). Each phase, workers claim shard indices off a
+        // shared counter until it runs dry, so load imbalance inside a
+        // window self-levels instead of stalling a static chunk.
+        let nworkers = self.workers;
+        let barrier = Barrier::new(nworkers);
         let mailboxes: Vec<Mailbox> = (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
         // Next-pending-event time per shard, pre-filled so the first
         // iteration can already derive sprint horizons. Between the
@@ -713,81 +751,106 @@ impl ShardedNetwork {
             h
         };
 
+        // One lockable slot per shard. The claim counters below hand
+        // each index to exactly one worker per phase, so the mutexes
+        // are uncontended — they exist so that *any* worker can legally
+        // hold any shard's `&mut` (the old code pinned shards to
+        // workers through `split_at_mut` chunks instead).
+        let slots: Vec<Mutex<(&mut Network, &mut A)>> = self
+            .shards
+            .iter_mut()
+            .zip(apps.iter_mut())
+            .map(|(net, app)| Mutex::new((net, app)))
+            .collect();
+        // Per-phase claim counters. Reset by the barrier leader right
+        // *after* the barrier that ends the phase: every claim of phase
+        // X happens before that barrier, and the next use is behind the
+        // following barrier, which no worker passes until the leader
+        // (who resets first, in program order) arrives.
+        let next_a = AtomicUsize::new(0);
+        let next_b = AtomicUsize::new(0);
+
         std::thread::scope(|scope| {
-            let mut rest: &mut [Network] = &mut self.shards;
-            let mut rest_apps: &mut [A] = apps;
-            for ci in 0..nchunks {
-                let take = base + usize::from(ci < rem);
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
-                rest = tail;
-                let (apps_chunk, apps_tail) = std::mem::take(&mut rest_apps).split_at_mut(take);
-                rest_apps = apps_tail;
+            for _ in 0..nworkers {
+                let slots = &slots;
                 let barrier = &barrier;
                 let mailboxes = &mailboxes;
                 let peeks = &peeks;
                 let abort_at = &abort_at;
                 let horizon = &horizon;
+                let next_a = &next_a;
+                let next_b = &next_b;
                 scope.spawn(move || {
                     let mut window = init_window;
                     loop {
                         let win_deadline =
                             ((window + 1).saturating_mul(lookahead) - 1).min(deadline);
-                        // Phase A: advance own shards through the window
-                        // (a shard whose horizon clears the window
-                        // sprints past it barrier-free — until its first
-                        // boundary export) and post boundary events.
-                        let ra = catch_unwind(AssertUnwindSafe(|| {
-                            for (net, app) in chunk.iter_mut().zip(apps_chunk.iter_mut()) {
-                                let sid = net.shard_id();
-                                // Safe sprint bound: strictly before the
-                                // earliest possible import (equal-time
-                                // events dispatch in content-key order,
-                                // so the horizon instant itself must
-                                // stay unprocessed).
-                                let own_peek = peeks[sid as usize].load(Ordering::SeqCst);
-                                let sprint_deadline = horizon(peeks, sid as usize)
-                                    .saturating_sub(1)
-                                    .min(deadline);
-                                if sprint_deadline > win_deadline && own_peek <= sprint_deadline
-                                {
-                                    net.run_exclusive(app, sprint_deadline);
-                                    // Windows the sprint coalesced (its
-                                    // first event sat in `own_peek`'s
-                                    // window).
-                                    let w_end = net.sim.now() / lookahead;
-                                    net.metrics.windows_merged +=
-                                        w_end.saturating_sub(own_peek / lookahead);
-                                } else {
-                                    net.run_window(app, win_deadline);
-                                }
-                                for (dst, msg) in net.take_outbox() {
-                                    mailboxes[dst as usize].lock().unwrap().push((sid, msg));
-                                }
+                        // Phase A: claim shards and advance each through
+                        // the window (a shard whose horizon clears the
+                        // window sprints past it barrier-free — until
+                        // its first boundary export), posting boundary
+                        // events to the mailboxes.
+                        let ra = catch_unwind(AssertUnwindSafe(|| loop {
+                            let c = next_a.fetch_add(1, Ordering::SeqCst);
+                            if c >= nshards {
+                                break;
+                            }
+                            let mut slot = slots[c].lock().unwrap();
+                            let (net, app) = &mut *slot;
+                            let sid = net.shard_id();
+                            // Safe sprint bound: strictly before the
+                            // earliest possible import (equal-time
+                            // events dispatch in content-key order,
+                            // so the horizon instant itself must
+                            // stay unprocessed).
+                            let own_peek = peeks[sid as usize].load(Ordering::SeqCst);
+                            let sprint_deadline = horizon(peeks, sid as usize)
+                                .saturating_sub(1)
+                                .min(deadline);
+                            if sprint_deadline > win_deadline && own_peek <= sprint_deadline {
+                                net.run_exclusive(*app, sprint_deadline);
+                                // Windows the sprint coalesced (its
+                                // first event sat in `own_peek`'s
+                                // window).
+                                let w_end = net.sim.now() / lookahead;
+                                net.metrics.windows_merged +=
+                                    w_end.saturating_sub(own_peek / lookahead);
+                            } else {
+                                net.run_window(*app, win_deadline);
+                            }
+                            for (dst, msg) in net.take_outbox() {
+                                mailboxes[dst as usize].lock().unwrap().push((sid, msg));
                             }
                         }));
                         if ra.is_err() {
                             abort_at.fetch_min(window, Ordering::SeqCst);
                         }
-                        barrier.wait();
-                        // Phase B: merge own inboxes in (source shard,
-                        // generation seq) order, publish next pending
-                        // event times. Skipped once this window is
-                        // known to be aborting.
+                        if barrier.wait().is_leader() {
+                            next_a.store(0, Ordering::SeqCst);
+                        }
+                        // Phase B: claim shards, merge each inbox in
+                        // (source shard, generation seq) order, publish
+                        // next pending event times. Skipped once this
+                        // window is known to be aborting.
                         let healthy = abort_at.load(Ordering::SeqCst) > window;
                         let rb = if ra.is_ok() && healthy {
-                            catch_unwind(AssertUnwindSafe(|| {
-                                for net in chunk.iter_mut() {
-                                    let sid = net.shard_id() as usize;
-                                    let mut inbox =
-                                        std::mem::take(&mut *mailboxes[sid].lock().unwrap());
-                                    // Stable: preserves per-source order.
-                                    inbox.sort_by_key(|(src, _)| *src);
-                                    net.import_boundary(inbox);
-                                    peeks[sid].store(
-                                        net.sim.peek_time().unwrap_or(u64::MAX),
-                                        Ordering::SeqCst,
-                                    );
+                            catch_unwind(AssertUnwindSafe(|| loop {
+                                let c = next_b.fetch_add(1, Ordering::SeqCst);
+                                if c >= nshards {
+                                    break;
                                 }
+                                let mut slot = slots[c].lock().unwrap();
+                                let (net, _) = &mut *slot;
+                                let sid = net.shard_id() as usize;
+                                let mut inbox =
+                                    std::mem::take(&mut *mailboxes[sid].lock().unwrap());
+                                // Stable: preserves per-source order.
+                                inbox.sort_by_key(|(src, _)| *src);
+                                net.import_boundary(inbox);
+                                peeks[sid].store(
+                                    net.sim.peek_time().unwrap_or(u64::MAX),
+                                    Ordering::SeqCst,
+                                );
                             }))
                         } else {
                             Ok(())
@@ -795,7 +858,9 @@ impl ShardedNetwork {
                         if rb.is_err() {
                             abort_at.fetch_min(window, Ordering::SeqCst);
                         }
-                        barrier.wait();
+                        if barrier.wait().is_leader() {
+                            next_b.store(0, Ordering::SeqCst);
+                        }
                         if abort_at.load(Ordering::SeqCst) <= window {
                             // Re-raise this worker's own panic (if any);
                             // other workers exit cleanly so the scope
@@ -825,6 +890,7 @@ impl ShardedNetwork {
                 });
             }
         });
+        drop(slots);
         self.dispatched() - started
     }
 }

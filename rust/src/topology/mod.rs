@@ -187,12 +187,15 @@ impl Topology {
 
     /// Partition the mesh into `shards` contiguous groups of *natural
     /// units* for parallel simulation: cages when the system has more
-    /// than one (INC 9000 — inter-cage traffic is confined to multi-span
-    /// z links, the cheapest boundary), otherwise cards. Returns the
-    /// owner shard per node plus the actual shard count (`shards` is
-    /// clamped to `[1, unit count]`).
+    /// than one and they suffice (INC 9000 — inter-cage traffic is
+    /// confined to multi-span z links, the cheapest boundary), falling
+    /// back to cards when the request exceeds the cage count (single-
+    /// cage systems, or mega meshes where `--shards 64` must not clamp
+    /// to 16 cages). Returns the owner shard per node plus the actual
+    /// shard count (`shards` is clamped to `[1, unit count]`). Either
+    /// way, whole units — and therefore whole cards — map to one shard.
     pub fn partition(&self, shards: u32) -> (Vec<u32>, u32) {
-        let by_cage = self.cage_count() > 1;
+        let by_cage = self.cage_count() > 1 && shards <= self.cage_count();
         let nunits =
             if by_cage { self.cage_count() } else { self.cards().len() as u32 };
         let s = shards.clamp(1, nunits);
@@ -318,17 +321,42 @@ impl Topology {
     /// at least one router latency, so `distance × router_latency` is a
     /// sound per-pair lookahead for the sharded engine's multi-shard
     /// epoch batching (see `network::sharded`).
+    ///
+    /// Computed over *cards*, not nodes: partitions are card-aligned
+    /// ([`Topology::partition`] assigns whole units), cards are 3×3×3
+    /// product sets (per-axis choices are independent), and the
+    /// per-axis hop minimum between two 3-wide card intervals `k`
+    /// cards apart is exactly `k` (x/y: `min f(d), d ∈ [3k−2, 3k+2]`
+    /// with `f(d) = d/3 + d%3` is attained at `d = 3k`; z: the
+    /// intra-cage offsets align freely, leaving one multi-span hop per
+    /// cage boundary — [`Topology::z_hops`]). So the boundary-pair
+    /// minimum equals the card-coordinate Manhattan distance minimum —
+    /// a card-count-squared scan instead of a node-count-squared one,
+    /// which is what keeps mega-mesh engine construction cheap.
     pub fn shard_hop_matrix(&self, owner: &[u32], shards: u32) -> Vec<u32> {
         let s = shards as usize;
-        let boundary: Vec<Vec<NodeId>> =
-            (0..shards).map(|i| self.boundary_nodes(owner, i)).collect();
+        let mut cards: Vec<Vec<(u32, u32, u32)>> = vec![Vec::new(); s];
+        for card in self.cards() {
+            let anchor =
+                self.id(Coord { x: card.0 * 3, y: card.1 * 3, z: card.2 * 3 });
+            debug_assert!(
+                self.card_nodes(card)
+                    .iter()
+                    .all(|&n| owner[n.0 as usize] == owner[anchor.0 as usize]),
+                "partition splits card {card:?} across shards"
+            );
+            cards[owner[anchor.0 as usize] as usize].push(card);
+        }
         let mut m = vec![0u32; s * s];
         for i in 0..s {
             for j in (i + 1)..s {
                 let mut best = u32::MAX;
-                for &a in &boundary[i] {
-                    for &b in &boundary[j] {
-                        best = best.min(self.min_hops(a, b));
+                for &a in &cards[i] {
+                    for &b in &cards[j] {
+                        let d = a.0.abs_diff(b.0)
+                            + a.1.abs_diff(b.1)
+                            + a.2.abs_diff(b.2);
+                        best = best.min(d);
                     }
                 }
                 m[i * s + j] = best;
@@ -564,15 +592,64 @@ mod tests {
 
     #[test]
     fn partition_is_contiguous_and_balanced() {
-        let t = Topology::preset(SystemPreset::Inc3000);
-        let (owner, s) = t.partition(4);
-        assert_eq!(s, 4);
-        let mut per_shard = vec![0u32; s as usize];
-        for n in t.nodes() {
-            per_shard[owner[n.0 as usize] as usize] += 1;
+        // (preset, shards, expected nodes per shard): 16 cards over 4
+        // shards = 108 nodes; the mega presets split evenly at 64
+        // shards (Inc27000: 1024 cards / 64 = 16 cards = 432 nodes;
+        // Inc100k: 4096 / 64 = 64 cards = 1728 nodes).
+        let cases = [
+            (SystemPreset::Inc3000, 4u32, 108u32),
+            (SystemPreset::Inc27000, 64, 432),
+            (SystemPreset::Inc100k, 64, 1728),
+        ];
+        for (preset, shards, per) in cases {
+            let t = Topology::preset(preset);
+            let (owner, s) = t.partition(shards);
+            assert_eq!(s, shards, "{preset:?}");
+            let mut per_shard = vec![0u32; s as usize];
+            for n in t.nodes() {
+                per_shard[owner[n.0 as usize] as usize] += 1;
+            }
+            assert!(
+                per_shard.iter().all(|&c| c == per),
+                "{preset:?}: {:?} ...",
+                &per_shard[..4.min(per_shard.len())]
+            );
+            // Contiguous in card-index order: owners never decrease.
+            let mut prev = 0;
+            for card in t.cards() {
+                let o = owner[t.gateway_node(card).0 as usize];
+                assert!(o >= prev, "{preset:?}: owner regressed at {card:?}");
+                prev = o;
+            }
         }
-        // 16 cards over 4 shards: 4 cards = 108 nodes each.
-        assert!(per_shard.iter().all(|&c| c == 108), "{per_shard:?}");
+    }
+
+    #[test]
+    fn partition_beyond_cage_count_falls_back_to_cards() {
+        // A mega mesh has 16 cages but must honor `--shards 64`: the
+        // unit granularity drops from cages to cards instead of
+        // clamping (work-stealing keeps shards > cores busy).
+        let t = Topology::preset(SystemPreset::Inc27000);
+        assert_eq!(t.cage_count(), 16);
+        let (owner, s) = t.partition(64);
+        assert_eq!(s, 64);
+        for n in t.nodes() {
+            assert_eq!(owner[n.0 as usize], t.card_index(n) * 64 / 1024);
+        }
+        // Same on Inc9000: 16 shards exceed its 4 cages, so the 64
+        // cards split 4-per-shard rather than clamping to 4 cages.
+        let t9 = Topology::preset(SystemPreset::Inc9000);
+        let (owner9, s9) = t9.partition(16);
+        assert_eq!(s9, 16);
+        for n in t9.nodes() {
+            assert_eq!(owner9[n.0 as usize], t9.card_index(n) / 4);
+        }
+        // At or below the cage count the cage boundary stays preferred.
+        let (owner4, s4) = t9.partition(4);
+        assert_eq!(s4, 4);
+        for n in t9.nodes() {
+            assert_eq!(owner4[n.0 as usize], t9.cage_of(n));
+        }
     }
 
     #[test]
@@ -603,6 +680,41 @@ mod tests {
         for i in 0..s3 as usize {
             for j in 0..s3 as usize {
                 assert_eq!(m3[i * 16 + j] == 0, i == j);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_hop_matrix_card_scan_matches_node_scan() {
+        // The card-Manhattan shortcut must reproduce the brute-force
+        // minimum over boundary-node pairs exactly (the doc-comment
+        // argument, checked): cage partitions and card partitions,
+        // even and uneven shard counts.
+        for (preset, shards) in [
+            (SystemPreset::Inc3000, 4u32),
+            (SystemPreset::Inc3000, 7),
+            (SystemPreset::Inc9000, 3),
+            (SystemPreset::Inc9000, 16),
+        ] {
+            let t = Topology::preset(preset);
+            let (owner, s) = t.partition(shards);
+            let fast = t.shard_hop_matrix(&owner, s);
+            let boundary: Vec<Vec<NodeId>> =
+                (0..s).map(|i| t.boundary_nodes(&owner, i)).collect();
+            for i in 0..s as usize {
+                for j in (i + 1)..s as usize {
+                    let mut best = u32::MAX;
+                    for &a in &boundary[i] {
+                        for &b in &boundary[j] {
+                            best = best.min(t.min_hops(a, b));
+                        }
+                    }
+                    assert_eq!(
+                        fast[i * s as usize + j],
+                        best,
+                        "{preset:?} shards={s} pair ({i},{j})"
+                    );
+                }
             }
         }
     }

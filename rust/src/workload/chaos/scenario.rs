@@ -86,6 +86,13 @@ pub enum Scenario {
     /// Hot-spot congestion: no link faults — every sender aims at one
     /// seeded sink whose bounded inbox backpressures or drops.
     Hotspot,
+    /// Seeded random packet loss: no scripted faults at all — the
+    /// harness raises the fabric-level
+    /// [`crate::config::SystemConfig::drop_probability`] instead, so
+    /// every link hand-off rolls a deterministic per-(packet, link)
+    /// hash and the reliable transport must recover the drops
+    /// ([`crate::metrics::Metrics::link_loss`] counts them).
+    Loss,
 }
 
 impl Scenario {
@@ -96,6 +103,7 @@ impl Scenario {
             "partition" => Some(Scenario::Partition),
             "drop" => Some(Scenario::Drop),
             "hotspot" => Some(Scenario::Hotspot),
+            "loss" => Some(Scenario::Loss),
             _ => None,
         }
     }
@@ -107,11 +115,28 @@ impl Scenario {
             Scenario::Partition => "partition",
             Scenario::Drop => "drop",
             Scenario::Hotspot => "hotspot",
+            Scenario::Loss => "loss",
         }
     }
 
-    pub const ALL: [Scenario; 5] =
-        [Scenario::Storm, Scenario::Flap, Scenario::Partition, Scenario::Drop, Scenario::Hotspot];
+    pub const ALL: [Scenario; 6] = [
+        Scenario::Storm,
+        Scenario::Flap,
+        Scenario::Partition,
+        Scenario::Drop,
+        Scenario::Hotspot,
+        Scenario::Loss,
+    ];
+
+    /// The fabric-level seeded loss rate the scenario runs under (only
+    /// [`Scenario::Loss`] asks for one; `repro chaos --loss P`
+    /// overrides it).
+    pub fn suggested_drop_probability(&self) -> f64 {
+        match self {
+            Scenario::Loss => 0.01,
+            _ => 0.0,
+        }
+    }
 
     /// Compile the scenario into a fault script on `topo`. `ticks` ×
     /// `tick_ns` is the traffic window the faults are staggered over;
@@ -238,6 +263,9 @@ impl Scenario {
                 let sink = NodeId((h(7) % topo.node_count() as u64) as u32);
                 FaultScript { hotspot: Some(sink), ..empty }
             }
+            // Loss scripts nothing: the faults live in the fabric's
+            // per-hand-off hash, not on the timeline.
+            Scenario::Loss => empty,
         }
     }
 
@@ -248,6 +276,7 @@ impl Scenario {
             Scenario::Partition => 0x9A37,
             Scenario::Drop => 0xD009,
             Scenario::Hotspot => 0x0407,
+            Scenario::Loss => 0x1055,
         }
     }
 }

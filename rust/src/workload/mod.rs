@@ -12,6 +12,12 @@
 //! * [`mcts`] — distributed Monte Carlo Tree Search, the intro's example
 //!   of an algorithm ill-suited to SIMD hardware: a leader node expands
 //!   a UCB tree and farms rollouts to workers over Postmaster (E9).
+//! * [`serving`] — open-loop inference serving (E15): external clients
+//!   reach the mesh through the gateway NAT with Poisson / bursty /
+//!   diurnal arrival schedules; frontends fan requests out to workers
+//!   and the harness reports p50/p99/p999 latency (measured from the
+//!   scheduled arrival — no coordinated omission) plus saturation
+//!   throughput from an offered-rate sweep.
 //! * [`chaos`] — the resilience suite (E13): seeded deterministic fault
 //!   scripts (failure storms, NIC flaps, partition-and-heal, node
 //!   drops, hot-spot congestion) composed with background traffic and
@@ -31,6 +37,7 @@
 pub mod chaos;
 pub mod learners;
 pub mod mcts;
+pub mod serving;
 pub mod training;
 
 /// FPGA-offload compute model: effective throughput of one node's fabric

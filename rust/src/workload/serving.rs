@@ -1,0 +1,589 @@
+//! Open-loop inference serving (E15): external clients vs the mesh.
+//!
+//! The paper's system target is neuromorphic/ML inference served to the
+//! outside world through the gateway's physical Ethernet port (§3.1).
+//! This workload models exactly that shape: simulated external clients
+//! issue requests through the gateway's NAT
+//! ([`crate::network::Fabric::external_ingress_at`]) to a set of
+//! *frontend* nodes; each frontend fans the request out to `fanout`
+//! *worker* nodes over the unified Endpoint API, the workers compute
+//! for a fixed service time and reply, and the request completes when
+//! the last reply lands back at its frontend.
+//!
+//! # Open loop, by construction
+//!
+//! The arrival schedule is precomputed in driver context from the
+//! config seed ([`arrival_schedule`]) and fed to the fabric before the
+//! run — arrivals do **not** wait for completions. Latency is measured
+//! from the *scheduled* arrival instant, not from whenever the frame
+//! cleared the (possibly backed-up) physical port, so queueing delay
+//! under overload is charged to the request: the classic
+//! coordinated-omission trap of closed-loop harnesses does not apply.
+//! Three arrival processes are modeled ([`ArrivalProcess`]): Poisson
+//! (independent clients), bursty (synchronized batch front-ends), and
+//! diurnal (a sinusoidally modulated rate — one "day" across the run).
+//!
+//! # Percentiles and saturation
+//!
+//! Latencies land in a [`LatencyHist`] (log-2 buckets); p50/p99/p999
+//! are bucket upper bounds — exact min/max/mean ride alongside.
+//! Saturation throughput is measured by an offered-rate sweep
+//! ([`saturation_sweep`]): the highest *achieved* completion rate over
+//! the sweep. Under overload an open-loop system's achieved rate tops
+//! out while its latency grows without bound; the knee is visible in
+//! the per-rate reports.
+//!
+//! # Determinism
+//!
+//! The schedule is a pure function of the config and seed; request
+//! state lives at the owning frontend (a request's `on_eth` and all of
+//! its reply `on_message`s fire at that one node), workers reply to
+//! `msg.from` — so the workload is a well-formed [`ShardableApp`] and
+//! runs byte-identically on the serial and sharded engines
+//! (`tests/sharded_differential.rs`).
+
+use std::sync::Arc;
+
+use crate::channels::endpoint::{CommMode, Endpoint, Message};
+use crate::metrics::LatencyHist;
+use crate::network::{App, Fabric, Network, ShardableApp};
+use crate::sim::Time;
+use crate::topology::NodeId;
+use crate::util::{FxHashMap, SplitMix64};
+
+/// How external request arrivals are spaced in time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrival gaps (independent clients).
+    Poisson,
+    /// `burst` simultaneous arrivals, bursts spaced so the mean rate
+    /// matches the configured rate (synchronized batch front-ends).
+    Bursty { burst: u32 },
+    /// Poisson with a sinusoidally modulated rate — one full cycle
+    /// ("day") across the run, peak ≈ 1.8×, trough ≈ 0.2× the mean.
+    Diurnal,
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI name: `poisson | burst | diurnal`.
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        match s {
+            "poisson" => Some(ArrivalProcess::Poisson),
+            "burst" | "bursty" => Some(ArrivalProcess::Bursty { burst: 32 }),
+            "diurnal" => Some(ArrivalProcess::Diurnal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty { .. } => "burst",
+            ArrivalProcess::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Workload parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingConfig {
+    /// NAT-forwarded frontend nodes (each owns one external port).
+    pub frontends: usize,
+    /// Worker pool size (disjoint from the frontends).
+    pub workers: usize,
+    /// Workers consulted per request (model-parallel fan-out).
+    pub fanout: usize,
+    /// Total requests issued (open loop: all are scheduled up front).
+    pub requests: u64,
+    /// Mean offered rate, requests per second.
+    pub rate_per_s: f64,
+    pub arrivals: ArrivalProcess,
+    /// External request frame payload (also the fan-out message size).
+    pub request_bytes: u32,
+    /// Worker reply message size.
+    pub reply_bytes: u32,
+    /// Fixed per-request service time at each worker. Workers overlap
+    /// requests freely (FPGA offload — an infinite-server station);
+    /// contention shows up on the fabric, not in a CPU queue.
+    pub work_ns: Time,
+    /// The virtual channel the fan-out and replies travel over.
+    pub comm: CommMode,
+    /// Node-index stride when placing frontends/workers (spreads the
+    /// pools across cards and cages — the cross-shard traffic source).
+    pub stride: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            frontends: 4,
+            workers: 16,
+            fanout: 3,
+            requests: 200,
+            rate_per_s: 50_000.0,
+            arrivals: ArrivalProcess::Poisson,
+            request_bytes: 256,
+            reply_bytes: 128,
+            work_ns: 20_000,
+            comm: CommMode::Postmaster { queue: 0 },
+            stride: 1,
+        }
+    }
+}
+
+/// Serving message kinds (first payload byte).
+const KIND_REQUEST: u8 = 1;
+const KIND_REPLY: u8 = 2;
+
+/// Encode `(kind, request id)` into a `bytes`-sized payload.
+fn encode(kind: u8, id: u64, bytes: u32) -> Vec<u8> {
+    let mut v = vec![0u8; (bytes as usize).max(9)];
+    v[0] = kind;
+    v[1..9].copy_from_slice(&id.to_le_bytes());
+    v
+}
+
+/// Decode a serving payload back into `(kind, request id)`.
+fn decode(data: &[u8]) -> Option<(u8, u64)> {
+    if data.len() < 9 {
+        return None;
+    }
+    let mut id = [0u8; 8];
+    id.copy_from_slice(&data[1..9]);
+    Some((data[0], u64::from_le_bytes(id)))
+}
+
+/// Exponential gap with the given mean (inverse-CDF; `1 - u ∈ (0, 1]`
+/// keeps the log finite).
+fn exp_gap(rng: &mut SplitMix64, mean_ns: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() * mean_ns
+}
+
+/// Precompute the arrival instant of every request: a pure function of
+/// the config and `seed`, so serial and sharded runs (and re-runs) see
+/// the identical schedule. Non-decreasing by construction.
+pub fn arrival_schedule(cfg: &ServingConfig, seed: u64) -> Vec<Time> {
+    let mut rng = SplitMix64::new(seed ^ 0x0A5E_11A7_E5EE_D001);
+    let mean_gap = 1e9 / cfg.rate_per_s;
+    let n = cfg.requests as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    match cfg.arrivals {
+        ArrivalProcess::Poisson => {
+            for _ in 0..n {
+                t += exp_gap(&mut rng, mean_gap);
+                out.push(t as Time);
+            }
+        }
+        ArrivalProcess::Bursty { burst } => {
+            let b = burst.max(1) as usize;
+            for i in 0..n {
+                if i > 0 && i % b == 0 {
+                    t += mean_gap * b as f64;
+                }
+                out.push(t as Time);
+            }
+        }
+        ArrivalProcess::Diurnal => {
+            // One sinusoidal cycle across the nominal run span; the
+            // instantaneous rate scales the exponential gap.
+            let period = mean_gap * n as f64;
+            for _ in 0..n {
+                let phase = t / period * std::f64::consts::TAU;
+                let scale = (1.0 + 0.8 * phase.sin()).max(0.05);
+                t += exp_gap(&mut rng, mean_gap) / scale;
+                out.push(t as Time);
+            }
+        }
+    }
+    out
+}
+
+/// The per-run serving state machine: request registration at the
+/// frontends, fan-out, worker replies, completion accounting. One
+/// request's callbacks all fire at its frontend (registration and
+/// replies) or at its workers (service) — see the module docs — so the
+/// app partitions cleanly. Drive it to quiescence in a **single**
+/// [`Fabric::run`] call: in-flight request state lives in the shard
+/// partitions and does not survive a mid-flight reduce.
+pub struct ServingApp {
+    comm: CommMode,
+    fanout: usize,
+    frontends: Arc<Vec<NodeId>>,
+    workers: Arc<Vec<NodeId>>,
+    /// Request id → scheduled arrival instant (shared, read-only).
+    schedule: Arc<Vec<Time>>,
+    request_bytes: u32,
+    reply_bytes: u32,
+    work_ns: Time,
+    /// Requests issued (root app only; partitions carry 0).
+    pub issued: u64,
+    /// Requests whose last reply landed.
+    pub completed: u64,
+    /// Completion instant of the latest request (max-merged).
+    pub last_done: Time,
+    /// Request latency: completion − scheduled arrival.
+    pub hist: LatencyHist,
+    /// Outstanding replies per in-flight request id.
+    pending: FxHashMap<u64, u32>,
+}
+
+impl ServingApp {
+    /// Requests still in flight (0 after a run to quiescence).
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+impl App for ServingApp {
+    fn on_eth(
+        &mut self,
+        net: &mut Network,
+        node: NodeId,
+        frame: &crate::channels::ethernet::EthFrame,
+    ) {
+        // Gateway-NAT ingress at a frontend: register the request and
+        // fan it out. (The contains check also skips stray frames at
+        // worker nodes, which this workload never produces.)
+        if !self.frontends.contains(&node) {
+            return;
+        }
+        let id = frame.tag;
+        if id as usize >= self.schedule.len() {
+            return;
+        }
+        self.pending.insert(id, self.fanout as u32);
+        let ep = Endpoint { node, mode: self.comm };
+        let nw = self.workers.len();
+        for j in 0..self.fanout {
+            // Pure function of the request id: both engines consult the
+            // same workers.
+            let w = self.workers[(id as usize * self.fanout + j) % nw];
+            net.send(&ep, w, Message::new(encode(KIND_REQUEST, id, self.request_bytes)));
+        }
+    }
+
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
+        let Some((kind, id)) = decode(&msg.data) else { return false };
+        match kind {
+            KIND_REQUEST => {
+                // Worker: serve after the fixed service time, reply to
+                // the frontend that asked.
+                let at = net.now() + self.work_ns;
+                net.send_at(at, &ep, msg.from, Message::new(encode(KIND_REPLY, id, self.reply_bytes)));
+                true
+            }
+            KIND_REPLY => {
+                // Frontend: count the reply down; the last one
+                // completes the request.
+                if let Some(left) = self.pending.get_mut(&id) {
+                    *left -= 1;
+                    if *left == 0 {
+                        self.pending.remove(&id);
+                        self.completed += 1;
+                        let now = net.now();
+                        self.last_done = self.last_done.max(now);
+                        self.hist.record(now.saturating_sub(self.schedule[id as usize]));
+                    }
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+impl ShardableApp for ServingApp {
+    fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
+        ServingApp {
+            comm: self.comm,
+            fanout: self.fanout,
+            frontends: self.frontends.clone(),
+            workers: self.workers.clone(),
+            schedule: self.schedule.clone(),
+            request_bytes: self.request_bytes,
+            reply_bytes: self.reply_bytes,
+            work_ns: self.work_ns,
+            issued: 0,
+            completed: 0,
+            last_done: 0,
+            hist: LatencyHist::new(),
+            pending: FxHashMap::default(),
+        }
+    }
+
+    fn reduce(&mut self, part: Self) {
+        self.completed += part.completed;
+        self.last_done = self.last_done.max(part.last_done);
+        self.hist.merge(&part.hist);
+        // Request ids are owned by one frontend each, so the maps are
+        // disjoint; anything still here was in flight at the reduce.
+        self.pending.extend(part.pending);
+    }
+}
+
+/// A placed serving deployment: frontends NAT-forwarded, endpoints
+/// open, the arrival schedule computed. Split from [`run`] so harnesses
+/// can issue and drive explicitly.
+pub struct Serving {
+    pub cfg: ServingConfig,
+    pub frontends: Arc<Vec<NodeId>>,
+    pub workers: Arc<Vec<NodeId>>,
+    pub schedule: Arc<Vec<Time>>,
+}
+
+impl Serving {
+    /// Place the pools (skipping the gateway — it forwards, it does not
+    /// serve), open endpoints, connect pairs where the mode demands,
+    /// install the NAT entries, and compute the schedule.
+    pub fn setup<F: Fabric>(net: &mut F, cfg: ServingConfig) -> Serving {
+        assert!(cfg.frontends > 0 && cfg.workers > 0 && cfg.fanout > 0, "empty serving pool");
+        assert!(cfg.frontends <= u16::MAX as usize, "one external port per frontend");
+        assert!(cfg.fanout <= cfg.workers, "fanout exceeds the worker pool");
+        let gw = net.gateway();
+        let nodes: Vec<NodeId> = net
+            .topo()
+            .nodes()
+            .step_by(cfg.stride.max(1))
+            .filter(|&n| n != gw)
+            .take(cfg.frontends + cfg.workers)
+            .collect();
+        assert_eq!(
+            nodes.len(),
+            cfg.frontends + cfg.workers,
+            "preset too small for {} frontends + {} workers at stride {}",
+            cfg.frontends,
+            cfg.workers,
+            cfg.stride
+        );
+        let frontends: Vec<NodeId> = nodes[..cfg.frontends].to_vec();
+        let workers: Vec<NodeId> = nodes[cfg.frontends..].to_vec();
+        for &n in &nodes {
+            net.open(n, cfg.comm);
+        }
+        if net.caps(cfg.comm).pair_setup {
+            for &f in &frontends {
+                let ep = Endpoint { node: f, mode: cfg.comm };
+                for &w in &workers {
+                    net.connect(&ep, w);
+                }
+            }
+            for &w in &workers {
+                let ep = Endpoint { node: w, mode: cfg.comm };
+                for &f in &frontends {
+                    net.connect(&ep, f);
+                }
+            }
+        }
+        for (i, &f) in frontends.iter().enumerate() {
+            net.nat_forward(i as u16, f, 0);
+        }
+        let schedule = arrival_schedule(&cfg, net.config().seed);
+        Serving {
+            cfg,
+            frontends: Arc::new(frontends),
+            workers: Arc::new(workers),
+            schedule: Arc::new(schedule),
+        }
+    }
+
+    /// Feed the whole arrival schedule through the gateway NAT
+    /// (ascending order — the physical port serializes bursts exactly
+    /// as the real 1 GbE would). Returns the requests issued.
+    pub fn issue<F: Fabric>(&self, net: &mut F) -> u64 {
+        let nf = self.frontends.len();
+        for (i, &at) in self.schedule.iter().enumerate() {
+            let ok = net.external_ingress_at(at, (i % nf) as u16, self.cfg.request_bytes, i as u64);
+            debug_assert!(ok, "request {i} hit an unmapped NAT port");
+        }
+        self.schedule.len() as u64
+    }
+
+    /// The root app for this deployment, sized for the full schedule.
+    pub fn app(&self) -> ServingApp {
+        ServingApp {
+            comm: self.cfg.comm,
+            fanout: self.cfg.fanout,
+            frontends: self.frontends.clone(),
+            workers: self.workers.clone(),
+            schedule: self.schedule.clone(),
+            request_bytes: self.cfg.request_bytes,
+            reply_bytes: self.cfg.reply_bytes,
+            work_ns: self.cfg.work_ns,
+            issued: self.schedule.len() as u64,
+            completed: 0,
+            last_done: 0,
+            hist: LatencyHist::new(),
+            pending: FxHashMap::default(),
+        }
+    }
+}
+
+/// One offered-rate point's results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingReport {
+    pub issued: u64,
+    pub completed: u64,
+    /// Latency percentiles (log-2 bucket upper bounds) and exact
+    /// mean/max, ns; measured from the *scheduled* arrival.
+    pub p50_ns: Time,
+    pub p99_ns: Time,
+    pub p999_ns: Time,
+    pub mean_ns: f64,
+    pub max_ns: Time,
+    /// First scheduled arrival → last completion.
+    pub makespan_ns: Time,
+    /// The configured open-loop arrival rate.
+    pub offered_rps: f64,
+    /// Achieved completion rate over the makespan.
+    pub throughput_rps: f64,
+}
+
+impl ServingReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"issued\":{},\"completed\":{},\"p50_ns\":{},\"p99_ns\":{},\"p999_ns\":{},\
+             \"mean_ns\":{:.1},\"max_ns\":{},\"makespan_ns\":{},\"offered_rps\":{:.0},\
+             \"throughput_rps\":{:.0}}}",
+            self.issued,
+            self.completed,
+            self.p50_ns,
+            self.p99_ns,
+            self.p999_ns,
+            self.mean_ns,
+            self.max_ns,
+            self.makespan_ns,
+            self.offered_rps,
+            self.throughput_rps,
+        )
+    }
+}
+
+/// Run the full open-loop workload on either engine and report.
+pub fn run<F: Fabric>(net: &mut F, cfg: ServingConfig) -> ServingReport {
+    let sv = Serving::setup(net, cfg);
+    sv.issue(net);
+    let mut app = sv.app();
+    net.run(&mut app);
+    assert_eq!(app.in_flight(), 0, "requests still pending at quiescence");
+    assert_eq!(app.completed, app.issued, "lost serving requests");
+    let first = sv.schedule.first().copied().unwrap_or(0);
+    let makespan = app.last_done.saturating_sub(first);
+    let throughput =
+        if makespan > 0 { app.completed as f64 * 1e9 / makespan as f64 } else { 0.0 };
+    ServingReport {
+        issued: app.issued,
+        completed: app.completed,
+        p50_ns: app.hist.percentile(0.50),
+        p99_ns: app.hist.percentile(0.99),
+        p999_ns: app.hist.percentile(0.999),
+        mean_ns: app.hist.mean(),
+        max_ns: app.hist.max(),
+        makespan_ns: makespan,
+        offered_rps: cfg.rate_per_s,
+        throughput_rps: throughput,
+    }
+}
+
+/// Offered-rate sweep on fresh fabrics: returns the saturation
+/// throughput (highest achieved completion rate) and the per-rate
+/// reports, in sweep order.
+pub fn saturation_sweep<F: Fabric>(
+    make: impl Fn() -> F,
+    base: ServingConfig,
+    rates: &[f64],
+) -> (f64, Vec<ServingReport>) {
+    let mut reports = Vec::with_capacity(rates.len());
+    let mut sat = 0.0f64;
+    for &r in rates {
+        let mut net = make();
+        let rep = run(&mut net, ServingConfig { rate_per_s: r, ..base });
+        sat = sat.max(rep.throughput_rps);
+        reports.push(rep);
+    }
+    (sat, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Network;
+
+    #[test]
+    fn poisson_schedule_is_monotone_at_the_configured_rate() {
+        let cfg = ServingConfig { requests: 2000, rate_per_s: 100_000.0, ..Default::default() };
+        let s = arrival_schedule(&cfg, 42);
+        assert_eq!(s.len(), 2000);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "schedule must be non-decreasing");
+        // Mean gap within 15% of the 10µs target over 2000 samples.
+        let mean = s.last().unwrap() / (s.len() as u64);
+        assert!((7_000..13_000).contains(&mean), "mean gap {mean}ns off a 10µs target");
+        // Pure function of the seed.
+        assert_eq!(s, arrival_schedule(&cfg, 42));
+        assert_ne!(s, arrival_schedule(&cfg, 43));
+    }
+
+    #[test]
+    fn burst_schedule_groups_arrivals() {
+        let cfg = ServingConfig {
+            requests: 96,
+            arrivals: ArrivalProcess::Bursty { burst: 32 },
+            ..Default::default()
+        };
+        let s = arrival_schedule(&cfg, 1);
+        assert_eq!(s[0], s[31], "a burst arrives simultaneously");
+        assert!(s[32] > s[31], "bursts are spaced apart");
+        assert_eq!(s[32], s[63]);
+    }
+
+    #[test]
+    fn arrival_process_parse_round_trips() {
+        for (s, p) in [
+            ("poisson", ArrivalProcess::Poisson),
+            ("burst", ArrivalProcess::Bursty { burst: 32 }),
+            ("diurnal", ArrivalProcess::Diurnal),
+        ] {
+            assert_eq!(ArrivalProcess::parse(s), Some(p));
+            assert_eq!(ArrivalProcess::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArrivalProcess::parse("uniform"), None);
+    }
+
+    #[test]
+    fn all_requests_complete_on_card() {
+        let mut net = Network::card();
+        let cfg = ServingConfig { requests: 60, ..Default::default() };
+        let rep = run(&mut net, cfg);
+        assert_eq!(rep.completed, 60);
+        assert!(rep.p50_ns > 0 && rep.p99_ns >= rep.p50_ns && rep.p999_ns >= rep.p99_ns);
+        assert!(rep.mean_ns >= cfg.work_ns as f64, "latency includes the service time");
+        assert!(rep.throughput_rps > 0.0);
+        let j = rep.to_json();
+        assert!(j.contains("\"completed\":60") && j.contains("throughput_rps"));
+    }
+
+    #[test]
+    fn every_arrival_process_serves_cleanly() {
+        for arrivals in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Bursty { burst: 16 },
+            ArrivalProcess::Diurnal,
+        ] {
+            let mut net = Network::card();
+            let cfg = ServingConfig { requests: 48, arrivals, ..Default::default() };
+            let rep = run(&mut net, cfg);
+            assert_eq!(rep.completed, 48, "{} lost requests", arrivals.name());
+        }
+    }
+
+    #[test]
+    fn saturation_sweep_reports_every_rate() {
+        let base = ServingConfig { requests: 30, ..Default::default() };
+        let rates = [20_000.0, 200_000.0];
+        let (sat, reports) = saturation_sweep(Network::card, base, &rates);
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.completed == 30));
+        assert!(sat >= reports[0].throughput_rps && sat >= reports[1].throughput_rps);
+        assert!(sat > 0.0);
+    }
+}

@@ -2,6 +2,7 @@
 //! the offline environment has no proptest, so cases are generated
 //! explicitly; failures print the seed for reproduction).
 
+use inc_sim::channels::ethernet::RxMode;
 use inc_sim::channels::{CommMode, Endpoint, Message, ReliableParams};
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::network::sharded::ShardedNetwork;
@@ -19,12 +20,23 @@ const CASES: u64 = 40;
 /// counts, each shard's global↔local maps are bijections between its
 /// owned identifier set and a dense `0..count` range, and across shards
 /// they cover the owner map exactly — every node once (by its owner),
-/// every link once (by its transmit-side owner).
+/// every link once (by its transmit-side owner). On the mega presets
+/// the maps must also stay O(owned): a shard of a 100k-node mesh may
+/// not pay for the whole mesh.
 #[test]
 fn prop_domain_maps_are_bijections_covering_the_owner_map() {
-    for preset in [SystemPreset::Card, SystemPreset::Inc3000, SystemPreset::Inc9000] {
+    for (preset, shard_counts) in [
+        (SystemPreset::Card, &[1u32, 2, 3, 4, 7, 16][..]),
+        (SystemPreset::Inc3000, &[1, 2, 3, 4, 7, 16]),
+        (SystemPreset::Inc9000, &[1, 2, 3, 4, 7, 16]),
+        // Mega presets: restricted sweep (the full-scale figures live
+        // in benches/sim_engine.rs); 64 > any core count here, the
+        // work-stealing regime.
+        (SystemPreset::Inc27000, &[1, 16, 64]),
+        (SystemPreset::Inc100k, &[16, 64]),
+    ] {
         let topo = Topology::preset(preset);
-        for shards in [1u32, 2, 3, 4, 7, 16] {
+        for &shards in shard_counts {
             let (owner, s) = topo.partition(shards);
             let mut node_owner_seen = vec![false; topo.node_count()];
             let mut link_owner_seen = vec![false; topo.link_count()];
@@ -61,6 +73,16 @@ fn prop_domain_maps_are_bijections_covering_the_owner_map() {
                     d.link_count(),
                     topo.links().iter().filter(|l| owner[l.src.0 as usize] == shard).count(),
                     "{ctx}: link count"
+                );
+                // O(owned) accounting: index bytes bounded by the
+                // shard's own slice (generous constant for hash-map
+                // capacity slack), never by the mesh.
+                assert!(
+                    d.index_bytes() <= 64 * (d.node_count() + d.link_count()) + 4096,
+                    "{ctx}: index maps are not O(owned) ({} bytes for {} nodes + {} links)",
+                    d.index_bytes(),
+                    d.node_count(),
+                    d.link_count()
                 );
             }
             // Covering exactly: union over shards = the whole mesh.
@@ -501,6 +523,64 @@ fn prop_reliable_exactly_once_under_storm() {
         total_acks += net.metrics.acks;
     }
     assert!(total_acks > 0, "the reliable transport never engaged");
+}
+
+/// Seeded fabric-level packet loss (`drop_probability`): the reliable
+/// transport turns a lossy best-effort channel back into exactly-once.
+/// Every record is delivered once, nobody is falsely declared down, and
+/// both the loss and retransmit paths demonstrably engage.
+#[test]
+fn prop_reliable_exactly_once_under_seeded_loss() {
+    const TICK: u64 = 50_000;
+    const TICKS: u64 = 30;
+    let participants = [0u32, 4, 8, 13, 17, 21, 24, 26].map(NodeId);
+    let mut total_loss = 0u64;
+    let mut total_retx = 0u64;
+    for seed in 0..4u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x1055);
+        let mut sys = SystemConfig::card();
+        sys.seed = seed; // varies the loss hash run to run
+        sys.drop_probability = 0.01;
+        let mut net = Network::new(sys);
+        // Best-effort Ethernet under the transport: a dropped frame is
+        // simply gone, exactly what the retransmit path exists for.
+        // Generous retry budget: at 1% per hand-off a record's loss odds
+        // per attempt are a few percent, so 10 tries make a delivery
+        // failure astronomically unlikely (and the run is deterministic).
+        let eth = CommMode::Ethernet { rx: RxMode::Interrupt };
+        let params = ReliableParams { max_retries: 10, ..ReliableParams::default() };
+        let eps: Vec<Endpoint> =
+            participants.iter().map(|&n| net.reliable_open(n, eth, params)).collect();
+        let mut app = ExactlyOnce::default();
+        let mut sent = std::collections::BTreeSet::new();
+        for tick in 0..TICKS {
+            let t0 = tick * TICK;
+            for (i, ep) in eps.iter().enumerate() {
+                let mut d = rng.gen_range(participants.len());
+                if d == i {
+                    d = (d + 1) % participants.len();
+                }
+                let key = (i as u8, tick as u8);
+                net.reliable_send_at(t0, ep, participants[d], Message::new(vec![key.0, key.1]));
+                sent.insert(key);
+            }
+            Fabric::run_until(&mut net, &mut app, t0 + TICK);
+        }
+        net.run_to_quiescence(&mut app);
+        for &key in &sent {
+            assert_eq!(
+                app.got.get(&key).copied().unwrap_or(0),
+                1,
+                "seed {seed}: record {key:?} not delivered exactly once under loss"
+            );
+        }
+        assert_eq!(app.got.len(), sent.len(), "seed {seed}: phantom records arrived");
+        assert_eq!(app.downs, 0, "seed {seed}: seeded loss falsely declared a peer down");
+        total_loss += net.metrics.link_loss;
+        total_retx += net.metrics.retransmits;
+    }
+    assert!(total_loss > 0, "1% seeded loss never dropped a packet");
+    assert!(total_retx > 0, "the retransmit path never engaged under loss");
 }
 
 /// With a targeted two-phase death mid-run, every record a live sender

@@ -29,6 +29,7 @@ use inc_sim::workload::chaos::workloads::{run_workload, ChaosWorkload, WorkloadC
 use inc_sim::workload::chaos::{self, ChaosConfig, FaultKind, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 use inc_sim::workload::mcts::{DistributedMcts, Game};
+use inc_sim::workload::serving::{self, ArrivalProcess, ServingConfig};
 use inc_sim::workload::training::{train_comm, CommShape};
 
 /// Inject a seeded mixed workload: directed packets of varied sizes,
@@ -782,6 +783,114 @@ fn reliable_allreduce_under_drop_byte_identical_across_shard_counts() {
             }
         }
     }
+}
+
+#[test]
+fn seeded_loss_byte_identical_across_engines() {
+    // Fabric-level seeded packet loss is part of the byte-identity
+    // contract: the drop decision is a pure hash of (seed, packet id,
+    // link), and packet ids are already engine-identical, so both
+    // engines must lose exactly the same packets at the same hand-offs
+    // under the full mixed workload.
+    let mut sys = SystemConfig::new(SystemPreset::Inc3000);
+    sys.drop_probability = 0.01;
+    let mut serial = Network::new(sys.clone());
+    Fabric::enable_trace(&mut serial);
+    inject_mix(&mut serial, 432, 17, 300);
+    serial.run_to_quiescence(&mut NullApp);
+
+    let mut sharded = ShardedNetwork::new(sys, 16);
+    sharded.enable_trace();
+    inject_mix(&mut sharded, 432, 17, 300);
+    sharded.run_to_quiescence();
+
+    assert!(serial.metrics().link_loss > 0, "1% loss never dropped a packet");
+    assert_same_outcome(&mut serial, &mut sharded, "seeded loss");
+    assert_eq!(sharded.live_packets(), 0, "seeded loss leaked arena packets");
+}
+
+// ---------------------------------------------------------------------
+// Serving differentials (E15): the open-loop inference workload —
+// gateway-NAT ingress, frontend fan-out, worker replies, latency
+// accounting — must replay byte-identically on the sharded engine,
+// including shard counts far beyond the host's core count (the epoch
+// work-stealing regime) and on the Inc27000 mega preset.
+// ---------------------------------------------------------------------
+
+/// Run the identical serving experiment serially and at each shard
+/// count; compare the report, delivery trace, fabric metrics and clock.
+fn assert_serving_equivalent(preset: SystemPreset, shard_counts: &[u32], cfg: ServingConfig) {
+    let mut serial = Network::new(SystemConfig::new(preset));
+    Fabric::enable_trace(&mut serial);
+    let rs = serving::run(&mut serial, cfg);
+    assert_eq!(rs.completed, rs.issued, "{preset:?}: serial serving run lost requests");
+    let serial_trace: Vec<Delivery> = serial.take_trace();
+    assert!(!serial_trace.is_empty(), "{preset:?}: serving produced no deliveries");
+    for &shards in shard_counts {
+        let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), shards);
+        sharded.enable_trace();
+        let rp = serving::run(&mut sharded, cfg);
+        let ctx = format!(
+            "serving {preset:?} shards={} arrivals={}",
+            sharded.shard_count(),
+            cfg.arrivals.name()
+        );
+        assert_eq!(rs, rp, "{ctx}: serving reports differ");
+        assert_eq!(serial_trace, sharded.take_trace(), "{ctx}: delivery traces differ");
+        assert_eq!(
+            serial.metrics().fabric_view(),
+            sharded.metrics().fabric_view(),
+            "{ctx}: metrics differ"
+        );
+        assert_eq!(serial.now(), sharded.now(), "{ctx}: final clocks differ");
+        assert_eq!(sharded.live_packets(), 0, "{ctx}: arena leak");
+    }
+}
+
+#[test]
+fn serving_byte_identical_across_shard_counts_beyond_cores() {
+    // Shards {4, 16, 64} on Inc9000 — 64 card-shards exceeds any CI
+    // host's core count, so epoch work-stealing is exercised for real.
+    let cfg = ServingConfig {
+        requests: 48,
+        rate_per_s: 200_000.0,
+        stride: 61, // pools spread across cards and cages
+        ..Default::default()
+    };
+    assert_serving_equivalent(SystemPreset::Inc9000, &[4, 16, 64], cfg);
+}
+
+#[test]
+fn serving_burst_arrivals_byte_identical() {
+    // Bursts land many NAT-ingress frames at the same instant: the
+    // gateway's physical-port serialization and the same-instant event
+    // ordering must both replay identically.
+    let cfg = ServingConfig {
+        requests: 36,
+        arrivals: ArrivalProcess::Bursty { burst: 12 },
+        rate_per_s: 150_000.0,
+        stride: 19,
+        ..Default::default()
+    };
+    assert_serving_equivalent(SystemPreset::Inc3000, &[16], cfg);
+}
+
+#[test]
+fn serving_on_inc27000_mega_mesh_byte_identical() {
+    // Small-N acceptance run on the 27k-node mega preset: 64 shards
+    // (far beyond cores) vs the serial oracle. The full-scale serving
+    // figures and the O(owned) index-map assertion live in
+    // benches/sim_engine.rs.
+    let cfg = ServingConfig {
+        frontends: 2,
+        workers: 6,
+        fanout: 2,
+        requests: 10,
+        rate_per_s: 100_000.0,
+        stride: 997,
+        ..Default::default()
+    };
+    assert_serving_equivalent(SystemPreset::Inc27000, &[64], cfg);
 }
 
 #[test]
