@@ -25,6 +25,7 @@ use inc_sim::workload::chaos::workloads::{run_workload, ChaosWorkload, WorkloadC
 use inc_sim::workload::chaos::{self, ChaosConfig, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 use inc_sim::workload::serving::{self, ServingConfig};
+use inc_sim::workload::snn::{self, SnnConfig};
 
 /// Numeric knob from the environment (CI's bench-smoke step shrinks the
 /// run with BENCH_EVENTS / BENCH_PACKETS; defaults are the full run).
@@ -617,7 +618,7 @@ fn main() {
          \"overhead\": {rel_overhead:.3}, \"acks\": {rel_acks}, \
          \"retransmits_no_loss\": {rel_rtx}, \"drop_retransmits\": {}, \
          \"drop_peers_declared_down\": {}, \"drop_elapsed_ns\": {}, \
-         \"drop_secs\": {drop_secs:.4}, \"drop_passed\": {}}}\n",
+         \"drop_secs\": {drop_secs:.4}, \"drop_passed\": {}}},\n",
         raw_stats.makespan,
         rel_stats.makespan,
         drop_report.retransmits,
@@ -625,6 +626,71 @@ fn main() {
         drop_report.elapsed_ns,
         drop_report.passed(),
     ));
+
+    // Spiking workload (EXPERIMENTS.md E16): the event-per-spike traffic
+    // class the INC was built for — LIF ticks, multicast spike fan-out,
+    // per-synapse delay timers. Virtual spikes/s plus the simulator's
+    // wall-clock event rate on this event-dense pattern, serial vs 16
+    // shards with the normalized reports asserted byte-identical
+    // (wheel_peak / events_dispatched are per-shard by construction).
+    // CI shrinks via BENCH_SNN_TICKS / BENCH_SNN_NODES; 0 ticks skips.
+    let snn_ticks = env_u64("BENCH_SNN_TICKS", 60) as u32;
+    let snn_nodes = env_u64("BENCH_SNN_NODES", 48) as usize;
+    let mut snn_match = true;
+    if snn_ticks == 0 {
+        println!("snn            skipped (BENCH_SNN_TICKS=0)");
+        json.push_str("  \"snn\": null\n");
+    } else {
+        let snn_cfg = SnnConfig {
+            nodes: snn_nodes,
+            neurons_per_node: env_u64("BENCH_SNN_NEURONS", 24) as u32,
+            ticks: snn_ticks,
+            rate_ppm: env_u64("BENCH_SNN_RATE", 150_000),
+            // Widest stride that still leaves the population (plus the
+            // excluded gateway) strided candidates on the 432-node mesh.
+            stride: (SystemPreset::Inc3000.node_count() as usize / (snn_nodes + 2)).max(1),
+            ..SnnConfig::default()
+        };
+        let (snn_rep, snn_serial_secs) = common::timed(|| {
+            let mut net = Network::new(SystemConfig::new(SystemPreset::Inc3000));
+            snn::run(&mut net, snn_cfg)
+        });
+        let (snn_srep, snn_sharded_secs) = common::timed(|| {
+            let mut net = ShardedNetwork::new(SystemConfig::new(SystemPreset::Inc3000), 16);
+            snn::run(&mut net, snn_cfg)
+        });
+        snn_match = snn_srep.normalized() == snn_rep.normalized();
+        let snn_events_per_s = snn_rep.events_dispatched as f64 / snn_serial_secs.max(1e-9);
+        println!(
+            "snn inc3000    {} nodes × {} neurons × {} ticks: {} spikes \
+             ({:.0} virtual spikes/s), {} deliveries, {:.2}M events/s wall \
+             (serial {snn_serial_secs:.3} s, sharded×16 {snn_sharded_secs:.3} s, \
+             match: {snn_match})",
+            snn_rep.nodes,
+            snn_rep.neurons,
+            snn_rep.ticks,
+            snn_rep.spikes_emitted,
+            snn_rep.spikes_per_s,
+            snn_rep.spikes_delivered,
+            snn_events_per_s / 1e6,
+        );
+        json.push_str(&format!(
+            "  \"snn\": {{\"preset\": \"inc3000\", \"shards\": 16, \"nodes\": {}, \
+             \"neurons_per_node\": {}, \"ticks\": {}, \"spikes_emitted\": {}, \
+             \"spikes_delivered\": {}, \"spikes_per_s\": {:.0}, \
+             \"events_dispatched\": {}, \"events_per_s_wall\": {snn_events_per_s:.0}, \
+             \"serial_secs\": {snn_serial_secs:.4}, \
+             \"sharded_secs\": {snn_sharded_secs:.4}, \
+             \"matches_serial\": {snn_match}}}\n",
+            snn_rep.nodes,
+            snn_rep.neurons,
+            snn_rep.ticks,
+            snn_rep.spikes_emitted,
+            snn_rep.spikes_delivered,
+            snn_rep.spikes_per_s,
+            snn_rep.events_dispatched,
+        ));
+    }
     json.push_str("}\n");
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
@@ -639,6 +705,7 @@ fn main() {
     );
     assert!(chaos_match, "chaos SLO report diverged across engines");
     assert!(chaos_serial.passed(), "chaos storm violated SLOs: {:?}", chaos_serial.violations());
+    assert!(snn_match, "sharded snn report diverged from the serial oracle");
     assert_eq!(rel_rtx, 0, "reliable all-reduce retransmitted on a healthy fabric");
     assert!(rel_acks > 0, "reliable all-reduce produced no acks");
     assert!(drop_report.retransmits > 0, "drop scenario forced no retransmission");

@@ -71,6 +71,14 @@ pub enum CommMode {
     /// NetTunnel register writes (§4.2) to the mailbox register `addr`
     /// on the destination node. Payloads are one word (≤ 8 bytes).
     Tunnel { addr: u64 },
+    /// Header-free datagrams straight on the router (§2.4): one
+    /// [`Message`] = one `Proto::Raw` packet, nothing on the wire
+    /// beyond the fixed packet header — no framing, no sequence
+    /// numbers, no software on the path. Unordered and best-effort:
+    /// a full receive buffer *drops* (counted in
+    /// [`Metrics::dropped`](crate::metrics::Metrics::dropped)). The
+    /// cheapest mode for tiny header-dominated traffic (SNN spikes).
+    Raw,
 }
 
 /// How strongly a mode orders messages between one (src, dst) pair.
@@ -93,6 +101,11 @@ pub enum Reliability {
     /// host): still lossless in the model, but outside the credit
     /// domain.
     External,
+    /// No delivery guarantee at the endpoint layer: a full receive
+    /// buffer drops the message (counted, never stalled). The fabric's
+    /// credit domain below is still lossless — the loss point is the
+    /// receiving endpoint, exactly like a NIC ring overflow.
+    BestEffort,
 }
 
 /// Coarse end-to-end latency class (Table 1 ordering: Bridge FIFO <
@@ -185,6 +198,15 @@ impl CommMode {
                 cpu_on_path: false,
                 rx_capacity: Some(cfg.rx_capacity),
             },
+            CommMode::Raw => ChannelCaps {
+                latency: LatencyClass::Low,
+                ordering: MsgOrdering::Unordered,
+                reliability: Reliability::BestEffort,
+                max_payload: Some(cfg.link.mtu - HEADER_BYTES),
+                pair_setup: false,
+                cpu_on_path: false,
+                rx_capacity: Some(cfg.rx_capacity),
+            },
         }
     }
 
@@ -196,6 +218,7 @@ impl CommMode {
             CommMode::BridgeFifo { .. } => "bridge_fifo",
             CommMode::Nfs => "nfs",
             CommMode::Tunnel { .. } => "net_tunnel",
+            CommMode::Raw => "raw",
         }
     }
 }
@@ -263,6 +286,7 @@ const LANE_PM: u16 = 0x100; // | queue
 const LANE_FIFO: u16 = 0x200;
 const LANE_NFS: u16 = 0x300;
 const LANE_TUNNEL: u16 = 0x400;
+const LANE_RAW: u16 = 0x500;
 
 pub(crate) fn lane(mode: &CommMode) -> u16 {
     match mode {
@@ -271,6 +295,7 @@ pub(crate) fn lane(mode: &CommMode) -> u16 {
         CommMode::BridgeFifo { .. } => LANE_FIFO,
         CommMode::Nfs => LANE_NFS,
         CommMode::Tunnel { .. } => LANE_TUNNEL,
+        CommMode::Raw => LANE_RAW,
     }
 }
 
@@ -352,7 +377,7 @@ impl Network {
                      (narrow widths are for raw word streams via fifo_send)"
                 );
             }
-            CommMode::Nfs | CommMode::Tunnel { .. } => {}
+            CommMode::Nfs | CommMode::Tunnel { .. } | CommMode::Raw => {}
         }
         self.comm.open.insert(key, mode);
         Endpoint { node, mode }
@@ -515,6 +540,33 @@ impl Network {
                 let inject = self.cfg.link.inject_latency;
                 self.inject_at(at + inject, pkt);
             }
+            CommMode::Raw => {
+                // Header-free: the message rides as exactly one
+                // `Proto::Raw` packet — `HEADER_BYTES` of router header
+                // and the payload, no framing word, no sequence field
+                // (the per-node `seq` above only forms the driver-side
+                // MsgId). The open check mirrors Ethernet: a datagram
+                // to a node without the lane open would vanish at the
+                // capture layer.
+                assert!(
+                    self.comm.open.contains_key(&(dst.0, LANE_RAW)),
+                    "raw endpoint not open at {dst}"
+                );
+                self.metrics.record_mode("raw", len as u64);
+                let id = self.app_packet_id(src);
+                let pkt = Packet::new(
+                    id,
+                    src,
+                    dst,
+                    RouteKind::Directed,
+                    Proto::Raw { tag: 0 },
+                    Payload::Bytes(data),
+                    at,
+                );
+                self.metrics.packets_injected += 1;
+                let inject = self.cfg.link.inject_latency;
+                self.inject_at(at + inject, pkt);
+            }
         }
         comm_msg_id(src, seq)
     }
@@ -592,7 +644,10 @@ impl Network {
         let q = self.comm.inbox.entry(key).or_default();
         if q.len() >= cap {
             match ep.mode {
-                CommMode::Ethernet { .. } => {
+                // Ethernet: the NIC has nowhere to DMA the frame. Raw:
+                // best-effort by contract ([`Reliability::BestEffort`]).
+                // Both discard and count.
+                CommMode::Ethernet { .. } | CommMode::Raw => {
                     self.metrics.dropped += 1;
                     return;
                 }
@@ -704,6 +759,24 @@ impl Network {
             }
         }
         out
+    }
+
+    /// Capture a *directed* `Proto::Raw` packet on an open Raw
+    /// endpoint. Multicast/broadcast raw traffic and non-byte payloads
+    /// are not endpoint datagrams — they stay on the legacy
+    /// [`App::on_raw`](crate::network::App::on_raw) path (the SNN's
+    /// multicast spikes, workloads built directly on the router).
+    pub(crate) fn comm_capture_raw(
+        &mut self,
+        node: NodeId,
+        src: NodeId,
+        payload: &Payload,
+    ) -> Option<(Endpoint, Message)> {
+        let key = (node.0, LANE_RAW);
+        let mode = *self.comm.open.get(&key)?;
+        let Payload::Bytes(data) = payload else { return None };
+        let msg = Message { from: src, data: data.clone() };
+        Some((Endpoint { node, mode }, msg))
     }
 
     pub(crate) fn comm_capture_tunnel(
@@ -978,5 +1051,70 @@ mod tests {
         let e1 = net.open(NodeId(5), mode);
         let e2 = net.open(NodeId(5), mode);
         assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn raw_caps_are_header_free_best_effort() {
+        let cfg = SystemConfig::card();
+        let raw = CommMode::Raw.caps(&cfg);
+        assert_eq!(raw.latency, LatencyClass::Low);
+        assert_eq!(raw.ordering, MsgOrdering::Unordered);
+        assert_eq!(raw.reliability, Reliability::BestEffort);
+        assert_eq!(raw.max_payload, Some(cfg.link.mtu - HEADER_BYTES));
+        assert!(!raw.pair_setup && !raw.cpu_on_path);
+        assert_eq!(raw.rx_capacity, Some(cfg.rx_capacity));
+        assert_eq!(CommMode::Raw.name(), "raw");
+    }
+
+    #[test]
+    fn raw_endpoint_roundtrip_with_header_only_overhead() {
+        // One message = one Proto::Raw packet: HEADER_BYTES of router
+        // header plus the payload, nothing else — no framing word, no
+        // fragment tags. The on_raw hook still sees the packet, so the
+        // wire size is directly observable.
+        struct Wire {
+            sizes: Vec<u32>,
+        }
+        impl App for Wire {
+            fn on_raw(
+                &mut self,
+                _net: &mut Network,
+                _node: NodeId,
+                packet: &crate::router::Packet,
+            ) {
+                self.sizes.push(packet.wire_bytes);
+            }
+        }
+        let mut net = card();
+        let (a, b) = (NodeId(0), NodeId(13));
+        let ea = net.open(a, CommMode::Raw);
+        let eb = net.open(b, CommMode::Raw);
+        net.send(&ea, b, Message::new(vec![0xEE; 24]));
+        let mut app = Wire { sizes: Vec::new() };
+        net.run_to_quiescence(&mut app);
+        assert_eq!(app.sizes, vec![HEADER_BYTES + 24]);
+        let got = net.recv(&eb);
+        assert_eq!(got.len(), 1);
+        assert_eq!(*got[0].data, vec![0xEE; 24]);
+        assert_eq!(got[0].from, a);
+        let t = net.metrics.mode_traffic["raw"];
+        assert_eq!((t.messages, t.bytes), (1, 24));
+    }
+
+    #[test]
+    fn raw_full_inbox_drops_and_counts() {
+        let mut cfg = SystemConfig::card();
+        cfg.rx_capacity = 2;
+        let mut net = Network::new(cfg);
+        let (a, b) = (NodeId(0), NodeId(13));
+        let ea = net.open(a, CommMode::Raw);
+        let eb = net.open(b, CommMode::Raw);
+        for i in 0..5u8 {
+            net.send(&ea, b, Message::new(vec![i; 32]));
+        }
+        net.run_to_quiescence(&mut NullApp);
+        assert_eq!(net.recv(&eb).len(), 2, "inbox bounded at rx_capacity");
+        assert_eq!(net.metrics.dropped, 3, "overflow datagrams counted, not lost silently");
+        assert_eq!(net.metrics.stalled_ns, 0, "best-effort mode never stalls the sender");
     }
 }

@@ -19,7 +19,7 @@ use inc_sim::router::{Payload, Proto};
 use inc_sim::topology::{Coord, NodeId, Topology};
 use inc_sim::util::SplitMix64;
 use inc_sim::workload::chaos::workloads;
-use inc_sim::workload::{chaos, learners, mcts, serving, training};
+use inc_sim::workload::{chaos, learners, mcts, serving, snn, training};
 
 const USAGE: &str = "\
 repro — INC-Sim: IBM Neural Computer reproduction
@@ -58,6 +58,18 @@ COMMANDS
               and reports saturation throughput. K>1 replays the same run
               on the serial engine and exits nonzero unless the delivery
               trace, metrics and clocks are byte-identical
+  snn         [--preset P] [--shards K] [--nodes N] [--neurons N] [--rate PPM]
+              [--ticks T] [--fanout F] [--comm M] [--seed S] [--sweep]
+              event-driven spiking neural network (E16): leaky
+              integrate-and-fire neurons in fixed-point integer math,
+              seeded synapse fan-out, spikes as multicast raw packets
+              through the spanning-tree router (default) or unicast
+              datagrams over --comm raw|pm|eth|fifo, per-synapse delays
+              on the timing wheel. --rate is the background input
+              probability per neuron-tick in ppm. K>1 replays the run
+              on the serial engine and exits nonzero unless trace,
+              metrics, clocks and report are byte-identical. --sweep
+              runs the spike-rate x mesh-size x shard-count ablation
   chaos       [--scenario storm|flap|partition|drop|hotspot|loss|all]
               [--seed S] [--loss P]
               [--preset P] [--shards K] [--comm M] [--ticks N] [--rx-cap N]
@@ -164,8 +176,9 @@ impl Args {
                 "pm" | "postmaster" => CommMode::Postmaster { queue: 0 },
                 "eth" | "ethernet" => CommMode::Ethernet { rx: RxMode::Interrupt },
                 "fifo" | "bridge_fifo" => CommMode::BridgeFifo { width_bits: 64 },
+                "raw" => CommMode::Raw,
                 other => {
-                    eprintln!("unknown comm mode {other:?}; use pm | eth | fifo");
+                    eprintln!("unknown comm mode {other:?}; use pm | eth | fifo | raw");
                     std::process::exit(2);
                 }
             },
@@ -218,6 +231,7 @@ fn main() -> Result<()> {
             reliable_params(&args),
         ),
         "serve" => run_serve(&args),
+        "snn" => run_snn(&args),
         "chaos" => run_chaos(&args),
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
@@ -670,6 +684,152 @@ fn run_serve(args: &Args) {
         report.makespan_ns as f64 / 1e6,
         report.throughput_rps
     );
+    if shards != 1 {
+        println!("  byte-identity vs serial engine: OK");
+    }
+}
+
+/// `repro snn` — the event-driven spiking-neural-network workload
+/// (E16). With `--shards K>1` the run doubles as a byte-identity gate
+/// like `serve`: the identical experiment replays on the serial engine
+/// and any divergence in the delivery trace, fabric-view metrics, final
+/// clock or (normalized) SNN report exits non-zero. `--sweep` runs the
+/// spike-rate x mesh-size x shard-count ablation on fresh fabrics.
+fn run_snn(args: &Args) {
+    let preset = args.preset(SystemPreset::Card);
+    let shards = args.get("shards", 1u32);
+    let seed = args.get("seed", 42u64);
+    let d = snn::SnnConfig::default();
+    let nn = preset.node_count() as usize;
+    let cfg = snn::SnnConfig {
+        nodes: args.get("nodes", d.nodes),
+        neurons_per_node: args.get("neurons", d.neurons_per_node),
+        fanout: args.get("fanout", d.fanout),
+        ticks: args.get("ticks", d.ticks),
+        rate_ppm: args.get("rate", d.rate_ppm),
+        // Absent --comm means the spanning-tree multicast transport;
+        // present, spikes go unicast over that endpoint mode.
+        comm: args.get_opt("comm").map(|_| args.comm()),
+        // Spread the population across cards/cages (and shard
+        // boundaries): the widest stride that still leaves enough
+        // candidates for the population plus the excluded gateway.
+        stride: (nn / (args.get("nodes", d.nodes) + 2)).max(1),
+        ..d
+    };
+    let sys = |p: SystemPreset| {
+        let mut s = SystemConfig::new(p);
+        s.seed = seed;
+        s
+    };
+    if args.flag("sweep") {
+        let rates: Vec<u64> = [1u64, 2, 4, 8, 16]
+            .iter()
+            .map(|m| (cfg.rate_ppm * m / 4).clamp(1, 1_000_000))
+            .collect();
+        let mut presets = vec![SystemPreset::Card];
+        if preset != SystemPreset::Card {
+            presets.push(preset);
+        }
+        let shard_axis = [1u32, if shards > 1 { shards } else { 0 }];
+        println!(
+            "snn ablation sweep [{} nodes x {} neurons, {} ticks]:",
+            cfg.nodes, cfg.neurons_per_node, cfg.ticks
+        );
+        println!(
+            "{:>10} {:>8} {:>10} {:>8} {:>10} {:>12} {:>10}",
+            "preset", "shards", "rate ppm", "spikes", "delivered", "spikes/s", "wheel pk"
+        );
+        for &p in &presets {
+            let pn = p.node_count() as usize;
+            let pcfg = snn::SnnConfig { stride: (pn / (cfg.nodes + 2)).max(1), ..cfg };
+            for &k in &shard_axis {
+                for &r in &rates {
+                    let c = snn::SnnConfig { rate_ppm: r, ..pcfg };
+                    let (rep, label) = if k == 1 {
+                        let mut net = Network::new(sys(p));
+                        (snn::run(&mut net, c), "1".to_string())
+                    } else {
+                        let shards = if k == 0 { u32::MAX } else { k };
+                        let mut net = ShardedNetwork::new(sys(p), shards);
+                        let label = net.shard_count().to_string();
+                        (snn::run(&mut net, c), label)
+                    };
+                    println!(
+                        "{:>10} {:>8} {:>10} {:>8} {:>10} {:>12.0} {:>10}",
+                        format!("{p:?}"),
+                        label,
+                        r,
+                        rep.spikes_emitted,
+                        rep.spikes_delivered,
+                        rep.spikes_per_s,
+                        rep.wheel_peak
+                    );
+                }
+            }
+        }
+        return;
+    }
+    let (report, engine) = if shards == 1 {
+        let mut net = Network::new(sys(preset));
+        (snn::run(&mut net, cfg), "serial".to_string())
+    } else {
+        let mut sharded =
+            ShardedNetwork::new(sys(preset), if shards == 0 { u32::MAX } else { shards });
+        sharded.enable_trace();
+        let label = format!("sharded x{}", sharded.shard_count());
+        let rep = snn::run(&mut sharded, cfg);
+        // Byte-identity oracle: the same experiment, serial.
+        let mut serial = Network::new(sys(preset));
+        Fabric::enable_trace(&mut serial);
+        let srep = snn::run(&mut serial, cfg);
+        let mut bad = false;
+        if sharded.take_trace() != serial.take_trace() {
+            eprintln!("BYTE-IDENTITY FAILURE: delivery traces differ");
+            bad = true;
+        }
+        if sharded.metrics().fabric_view() != serial.metrics.fabric_view() {
+            eprintln!("BYTE-IDENTITY FAILURE: fabric-view metrics differ");
+            bad = true;
+        }
+        if sharded.now() != serial.now() {
+            eprintln!("BYTE-IDENTITY FAILURE: final clocks differ");
+            bad = true;
+        }
+        if srep.normalized() != rep.normalized() {
+            eprintln!("BYTE-IDENTITY FAILURE: snn reports differ");
+            bad = true;
+        }
+        if bad {
+            std::process::exit(1);
+        }
+        (rep, label)
+    };
+    let transport = match cfg.comm {
+        None => "multicast".to_string(),
+        Some(m) => format!("unicast/{}", m.name()),
+    };
+    println!(
+        "snn [{engine}, {preset:?}, {transport}] {} neurons on {} nodes, {} ticks \
+         at {} ppm background:",
+        report.neurons, report.nodes, report.ticks, cfg.rate_ppm
+    );
+    println!(
+        "  spikes {} emitted, {} synaptic deliveries ({} expected), {} syn events",
+        report.spikes_emitted,
+        report.spikes_delivered,
+        report.spikes_emitted * cfg.fanout as u64,
+        report.syn_events
+    );
+    println!(
+        "  virtual {:.3} ms, {:.0} spikes/s, {} events dispatched, wheel peak {}",
+        report.virtual_ns as f64 / 1e6,
+        report.spikes_per_s,
+        report.events_dispatched,
+        report.wheel_peak
+    );
+    for (mode, msgs, bytes) in &report.mode_traffic {
+        println!("  traffic[{mode}]: {msgs} msgs, {bytes} B payload");
+    }
     if shards != 1 {
         println!("  byte-identity vs serial engine: OK");
     }

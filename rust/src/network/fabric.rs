@@ -136,6 +136,22 @@ pub trait Fabric {
         proto: Proto,
         payload: Payload,
     ) -> u64;
+    /// See [`Network::app_multicast_at`]: multicast drawn from the
+    /// per-node app id space — valid in driver context *and* from App
+    /// callbacks at `src` (spike fan-out sends from `on_timer`).
+    fn app_multicast_at(
+        &mut self,
+        at: Time,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64;
+    /// See [`Network::timer_at`]: schedule an
+    /// [`App::on_timer`](crate::network::App::on_timer) at `node` at
+    /// absolute time `at`. Valid in driver context and from callbacks
+    /// at any node the executing partition owns.
+    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64);
     /// See [`Network::fail_link`].
     fn fail_link(&mut self, l: LinkId);
     /// See [`Network::repair_link`].
@@ -293,6 +309,19 @@ impl Fabric for Network {
         payload: Payload,
     ) -> u64 {
         Network::send_multicast(self, src, dsts, proto, payload)
+    }
+    fn app_multicast_at(
+        &mut self,
+        at: Time,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        Network::app_multicast_at(self, at, src, dsts, proto, payload)
+    }
+    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
+        Network::timer_at(self, at, node, tag)
     }
     fn fail_link(&mut self, l: LinkId) {
         Network::fail_link(self, l)
@@ -457,6 +486,19 @@ impl Fabric for ShardedNetwork {
         payload: Payload,
     ) -> u64 {
         ShardedNetwork::send_multicast(self, src, dsts, proto, payload)
+    }
+    fn app_multicast_at(
+        &mut self,
+        at: Time,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        ShardedNetwork::app_multicast_at(self, at, src, dsts, proto, payload)
+    }
+    fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
+        ShardedNetwork::timer_at(self, at, node, tag)
     }
     fn fail_link(&mut self, l: LinkId) {
         ShardedNetwork::fail_link(self, l)

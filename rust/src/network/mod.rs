@@ -628,6 +628,33 @@ impl Network {
         id
     }
 
+    /// Spanning-tree multicast originated *by an [`App`] callback at
+    /// `src`* (or by engine-agnostic workload code sending from a
+    /// specific node), produced at absolute time `at ≥ now`. The packet
+    /// id comes from the per-node app id space ([`Network::app_packet_id`]),
+    /// so both engines assign identical ids regardless of dispatch
+    /// interleaving; injection latency and metrics are accounted exactly
+    /// like [`Network::inject`]. This is how the SNN workload fans a
+    /// spike out to its axon targets from inside `on_timer`. Returns the
+    /// packet id.
+    pub fn app_multicast_at(
+        &mut self,
+        at: Time,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        assert!(!dsts.is_empty(), "multicast needs destinations");
+        let id = self.app_packet_id(src);
+        let mut pkt = Packet::new(id, src, src, RouteKind::Multicast, proto, payload, at);
+        pkt.mcast = Some(std::sync::Arc::new(dsts.to_vec()));
+        self.metrics.packets_injected += 1;
+        let inject = self.cfg.link.inject_latency;
+        self.inject_at(at + inject, pkt);
+        id
+    }
+
     /// Inject an already-built packet at its source node.
     pub fn inject(&mut self, packet: Packet) {
         self.debug_check_src_owned(packet.src);
@@ -1126,7 +1153,21 @@ impl Network {
             }
             Proto::Raw { .. } => {
                 let pkt = self.packets.free(packet);
-                self.app_scope(app, |net, app| app.on_raw(net, node, &pkt));
+                // Directed raw datagrams addressed to an open
+                // `CommMode::Raw` endpoint are also surfaced as
+                // endpoint messages (on_message / recv), like every
+                // other channel's capture layer. Multicast/broadcast
+                // raw traffic stays on_raw-only.
+                let captured = match pkt.route {
+                    RouteKind::Directed => self.comm_capture_raw(node, pkt.src, &pkt.payload),
+                    _ => None,
+                };
+                self.app_scope(app, |net, app| {
+                    app.on_raw(net, node, &pkt);
+                    if let Some((ep, msg)) = captured {
+                        net.comm_deliver(app, ep, msg);
+                    }
+                });
             }
         }
     }

@@ -300,6 +300,26 @@ impl ShardedNetwork {
         self.with_shard(src, |n| n.send_multicast(src, dsts, proto, payload))
     }
 
+    /// See [`Network::app_multicast_at`] (routed to the shard owning
+    /// `src`; per-node app ids throughout, so no cursor sync is needed).
+    pub fn app_multicast_at(
+        &mut self,
+        at: Time,
+        src: NodeId,
+        dsts: &[NodeId],
+        proto: Proto,
+        payload: Payload,
+    ) -> u64 {
+        self.shard_mut(src).app_multicast_at(at, src, dsts, proto, payload)
+    }
+
+    /// See [`Network::timer_at`] (scheduled on the shard owning `node`,
+    /// where the timer fires; timers carry no packet id, so no cursor
+    /// sync is needed).
+    pub fn timer_at(&mut self, at: Time, node: NodeId, tag: u64) {
+        self.shard_mut(node).timer_at(at, node, tag)
+    }
+
     /// See [`Network::fifo_connect`] (registered on every shard: the
     /// write port is used by the source shard, the read port by the
     /// destination shard).

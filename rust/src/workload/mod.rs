@@ -18,6 +18,12 @@
 //!   and the harness reports p50/p99/p999 latency (measured from the
 //!   scheduled arrival — no coordinated omission) plus saturation
 //!   throughput from an offered-rate sweep.
+//! * [`snn`] — event-driven spiking neural network (E16), the traffic
+//!   class the INC was built for: leaky integrate-and-fire neurons in
+//!   fixed-point integer math, seeded synapse tables re-derived at both
+//!   ends of every axon, spikes as multicast (or unicast) raw packets,
+//!   per-synapse delays on the timing wheel, and a spike-rate ×
+//!   mesh-size × shard-count ablation sweep.
 //! * [`chaos`] — the resilience suite (E13): seeded deterministic fault
 //!   scripts (failure storms, NIC flaps, partition-and-heal, node
 //!   drops, hot-spot congestion) composed with background traffic and
@@ -38,6 +44,7 @@ pub mod chaos;
 pub mod learners;
 pub mod mcts;
 pub mod serving;
+pub mod snn;
 pub mod training;
 
 /// FPGA-offload compute model: effective throughput of one node's fabric

@@ -1,0 +1,734 @@
+//! Event-driven spiking neural network (E16): the traffic class the
+//! INC was built for.
+//!
+//! The paper's opening claim is that a 3D-mesh FPGA fabric suits
+//! event-driven, sparse, irregular-fan-out computation "not well suited
+//! to the matrix manipulation/SIMD libraries that GPUs are optimized
+//! for" (§1). Every other workload in this repo is request/response or
+//! collective traffic; this one is the neuromorphic shape itself: a
+//! population of leaky integrate-and-fire (LIF) neurons spread across
+//! the mesh, spikes carried as tiny packets through the spanning-tree
+//! multicast router (or unicast over any [`CommMode`]), and per-synapse
+//! axonal delays scheduled on the timing wheel.
+//!
+//! # LIF update rule (fixed point)
+//!
+//! Membrane potentials are Q16.16 fixed-point `i64` — no floats, so
+//! serial and sharded runs are bit-exact. Per neuron per tick:
+//!
+//! ```text
+//! v  = (v * decay_q16) >> 16        // leak (arithmetic shift)
+//! v += drained synaptic input       // weights landed since last tick
+//! v += input_q16  if background_hit // seeded Bernoulli input drive
+//! fire iff tick >= refractory_until && v >= threshold_q16
+//!   on fire: v = 0; refractory_until = tick + 1 + refractory_ticks
+//! ```
+//!
+//! # Seed discipline
+//!
+//! There is **no RNG stream**. Synapse tables ([`synapse`]) and the
+//! background input process ([`background_hit`]) are pure [`mix64`]
+//! functions of `(SnnConfig, seed, indices)`: a receiver re-derives the
+//! *sender's* fan-out table from the spike's `(node, neuron)` identity
+//! alone, so spike packets carry no synapse payload and no state is
+//! shared across nodes. Both engines — and both ends of every synapse —
+//! compute identical tables by construction.
+//!
+//! # Event scheme
+//!
+//! Two timer kinds ride [`crate::network::Fabric::timer_at`], selected
+//! by tag bits 60..63 (safely below the reliable transport's reserved
+//! bit 63 mark):
+//!
+//! * **tick** — one per population node per simulation tick; bit 23 of
+//!   the tag is set so the keyed event queue orders same-instant
+//!   synapse events *before* the tick that drains them.
+//! * **syn** — one per synapse per spike, at `arrival + delay_ticks ×
+//!   tick_ns`; the tag carries the Q16.16 weight (bits 24..56, two's
+//!   complement i32) and the target neuron (bits 0..23), so the event
+//!   needs no side-table lookup.
+//!
+//! Same-(time, key) collisions fall back to insertion order at the
+//! owning node, and weight accumulation commutes, so the schedule is
+//! byte-identical across engines (`tests/sharded_differential.rs`).
+//!
+//! # Conservation
+//!
+//! Every fire bumps `expected_deliveries` by the fan-out; every syn
+//! event bumps `spikes_delivered`. On a healthy fabric the two are
+//! equal at quiescence — [`run`] asserts it, and
+//! `prop_snn_spike_conservation` sweeps it across seeds.
+
+use std::sync::Arc;
+
+use crate::channels::endpoint::{CommMode, Endpoint, Message};
+use crate::network::{App, Fabric, Network, ShardableApp};
+use crate::router::{Packet, Payload, Proto, RouteKind};
+use crate::sim::Time;
+use crate::topology::NodeId;
+use crate::util::{mix64, FxHashMap};
+
+/// Workload parameters. Dynamics are integer-only; every field
+/// participates in the pure synapse/background derivations, so two runs
+/// with equal configs and seeds are identical in every observable.
+#[derive(Debug, Clone, Copy)]
+pub struct SnnConfig {
+    /// Population size: nodes hosting neurons (strided placement,
+    /// skipping the gateway).
+    pub nodes: usize,
+    pub neurons_per_node: u32,
+    /// Synapses per neuron (axonal fan-out; targets are always remote).
+    pub fanout: u32,
+    /// Simulation ticks (the membrane-update grid).
+    pub ticks: u32,
+    /// Tick pitch, ns of virtual time.
+    pub tick_ns: Time,
+    /// Fire threshold, Q16.16.
+    pub threshold_q16: i64,
+    /// Per-tick membrane retention, Q16.16 (e.g. 55706 ≈ 0.85).
+    pub decay_q16: i64,
+    /// Background input amplitude, Q16.16.
+    pub input_q16: i64,
+    /// Synaptic weight magnitude, Q16.16 (sign per synapse). Must fit
+    /// an i32 — it rides inside the syn timer tag.
+    pub weight_q16: i64,
+    /// Background input probability per neuron-tick, parts per million.
+    pub rate_ppm: u64,
+    /// Fraction of synapses that are inhibitory, parts per million.
+    pub inhibit_ppm: u64,
+    /// Ticks a neuron stays silent after firing.
+    pub refractory_ticks: u32,
+    /// Synaptic delay bounds, ticks. `min >= 1`: a zero-delay synapse
+    /// would schedule an event at the current instant.
+    pub min_delay_ticks: u32,
+    pub max_delay_ticks: u32,
+    /// `None` — spike fan-out rides the spanning-tree multicast router
+    /// as one `Proto::Raw` packet per spike. `Some(mode)` — unicast
+    /// datagrams over the endpoint mode (the ablation's transport axis;
+    /// `CommMode::Raw` is the natural fit for 8-byte spikes).
+    pub comm: Option<CommMode>,
+    /// Node-index stride when placing the population across the mesh.
+    pub stride: usize,
+    /// Record every fire as `(tick, pop index, neuron)` — the property
+    /// tests' refractory witness. Off by default (it grows with spikes).
+    pub record_fires: bool,
+}
+
+impl Default for SnnConfig {
+    fn default() -> Self {
+        SnnConfig {
+            nodes: 16,
+            neurons_per_node: 8,
+            fanout: 4,
+            ticks: 20,
+            tick_ns: 50_000,
+            threshold_q16: 90 << 16,
+            decay_q16: 55_706, // 0.85 in Q16.16
+            input_q16: 60 << 16,
+            weight_q16: 45 << 16,
+            rate_ppm: 80_000,
+            inhibit_ppm: 150_000,
+            refractory_ticks: 2,
+            min_delay_ticks: 1,
+            max_delay_ticks: 4,
+            comm: None,
+            stride: 1,
+            record_fires: false,
+        }
+    }
+}
+
+// -- timer tags -------------------------------------------------------
+//
+// Kind in bits 60..63 — below RELIABLE_TIMER_MARK (bit 63), so SNN
+// timers always reach `App::on_timer`. The event queue keys on the low
+// 24 tag bits (`key_timer`): tick tags set bit 23, syn tags keep the
+// neuron index below it, so at one (node, instant) synapse arrivals
+// drain before the membrane update that integrates them.
+
+const KIND_SHIFT: u32 = 60;
+const KIND_TICK: u64 = 1;
+const KIND_SYN: u64 = 2;
+/// Bit 23 of the truncated event key: orders ticks after syn events.
+const TICK_KEY_BIT: u64 = 0x80_0000;
+/// `Proto::Raw` tag marking a multicast spike packet.
+const SPIKE_TAG: u16 = 0xA5;
+
+fn tick_tag(tick: u32) -> u64 {
+    debug_assert!((tick as u64) < TICK_KEY_BIT);
+    (KIND_TICK << KIND_SHIFT) | TICK_KEY_BIT | tick as u64
+}
+
+fn syn_tag(weight_q16: i64, neuron: u32) -> u64 {
+    debug_assert!((neuron as u64) < TICK_KEY_BIT);
+    let w = weight_q16 as i32 as u32 as u64;
+    (KIND_SYN << KIND_SHIFT) | (w << 24) | neuron as u64
+}
+
+fn syn_tag_decode(tag: u64) -> (i64, u32) {
+    (((tag >> 24) as u32) as i32 as i64, (tag & (TICK_KEY_BIT - 1)) as u32)
+}
+
+// -- pure derivations -------------------------------------------------
+
+/// One synapse of a neuron's axonal fan-out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Synapse {
+    /// Target population index (never the source node).
+    pub target: u32,
+    /// Target neuron within the target node.
+    pub neuron: u32,
+    /// Axonal delay, ticks (within the configured bounds).
+    pub delay_ticks: u32,
+    /// Signed Q16.16 weight (±`weight_q16` per `inhibit_ppm`).
+    pub weight_q16: i64,
+}
+
+/// Synapse `j` of neuron `(src, neuron)`: a pure function of
+/// `(cfg, seed, src, neuron, j)` — sender and receiver derive the same
+/// table independently, so spike packets carry identity only.
+pub fn synapse(cfg: &SnnConfig, seed: u64, src: u32, neuron: u32, j: u32) -> Synapse {
+    debug_assert!(cfg.nodes >= 2);
+    let h = mix64(
+        seed ^ 0x5EED_5CA1_AB1E_0001 ^ ((src as u64) << 40) ^ ((neuron as u64) << 16) ^ j as u64,
+    );
+    // Skip-self target draw: uniform over the other population nodes,
+    // so every spike crosses the fabric.
+    let mut target = (h % (cfg.nodes as u64 - 1)) as u32;
+    if target >= src {
+        target += 1;
+    }
+    let span = (cfg.max_delay_ticks - cfg.min_delay_ticks + 1) as u64;
+    let inhibitory = mix64(h) % 1_000_000 < cfg.inhibit_ppm;
+    Synapse {
+        target,
+        neuron: ((h >> 24) % cfg.neurons_per_node as u64) as u32,
+        delay_ticks: cfg.min_delay_ticks + ((h >> 44) % span) as u32,
+        weight_q16: if inhibitory { -cfg.weight_q16 } else { cfg.weight_q16 },
+    }
+}
+
+/// Did neuron `(src, neuron)` receive background input at `tick`? A
+/// seeded Bernoulli draw with no stream state — the input process is
+/// identical however callbacks interleave.
+pub fn background_hit(cfg: &SnnConfig, seed: u64, src: u32, neuron: u32, tick: u32) -> bool {
+    let h = mix64(
+        seed ^ 0x5EED_BAC6_0000_0002
+            ^ ((src as u64) << 46)
+            ^ ((neuron as u64) << 23)
+            ^ tick as u64,
+    );
+    h % 1_000_000 < cfg.rate_ppm
+}
+
+fn spike_bytes(src: NodeId, neuron: u32) -> Vec<u8> {
+    let mut v = Vec::with_capacity(8);
+    v.extend_from_slice(&src.0.to_le_bytes());
+    v.extend_from_slice(&neuron.to_le_bytes());
+    v
+}
+
+// -- the app ----------------------------------------------------------
+
+/// Per-neuron dynamic state. `syn_in` accumulates weights landed since
+/// the last tick; `refractory_until` is the first tick the neuron may
+/// fire again.
+#[derive(Debug, Clone, Copy, Default)]
+struct Neuron {
+    v: i64,
+    syn_in: i64,
+    refractory_until: u32,
+}
+
+/// The SNN state machine: membrane updates at tick timers, spike
+/// fan-out at fires, weight accumulation at syn timers. All state is
+/// keyed by the node whose callbacks mutate it, so the app partitions
+/// cleanly ([`ShardableApp`]). Drive it to quiescence in a **single**
+/// [`Fabric::run`] call.
+pub struct SnnApp {
+    cfg: SnnConfig,
+    seed: u64,
+    /// Population placement (shared, read-only).
+    pop: Arc<Vec<NodeId>>,
+    /// node id → population index.
+    idx: Arc<FxHashMap<u32, u32>>,
+    /// (population index, neuron) → state. Keys are disjoint across
+    /// partitions (a neuron's events all fire at its node).
+    state: FxHashMap<(u32, u32), Neuron>,
+    /// Fires observed (spike packets sent).
+    pub spikes_emitted: u64,
+    /// Synaptic deliveries owed: fan-out per fire.
+    pub expected_deliveries: u64,
+    /// Syn timer firings (weight landed at its target neuron).
+    pub spikes_delivered: u64,
+    pub syn_events: u64,
+    pub tick_events: u64,
+    /// Peak timing-wheel occupancy sampled at tick events. Engine-level:
+    /// a shard's wheel holds only its own events, so serial and sharded
+    /// peaks differ by construction (normalized out of report identity).
+    pub wheel_peak: u64,
+    /// `(tick, pop index, neuron)` per fire, when `record_fires`.
+    pub fires: Vec<(u32, u32, u32)>,
+}
+
+impl SnnApp {
+    fn on_tick(&mut self, net: &mut Network, node: NodeId, tick: u32) {
+        self.tick_events += 1;
+        self.wheel_peak = self.wheel_peak.max(net.sim.pending() as u64);
+        let src = self.idx[&node.0];
+        let mut fired: Vec<u32> = Vec::new();
+        for i in 0..self.cfg.neurons_per_node {
+            let n = self.state.entry((src, i)).or_default();
+            n.v = (n.v * self.cfg.decay_q16) >> 16;
+            n.v += n.syn_in;
+            n.syn_in = 0;
+            if background_hit(&self.cfg, self.seed, src, i, tick) {
+                n.v += self.cfg.input_q16;
+            }
+            if tick >= n.refractory_until && n.v >= self.cfg.threshold_q16 {
+                n.v = 0;
+                n.refractory_until = tick + 1 + self.cfg.refractory_ticks;
+                fired.push(i);
+            }
+        }
+        for &i in &fired {
+            self.spikes_emitted += 1;
+            self.expected_deliveries += self.cfg.fanout as u64;
+            if self.cfg.record_fires {
+                self.fires.push((tick, src, i));
+            }
+            self.emit_spike(net, node, src, i);
+        }
+        if tick + 1 < self.cfg.ticks {
+            net.timer_at(net.now() + self.cfg.tick_ns, node, tick_tag(tick + 1));
+        }
+    }
+
+    /// Send one spike's fan-out: the distinct target *nodes* (several
+    /// synapses may share one), as a single multicast packet or as
+    /// unicast datagrams — receivers re-derive which synapses they host.
+    fn emit_spike(&mut self, net: &mut Network, node: NodeId, src: u32, neuron: u32) {
+        let now = net.now();
+        let mut dsts: Vec<NodeId> = Vec::with_capacity(self.cfg.fanout as usize);
+        for j in 0..self.cfg.fanout {
+            let d = self.pop[synapse(&self.cfg, self.seed, src, neuron, j).target as usize];
+            if !dsts.contains(&d) {
+                dsts.push(d);
+            }
+        }
+        match self.cfg.comm {
+            None => {
+                net.app_multicast_at(
+                    now,
+                    node,
+                    &dsts,
+                    Proto::Raw { tag: SPIKE_TAG },
+                    Payload::U64s([node.0 as u64, neuron as u64, 0, 0]),
+                );
+            }
+            Some(mode) => {
+                let ep = Endpoint { node, mode };
+                for d in dsts {
+                    net.send_at(now, &ep, d, Message::new(spike_bytes(node, neuron)));
+                }
+            }
+        }
+    }
+
+    /// A spike from `(src_node, src_neuron)` arrived at `here`: schedule
+    /// a syn timer per local synapse of the sender's (re-derived) table.
+    fn on_spike(&mut self, net: &mut Network, here: NodeId, src_node: u32, src_neuron: u32) {
+        let Some(&src) = self.idx.get(&src_node) else { return };
+        let here_idx = self.idx[&here.0];
+        let now = net.now();
+        for j in 0..self.cfg.fanout {
+            let syn = synapse(&self.cfg, self.seed, src, src_neuron, j);
+            if syn.target == here_idx {
+                let at = now + syn.delay_ticks as Time * self.cfg.tick_ns;
+                net.timer_at(at, here, syn_tag(syn.weight_q16, syn.neuron));
+            }
+        }
+    }
+}
+
+impl App for SnnApp {
+    fn on_timer(&mut self, net: &mut Network, node: NodeId, tag: u64) {
+        match tag >> KIND_SHIFT {
+            KIND_TICK => self.on_tick(net, node, (tag & (TICK_KEY_BIT - 1)) as u32),
+            KIND_SYN => {
+                let (w, neuron) = syn_tag_decode(tag);
+                let src = self.idx[&node.0];
+                self.state.entry((src, neuron)).or_default().syn_in += w;
+                self.syn_events += 1;
+                self.spikes_delivered += 1;
+            }
+            _ => debug_assert!(false, "unknown snn timer tag {tag:#x}"),
+        }
+    }
+
+    fn on_raw(&mut self, net: &mut Network, node: NodeId, packet: &Packet) {
+        // Multicast spike fan-out; anything else (there is nothing else
+        // in this workload) is ignored.
+        if !matches!(packet.route, RouteKind::Multicast)
+            || !matches!(packet.proto, Proto::Raw { tag: SPIKE_TAG })
+        {
+            return;
+        }
+        let Payload::U64s(w) = &packet.payload else { return };
+        self.on_spike(net, node, w[0] as u32, w[1] as u32);
+    }
+
+    fn on_message(&mut self, net: &mut Network, ep: Endpoint, msg: &Message) -> bool {
+        // Unicast spike datagram (8 bytes: src node, src neuron).
+        if msg.data.len() != 8 {
+            return false;
+        }
+        let src = u32::from_le_bytes(msg.data[0..4].try_into().unwrap());
+        let neuron = u32::from_le_bytes(msg.data[4..8].try_into().unwrap());
+        self.on_spike(net, ep.node, src, neuron);
+        true
+    }
+}
+
+impl ShardableApp for SnnApp {
+    fn partition(&self, _shard: u32, _owner: &[u32]) -> Self {
+        SnnApp {
+            cfg: self.cfg,
+            seed: self.seed,
+            pop: self.pop.clone(),
+            idx: self.idx.clone(),
+            state: FxHashMap::default(),
+            spikes_emitted: 0,
+            expected_deliveries: 0,
+            spikes_delivered: 0,
+            syn_events: 0,
+            tick_events: 0,
+            wheel_peak: 0,
+            fires: Vec::new(),
+        }
+    }
+
+    fn reduce(&mut self, part: Self) {
+        self.spikes_emitted += part.spikes_emitted;
+        self.expected_deliveries += part.expected_deliveries;
+        self.spikes_delivered += part.spikes_delivered;
+        self.syn_events += part.syn_events;
+        self.tick_events += part.tick_events;
+        self.wheel_peak = self.wheel_peak.max(part.wheel_peak);
+        // Neuron state and fires are keyed by owned nodes — disjoint.
+        self.state.extend(part.state);
+        self.fires.extend(part.fires);
+    }
+}
+
+// -- deployment -------------------------------------------------------
+
+/// A placed SNN: population strided across the mesh, endpoints open
+/// where the transport needs them, tick-0 timers armed. Split from
+/// [`run`] so harnesses (and the property tests) can drive explicitly.
+pub struct Snn {
+    pub cfg: SnnConfig,
+    pub seed: u64,
+    pub pop: Arc<Vec<NodeId>>,
+    idx: Arc<FxHashMap<u32, u32>>,
+}
+
+impl Snn {
+    pub fn setup<F: Fabric>(net: &mut F, cfg: SnnConfig) -> Snn {
+        assert!(cfg.nodes >= 2, "population needs at least two nodes");
+        assert!(cfg.neurons_per_node >= 1 && cfg.fanout >= 1 && cfg.ticks >= 1);
+        assert!(
+            (cfg.ticks as u64) < TICK_KEY_BIT && (cfg.neurons_per_node as u64) <= TICK_KEY_BIT,
+            "tick/neuron indices must fit the 23-bit tag fields"
+        );
+        assert!(
+            cfg.min_delay_ticks >= 1 && cfg.min_delay_ticks <= cfg.max_delay_ticks,
+            "synaptic delays need 1 <= min <= max"
+        );
+        assert!(
+            cfg.weight_q16 >= 0 && cfg.weight_q16 <= i32::MAX as i64,
+            "weight must fit the tag's i32 field"
+        );
+        let gw = net.gateway();
+        let pop: Vec<NodeId> = net
+            .topo()
+            .nodes()
+            .step_by(cfg.stride.max(1))
+            .filter(|&n| n != gw)
+            .take(cfg.nodes)
+            .collect();
+        assert_eq!(
+            pop.len(),
+            cfg.nodes,
+            "preset too small for {} population nodes at stride {}",
+            cfg.nodes,
+            cfg.stride
+        );
+        if let Some(mode) = cfg.comm {
+            for &n in &pop {
+                net.open(n, mode);
+            }
+            if net.caps(mode).pair_setup {
+                // Fan-out targets are hash-drawn, so connect all pairs.
+                for &a in &pop {
+                    let ep = Endpoint { node: a, mode };
+                    for &b in &pop {
+                        if a != b {
+                            net.connect(&ep, b);
+                        }
+                    }
+                }
+            }
+        }
+        for &n in &pop {
+            net.timer_at(0, n, tick_tag(0));
+        }
+        let idx = pop.iter().enumerate().map(|(i, &n)| (n.0, i as u32)).collect();
+        Snn { cfg, seed: net.config().seed, pop: Arc::new(pop), idx: Arc::new(idx) }
+    }
+
+    /// The root app for this deployment.
+    pub fn app(&self) -> SnnApp {
+        SnnApp {
+            cfg: self.cfg,
+            seed: self.seed,
+            pop: self.pop.clone(),
+            idx: self.idx.clone(),
+            state: FxHashMap::default(),
+            spikes_emitted: 0,
+            expected_deliveries: 0,
+            spikes_delivered: 0,
+            syn_events: 0,
+            tick_events: 0,
+            wheel_peak: 0,
+            fires: Vec::new(),
+        }
+    }
+}
+
+// -- report -----------------------------------------------------------
+
+/// One run's results. Everything except the engine-level fields
+/// ([`SnnReport::normalized`]) is part of the byte-identity contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnnReport {
+    pub nodes: usize,
+    pub neurons: u64,
+    pub ticks: u32,
+    pub spikes_emitted: u64,
+    /// Syn events landed; equals `fanout × spikes_emitted` on a healthy
+    /// fabric ([`run`] asserts it).
+    pub spikes_delivered: u64,
+    pub syn_events: u64,
+    pub tick_events: u64,
+    /// Final virtual clock (last syn delivery).
+    pub virtual_ns: Time,
+    /// Emission rate over virtual time.
+    pub spikes_per_s: f64,
+    /// Events dispatched by the engine — engine-level (a sharded run
+    /// dispatches per-shard bookkeeping the serial engine does not).
+    pub events_dispatched: u64,
+    /// Peak timing-wheel occupancy — engine-level (per-shard wheels).
+    pub wheel_peak: u64,
+    /// Per-mode `(name, messages, bytes)` from the fabric metrics, in
+    /// BTreeMap order (empty for the multicast transport, which rides
+    /// below the endpoint layer).
+    pub mode_traffic: Vec<(String, u64, u64)>,
+}
+
+impl SnnReport {
+    /// The report with engine-level fields zeroed — the cross-engine
+    /// comparison form (chaos precedent: presentation fields are
+    /// overwritten before `==`).
+    pub fn normalized(&self) -> SnnReport {
+        let mut r = self.clone();
+        r.events_dispatched = 0;
+        r.wheel_peak = 0;
+        r
+    }
+
+    pub fn to_json(&self) -> String {
+        let traffic: Vec<String> = self
+            .mode_traffic
+            .iter()
+            .map(|(m, n, b)| format!("{{\"mode\":\"{m}\",\"messages\":{n},\"bytes\":{b}}}"))
+            .collect();
+        format!(
+            "{{\"nodes\":{},\"neurons\":{},\"ticks\":{},\"spikes_emitted\":{},\
+             \"spikes_delivered\":{},\"syn_events\":{},\"tick_events\":{},\
+             \"virtual_ns\":{},\"spikes_per_s\":{:.1},\"events_dispatched\":{},\
+             \"wheel_peak\":{},\"mode_traffic\":[{}]}}",
+            self.nodes,
+            self.neurons,
+            self.ticks,
+            self.spikes_emitted,
+            self.spikes_delivered,
+            self.syn_events,
+            self.tick_events,
+            self.virtual_ns,
+            self.spikes_per_s,
+            self.events_dispatched,
+            self.wheel_peak,
+            traffic.join(",")
+        )
+    }
+}
+
+/// Run the SNN to quiescence on either engine and report. Asserts spike
+/// conservation: every emitted spike's full fan-out landed.
+pub fn run<F: Fabric>(net: &mut F, cfg: SnnConfig) -> SnnReport {
+    let snn = Snn::setup(net, cfg);
+    let mut app = snn.app();
+    let events = net.run(&mut app);
+    assert_eq!(
+        app.spikes_delivered, app.expected_deliveries,
+        "spike conservation violated: {} of {} synaptic deliveries landed",
+        app.spikes_delivered, app.expected_deliveries
+    );
+    assert_eq!(app.tick_events, cfg.nodes as u64 * cfg.ticks as u64, "missed membrane ticks");
+    let now = net.now();
+    let m = net.metrics();
+    SnnReport {
+        nodes: cfg.nodes,
+        neurons: cfg.nodes as u64 * cfg.neurons_per_node as u64,
+        ticks: cfg.ticks,
+        spikes_emitted: app.spikes_emitted,
+        spikes_delivered: app.spikes_delivered,
+        syn_events: app.syn_events,
+        tick_events: app.tick_events,
+        virtual_ns: now,
+        spikes_per_s: if now > 0 { app.spikes_emitted as f64 * 1e9 / now as f64 } else { 0.0 },
+        events_dispatched: events,
+        wheel_peak: app.wheel_peak,
+        mode_traffic: m
+            .mode_traffic
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.messages, v.bytes))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Network;
+
+    #[test]
+    fn synapse_tables_are_pure_and_bounded() {
+        let cfg = SnnConfig::default();
+        let mut distinct = false;
+        for src in 0..cfg.nodes as u32 {
+            for neuron in 0..cfg.neurons_per_node {
+                for j in 0..cfg.fanout {
+                    let a = synapse(&cfg, 42, src, neuron, j);
+                    assert_eq!(a, synapse(&cfg, 42, src, neuron, j), "table must be pure");
+                    assert_ne!(a.target, src, "synapses never target their own node");
+                    assert!((a.target as usize) < cfg.nodes);
+                    assert!(a.neuron < cfg.neurons_per_node);
+                    assert!(
+                        (cfg.min_delay_ticks..=cfg.max_delay_ticks).contains(&a.delay_ticks)
+                    );
+                    assert!(a.weight_q16.unsigned_abs() == cfg.weight_q16 as u64);
+                    if a != synapse(&cfg, 43, src, neuron, j) {
+                        distinct = true;
+                    }
+                }
+            }
+        }
+        assert!(distinct, "different seeds must draw different tables");
+    }
+
+    #[test]
+    fn background_process_tracks_rate() {
+        let cfg = SnnConfig { rate_ppm: 250_000, ..Default::default() };
+        let mut hits = 0u64;
+        let trials = 20_000u64;
+        for t in 0..trials {
+            if background_hit(&cfg, 7, (t % 16) as u32, (t % 8) as u32, (t / 16) as u32) {
+                hits += 1;
+            }
+        }
+        let got_ppm = hits * 1_000_000 / trials;
+        assert!(
+            (200_000..300_000).contains(&got_ppm),
+            "background rate {got_ppm} ppm far from 250000"
+        );
+    }
+
+    #[test]
+    fn syn_tag_round_trips_signed_weights() {
+        for w in [45i64 << 16, -(45i64 << 16), 1, -1, i32::MAX as i64, i32::MIN as i64] {
+            for n in [0u32, 7, 0x7F_FFFE] {
+                let (dw, dn) = syn_tag_decode(syn_tag(w, n));
+                assert_eq!((dw, dn), (w, n));
+            }
+        }
+        // Kinds are distinct and below the reliable transport's mark.
+        let t = tick_tag(5);
+        let s = syn_tag(-(45i64 << 16), 3);
+        assert_ne!(t >> KIND_SHIFT, s >> KIND_SHIFT);
+        assert_eq!(t & crate::channels::reliable::RELIABLE_TIMER_MARK, 0);
+        assert_eq!(s & crate::channels::reliable::RELIABLE_TIMER_MARK, 0);
+    }
+
+    #[test]
+    fn card_run_conserves_spikes_over_multicast() {
+        let mut net = Network::card();
+        let cfg = SnnConfig { rate_ppm: 200_000, ..Default::default() };
+        let rep = run(&mut net, cfg);
+        assert!(rep.spikes_emitted > 0, "default config must produce activity");
+        assert_eq!(rep.spikes_delivered, rep.spikes_emitted * cfg.fanout as u64);
+        assert_eq!(rep.tick_events, cfg.nodes as u64 * cfg.ticks as u64);
+        assert!(rep.virtual_ns > 0 && rep.spikes_per_s > 0.0);
+        assert!(rep.wheel_peak > 0, "tick events must observe a loaded wheel");
+        assert!(rep.mode_traffic.is_empty(), "multicast rides below the endpoint layer");
+        let j = rep.to_json();
+        assert!(j.contains("\"spikes_emitted\"") && j.contains("\"wheel_peak\""));
+    }
+
+    #[test]
+    fn unicast_raw_transport_conserves_and_records_traffic() {
+        let mut net = Network::card();
+        let cfg =
+            SnnConfig { rate_ppm: 200_000, comm: Some(CommMode::Raw), ..Default::default() };
+        let rep = run(&mut net, cfg);
+        assert!(rep.spikes_emitted > 0);
+        assert_eq!(rep.spikes_delivered, rep.spikes_emitted * cfg.fanout as u64);
+        let raw = rep.mode_traffic.iter().find(|(m, _, _)| m == "raw");
+        let (_, msgs, bytes) = raw.expect("raw traffic accounted");
+        assert!(*msgs > 0 && *bytes == *msgs * 8, "8-byte spike datagrams");
+    }
+
+    #[test]
+    fn refractory_window_is_respected_on_card() {
+        let mut net = Network::card();
+        let cfg = SnnConfig { rate_ppm: 400_000, record_fires: true, ..Default::default() };
+        let snn = Snn::setup(&mut net, cfg);
+        let mut app = snn.app();
+        net.run_to_quiescence(&mut app);
+        assert!(app.spikes_emitted > 0);
+        let mut fires = app.fires.clone();
+        assert_eq!(fires.len() as u64, app.spikes_emitted);
+        fires.sort_unstable_by_key(|&(t, n, i)| (n, i, t));
+        for w in fires.windows(2) {
+            let ((t0, n0, i0), (t1, n1, i1)) = (w[0], w[1]);
+            if (n0, i0) == (n1, i1) {
+                assert!(
+                    t1 >= t0 + 1 + cfg.refractory_ticks,
+                    "neuron ({n0},{i0}) fired at ticks {t0} and {t1} inside refractory"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_report_drops_engine_fields_only() {
+        let mut net = Network::card();
+        let rep = run(&mut net, SnnConfig { rate_ppm: 200_000, ..Default::default() });
+        let n = rep.normalized();
+        assert_eq!(n.events_dispatched, 0);
+        assert_eq!(n.wheel_peak, 0);
+        assert_eq!(n.spikes_emitted, rep.spikes_emitted);
+        assert_eq!(n.virtual_ns, rep.virtual_ns);
+    }
+}

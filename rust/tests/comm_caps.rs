@@ -171,6 +171,7 @@ fn caps_are_engine_agnostic_and_mode_accurate() {
         CommMode::BridgeFifo { width_bits: 64 },
         CommMode::Nfs,
         CommMode::Tunnel { addr: 0 },
+        CommMode::Raw,
     ] {
         assert_eq!(Fabric::caps(&serial, mode), Fabric::caps(&sharded, mode), "{}", mode.name());
         let caps = Fabric::caps(&serial, mode);

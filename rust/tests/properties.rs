@@ -682,3 +682,94 @@ fn prop_reliable_learners_exactly_once_across_storm_seeds() {
         assert!(r.passed(), "seed {seed}: {:?}", r.violations());
     }
 }
+
+/// SNN conservation law (E16): across random seeds, spike rates,
+/// fan-outs and inhibition fractions — and over both transports — every
+/// emitted spike produces exactly `fanout` synaptic deliveries, every
+/// delivery lands as exactly one syn event, and every population node
+/// runs every tick. No spike is lost, duplicated or conjured.
+#[test]
+fn prop_snn_spike_conservation() {
+    use inc_sim::workload::snn::{Snn, SnnConfig};
+    for case in 0..CASES {
+        let mut rng = SplitMix64::new(0x5EED_0E16 ^ case);
+        let cfg = SnnConfig {
+            nodes: 2 + rng.gen_range(10),
+            neurons_per_node: 1 + rng.gen_range(8) as u32,
+            fanout: 1 + rng.gen_range(6) as u32,
+            ticks: 4 + rng.gen_range(12) as u32,
+            rate_ppm: 50_000 + rng.gen_range(400_000) as u64,
+            inhibit_ppm: rng.gen_range(400_000) as u64,
+            refractory_ticks: rng.gen_range(4) as u32,
+            comm: if case % 3 == 2 { Some(CommMode::Raw) } else { None },
+            ..Default::default()
+        };
+        let mut sys = SystemConfig::new(SystemPreset::Card);
+        sys.seed = case.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xE16;
+        let mut net = Network::new(sys);
+        let snn = Snn::setup(&mut net, cfg);
+        let mut app = snn.app();
+        Fabric::run(&mut net, &mut app);
+        assert_eq!(
+            app.expected_deliveries,
+            app.spikes_emitted * cfg.fanout as u64,
+            "case {case}: fan-out accounting"
+        );
+        assert_eq!(
+            app.spikes_delivered, app.expected_deliveries,
+            "case {case}: spikes lost or duplicated ({} emitted, fanout {})",
+            app.spikes_emitted, cfg.fanout
+        );
+        assert_eq!(app.syn_events, app.spikes_delivered, "case {case}: syn event accounting");
+        assert_eq!(
+            app.tick_events,
+            cfg.nodes as u64 * cfg.ticks as u64,
+            "case {case}: missing membrane updates"
+        );
+    }
+}
+
+/// Refractory contract (E16): after a neuron fires it stays silent for
+/// `1 + refractory_ticks` ticks, at every rate and seed — even when the
+/// background process and synaptic input push the membrane well past
+/// threshold inside the window.
+#[test]
+fn prop_snn_refractory_respected() {
+    use inc_sim::workload::snn::{Snn, SnnConfig};
+    for case in 0..CASES {
+        let mut rng = SplitMix64::new(0x5EED_F1AE ^ case);
+        let refractory = rng.gen_range(5) as u32;
+        let cfg = SnnConfig {
+            nodes: 2 + rng.gen_range(6),
+            neurons_per_node: 1 + rng.gen_range(6) as u32,
+            ticks: 16,
+            // Drive hard so the window is actually contested.
+            rate_ppm: 400_000 + rng.gen_range(500_000) as u64,
+            input_q16: 120 << 16,
+            refractory_ticks: refractory,
+            record_fires: true,
+            ..Default::default()
+        };
+        let mut sys = SystemConfig::new(SystemPreset::Card);
+        sys.seed = case.wrapping_mul(0xD134_2543_DE82_EF95) ^ 0xF1AE;
+        let mut net = Network::new(sys);
+        let snn = Snn::setup(&mut net, cfg);
+        let mut app = snn.app();
+        Fabric::run(&mut net, &mut app);
+        assert!(app.spikes_emitted > 0, "case {case}: hard drive produced no fires");
+        let mut fires: Vec<(u32, u32, u32)> =
+            app.fires.iter().map(|&(t, n, i)| (n, i, t)).collect();
+        fires.sort_unstable();
+        for w in fires.windows(2) {
+            let ((n0, i0, t0), (n1, i1, t1)) = (w[0], w[1]);
+            if (n0, i0) == (n1, i1) {
+                assert!(
+                    t1 - t0 >= 1 + refractory,
+                    "case {case}: neuron ({n0},{i0}) refired after {} ticks \
+                     (refractory {refractory})",
+                    t1 - t0
+                );
+            }
+        }
+    }
+}

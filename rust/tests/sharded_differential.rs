@@ -30,6 +30,7 @@ use inc_sim::workload::chaos::{self, ChaosConfig, FaultKind, Scenario};
 use inc_sim::workload::learners::{self, LearnerConfig, SendStrategy};
 use inc_sim::workload::mcts::{DistributedMcts, Game};
 use inc_sim::workload::serving::{self, ArrivalProcess, ServingConfig};
+use inc_sim::workload::snn::{self, SnnConfig};
 use inc_sim::workload::training::{train_comm, CommShape};
 
 /// Inject a seeded mixed workload: directed packets of varied sizes,
@@ -918,4 +919,74 @@ fn workload_chaos_reports_byte_identical_on_sharded_engine() {
             assert!(rs.passed(), "{ctx}: violations {:?}", rs.violations());
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// SNN differentials (E16): the spiking workload — fixed-point LIF
+// dynamics at tick timers, re-derived synapse tables, spike multicast
+// through the spanning-tree router (or unicast datagrams), per-synapse
+// delays on the timing wheel — must replay byte-identically on the
+// sharded engine at every shard count.
+// ---------------------------------------------------------------------
+
+/// Run the identical SNN experiment serially and at each shard count;
+/// compare the (normalized) report, delivery trace, metrics and clock.
+fn assert_snn_equivalent(preset: SystemPreset, shard_counts: &[u32], cfg: SnnConfig) {
+    let mut serial = Network::new(SystemConfig::new(preset));
+    Fabric::enable_trace(&mut serial);
+    let rs = snn::run(&mut serial, cfg);
+    assert!(rs.spikes_emitted > 0, "{preset:?}: snn config produced no spikes");
+    let serial_trace: Vec<Delivery> = serial.take_trace();
+    assert!(!serial_trace.is_empty(), "{preset:?}: snn produced no deliveries");
+    for &shards in shard_counts {
+        let mut sharded = ShardedNetwork::new(SystemConfig::new(preset), shards);
+        sharded.enable_trace();
+        let rp = snn::run(&mut sharded, cfg);
+        let ctx = format!("snn {preset:?} shards={}", sharded.shard_count());
+        // wheel_peak / events_dispatched are engine-level (per-shard
+        // wheels); everything else in the report must match exactly.
+        assert_eq!(rs.normalized(), rp.normalized(), "{ctx}: snn reports differ");
+        assert_eq!(serial_trace, sharded.take_trace(), "{ctx}: delivery traces differ");
+        assert_eq!(
+            serial.metrics().fabric_view(),
+            sharded.metrics().fabric_view(),
+            "{ctx}: metrics differ"
+        );
+        assert_eq!(serial.now(), sharded.now(), "{ctx}: final clocks differ");
+        assert_eq!(sharded.live_packets(), 0, "{ctx}: arena leak");
+    }
+}
+
+#[test]
+fn snn_byte_identical_across_engines() {
+    // The acceptance matrix: shards {2, 4, 16} on Inc3000 and Inc9000.
+    // Population strided across cards and cages so spike fan-out and
+    // syn timers cross shard boundaries constantly.
+    let cfg = SnnConfig {
+        nodes: 12,
+        neurons_per_node: 6,
+        ticks: 12,
+        rate_ppm: 200_000,
+        stride: 13,
+        ..Default::default()
+    };
+    assert_snn_equivalent(SystemPreset::Inc3000, &[2, 4, 16], cfg);
+    let cfg9 = SnnConfig { stride: 61, ..cfg };
+    assert_snn_equivalent(SystemPreset::Inc9000, &[2, 4, 16], cfg9);
+}
+
+#[test]
+fn snn_unicast_raw_byte_identical() {
+    // The unicast ablation arm: spikes as header-free CommMode::Raw
+    // datagrams through the endpoint layer instead of multicast.
+    let cfg = SnnConfig {
+        nodes: 10,
+        neurons_per_node: 5,
+        ticks: 10,
+        rate_ppm: 250_000,
+        comm: Some(CommMode::Raw),
+        stride: 17,
+        ..Default::default()
+    };
+    assert_snn_equivalent(SystemPreset::Inc3000, &[4, 16], cfg);
 }
