@@ -639,7 +639,7 @@ fn main() {
     let mut snn_match = true;
     if snn_ticks == 0 {
         println!("snn            skipped (BENCH_SNN_TICKS=0)");
-        json.push_str("  \"snn\": null\n");
+        json.push_str("  \"snn\": null,\n");
     } else {
         let snn_cfg = SnnConfig {
             nodes: snn_nodes,
@@ -681,7 +681,7 @@ fn main() {
              \"events_dispatched\": {}, \"events_per_s_wall\": {snn_events_per_s:.0}, \
              \"serial_secs\": {snn_serial_secs:.4}, \
              \"sharded_secs\": {snn_sharded_secs:.4}, \
-             \"matches_serial\": {snn_match}}}\n",
+             \"matches_serial\": {snn_match}}},\n",
             snn_rep.nodes,
             snn_rep.neurons,
             snn_rep.ticks,
@@ -691,6 +691,119 @@ fn main() {
             snn_rep.events_dispatched,
         ));
     }
+    // Dense-traffic optimistic showdown (EXPERIMENTS.md E17): the
+    // speculative (Time Warp) runner vs the conservative bounded-lag
+    // engine on two dense Inc9000 patterns — the hotspot chaos scenario
+    // (background senders converging on one region while links fail)
+    // and the spiking workload's multicast fan-out. Reported per
+    // pattern: conservative vs optimistic wall clock and speedup, the
+    // conservative engine's merged windows, the optimistic engine's
+    // rollbacks / replayed events / checkpoint bytes. Byte-identity of
+    // *both* engines against the serial oracle is hard-asserted below —
+    // a perf win that changes the answer is a bug, not a result.
+    let mut dense_match = true;
+    json.push_str("  \"dense_traffic\": [\n");
+    {
+        let hcfg = ChaosConfig::new(Scenario::Hotspot, 5);
+        let hsys = || {
+            let mut sys = SystemConfig::inc9000();
+            sys.rx_capacity = hcfg.suggested_rx_capacity();
+            sys
+        };
+        let serial_rep = {
+            let mut net = Network::new(hsys());
+            chaos::run(&mut net, &hcfg, 1)
+        };
+        let (cons_rep, cons_secs, cons_merged) = {
+            let mut net = ShardedNetwork::new(hsys(), 4);
+            let k = net.shard_count() as u32;
+            let (rep, secs) = common::timed(|| chaos::run(&mut net, &hcfg, k));
+            (rep, secs, net.metrics().windows_merged)
+        };
+        let (opt_rep, opt_secs, opt_m) = {
+            let mut net = ShardedNetwork::new(hsys(), 4);
+            net.set_optimistic(true);
+            let k = net.shard_count() as u32;
+            let (rep, secs) = common::timed(|| chaos::run(&mut net, &hcfg, k));
+            (rep, secs, net.metrics())
+        };
+        let matches = {
+            // The shard count on the report is presentation metadata.
+            let mut c = cons_rep.clone();
+            c.shards = serial_rep.shards;
+            let mut o = opt_rep;
+            o.shards = serial_rep.shards;
+            c == serial_rep && o == serial_rep
+        };
+        dense_match &= matches;
+        let speedup = cons_secs / opt_secs;
+        println!(
+            "dense hotspot  inc9000×4: conservative {cons_secs:.3} s vs optimistic \
+             {opt_secs:.3} s ({speedup:.2}x); {cons_merged} windows merged vs \
+             {} rollbacks / {} replayed / {:.1} KB ckpts (match: {matches})",
+            opt_m.rollbacks,
+            opt_m.events_replayed,
+            opt_m.checkpoints_bytes as f64 / 1e3,
+        );
+        json.push_str(&format!(
+            "    {{\"pattern\": \"hotspot\", \"preset\": \"inc9000\", \"shards\": 4, \
+             \"conservative_secs\": {cons_secs:.4}, \"optimistic_secs\": {opt_secs:.4}, \
+             \"speedup\": {speedup:.3}, \"windows_merged\": {cons_merged}, \
+             \"rollbacks\": {}, \"events_replayed\": {}, \"checkpoints_bytes\": {}, \
+             \"matches_serial\": {matches}}},\n",
+            opt_m.rollbacks, opt_m.events_replayed, opt_m.checkpoints_bytes,
+        ));
+    }
+    {
+        // Spike multicast strided across all four cages: every tick
+        // fans spikes out through the spanning-tree router, so boundary
+        // traffic is continuous and the speculative engine earns (or
+        // pays for) its checkpoints on the densest pattern we have.
+        let dcfg = SnnConfig {
+            nodes: 32,
+            neurons_per_node: 12,
+            ticks: env_u64("BENCH_DENSE_SNN_TICKS", 24) as u32,
+            rate_ppm: 200_000,
+            stride: 53,
+            ..SnnConfig::default()
+        };
+        let serial_rep = {
+            let mut net = Network::new(SystemConfig::inc9000());
+            snn::run(&mut net, dcfg)
+        };
+        let (cons_rep, cons_secs, cons_merged) = {
+            let mut net = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+            let (rep, secs) = common::timed(|| snn::run(&mut net, dcfg));
+            (rep, secs, net.metrics().windows_merged)
+        };
+        let (opt_rep, opt_secs, opt_m) = {
+            let mut net = ShardedNetwork::new(SystemConfig::inc9000(), 4);
+            net.set_optimistic(true);
+            let (rep, secs) = common::timed(|| snn::run(&mut net, dcfg));
+            (rep, secs, net.metrics())
+        };
+        let matches = cons_rep.normalized() == serial_rep.normalized()
+            && opt_rep.normalized() == serial_rep.normalized();
+        dense_match &= matches;
+        let speedup = cons_secs / opt_secs;
+        println!(
+            "dense snn      inc9000×4: conservative {cons_secs:.3} s vs optimistic \
+             {opt_secs:.3} s ({speedup:.2}x); {cons_merged} windows merged vs \
+             {} rollbacks / {} replayed / {:.1} KB ckpts (match: {matches})",
+            opt_m.rollbacks,
+            opt_m.events_replayed,
+            opt_m.checkpoints_bytes as f64 / 1e3,
+        );
+        json.push_str(&format!(
+            "    {{\"pattern\": \"snn_multicast\", \"preset\": \"inc9000\", \"shards\": 4, \
+             \"conservative_secs\": {cons_secs:.4}, \"optimistic_secs\": {opt_secs:.4}, \
+             \"speedup\": {speedup:.3}, \"windows_merged\": {cons_merged}, \
+             \"rollbacks\": {}, \"events_replayed\": {}, \"checkpoints_bytes\": {}, \
+             \"matches_serial\": {matches}}}\n",
+            opt_m.rollbacks, opt_m.events_replayed, opt_m.checkpoints_bytes,
+        ));
+    }
+    json.push_str("  ]\n");
     json.push_str("}\n");
 
     std::fs::write("BENCH_sim.json", &json).expect("write BENCH_sim.json");
@@ -706,6 +819,7 @@ fn main() {
     assert!(chaos_match, "chaos SLO report diverged across engines");
     assert!(chaos_serial.passed(), "chaos storm violated SLOs: {:?}", chaos_serial.violations());
     assert!(snn_match, "sharded snn report diverged from the serial oracle");
+    assert!(dense_match, "dense-traffic optimistic run diverged from the serial oracle");
     assert_eq!(rel_rtx, 0, "reliable all-reduce retransmitted on a healthy fabric");
     assert!(rel_acks > 0, "reliable all-reduce produced no acks");
     assert!(drop_report.retransmits > 0, "drop scenario forced no retransmission");

@@ -31,7 +31,7 @@ pub const MIN_WIDTH: u8 = 7;
 pub const MAX_WIDTH: u8 = 64;
 
 /// Transmit-unit state.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct TxUnit {
     pub dst: NodeId,
     pub width_bits: u8,
@@ -40,7 +40,7 @@ pub struct TxUnit {
 }
 
 /// Receive-unit state.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct RxUnit {
     pub src: NodeId,
     pub width_bits: u8,
@@ -56,7 +56,7 @@ pub struct RxUnit {
 /// All Bridge-FIFO endpoints in the system. Endpoint lookup is on the
 /// per-packet path (`fifo_send` / `fifo_rx`), so the maps use
 /// deterministic Fx hashing.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct BridgeFifoFabric {
     tx: FxHashMap<(u32, u8), TxUnit>,
     rx: FxHashMap<(u32, u8), RxUnit>,

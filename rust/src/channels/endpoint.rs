@@ -313,7 +313,7 @@ fn eth_tag_decode(tag: u64) -> (u32, u16, u16) {
 /// All endpoint-layer dynamic state of one [`Network`] (one per shard
 /// on the sharded engine; every piece is keyed by the node that owns
 /// it, so state never crosses a shard boundary).
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub(crate) struct CommState {
     /// Open endpoints: (node, lane) → registered mode.
     open: FxHashMap<(u32, u16), CommMode>,

@@ -62,7 +62,7 @@ pub enum RxMode {
 }
 
 /// Per-node virtual NIC (ethX owned by the device driver).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct EthPort {
     pub mode: RxMode,
     /// Frames handed to the kernel, readable by the application.
@@ -96,7 +96,7 @@ impl EthPort {
 
 /// The external world behind the card's physical Ethernet port: an
 /// NFS-flavoured file host plus the gateway's NAT state.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ExternalWorld {
     /// name → size of files saved over NFS.
     pub files: HashMap<String, u64>,
@@ -120,7 +120,7 @@ const EXT_NS_PER_BYTE: u64 = 8;
 /// the domain's node map.
 ///
 /// [`Domain`]: crate::network::Domain
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct EthernetFabric {
     pub ports: Vec<EthPort>,
     domain: std::sync::Arc<crate::network::Domain>,

@@ -37,7 +37,7 @@ pub struct PmRecord {
 }
 
 /// Receive side of one Postmaster queue.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct PmQueue {
     /// The linear receive stream, in storage-completion order.
     pub stream: Vec<PmRecord>,
@@ -48,7 +48,7 @@ pub struct PmQueue {
 
 /// All Postmaster queues in the system, keyed by (target node, queue id).
 /// Looked up per record on the delivery path, hence Fx hashing.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct PostmasterFabric {
     queues: FxHashMap<(u32, u8), PmQueue>,
     /// Target-side DMA engine occupancy per node.

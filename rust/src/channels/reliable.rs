@@ -12,16 +12,20 @@
 //!   order, buffers out-of-order arrivals (bounded by the endpoint's
 //!   receive capacity), and suppresses duplicates
 //!   ([`Metrics::duplicates_dropped`]).
-//! * **Cumulative acks** — each data or heartbeat frame is answered
-//!   with the receiver's next-expected sequence
-//!   ([`Metrics::acks`]); everything below it leaves the sender's
-//!   retransmit queue.
-//! * **Timeout retransmit** — a per-flow timer
+//! * **Cumulative + selective acks** — each data or heartbeat frame
+//!   is answered with the receiver's next-expected sequence plus a
+//!   64-sequence SACK bit window over its out-of-order buffer
+//!   ([`Metrics::acks`]); everything below the cumulative point
+//!   leaves the sender's retransmit queue, and SACKed sequences are
+//!   pinned as received.
+//! * **Selective-repeat retransmit** — a per-flow timer
 //!   ([`ReliableParams::rto_ns`], exponential backoff to
-//!   [`ReliableParams::rto_max_ns`]) re-sends the whole unacked
-//!   window ([`Metrics::retransmits`]); after
-//!   [`ReliableParams::max_retries`] consecutive timeouts the peer is
-//!   declared down instead of retrying forever.
+//!   [`ReliableParams::rto_max_ns`]) re-sends the unacked window
+//!   *minus* SACKed sequences ([`Metrics::retransmits`]) — under
+//!   random loss only the gaps go back on the wire, not everything
+//!   after them ([`ReliableParams::sack`] false restores go-back-all
+//!   as a control). After [`ReliableParams::max_retries`] consecutive
+//!   timeouts the peer is declared down instead of retrying forever.
 //! * **Heartbeat liveness** — [`Network::reliable_watch`] monitors a
 //!   peer with periodic heartbeats even when no data flows; silence
 //!   past [`ReliableParams::liveness_ns`] declares the peer down.
@@ -53,8 +57,12 @@
 //! | frame | bytes |
 //! |---|---|
 //! | data | `[0xD1][seq: u64 LE][payload…]` |
-//! | ack | `[0xA1][next expected seq: u64 LE]` |
+//! | ack | `[0xA1][next expected seq: u64 LE][sack bits: u64 LE]` |
 //! | heartbeat | `[0xB1]` |
+//!
+//! SACK bit `i` asserts sequence `cum + 1 + i` sits in the receiver's
+//! reorder buffer. The legacy 9-byte ack (no bit field) still parses —
+//! it simply carries an empty window.
 //!
 //! [`Metrics::acks`]: crate::metrics::Metrics::acks
 //! [`Metrics::retransmits`]: crate::metrics::Metrics::retransmits
@@ -128,6 +136,11 @@ pub struct ReliableParams {
     /// partition span — unless declaring a temporarily unreachable
     /// peer down is the intent).
     pub liveness_ns: Time,
+    /// Honor SACK windows on retransmit (selective repeat). Off, the
+    /// sender ignores the bit field and re-sends the whole unacked
+    /// window (go-back-all) — kept as the experimental control for
+    /// loss-recovery cost comparisons (`tests/properties.rs`).
+    pub sack: bool,
 }
 
 impl Default for ReliableParams {
@@ -138,12 +151,13 @@ impl Default for ReliableParams {
             max_retries: 10,
             heartbeat_ns: 100_000,
             liveness_ns: 600_000,
+            sack: true,
         }
     }
 }
 
 /// Sender side of one (node, lane, peer) flow.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct FlowTx {
     next_seq: u64,
     /// Sent, unacknowledged payloads by sequence (app payload, without
@@ -154,10 +168,16 @@ struct FlowTx {
     rto: Time,
     timeouts: u32,
     armed: bool,
+    /// Merged SACK knowledge: bit `i` of `sack_bits` asserts the
+    /// receiver holds `sack_cum + 1 + i`. A SACK statement is forever
+    /// true (reorder-buffer entries only leave by delivery), so stale
+    /// and reordered acks fold in rather than overwrite.
+    sack_cum: u64,
+    sack_bits: u64,
 }
 
 /// Receiver side of one (node, lane, peer) flow.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct FlowRx {
     /// Everything below this sequence has been delivered in order.
     next_expected: u64,
@@ -166,7 +186,7 @@ struct FlowRx {
 }
 
 /// Liveness bookkeeping for one (node, lane, peer).
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 struct PeerMeta {
     last_heard: Time,
     down: bool,
@@ -179,7 +199,7 @@ struct PeerMeta {
 /// the sharded engine; every map is keyed by the owning node, so state
 /// never crosses a shard boundary — except the registry, which is
 /// replicated like the endpoint-mode registry).
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub(crate) struct ReliableState {
     /// Registered reliable endpoints: (node, lane) → params.
     /// Replicated on every shard (send-side asserts consult it).
@@ -197,11 +217,21 @@ fn frame_data(seq: u64, payload: &[u8]) -> Vec<u8> {
     v
 }
 
-fn frame_ack(cum: u64) -> Vec<u8> {
-    let mut v = Vec::with_capacity(9);
+fn frame_ack(cum: u64, sack_bits: u64) -> Vec<u8> {
+    let mut v = Vec::with_capacity(17);
     v.push(FRAME_ACK);
     v.extend_from_slice(&cum.to_le_bytes());
+    v.extend_from_slice(&sack_bits.to_le_bytes());
     v
+}
+
+/// SACK window over the reorder buffer: bit `i` ⇒ `cum + 1 + i` held.
+fn sack_window(ooo: &BTreeMap<u64, Message>, cum: u64) -> u64 {
+    let mut bits = 0u64;
+    for &seq in ooo.range(cum.saturating_add(1)..cum.saturating_add(65)).map(|(s, _)| s) {
+        bits |= 1 << (seq - cum - 1);
+    }
+    bits
 }
 
 fn read_u64(b: &[u8]) -> u64 {
@@ -391,11 +421,29 @@ impl Network {
             self.declare_down(node, l, peer, app);
             return;
         }
-        // Go-back-all retransmit of the unacked window, oldest first
-        // (the receiver's duplicate suppression absorbs whatever the
-        // loss didn't actually take), then back off and re-arm.
-        let resend: Vec<(u64, Arc<Vec<u8>>)> =
-            flow.unacked.iter().map(|(s, d)| (*s, d.clone())).collect();
+        // Selective-repeat retransmit of the unacked window, oldest
+        // first, skipping sequences the receiver has SACKed (the
+        // receiver's duplicate suppression absorbs whatever the loss
+        // didn't actually take), then back off and re-arm. If the
+        // whole window is SACKed the cumulative ack itself was lost:
+        // resend the oldest frame alone to elicit a fresh one.
+        let (sack_cum, sack_bits) = (flow.sack_cum, flow.sack_bits);
+        let sacked = |seq: u64| {
+            params.sack
+                && seq > sack_cum
+                && seq - sack_cum - 1 < 64
+                && sack_bits >> (seq - sack_cum - 1) & 1 == 1
+        };
+        let mut resend: Vec<(u64, Arc<Vec<u8>>)> = flow
+            .unacked
+            .iter()
+            .filter(|(s, _)| !sacked(**s))
+            .map(|(s, d)| (*s, d.clone()))
+            .collect();
+        if resend.is_empty() {
+            let (s, d) = flow.unacked.iter().next().expect("unacked checked non-empty");
+            resend.push((*s, d.clone()));
+        }
         flow.rto = (flow.rto.saturating_mul(2)).min(params.rto_max_ns);
         flow.armed = true;
         let rto = flow.rto;
@@ -495,15 +543,36 @@ impl Network {
                 } else {
                     flow.ooo.insert(seq, payload);
                 }
-                let cum = self.rel.rx[&(ep.node.0, l, peer.0)].next_expected;
-                self.send_ack(&ep, peer, cum);
+                self.send_ack(&ep, peer);
             }
             Some(FRAME_ACK) if msg.data.len() >= 9 => {
                 self.touch_peer(ep.node, l, peer, now);
                 let cum = read_u64(&msg.data[1..9]);
+                let bits =
+                    if msg.data.len() >= 17 { read_u64(&msg.data[9..17]) } else { 0 };
                 if let Some(flow) = self.rel.tx.get_mut(&(ep.node.0, l, peer.0)) {
                     let before = flow.unacked.len();
                     flow.unacked = flow.unacked.split_off(&cum);
+                    // Acks reorder on unordered modes; merge windows
+                    // instead of overwriting so a stale ack can never
+                    // retract a SACKed sequence. Re-basing shifts bit
+                    // `i` (= base+1+i) by the base delta.
+                    match cum.cmp(&flow.sack_cum) {
+                        std::cmp::Ordering::Greater => {
+                            let shift = cum - flow.sack_cum;
+                            let old =
+                                if shift >= 64 { 0 } else { flow.sack_bits >> shift };
+                            flow.sack_cum = cum;
+                            flow.sack_bits = bits | old;
+                        }
+                        std::cmp::Ordering::Equal => flow.sack_bits |= bits,
+                        std::cmp::Ordering::Less => {
+                            let shift = flow.sack_cum - cum;
+                            if shift < 64 {
+                                flow.sack_bits |= bits >> shift;
+                            }
+                        }
+                    }
                     if flow.unacked.len() < before {
                         // Forward progress resets the backoff.
                         flow.timeouts = 0;
@@ -513,12 +582,7 @@ impl Network {
             }
             Some(FRAME_HEARTBEAT) => {
                 self.touch_peer(ep.node, l, peer, now);
-                let cum = self
-                    .rel
-                    .rx
-                    .get(&(ep.node.0, l, peer.0))
-                    .map_or(0, |f| f.next_expected);
-                self.send_ack(&ep, peer, cum);
+                self.send_ack(&ep, peer);
             }
             // Not a transport frame: raw traffic sharing the lane.
             _ => {
@@ -534,10 +598,15 @@ impl Network {
         meta.last_heard = meta.last_heard.max(now);
     }
 
-    fn send_ack(&mut self, ep: &Endpoint, peer: NodeId, cum: u64) {
+    fn send_ack(&mut self, ep: &Endpoint, peer: NodeId) {
         self.metrics.acks += 1;
+        let (cum, bits) = self
+            .rel
+            .rx
+            .get(&(ep.node.0, lane(&ep.mode), peer.0))
+            .map_or((0, 0), |f| (f.next_expected, sack_window(&f.ooo, f.next_expected)));
         let now = self.now();
-        self.send_at(now, ep, peer, Message::new(frame_ack(cum)));
+        self.send_at(now, ep, peer, Message::new(frame_ack(cum, bits)));
     }
 }
 
@@ -759,6 +828,28 @@ mod tests {
         net.run_to_quiescence(&mut app);
         assert_eq!(app.got, vec![(b.0, vec![1, 2, 3])]);
         assert_eq!(net.metrics.acks, 0);
+    }
+
+    #[test]
+    fn sack_window_marks_reorder_buffer_relative_to_cum() {
+        let mut ooo = BTreeMap::new();
+        for seq in [6u64, 7, 9, 68, 69, 1000] {
+            ooo.insert(seq, Message::new(vec![]));
+        }
+        // cum = 5: bit i ⇒ seq 6 + i; the window tops out at seq 69,
+        // so 1000 falls past it.
+        let bits = sack_window(&ooo, 5);
+        assert_eq!(bits, 1 | 1 << 1 | 1 << 3 | 1 << 62 | 1 << 63);
+        // Advancing cum re-bases the window and exposes the far entry.
+        let bits = sack_window(&ooo, 9);
+        assert_eq!(bits, 1 << (68 - 10) | 1 << (69 - 10));
+        assert_eq!(sack_window(&BTreeMap::new(), 0), 0, "empty buffer, empty window");
+        // The wire frame round-trips both fields.
+        let f = frame_ack(5, bits);
+        assert_eq!(f.len(), 17);
+        assert_eq!(f[0], FRAME_ACK);
+        assert_eq!(read_u64(&f[1..9]), 5);
+        assert_eq!(read_u64(&f[9..17]), bits);
     }
 
     #[test]

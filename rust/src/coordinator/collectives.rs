@@ -77,6 +77,7 @@ const FRAG_LAST: u8 = 1;
 const CTL_RESTART: u8 = 2;
 
 /// Event-driven ring all-reduce over `ranks`.
+#[derive(Clone)]
 pub struct RingAllreduce {
     ranks: Vec<NodeId>,
     /// rank index by node id.

@@ -19,7 +19,7 @@ use crate::network::arena::PacketRef;
 use crate::sim::Time;
 
 /// Transmit-side dynamic state of one unidirectional link.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct LinkState {
     /// Credits (bytes) currently held by the transmitter.
     credits: u32,

@@ -34,6 +34,7 @@ COMMANDS
   channels                                      virtual-channel comparison (Figs 3-5)
   sandbox     [--preset P] [--script FILE]      PCIe Sandbox session (§4.3)
   traffic     [--preset P] [--packets N] [--bytes B] [--seed S] [--shards K]
+              [--optimistic]
               uniform-random traffic soak; K>1 runs the bounded-lag
               per-cage parallel engine (K=0 picks the preset's natural
               shard count, 1 forces the serial engine)
@@ -91,7 +92,12 @@ COMMANDS
 
 The workload subcommands accept --shards like traffic does: every
 workload runs on either engine through the Fabric trait, with
-byte-identical results. --comm pm|eth|fifo picks the virtual channel
+byte-identical results. Adding --optimistic switches the sharded
+engine from conservative bounded-lag to speculative (Time Warp)
+epochs — shards run ahead of the horizon and roll back to a
+checkpoint when a straggler import arrives — still byte-identical to
+the serial engine; it needs --shards K>1 (or 0 for the natural
+count). --comm pm|eth|fifo picks the virtual channel
 the workload's messages travel over (first-class communication modes;
 default pm = Postmaster DMA, eth = internal Ethernet, fifo = Bridge
 FIFO). --reliable runs the workload's traffic over the ack/retransmit
@@ -205,14 +211,14 @@ fn main() -> Result<()> {
             args.get("packets", 50_000u32),
             args.get("bytes", 256u32),
             args.get("seed", 7u64),
-            args.get("shards", 0u32),
+            EngineArgs::parse(&args, 0),
         ),
         "train" => train(
             args.get("ranks", 4usize),
             args.get("steps", 200u32),
             args.get("lr", 0.25f32),
             args.preset(SystemPreset::Card),
-            args.get("shards", 1u32),
+            EngineArgs::parse(&args, 1),
             args.comm(),
             reliable_params(&args),
         )?,
@@ -220,13 +226,13 @@ fn main() -> Result<()> {
             args.get("workers", 8usize),
             args.get("rollouts", 3000u64),
             args.preset(SystemPreset::Card),
-            args.get("shards", 1u32),
+            EngineArgs::parse(&args, 1),
             args.comm(),
             reliable_params(&args),
         ),
         "learners" => run_learners(
             args.preset(SystemPreset::Card),
-            args.get("shards", 1u32),
+            EngineArgs::parse(&args, 1),
             args.comm(),
             reliable_params(&args),
         ),
@@ -354,7 +360,7 @@ fn channels() {
 
 /// Uniform-random traffic soak: the serial engine (`--shards 1`) or the
 /// bounded-lag per-cage parallel engine (EXPERIMENTS.md §Perf).
-fn traffic(p: SystemPreset, packets: u32, bytes: u32, seed: u64, shards: u32) {
+fn traffic(p: SystemPreset, packets: u32, bytes: u32, seed: u64, eng: EngineArgs) {
     let cfg = SystemConfig::new(p);
     let nn = p.node_count();
     let mut rng = SplitMix64::new(seed);
@@ -368,7 +374,7 @@ fn traffic(p: SystemPreset, packets: u32, bytes: u32, seed: u64, shards: u32) {
         pairs.push((NodeId(src), NodeId(dst)));
     }
     let t0 = std::time::Instant::now();
-    let (events, vtime, metrics, label) = if shards == 1 {
+    let (events, vtime, metrics, label) = if eng.serial() {
         let mut net = Network::new(cfg);
         for &(s, d) in &pairs {
             net.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(bytes));
@@ -376,16 +382,17 @@ fn traffic(p: SystemPreset, packets: u32, bytes: u32, seed: u64, shards: u32) {
         let ev = net.run_to_quiescence(&mut NullApp);
         (ev, net.now(), net.metrics.clone(), "serial".to_string())
     } else {
-        let mut net = ShardedNetwork::new(cfg, if shards == 0 { u32::MAX } else { shards });
+        let mut net = eng.sharded(cfg);
         for &(s, d) in &pairs {
             net.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(bytes));
         }
         let ev = net.run_to_quiescence();
         let label = format!(
-            "sharded ({} shards, {} workers, lookahead {} ns)",
+            "sharded ({} shards, {} workers, lookahead {} ns{})",
             net.shard_count(),
             net.worker_count(),
-            net.lookahead()
+            net.lookahead(),
+            if eng.optimistic { ", optimistic" } else { "" }
         );
         (ev, net.now(), net.metrics(), label)
     };
@@ -447,13 +454,53 @@ fn reliable_params(args: &Args) -> Option<ReliableParams> {
     Some(ReliableParams::default())
 }
 
-/// Build a sharded engine for a workload run: K=0 picks the preset's
-/// natural shard count.
-fn sharded_engine(preset: SystemPreset, shards: u32) -> ShardedNetwork {
-    ShardedNetwork::new(
-        SystemConfig::new(preset),
-        if shards == 0 { u32::MAX } else { shards },
-    )
+/// Engine selection shared by every workload subcommand: `--shards K`
+/// (0 = the preset's natural shard count, 1 = the serial engine) plus
+/// `--optimistic` (Time Warp speculative epochs on the sharded
+/// engine). Parsed in one place so every subcommand gets the same
+/// semantics and the same friendly errors.
+#[derive(Clone, Copy)]
+struct EngineArgs {
+    shards: u32,
+    optimistic: bool,
+}
+
+impl EngineArgs {
+    fn parse(args: &Args, default_shards: u32) -> Self {
+        let shards = args.get("shards", default_shards);
+        let optimistic = args.flag("optimistic");
+        if optimistic && shards == 1 {
+            eprintln!(
+                "--optimistic speculates across shards, so it needs the sharded \
+                 engine: pass --shards K with K > 1 (or 0 for the preset's \
+                 natural shard count)"
+            );
+            std::process::exit(2);
+        }
+        EngineArgs { shards, optimistic }
+    }
+
+    /// `--shards 1`: the serial reference engine.
+    fn serial(&self) -> bool {
+        self.shards == 1
+    }
+
+    /// Build the sharded engine (K=0 → natural shard count) with the
+    /// selected execution mode applied.
+    fn sharded(&self, sys: SystemConfig) -> ShardedNetwork {
+        let mut net =
+            ShardedNetwork::new(sys, if self.shards == 0 { u32::MAX } else { self.shards });
+        net.set_optimistic(self.optimistic);
+        net
+    }
+
+    fn label(&self, net: &ShardedNetwork) -> String {
+        format!(
+            "sharded x{}{}",
+            net.shard_count(),
+            if self.optimistic { " (optimistic)" } else { "" }
+        )
+    }
 }
 
 fn train(
@@ -461,17 +508,17 @@ fn train(
     steps: u32,
     lr: f32,
     preset: SystemPreset,
-    shards: u32,
+    eng: EngineArgs,
     comm: CommMode,
     reliable: Option<ReliableParams>,
 ) -> Result<()> {
     let rt = inc_sim::runtime::load_default()?;
     let cfg = training::TrainConfig { ranks, steps, lr, comm, reliable, ..Default::default() };
-    let report = if shards == 1 {
+    let report = if eng.serial() {
         let mut net = Network::new(SystemConfig::new(preset));
         training::train(&mut net, &rt, &cfg)?
     } else {
-        let mut net = sharded_engine(preset, shards);
+        let mut net = eng.sharded(SystemConfig::new(preset));
         if net.shard_count() == 1 {
             eprintln!(
                 "note: {preset:?} partitions into 1 shard — this run is effectively serial \
@@ -508,7 +555,7 @@ fn run_mcts(
     workers: usize,
     rollouts: u64,
     preset: SystemPreset,
-    shards: u32,
+    eng: EngineArgs,
     comm: CommMode,
     reliable: Option<ReliableParams>,
 ) {
@@ -541,12 +588,12 @@ fn run_mcts(
         };
         m.search(net, rollouts)
     }
-    let (r, engine) = if shards == 1 {
+    let (r, engine) = if eng.serial() {
         let mut net = Network::new(SystemConfig::new(preset));
         (go(&mut net, workers, rollouts, comm, reliable), "serial".to_string())
     } else {
-        let mut net = sharded_engine(preset, shards);
-        let label = format!("sharded x{}", net.shard_count());
+        let mut net = eng.sharded(SystemConfig::new(preset));
+        let label = eng.label(&net);
         (go(&mut net, workers, rollouts, comm, reliable), label)
     };
     println!(
@@ -572,7 +619,7 @@ fn run_mcts(
 /// or serving report exits non-zero (CI smoke-tests exactly this).
 fn run_serve(args: &Args) {
     let preset = args.preset(SystemPreset::Card);
-    let shards = args.get("shards", 1u32);
+    let eng = EngineArgs::parse(args, 1);
     let arrivals_s = args.get_opt("arrivals").unwrap_or_else(|| "poisson".into());
     let arrivals = serving::ArrivalProcess::parse(&arrivals_s.to_ascii_lowercase())
         .unwrap_or_else(|| {
@@ -597,14 +644,18 @@ fn run_serve(args: &Args) {
     if args.flag("sweep") {
         let rates: Vec<f64> =
             [0.25, 0.5, 1.0, 2.0, 4.0].iter().map(|m| cfg.rate_per_s * m).collect();
-        let (sat, reports) = if shards == 1 {
+        let (sat, reports) = if eng.serial() {
             serving::saturation_sweep(
                 move || Network::new(SystemConfig::new(preset)),
                 cfg,
                 &rates,
             )
         } else {
-            serving::saturation_sweep(move || sharded_engine(preset, shards), cfg, &rates)
+            serving::saturation_sweep(
+                move || eng.sharded(SystemConfig::new(preset)),
+                cfg,
+                &rates,
+            )
         };
         println!(
             "serving sweep [{preset:?}, {} arrivals, {} requests/point]:",
@@ -624,13 +675,13 @@ fn run_serve(args: &Args) {
         println!("saturation throughput: {sat:.0} req/s");
         return;
     }
-    let (report, engine) = if shards == 1 {
+    let (report, engine) = if eng.serial() {
         let mut net = Network::new(SystemConfig::new(preset));
         (serving::run(&mut net, cfg), "serial".to_string())
     } else {
-        let mut sharded = sharded_engine(preset, shards);
+        let mut sharded = eng.sharded(SystemConfig::new(preset));
         sharded.enable_trace();
-        let label = format!("sharded x{}", sharded.shard_count());
+        let label = eng.label(&sharded);
         let rep = serving::run(&mut sharded, cfg);
         // Byte-identity oracle: the same experiment, serial.
         let mut serial = Network::new(SystemConfig::new(preset));
@@ -684,7 +735,7 @@ fn run_serve(args: &Args) {
         report.makespan_ns as f64 / 1e6,
         report.throughput_rps
     );
-    if shards != 1 {
+    if !eng.serial() {
         println!("  byte-identity vs serial engine: OK");
     }
 }
@@ -697,7 +748,7 @@ fn run_serve(args: &Args) {
 /// spike-rate x mesh-size x shard-count ablation on fresh fabrics.
 fn run_snn(args: &Args) {
     let preset = args.preset(SystemPreset::Card);
-    let shards = args.get("shards", 1u32);
+    let eng = EngineArgs::parse(args, 1);
     let seed = args.get("seed", 42u64);
     let d = snn::SnnConfig::default();
     let nn = preset.node_count() as usize;
@@ -730,7 +781,7 @@ fn run_snn(args: &Args) {
         if preset != SystemPreset::Card {
             presets.push(preset);
         }
-        let shard_axis = [1u32, if shards > 1 { shards } else { 0 }];
+        let shard_axis = [1u32, if eng.shards > 1 { eng.shards } else { 0 }];
         println!(
             "snn ablation sweep [{} nodes x {} neurons, {} ticks]:",
             cfg.nodes, cfg.neurons_per_node, cfg.ticks
@@ -749,8 +800,8 @@ fn run_snn(args: &Args) {
                         let mut net = Network::new(sys(p));
                         (snn::run(&mut net, c), "1".to_string())
                     } else {
-                        let shards = if k == 0 { u32::MAX } else { k };
-                        let mut net = ShardedNetwork::new(sys(p), shards);
+                        let mut net =
+                            EngineArgs { shards: k, optimistic: eng.optimistic }.sharded(sys(p));
                         let label = net.shard_count().to_string();
                         (snn::run(&mut net, c), label)
                     };
@@ -769,14 +820,13 @@ fn run_snn(args: &Args) {
         }
         return;
     }
-    let (report, engine) = if shards == 1 {
+    let (report, engine) = if eng.serial() {
         let mut net = Network::new(sys(preset));
         (snn::run(&mut net, cfg), "serial".to_string())
     } else {
-        let mut sharded =
-            ShardedNetwork::new(sys(preset), if shards == 0 { u32::MAX } else { shards });
+        let mut sharded = eng.sharded(sys(preset));
         sharded.enable_trace();
-        let label = format!("sharded x{}", sharded.shard_count());
+        let label = eng.label(&sharded);
         let rep = snn::run(&mut sharded, cfg);
         // Byte-identity oracle: the same experiment, serial.
         let mut serial = Network::new(sys(preset));
@@ -830,7 +880,7 @@ fn run_snn(args: &Args) {
     for (mode, msgs, bytes) in &report.mode_traffic {
         println!("  traffic[{mode}]: {msgs} msgs, {bytes} B payload");
     }
-    if shards != 1 {
+    if !eng.serial() {
         println!("  byte-identity vs serial engine: OK");
     }
 }
@@ -878,7 +928,7 @@ fn run_background_scenario(
     verbose: bool,
 ) -> chaos::SloReport {
     let preset = args.preset(SystemPreset::Card);
-    let shards = args.get("shards", 1u32);
+    let eng = EngineArgs::parse(args, 1);
     let mut ccfg = chaos::ChaosConfig::new(scenario, args.get("seed", 42u64));
     // Only override the scenario's channel when the user asked: loss
     // defaults to best-effort Ethernet, everything else to Postmaster.
@@ -889,15 +939,47 @@ fn run_background_scenario(
     let mut sys = SystemConfig::new(preset);
     sys.rx_capacity = args.get("rx-cap", ccfg.suggested_rx_capacity());
     sys.drop_probability = args.get("loss", scenario.suggested_drop_probability());
-    let (report, engine) = if shards == 1 {
+    let (report, engine) = if eng.serial() {
         let mut net = Network::new(sys);
         (chaos::run(&mut net, &ccfg, 1), "serial".to_string())
     } else {
-        let mut net =
-            ShardedNetwork::new(sys, if shards == 0 { u32::MAX } else { shards });
-        let label = format!("sharded x{}", net.shard_count());
+        let mut net = eng.sharded(sys.clone());
+        let label = eng.label(&net);
         let k = net.shard_count();
-        (chaos::run(&mut net, &ccfg, k), label)
+        if eng.optimistic {
+            // Speculative execution must stay byte-identical: replay
+            // the identical experiment on the serial oracle and exit
+            // non-zero on any divergence (CI smoke-tests exactly this).
+            net.enable_trace();
+            let rep = chaos::run(&mut net, &ccfg, k);
+            let mut serial = Network::new(sys);
+            Fabric::enable_trace(&mut serial);
+            let srep = chaos::run(&mut serial, &ccfg, k);
+            let mut bad = false;
+            if net.take_trace() != serial.take_trace() {
+                eprintln!("BYTE-IDENTITY FAILURE: delivery traces differ");
+                bad = true;
+            }
+            if net.metrics().fabric_view() != serial.metrics.fabric_view() {
+                eprintln!("BYTE-IDENTITY FAILURE: fabric-view metrics differ");
+                bad = true;
+            }
+            if net.now() != serial.now() {
+                eprintln!("BYTE-IDENTITY FAILURE: final clocks differ");
+                bad = true;
+            }
+            if srep != rep {
+                eprintln!("BYTE-IDENTITY FAILURE: SLO reports differ");
+                bad = true;
+            }
+            if bad {
+                std::process::exit(1);
+            }
+            println!("  byte-identity vs serial engine: OK");
+            (rep, label)
+        } else {
+            (chaos::run(&mut net, &ccfg, k), label)
+        }
     };
     println!(
         "chaos [{engine}, {preset:?}, comm {}] scenario {} seed {}:",
@@ -937,7 +1019,7 @@ fn run_chaos_workload(args: &Args, workload: &str, scenario: chaos::Scenario) {
         std::process::exit(2);
     }
     let cfg = workloads::WorkloadChaosConfig::new(w, scenario, args.get("seed", 42u64));
-    let (report, engine) = run_one_workload(&cfg, args.get("shards", 1u32));
+    let (report, engine) = run_one_workload(&cfg, EngineArgs::parse(args, 1));
     println!(
         "chaos [{engine}] workload {} scenario {} seed {}:",
         report.workload, report.scenario, report.seed
@@ -971,18 +1053,16 @@ fn run_chaos_workload(args: &Args, workload: &str, scenario: chaos::Scenario) {
 /// Run one workload-chaos experiment on the requested engine.
 fn run_one_workload(
     cfg: &workloads::WorkloadChaosConfig,
-    shards: u32,
+    eng: EngineArgs,
 ) -> (workloads::WorkloadReport, String) {
-    if shards == 1 {
+    if eng.serial() {
         let mut net = Network::new(cfg.system_config());
         (workloads::run_workload(&mut net, cfg, 1), "serial".to_string())
     } else {
-        let mut net = ShardedNetwork::new(
-            cfg.system_config(),
-            if shards == 0 { u32::MAX } else { shards },
-        );
+        let mut net = eng.sharded(cfg.system_config());
+        let label = eng.label(&net);
         let k = net.shard_count();
-        (workloads::run_workload(&mut net, cfg, k), format!("sharded x{k}"))
+        (workloads::run_workload(&mut net, cfg, k), label)
     }
 }
 
@@ -992,7 +1072,7 @@ fn run_one_workload(
 /// violates its SLO.
 fn run_chaos_all(args: &Args) {
     let seed = args.get("seed", 42u64);
-    let shards = args.get("shards", 1u32);
+    let eng = EngineArgs::parse(args, 1);
     let mut jsons: Vec<String> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
     for sc in chaos::Scenario::ALL {
@@ -1006,7 +1086,7 @@ fn run_chaos_all(args: &Args) {
     for w in workloads::ChaosWorkload::ALL {
         for sc in workloads::WORKLOAD_SCENARIOS {
             let cfg = workloads::WorkloadChaosConfig::new(w, sc, seed);
-            let (report, engine) = run_one_workload(&cfg, shards);
+            let (report, engine) = run_one_workload(&cfg, eng);
             let label = format!("{}/{}", report.workload, report.scenario);
             println!(
                 "chaos [{engine}] workload {} seed {}: {}",
@@ -1046,7 +1126,7 @@ fn run_chaos_all(args: &Args) {
 
 fn run_learners(
     preset: SystemPreset,
-    shards: u32,
+    eng: EngineArgs,
     comm: CommMode,
     reliable: Option<ReliableParams>,
 ) {
@@ -1059,14 +1139,16 @@ fn run_learners(
         reliable,
         ..learners::LearnerConfig::default()
     };
-    let (streamed, aggregated, engine) = if shards == 1 {
+    let (streamed, aggregated, engine) = if eng.serial() {
         let f = move || Network::new(SystemConfig::new(preset));
         let (s, a) = learners::overlap_advantage(f, cfg);
         (s, a, "serial".to_string())
     } else {
-        let f = move || sharded_engine(preset, shards);
+        let f = move || eng.sharded(SystemConfig::new(preset));
         let (s, a) = learners::overlap_advantage(f, cfg);
-        (s, a, "sharded".to_string())
+        let label =
+            if eng.optimistic { "sharded (optimistic)" } else { "sharded" }.to_string();
+        (s, a, label)
     };
     println!(
         "distributed learners [{engine}, comm {}{}], {} outputs/step/node of {} B:",

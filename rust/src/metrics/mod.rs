@@ -185,6 +185,20 @@ pub struct Metrics {
     /// owned-subset domains (`inc9000_domain` bench rows). Excluded
     /// from [`Metrics::fabric_view`] like every engine-level field.
     pub state_bytes: u64,
+    /// **Engine-level**: times a speculating shard of the optimistic
+    /// (Time Warp) engine restored a checkpoint after a straggler
+    /// import (see `network::timewarp`). Always 0 on the serial and
+    /// conservative engines; excluded from [`Metrics::fabric_view`].
+    pub rollbacks: u64,
+    /// **Engine-level**: events re-dispatched during rollback replay
+    /// (speculative work thrown away and redone). Excluded from
+    /// [`Metrics::fabric_view`].
+    pub events_replayed: u64,
+    /// **Engine-level**: cumulative estimated bytes of the optimistic
+    /// engine's state snapshots (domain-sized state + live packets +
+    /// pending events, summed over every checkpoint taken). Excluded
+    /// from [`Metrics::fabric_view`].
+    pub checkpoints_bytes: u64,
 }
 
 impl Metrics {
@@ -221,6 +235,9 @@ impl Metrics {
         self.drains_suppressed += other.drains_suppressed;
         self.windows_merged += other.windows_merged;
         self.state_bytes += other.state_bytes;
+        self.rollbacks += other.rollbacks;
+        self.events_replayed += other.events_replayed;
+        self.checkpoints_bytes += other.checkpoints_bytes;
     }
 
     /// The fabric-behavior view: engine-level fields
@@ -232,6 +249,9 @@ impl Metrics {
         let mut m = self.clone();
         m.windows_merged = 0;
         m.state_bytes = 0;
+        m.rollbacks = 0;
+        m.events_replayed = 0;
+        m.checkpoints_bytes = 0;
         m
     }
 
@@ -292,6 +312,15 @@ impl Metrics {
         }
         if self.state_bytes > 0 {
             s.push_str(&format!("  resident state bytes={}\n", self.state_bytes));
+        }
+        if self.rollbacks + self.events_replayed > 0 {
+            s.push_str(&format!(
+                "  timewarp: rollbacks={} events replayed={}\n",
+                self.rollbacks, self.events_replayed
+            ));
+        }
+        if self.checkpoints_bytes > 0 {
+            s.push_str(&format!("  checkpoint bytes={}\n", self.checkpoints_bytes));
         }
         for (mode, t) in &self.mode_traffic {
             s.push_str(&format!(
@@ -467,13 +496,22 @@ mod tests {
         m.record_delivery("raw", 10, 4);
         m.windows_merged = 7;
         m.state_bytes = 4096;
+        m.rollbacks = 2;
+        m.events_replayed = 99;
+        m.checkpoints_bytes = 1 << 20;
         let f = m.fabric_view();
         assert_eq!(f.windows_merged, 0);
         assert_eq!(f.state_bytes, 0);
+        assert_eq!(f.rollbacks, 0);
+        assert_eq!(f.events_replayed, 0);
+        assert_eq!(f.checkpoints_bytes, 0);
         assert_eq!(f.packets_delivered, 1);
         let mut other = m.clone();
         other.windows_merged = 3;
         other.state_bytes = 1024;
+        other.rollbacks = 5;
+        other.events_replayed = 1;
+        other.checkpoints_bytes = 2048;
         assert_ne!(m, other, "raw blocks differ on engine counters");
         assert_eq!(m.fabric_view(), other.fabric_view(), "fabric views agree");
     }

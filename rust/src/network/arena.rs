@@ -31,7 +31,7 @@ impl PacketRef {
 }
 
 /// Slab of in-flight packets with slot recycling.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct PacketArena {
     slots: Vec<Option<Packet>>,
     free: Vec<u32>,

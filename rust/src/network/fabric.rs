@@ -68,7 +68,12 @@ use crate::topology::{LinkId, NodeId, Topology};
 
 /// An [`App`] that can be partitioned across the sharded engine's
 /// shards and reduced back. See the module docs for the contract.
-pub trait ShardableApp: App + Send + Sized {
+///
+/// `Clone` is part of the contract: the optimistic engine
+/// ([`crate::network::timewarp`]) checkpoints each partition alongside
+/// its shard's `Network` and restores the clone on rollback, so a
+/// partition's clone must capture all state its callbacks mutate.
+pub trait ShardableApp: App + Send + Sized + Clone {
     /// Build the partition that will run on `shard` (owning the nodes
     /// `n` with `owner[n] == shard`). Called once per shard before the
     /// run; the parent app is not consulted again until reduction.

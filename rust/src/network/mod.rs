@@ -60,6 +60,7 @@ pub mod arena;
 pub mod domain;
 pub mod fabric;
 pub mod sharded;
+pub mod timewarp;
 
 pub use domain::Domain;
 pub use fabric::{Fabric, ShardableApp};
@@ -191,14 +192,14 @@ pub(crate) fn proto_tag(p: Proto) -> u8 {
 /// shard of a link's transmit side differs from the owner of its
 /// receive side, so `Arrive`s travel forward and `Credit`s travel back.
 /// Packets move *by value* between per-shard arenas.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub(crate) enum BoundaryEvent {
     Arrive { link: LinkId, packet: Packet },
     Credit { link: LinkId, bytes: u32 },
 }
 
 /// A boundary event plus its absolute dispatch time.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub(crate) struct BoundaryMsg {
     pub at: Time,
     pub ev: BoundaryEvent,
@@ -206,7 +207,7 @@ pub(crate) struct BoundaryMsg {
 
 /// Shard identity of a `Network` acting as one shard of a
 /// [`sharded::ShardedNetwork`] (`None` for the ordinary serial engine).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub(crate) struct ShardCtx {
     /// This shard's index.
     pub shard: u32,
@@ -218,7 +219,7 @@ pub(crate) struct ShardCtx {
 }
 
 /// Events dispatched by the fabric. Kept ≤ 32 bytes — see module docs.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum Event {
     /// Packet enters the source node's router (after injection overhead).
     Inject { packet: PacketRef },
@@ -313,10 +314,18 @@ pub trait App {
 }
 
 /// An [`App`] that does nothing (inbox-driven workloads).
+#[derive(Clone)]
 pub struct NullApp;
 impl App for NullApp {}
 
 /// The assembled system.
+///
+/// `Clone` deep-copies the entire simulation state — clock, wheel,
+/// arena, node/link/channel state, metrics — except the immutable
+/// `Arc`-shared pieces (topology, domain, owner map). A clone is an
+/// exact checkpoint: resuming it replays the identical event sequence.
+/// The optimistic engine ([`timewarp`]) is built on this.
+#[derive(Clone)]
 pub struct Network {
     pub cfg: SystemConfig,
     /// Static topology, shared read-only (shards of a
@@ -726,25 +735,70 @@ impl Network {
         self.sim.dispatched() - start
     }
 
-    /// Dispatch events at or before `deadline` until the first one that
-    /// exports a boundary message (the event itself completes; its
-    /// exports stay in the outbox for the caller). The sharded engine's
-    /// distance-aware epoch batching uses this to let a shard whose
-    /// horizon clears the lockstep window sprint through many windows
-    /// without barriers — the caller bounds `deadline` by the horizon,
-    /// and the first boundary export ends the sprint because its
-    /// consequences are not reflected in the horizon. On the serial
-    /// engine (no shard context) the outbox never fills, so this equals
-    /// [`Network::run_window`].
-    pub(crate) fn run_exclusive(&mut self, app: &mut dyn App, deadline: Time) -> u64 {
+    /// Dispatch events at or before `deadline`, shrinking the deadline
+    /// as boundary messages are exported (exports stay in the outbox
+    /// for the caller). The sharded engine's distance-aware epoch
+    /// batching uses this to let a shard whose horizon clears the
+    /// lockstep window sprint through many windows without barriers.
+    ///
+    /// An export does **not** end the sprint outright: every other
+    /// shard's horizon already accounts for it (the export to shard `d`
+    /// arrives no earlier than this shard's published peek plus the
+    /// pair lookahead, which is exactly what their horizons assumed).
+    /// The only party whose horizon misses it is *this* shard — the
+    /// export could bounce back and influence us no earlier than its
+    /// arrival time plus the return-trip lookahead. So each export to
+    /// shard `d` at time `t` clamps the remaining sprint to
+    /// `t + comeback[d] − 1`, where `comeback[d]` is the d→self pair
+    /// lookahead, and the sprint continues on the export's own
+    /// timestamp instead of dying at its first boundary crossing. On
+    /// the serial engine (no shard context) the outbox never fills, so
+    /// this equals [`Network::run_window`].
+    pub(crate) fn run_exclusive(
+        &mut self,
+        app: &mut dyn App,
+        mut deadline: Time,
+        comeback: &[u64],
+    ) -> u64 {
         let start = self.sim.dispatched();
+        let mut seen = 0usize;
         while let Some((_, ev)) = self.sim.pop_until(deadline) {
             self.handle(ev, app);
-            if self.shard_ctx.as_ref().is_some_and(|c| !c.outbox.is_empty()) {
-                break;
+            if let Some(ctx) = self.shard_ctx.as_ref() {
+                while seen < ctx.outbox.len() {
+                    let (dst, ref msg) = ctx.outbox[seen];
+                    seen += 1;
+                    let bounce = msg
+                        .at
+                        .saturating_add(comeback[dst as usize])
+                        .saturating_sub(1);
+                    deadline = deadline.min(bounce);
+                }
             }
         }
         self.sim.dispatched() - start
+    }
+
+    /// The node whose state the head event will touch, when — and only
+    /// when — its handler provably cannot reach application code.
+    /// Per-node horizon bounds hinge on this: an app callback may call
+    /// `timer_at` (or send) *at another owned node*, creating
+    /// same-instant cross-node influence, so a head event that can run
+    /// an app handler pins the bound to the whole-shard pair distance.
+    /// Drain and Credit events touch only `LinkState` at the link's
+    /// source router and never call into the app, so their influence
+    /// radiates from that one node and a peer shard may safely use the
+    /// (longer) node-to-shard distance instead. Everything else returns
+    /// `None`.
+    pub(crate) fn head_bound_node(&self) -> Option<NodeId> {
+        let (_, key) = self.sim.peek_head()?;
+        match key >> KEY_ENTITY_BITS {
+            3 | 4 => {
+                let link = LinkId((key & KEY_ENTITY_MASK) as u32);
+                Some(self.topo.link(link).src)
+            }
+            _ => None,
+        }
     }
 
     fn handle(&mut self, ev: Event, app: &mut dyn App) {

@@ -60,9 +60,26 @@
 //! minimum over other shards of their published next-event time plus
 //! the pairwise lookahead — and any shard whose horizon clears the
 //! lockstep window runs **exclusively** past it: no window deadline, no
-//! barriers, until it quiesces, reaches its horizon, or produces its
-//! first boundary message (whose consequences the horizon does not yet
-//! reflect; see `Network::run_exclusive`). Several shards can sprint
+//! barriers, until it quiesces or reaches its horizon. Two sharpenings
+//! tighten the classic scheme:
+//!
+//! * **Per-node head bounds.** When a shard's head event provably
+//!   cannot reach application code (Drain/Credit — pure link
+//!   machinery), the shard publishes the head's node alongside its
+//!   peek, and peers bound that event by the *node's* card distance
+//!   ([`Topology::card_shard_distances`]) while bounding the rest of
+//!   the queue by the second-earliest event time
+//!   ([`crate::sim::Sim::peek_second_time_lb`]) at the pair distance.
+//!   Interior work then supports longer sprints than the whole-shard
+//!   boundary minimum would allow.
+//! * **Sprint continuation.** A boundary export does not end a sprint:
+//!   every *other* shard's horizon already accounts for it, and only
+//!   the exporting shard's own horizon misses the possible bounce-back
+//!   — so the sprint continues with its deadline clamped to the
+//!   export's timestamp plus the return-trip pair lookahead (see
+//!   `Network::run_exclusive`).
+//!
+//! Several shards can sprint
 //! *simultaneously* — traffic local to far-apart partitions proceeds
 //! barrier-free in all of them at once. All workers derive every
 //! decision from the same published next-event times and the same
@@ -75,6 +92,17 @@
 //! to one long sprint, i.e. to serial execution with two barriers
 //! total; a shard that is alone in having pending events (the old
 //! "solo sprint" special case) likewise sees an infinite horizon.
+//!
+//! # Optimistic (Time Warp) execution
+//!
+//! [`ShardedNetwork::set_optimistic`] swaps the conservative epoch loop
+//! for the speculative runner in [`crate::network::timewarp`]: shards
+//! checkpoint their state at epoch boundaries, run ahead of any horizon
+//! on the live state, and roll back + replay when an import lands in
+//! their speculated past. Exports are withheld until a global-virtual-
+//! time pass commits them, so mis-speculation never propagates (no
+//! anti-messages) and the run stays byte-identical to the serial
+//! engine. See the timewarp module docs for the protocol.
 //!
 //! # Byte-identical to the serial engine
 //!
@@ -161,8 +189,20 @@ pub struct ShardedNetwork {
     /// an import into i (see the module docs, "Distance-aware
     /// multi-shard epoch batching").
     pair_lookahead: Vec<u64>,
+    /// Per-card sharpening of the pair matrix: flat `cards × shards`
+    /// hop counts indexed `[card_index * shards + shard]`
+    /// ([`Topology::card_shard_distances`]). Lets a peer bound a
+    /// shard's *head* event by the head node's own distance instead of
+    /// the whole-shard minimum — interior work then supports longer
+    /// sprints. `None` when the table would be unreasonably large
+    /// (mega meshes at high shard counts); peers fall back to the pair
+    /// bound.
+    card_hops: Option<Vec<u32>>,
     /// Worker threads driving the shards.
     workers: usize,
+    /// Run epochs speculatively (Time Warp) instead of conservatively
+    /// (see [`crate::network::timewarp`]).
+    optimistic: bool,
     /// Global packet-id cursor, synced into shards around driver calls
     /// so ids match the serial engine exactly.
     next_packet_id: u64,
@@ -196,6 +236,16 @@ impl ShardedNetwork {
             .iter()
             .map(|&h| h as u64 * lookahead)
             .collect();
+        // Per-card refinement of the same matrix, gated by size: 8M
+        // u32 entries (32 MB) covers every preset through Inc100k at
+        // 1024 shards with room to spare; beyond that the pair bound
+        // alone is still correct, just less sharp.
+        let ncards = topo.cards().len();
+        let card_hops = if ncards.saturating_mul(count as usize) <= 8_000_000 {
+            Some(topo.card_shard_distances(&owner, count))
+        } else {
+            None
+        };
         let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let requested = if cfg.sim_threads > 0 { cfg.sim_threads } else { hw };
         let workers = requested.clamp(1, count as usize);
@@ -210,7 +260,38 @@ impl ShardedNetwork {
                 net
             })
             .collect();
-        ShardedNetwork { shards, owner, topo, lookahead, pair_lookahead, workers, next_packet_id: 0 }
+        ShardedNetwork {
+            shards,
+            owner,
+            topo,
+            lookahead,
+            pair_lookahead,
+            card_hops,
+            workers,
+            optimistic: false,
+            next_packet_id: 0,
+        }
+    }
+
+    /// Switch the epoch runner to optimistic (Time Warp) execution:
+    /// shards speculate past the conservative horizon on checkpointed
+    /// state and roll back on stragglers (see
+    /// [`crate::network::timewarp`]). The result is byte-identical to
+    /// the conservative runner — and to the serial engine — either way;
+    /// only wall clock and the engine-level counters
+    /// ([`Metrics::rollbacks`], [`Metrics::events_replayed`],
+    /// [`Metrics::checkpoints_bytes`]) differ.
+    ///
+    /// [`Metrics::rollbacks`]: crate::metrics::Metrics::rollbacks
+    /// [`Metrics::events_replayed`]: crate::metrics::Metrics::events_replayed
+    /// [`Metrics::checkpoints_bytes`]: crate::metrics::Metrics::checkpoints_bytes
+    pub fn set_optimistic(&mut self, on: bool) {
+        self.optimistic = on;
+    }
+
+    /// Whether the optimistic (Time Warp) runner is enabled.
+    pub fn is_optimistic(&self) -> bool {
+        self.optimistic
     }
 
     /// Natural shard count of a preset (what `new` clamps to).
@@ -710,12 +791,23 @@ impl ShardedNetwork {
     /// quiescence or `deadline`. Events after `deadline` stay queued;
     /// clocks are left at each shard's last event (callers
     /// re-synchronize).
-    fn run_epochs<A: App + Send>(&mut self, apps: &mut [A], deadline: Time) -> u64 {
+    fn run_epochs<A: App + Send + Clone>(&mut self, apps: &mut [A], deadline: Time) -> u64 {
         debug_assert_eq!(apps.len(), self.shards.len());
+        if self.optimistic {
+            return crate::network::timewarp::run_epochs_optimistic(
+                &mut self.shards,
+                apps,
+                deadline,
+                self.lookahead,
+                self.workers,
+            );
+        }
         let started: u64 = self.dispatched();
         let nshards = self.shards.len();
         let lookahead = self.lookahead;
         let pair_lookahead: &[u64] = &self.pair_lookahead;
+        let card_hops: Option<&[u32]> = self.card_hops.as_deref();
+        let topo: &Topology = &self.topo;
         let Some(first) = self.shards.iter().filter_map(|s| s.sim.peek_time()).min() else {
             return 0;
         };
@@ -741,6 +833,24 @@ impl ShardedNetwork {
             .iter()
             .map(|s| AtomicU64::new(s.sim.peek_time().unwrap_or(u64::MAX)))
             .collect();
+        // Alongside each peek, publish (a) the head event's *bound
+        // node* — only when its handler provably cannot reach app code
+        // ([`Network::head_bound_node`]), u64::MAX otherwise — and (b)
+        // a lower bound on the shard's second-earliest event time. A
+        // peer may then bound the head's influence by the head node's
+        // own card distance and everything behind it by the second
+        // time at the whole-pair distance: strictly longer horizons
+        // whenever a shard's head sits away from the shared boundary.
+        let heads: Vec<AtomicU64> = self
+            .shards
+            .iter()
+            .map(|s| AtomicU64::new(s.head_bound_node().map_or(u64::MAX, |n| n.0 as u64)))
+            .collect();
+        let nexts: Vec<AtomicU64> = self
+            .shards
+            .iter()
+            .map(|s| AtomicU64::new(s.sim.peek_second_time_lb().unwrap_or(u64::MAX)))
+            .collect();
         // Earliest epoch window in which a worker panicked (u64::MAX =
         // none). Epoch-tagged rather than a plain flag: a fast worker
         // may already be in window k+1 when it panics, and workers
@@ -757,16 +867,40 @@ impl ShardedNetwork {
         // Every worker reads the same peeks and the same static matrix,
         // so every worker reaches the same verdicts — no coordination
         // beyond the barriers.
-        let horizon = |peeks: &[AtomicU64], i: usize| -> u64 {
+        let horizon = |peeks: &[AtomicU64], heads: &[AtomicU64], nexts: &[AtomicU64], i: usize| -> u64 {
             let mut h = u64::MAX;
             for (j, p) in peeks.iter().enumerate() {
                 if j == i {
                     continue;
                 }
                 let t = p.load(Ordering::SeqCst);
-                if t != u64::MAX {
-                    h = h.min(t.saturating_add(pair_lookahead[j * nshards + i]));
+                if t == u64::MAX {
+                    continue;
                 }
+                let pair = t.saturating_add(pair_lookahead[j * nshards + i]);
+                let b = match (card_hops, heads[j].load(Ordering::SeqCst)) {
+                    (Some(ch), hn) if hn != u64::MAX => {
+                        // Per-node sharpening: the head's influence
+                        // radiates from its own node's card, the rest
+                        // of j's queue from the second event time at
+                        // the pair distance. Both bounds are ≥ the
+                        // plain pair bound (a card is never closer to
+                        // shard i than the shard-pair minimum; the
+                        // second time is ≥ the head time), so this
+                        // only ever lengthens the horizon.
+                        let ci = topo.card_index(NodeId(hn as u32)) as usize;
+                        let head_b = t.saturating_add(
+                            (ch[ci * nshards + i] as u64).saturating_mul(lookahead),
+                        );
+                        let next_b = match nexts[j].load(Ordering::SeqCst) {
+                            u64::MAX => u64::MAX,
+                            nt => nt.saturating_add(pair_lookahead[j * nshards + i]),
+                        };
+                        head_b.min(next_b)
+                    }
+                    _ => pair,
+                };
+                h = h.min(b);
             }
             h
         };
@@ -796,6 +930,8 @@ impl ShardedNetwork {
                 let barrier = &barrier;
                 let mailboxes = &mailboxes;
                 let peeks = &peeks;
+                let heads = &heads;
+                let nexts = &nexts;
                 let abort_at = &abort_at;
                 let horizon = &horizon;
                 let next_a = &next_a;
@@ -824,11 +960,17 @@ impl ShardedNetwork {
                             // so the horizon instant itself must
                             // stay unprocessed).
                             let own_peek = peeks[sid as usize].load(Ordering::SeqCst);
-                            let sprint_deadline = horizon(peeks, sid as usize)
+                            let sprint_deadline = horizon(peeks, heads, nexts, sid as usize)
                                 .saturating_sub(1)
                                 .min(deadline);
                             if sprint_deadline > win_deadline && own_peek <= sprint_deadline {
-                                net.run_exclusive(*app, sprint_deadline);
+                                // The return-trip lookahead per export
+                                // destination: row `sid` works for the
+                                // d→sid direction because the hop
+                                // matrix is symmetric.
+                                let comeback = &pair_lookahead
+                                    [sid as usize * nshards..(sid as usize + 1) * nshards];
+                                net.run_exclusive(*app, sprint_deadline, comeback);
                                 // Windows the sprint coalesced (its
                                 // first event sat in `own_peek`'s
                                 // window).
@@ -869,6 +1011,14 @@ impl ShardedNetwork {
                                 net.import_boundary(inbox);
                                 peeks[sid].store(
                                     net.sim.peek_time().unwrap_or(u64::MAX),
+                                    Ordering::SeqCst,
+                                );
+                                heads[sid].store(
+                                    net.head_bound_node().map_or(u64::MAX, |n| n.0 as u64),
+                                    Ordering::SeqCst,
+                                );
+                                nexts[sid].store(
+                                    net.sim.peek_second_time_lb().unwrap_or(u64::MAX),
                                     Ordering::SeqCst,
                                 );
                             }))

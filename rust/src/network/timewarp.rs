@@ -1,0 +1,608 @@
+//! Optimistic (Time Warp) sharded execution: speculative epochs with
+//! checkpoint/rollback, byte-identical to the serial oracle.
+//!
+//! The conservative engine ([`crate::network::sharded`]) never lets a
+//! shard run past the instant another shard's pending work could reach
+//! it — on dense traffic every shard's horizon is short and the run
+//! pays two barriers per 684 ns window. This module trades that
+//! pessimism for *speculation*: each shard checkpoints its whole state
+//! at epoch boundaries, runs ahead of any horizon on the live state,
+//! and repairs mis-speculation after the fact. The result is — by the
+//! repo's non-negotiable gate — byte-identical to the serial engine:
+//! same delivery trace, same fabric-view metrics, same final clock.
+//!
+//! # The protocol (risk-free Time Warp)
+//!
+//! Classic Time Warp sends speculative messages eagerly and cancels
+//! them with *anti-messages* when a rollback invalidates them, which
+//! can cascade. This implementation is the risk-free variant: a shard
+//! **withholds** every boundary export until a global-virtual-time
+//! (GVT) pass proves the generating event can no longer be rolled
+//! back. Mis-speculation therefore never crosses a shard boundary — no
+//! anti-messages, no cascades, and a rollback is always local to one
+//! shard. The price is release latency (an export waits one GVT round);
+//! the win is that correctness reasoning stays local.
+//!
+//! Each round has two barrier-separated phases:
+//!
+//! * **Phase 1 (speculate).** Each shard drains its mailbox (sorted by
+//!   source shard — the same canonical `(round, source, generation)`
+//!   merge order as the conservative engine). If any import's arrival
+//!   time is at or below the shard's clock, the import is a
+//!   *straggler*: the shard restores the newest checkpoint strictly
+//!   older than the straggler, re-applies its import log from that
+//!   point (the straggler merged in canonical order), and replays.
+//!   Then it executes up to the next epoch boundary — at most
+//!   `MAX_LAG_WINDOWS` windows past the committed horizon — draining
+//!   its outbox after *every* event so each export is tagged with the
+//!   generating event's time (`gen`) and its position in the shard's
+//!   export stream (`pos`). Finally it publishes its **local minimum**:
+//!   `min(next pending event time, min over withheld exports of their
+//!   arrival time)`.
+//!
+//! * **Phase 2 (commit).** GVT = the minimum of all published local
+//!   minima; `committed = max(committed, GVT)` (GVT itself can
+//!   *regress* — a rollback re-publishes peeks from replay territory —
+//!   so commitment keys on the running maximum, which is monotone).
+//!   Each shard then releases the prefix of its withheld exports with
+//!   `gen < committed` (strictly: an import at exactly `gen` could
+//!   still reorder same-instant dispatch) into the destination
+//!   mailboxes, and frees checkpoints older than the newest one below
+//!   `committed` (that one must survive: it is the rollback target for
+//!   any future straggler, every one of which arrives at or above
+//!   `committed`).
+//!
+//! # Why replay is exact
+//!
+//! * An import's earliest effect at its receiver is its arrival time
+//!   `at`, so replayed execution strictly below `at` is byte-identical
+//!   to the rolled-back execution. Released exports all have
+//!   `gen < committed ≤ at`, so the replays regenerate them —
+//!   identically, and in the same stream order. The shard counts
+//!   stream positions: checkpoints record `pos`, releases advance a
+//!   `released` cursor, and a regenerated export with `pos < released`
+//!   is simply dropped. No timestamp comparisons, no edge cases at
+//!   equal instants.
+//! * Exports still withheld at rollback with `pos` at or beyond the
+//!   restored checkpoint's are dropped wholesale — the replay
+//!   regenerates them (possibly differently, beyond the straggler).
+//! * Same-`(time, key)` dispatch ties fall back to queue insertion
+//!   order, which replay reproduces: the restored clone carries the
+//!   event queue's sequence counter ([`crate::sim::EventQueue`] `Clone`
+//!   docs), imports re-apply in log order, and handlers re-schedule in
+//!   execution order.
+//!
+//! # Accounting
+//!
+//! [`Metrics::rollbacks`], [`Metrics::events_replayed`] and
+//! [`Metrics::checkpoints_bytes`] are engine-level counters (zeroed by
+//! [`Metrics::fabric_view`]) kept *outside* the per-shard [`Network`] —
+//! state inside it rolls back, and replayed work must still be
+//! counted. They fold into shard metrics when the run completes.
+//!
+//! [`Metrics::rollbacks`]: crate::metrics::Metrics::rollbacks
+//! [`Metrics::events_replayed`]: crate::metrics::Metrics::events_replayed
+//! [`Metrics::checkpoints_bytes`]: crate::metrics::Metrics::checkpoints_bytes
+//! [`Metrics::fabric_view`]: crate::metrics::Metrics::fabric_view
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::network::{App, BoundaryMsg, Event, Network};
+use crate::sim::Time;
+
+/// Windows (of `lookahead` ns each) per speculative epoch: the
+/// checkpoint cadence. Larger epochs amortize checkpoint cost but
+/// lengthen replays.
+const EPOCH_WINDOWS: u64 = 8;
+
+/// Cap on how far (in windows) a shard may speculate past the committed
+/// horizon. Bounds both wasted replay work and checkpoint memory: at
+/// most `MAX_LAG_WINDOWS / EPOCH_WINDOWS + O(1)` checkpoints are live
+/// per shard.
+const MAX_LAG_WINDOWS: u64 = 32;
+
+/// Per-shard inbox of released boundary events (source shard, message).
+type Mailbox = Mutex<Vec<(u32, BoundaryMsg)>>;
+
+/// A withheld boundary export.
+struct Held {
+    /// Position in the shard's export stream (see module docs).
+    pos: u64,
+    /// Time of the generating event (monotone in `pos`).
+    gen: Time,
+    /// Destination shard.
+    dst: u32,
+    msg: BoundaryMsg,
+}
+
+/// A full copy of one shard's simulation state plus the cursors needed
+/// to resume its export stream and import log from this point.
+struct Checkpoint<A> {
+    /// Clock of the snapshot: every event at or below this time has
+    /// executed, nothing above it has.
+    time: Time,
+    /// Export-stream position at snapshot time.
+    pos: u64,
+    /// Import-log entries applied at snapshot time (absolute index).
+    applied: usize,
+    /// Cumulative dispatch count at snapshot time (for replay
+    /// accounting).
+    dispatched: u64,
+    net: Network,
+    app: A,
+}
+
+/// Per-shard Time Warp bookkeeping, living *outside* the rolled-back
+/// [`Network`] state.
+struct TwState<A> {
+    /// Live checkpoints, ascending in `time`.
+    ckpts: Vec<Checkpoint<A>>,
+    /// Every import ever applied, in canonical order; rollback replays
+    /// a suffix. Pruned below the oldest live checkpoint's `applied`.
+    log: Vec<(u32, BoundaryMsg)>,
+    /// Absolute index of `log[0]`.
+    log_base: usize,
+    /// Absolute count of log entries applied to the live state.
+    applied: usize,
+    /// Withheld exports: exactly stream positions
+    /// `[released, pos)` of the current execution line, front = oldest.
+    held: VecDeque<Held>,
+    /// Export-stream position of the next export to be generated.
+    pos: u64,
+    /// Exports released so far — a prefix of the stream.
+    released: u64,
+    rollbacks: u64,
+    events_replayed: u64,
+    checkpoints_bytes: u64,
+}
+
+impl<A: Clone> TwState<A> {
+    fn new(net: &Network, app: &A) -> Self {
+        // The initial checkpoint snapshots the entry state (clock =
+        // the caller-synchronized entry clock, identical across
+        // shards). Every import generated by this run arrives strictly
+        // later, so it is always a valid rollback target — and the GC
+        // rule keeps a below-`committed` checkpoint alive from here on.
+        TwState {
+            ckpts: vec![Checkpoint {
+                time: net.sim.now(),
+                pos: 0,
+                applied: 0,
+                dispatched: net.sim.dispatched(),
+                net: net.clone(),
+                app: app.clone(),
+            }],
+            log: Vec::new(),
+            log_base: 0,
+            applied: 0,
+            held: VecDeque::new(),
+            pos: 0,
+            released: 0,
+            rollbacks: 0,
+            events_replayed: 0,
+            checkpoints_bytes: 0,
+        }
+    }
+}
+
+/// One shard's worth of mutable state a worker claims per phase.
+struct Slot<'a, A> {
+    net: &'a mut Network,
+    app: &'a mut A,
+    tw: TwState<A>,
+}
+
+/// Rough resident size of one checkpoint: dense state vectors plus the
+/// arena's live packets plus the pending event set. An estimate (heap
+/// payloads inside packets and node state are not chased), tracked in
+/// [`crate::metrics::Metrics::checkpoints_bytes`].
+fn checkpoint_bytes(net: &Network) -> u64 {
+    net.state_bytes()
+        + net.packets.live() as u64 * std::mem::size_of::<crate::router::Packet>() as u64
+        + net.sim.pending() as u64 * (std::mem::size_of::<Event>() as u64 + 24)
+}
+
+/// The optimistic epoch loop (see module docs). Drop-in replacement
+/// for the conservative `run_epochs`: same shards, same apps, same
+/// deadline semantics (events past `deadline` stay queued; clocks are
+/// left at each shard's last event, callers re-synchronize), same
+/// deterministic result regardless of thread interleaving.
+pub(crate) fn run_epochs_optimistic<A: App + Send + Clone>(
+    shards: &mut [Network],
+    apps: &mut [A],
+    deadline: Time,
+    lookahead: Time,
+    workers: usize,
+) -> u64 {
+    debug_assert_eq!(apps.len(), shards.len());
+    let started: u64 = shards.iter().map(|s| s.sim.dispatched()).sum();
+    let nshards = shards.len();
+    let epoch = EPOCH_WINDOWS.saturating_mul(lookahead);
+    let max_lag = MAX_LAG_WINDOWS.saturating_mul(lookahead);
+    let Some(first) = shards.iter().filter_map(|s| s.sim.peek_time()).min() else {
+        return 0;
+    };
+    if first > deadline {
+        return 0;
+    }
+
+    let nworkers = workers.clamp(1, nshards);
+    let barrier = Barrier::new(nworkers);
+    let mailboxes: Vec<Mailbox> = (0..nshards).map(|_| Mutex::new(Vec::new())).collect();
+    // Published per shard at the end of its Phase 1, stable until its
+    // next Phase 1 (one barrier ahead of any reader):
+    // local minimum (peek ∧ withheld arrival times) and withheld count.
+    let local_mins: Vec<AtomicU64> = shards
+        .iter()
+        .map(|s| AtomicU64::new(s.sim.peek_time().unwrap_or(u64::MAX)))
+        .collect();
+    let held_counts: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(0)).collect();
+    // Running maximum of GVT (monotone; GVT itself can regress after a
+    // rollback re-publishes replay-territory peeks).
+    let committed = AtomicU64::new(0);
+    // Earliest round in which a worker panicked (u64::MAX = none); see
+    // the conservative engine for the epoch-tagged abort rationale.
+    let abort_at = AtomicU64::new(u64::MAX);
+    let next_a = AtomicUsize::new(0);
+    let next_b = AtomicUsize::new(0);
+
+    let slots: Vec<Mutex<Slot<A>>> = shards
+        .iter_mut()
+        .zip(apps.iter_mut())
+        .map(|(net, app)| {
+            let tw = TwState::new(net, app);
+            Mutex::new(Slot { net, app, tw })
+        })
+        .collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..nworkers {
+            let slots = &slots;
+            let barrier = &barrier;
+            let mailboxes = &mailboxes;
+            let local_mins = &local_mins;
+            let held_counts = &held_counts;
+            let committed = &committed;
+            let abort_at = &abort_at;
+            let next_a = &next_a;
+            let next_b = &next_b;
+            scope.spawn(move || {
+                let mut round: u64 = 0;
+                loop {
+                    let committed_v = committed.load(Ordering::SeqCst);
+                    // Phase 1: speculate (drain mailbox, maybe roll
+                    // back, import, execute one epoch, checkpoint,
+                    // publish).
+                    let ra = catch_unwind(AssertUnwindSafe(|| loop {
+                        let c = next_a.fetch_add(1, Ordering::SeqCst);
+                        if c >= nshards {
+                            break;
+                        }
+                        let mut slot = slots[c].lock().unwrap();
+                        let Slot { net, app, tw } = &mut *slot;
+                        let sid = net.shard_id() as usize;
+
+                        let mut batch =
+                            std::mem::take(&mut *mailboxes[sid].lock().unwrap());
+                        // Stable: preserves per-source generation order.
+                        batch.sort_by_key(|(src, _)| *src);
+                        let dispatched_start = net.sim.dispatched();
+                        let mut rolled_back = false;
+
+                        if let Some(min_at) = batch.iter().map(|(_, m)| m.at).min() {
+                            if min_at <= net.sim.now() {
+                                // Straggler: restore the newest
+                                // checkpoint strictly before it. (One
+                                // exists: every import arrives at or
+                                // above `committed`, and GC keeps the
+                                // newest checkpoint below `committed`.)
+                                let t = tw
+                                    .ckpts
+                                    .iter()
+                                    .rposition(|k| k.time < min_at)
+                                    .expect("no checkpoint below straggler");
+                                // Checkpoints above the target belong
+                                // to the invalidated execution line.
+                                tw.ckpts.truncate(t + 1);
+                                let ck = &tw.ckpts[t];
+                                tw.rollbacks += 1;
+                                tw.events_replayed +=
+                                    net.sim.dispatched() - ck.dispatched;
+                                **net = ck.net.clone();
+                                **app = ck.app.clone();
+                                tw.pos = ck.pos;
+                                tw.applied = ck.applied;
+                                // Withheld exports the replay will
+                                // regenerate; the survivors
+                                // (`pos < ck.pos`) are shared history.
+                                let floor = ck.pos;
+                                tw.held.retain(|h| h.pos < floor);
+                                rolled_back = true;
+                            }
+                        }
+
+                        // Log the new imports, then (re-)apply every
+                        // logged entry the live state has not seen —
+                        // after a rollback that is the whole suffix
+                        // from the restored checkpoint, straggler
+                        // included, in canonical order.
+                        tw.log.extend(batch);
+                        let rel = tw.applied - tw.log_base;
+                        if rel < tw.log.len() {
+                            net.import_boundary(tw.log[rel..].to_vec());
+                            tw.applied = tw.log_base + tw.log.len();
+                        }
+
+                        // Execute to the next epoch boundary, bounded
+                        // by the speculation cap and the caller's
+                        // deadline; drain the outbox per event so each
+                        // export carries its generating time.
+                        if let Some(peek) = net.sim.peek_time() {
+                            let start = peek.max(net.sim.now().saturating_add(1));
+                            let d = ((start / epoch) + 1)
+                                .saturating_mul(epoch)
+                                .saturating_sub(1)
+                                .min(committed_v.saturating_add(max_lag))
+                                .min(deadline);
+                            while let Some((_, ev)) = net.sim.pop_until(d) {
+                                net.handle(ev, *app);
+                                for (dst, msg) in net.take_outbox() {
+                                    if tw.pos < tw.released {
+                                        // Regenerating an export that
+                                        // was already released (replay
+                                        // below the straggler is
+                                        // byte-identical): drop it.
+                                    } else {
+                                        tw.held.push_back(Held {
+                                            pos: tw.pos,
+                                            gen: net.sim.now(),
+                                            dst,
+                                            msg,
+                                        });
+                                    }
+                                    tw.pos += 1;
+                                }
+                            }
+                        }
+
+                        if rolled_back || net.sim.dispatched() != dispatched_start {
+                            tw.checkpoints_bytes += checkpoint_bytes(net);
+                            tw.ckpts.push(Checkpoint {
+                                time: net.sim.now(),
+                                pos: tw.pos,
+                                applied: tw.applied,
+                                dispatched: net.sim.dispatched(),
+                                net: net.clone(),
+                                app: app.clone(),
+                            });
+                        }
+
+                        let mut lm = net.sim.peek_time().unwrap_or(u64::MAX);
+                        for h in &tw.held {
+                            lm = lm.min(h.msg.at);
+                        }
+                        local_mins[sid].store(lm, Ordering::SeqCst);
+                        held_counts[sid].store(tw.held.len() as u64, Ordering::SeqCst);
+                    }));
+                    if ra.is_err() {
+                        abort_at.fetch_min(round, Ordering::SeqCst);
+                    }
+                    if barrier.wait().is_leader() {
+                        next_a.store(0, Ordering::SeqCst);
+                    }
+
+                    // Phase 2: commit. Every worker derives the same
+                    // GVT from the same published local minima, so the
+                    // fetch_max settles on the same `committed`
+                    // everywhere.
+                    let gvt = local_mins
+                        .iter()
+                        .map(|p| p.load(Ordering::SeqCst))
+                        .min()
+                        .unwrap_or(u64::MAX);
+                    committed.fetch_max(gvt, Ordering::SeqCst);
+                    let com = committed.load(Ordering::SeqCst);
+                    let healthy = abort_at.load(Ordering::SeqCst) > round;
+                    let rb = if ra.is_ok() && healthy {
+                        catch_unwind(AssertUnwindSafe(|| loop {
+                            let c = next_b.fetch_add(1, Ordering::SeqCst);
+                            if c >= nshards {
+                                break;
+                            }
+                            let mut slot = slots[c].lock().unwrap();
+                            let Slot { net, tw, .. } = &mut *slot;
+                            let sid = net.shard_id();
+                            // Release the committed prefix of the
+                            // export stream. Strict `<`: an import at
+                            // exactly `gen` could still reorder
+                            // same-instant dispatch at the generator.
+                            while tw.held.front().is_some_and(|h| h.gen < com) {
+                                let h = tw.held.pop_front().unwrap();
+                                mailboxes[h.dst as usize]
+                                    .lock()
+                                    .unwrap()
+                                    .push((sid, h.msg));
+                                tw.released += 1;
+                            }
+                            // Free checkpoints older than the newest
+                            // one below `committed` — that one is the
+                            // rollback target for any future
+                            // straggler (all arrive ≥ committed).
+                            if let Some(keep) =
+                                tw.ckpts.iter().rposition(|k| k.time < com)
+                            {
+                                if keep > 0 {
+                                    tw.ckpts.drain(..keep);
+                                }
+                            }
+                            // Prune the import log below the oldest
+                            // surviving checkpoint: no rollback can
+                            // need it again.
+                            let floor =
+                                tw.ckpts.first().map_or(tw.applied, |k| k.applied);
+                            if floor > tw.log_base {
+                                let cut = floor - tw.log_base;
+                                tw.log.drain(..cut);
+                                tw.log_base = floor;
+                            }
+                        }))
+                    } else {
+                        Ok(())
+                    };
+                    if rb.is_err() {
+                        abort_at.fetch_min(round, Ordering::SeqCst);
+                    }
+                    if barrier.wait().is_leader() {
+                        next_b.store(0, Ordering::SeqCst);
+                    }
+                    if abort_at.load(Ordering::SeqCst) <= round {
+                        if let Err(p) = ra {
+                            resume_unwind(p);
+                        }
+                        if let Err(p) = rb {
+                            resume_unwind(p);
+                        }
+                        break;
+                    }
+
+                    // Termination: nothing pending below the deadline
+                    // and nothing withheld anywhere. The held counts
+                    // are pre-release (published in Phase 1), so a
+                    // final flush round runs once before exit — by
+                    // then `committed > deadline ≥` every withheld
+                    // `gen`, so the flush is total.
+                    let any_held =
+                        held_counts.iter().any(|h| h.load(Ordering::SeqCst) > 0);
+                    if (gvt == u64::MAX || gvt > deadline) && !any_held {
+                        break;
+                    }
+                    round += 1;
+                }
+            });
+        }
+    });
+
+    // Fold the engine-level counters into shard metrics now that the
+    // final state is committed (inside a Network they would have been
+    // rolled back with it).
+    for slot in slots {
+        let s = slot.into_inner().unwrap();
+        s.net.metrics.rollbacks += s.tw.rollbacks;
+        s.net.metrics.events_replayed += s.tw.events_replayed;
+        s.net.metrics.checkpoints_bytes += s.tw.checkpoints_bytes;
+    }
+    shards.iter().map(|s| s.sim.dispatched()).sum::<u64>() - started
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{SystemConfig, SystemPreset};
+    use crate::network::sharded::ShardedNetwork;
+    use crate::network::{Network, NullApp};
+    use crate::router::{Payload, Proto};
+    use crate::topology::NodeId;
+
+    /// A seeded scenario that *must* roll back: shard 3 of an Inc3000
+    /// (nodes with y ≥ 9) is kept busy with local traffic and timers
+    /// spread over ~30 µs, so it speculates whole epochs ahead; shard 0
+    /// injects one cross-mesh packet at t=0 whose release reaches
+    /// shard 3 only after a GVT round — by which time shard 3's clock
+    /// has passed the arrival time. Byte-identity with the serial
+    /// oracle must survive the rollback, and the engine counters must
+    /// record it.
+    #[test]
+    fn seeded_straggler_rolls_back_and_stays_byte_identical() {
+        let cfg = SystemConfig::new(SystemPreset::Inc3000);
+        let mut serial = Network::new(cfg.clone());
+        serial.enable_trace();
+        let mut opt = ShardedNetwork::new(cfg, 4);
+        opt.set_optimistic(true);
+        opt.enable_trace();
+
+        let drive = |send: &mut dyn FnMut(NodeId, NodeId), timer: &mut dyn FnMut(u64, NodeId)| {
+            // Local traffic inside shard 3 (y in 9..12).
+            for i in 0..24u32 {
+                let src = NodeId((2 * 12 + 9 + (i % 3)) * 12 + (i % 12));
+                let dst = NodeId((9 + ((i + 1) % 3)) * 12 + ((i * 5) % 12));
+                if src != dst {
+                    send(src, dst);
+                }
+            }
+            // Timers keep shard 3's queue non-empty deep into the run,
+            // so it speculates past the straggler's arrival.
+            for k in 0..300u64 {
+                timer(k * 100, NodeId(9 * 12 + 3));
+            }
+            // The straggler source: one packet from shard 0 (y = 0)
+            // into the middle of shard 3.
+            send(NodeId(0), NodeId(10 * 12 + 6));
+        };
+
+        drive(
+            &mut |s, d| {
+                serial.send_directed(s, d, Proto::Raw { tag: 7 }, Payload::Synthetic(96));
+            },
+            &mut |t, n| serial.timer_at(t, n, 42),
+        );
+        drive(
+            &mut |s, d| {
+                opt.send_directed(s, d, Proto::Raw { tag: 7 }, Payload::Synthetic(96));
+            },
+            &mut |t, n| opt.timer_at(t, n, 42),
+        );
+
+        serial.run_to_quiescence(&mut NullApp);
+        opt.run_to_quiescence();
+
+        let mut st = serial.take_trace();
+        st.sort_unstable();
+        assert_eq!(st, opt.take_trace(), "trace diverged under rollback");
+        assert_eq!(serial.metrics.fabric_view(), opt.metrics().fabric_view());
+        assert_eq!(serial.now(), opt.now());
+        assert_eq!(opt.live_packets(), 0, "arena leak across rollback");
+
+        let m = opt.metrics();
+        assert!(m.rollbacks > 0, "scenario is seeded to force a rollback");
+        assert!(m.events_replayed > 0);
+        assert!(m.checkpoints_bytes > 0);
+        // Engine counters stay out of the byte-identity contract.
+        assert_eq!(m.fabric_view().rollbacks, 0);
+    }
+
+    /// One shard has no boundaries: the optimistic runner degenerates
+    /// to epoch-paced serial execution — no rollbacks, still identical.
+    #[test]
+    fn single_shard_optimistic_matches_serial() {
+        let cfg = SystemConfig::card();
+        let mut serial = Network::new(cfg.clone());
+        serial.enable_trace();
+        let mut opt = ShardedNetwork::new(cfg, 1);
+        opt.set_optimistic(true);
+        opt.enable_trace();
+        for i in 0..8u32 {
+            let (s, d) = (NodeId(i), NodeId(26 - i));
+            serial.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(64));
+            opt.send_directed(s, d, Proto::Raw { tag: 0 }, Payload::Synthetic(64));
+        }
+        serial.run_to_quiescence(&mut NullApp);
+        opt.run_to_quiescence();
+        let mut st = serial.take_trace();
+        st.sort_unstable();
+        assert_eq!(st, opt.take_trace());
+        assert_eq!(serial.metrics.fabric_view(), opt.metrics().fabric_view());
+        assert_eq!(serial.now(), opt.now());
+        assert_eq!(opt.metrics().rollbacks, 0, "no boundaries, no stragglers");
+        assert!(opt.metrics().checkpoints_bytes > 0, "epochs still checkpoint");
+    }
+
+    #[test]
+    fn optimistic_empty_run_terminates() {
+        let mut opt = ShardedNetwork::new(SystemConfig::card(), 1);
+        opt.set_optimistic(true);
+        assert_eq!(opt.run_to_quiescence(), 0);
+        assert_eq!(opt.now(), 0);
+    }
+}

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SparseMem {
     size: u64,
     /// Word overlay (address → value); takes precedence over regions.

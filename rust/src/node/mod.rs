@@ -60,7 +60,7 @@ pub enum BootState {
 }
 
 /// Everything the simulator tracks per node.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct NodeState {
     pub id: NodeId,
     /// Program/data DRAM (sparse).

@@ -66,7 +66,7 @@ pub const SEC: Time = 1_000_000_000;
 /// Components schedule `E` values at absolute or relative times; the
 /// driver loop pops them in (time, seq) order and dispatches to the owning
 /// world (see [`crate::network::Network::run_until`]).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Sim<E> {
     now: Time,
     queue: EventQueue<E>,
@@ -162,6 +162,20 @@ impl<E> Sim<E> {
     #[inline]
     pub fn peek_time(&self) -> Option<Time> {
         self.queue.peek_time()
+    }
+
+    /// `(time, content key)` of the next pending event, if any — the
+    /// entry [`Sim::pop`] would dispatch next.
+    #[inline]
+    pub fn peek_head(&self) -> Option<(Time, u64)> {
+        self.queue.peek_head()
+    }
+
+    /// Lower bound on the timestamp of the second-earliest pending
+    /// event (see [`EventQueue::peek_second_time_lb`]).
+    #[inline]
+    pub fn peek_second_time_lb(&self) -> Option<Time> {
+        self.queue.peek_second_time_lb()
     }
 
     /// Advance the clock with no event (used when a deadline passes with

@@ -70,7 +70,7 @@ const BITMAP_WORDS: usize = SLOTS / 64;
 
 /// A scheduled entry: ordering fields + payload. Also the overflow-heap
 /// element (kept public for the reference-queue API and tests).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Scheduled<E> {
     pub time: Time,
     /// Content key: same-instant tie-break *before* insertion order.
@@ -97,7 +97,7 @@ impl<E> Ord for Scheduled<E> {
 }
 
 /// One level of the wheel: slot buckets + occupancy bitmap.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Level<E> {
     slots: Vec<Vec<Scheduled<E>>>,
     bitmap: [u64; BITMAP_WORDS],
@@ -136,10 +136,34 @@ impl<E> Level<E> {
         }
         None
     }
+
+    /// Index of the first occupied slot at or after `from`, if any.
+    fn next_occupied(&self, from: usize) -> Option<usize> {
+        if from >= SLOTS {
+            return None;
+        }
+        let mut w = from >> 6;
+        let mut word = self.bitmap[w] & (!0u64 << (from & 63));
+        loop {
+            if word != 0 {
+                return Some((w << 6) + word.trailing_zeros() as usize);
+            }
+            w += 1;
+            if w >= BITMAP_WORDS {
+                return None;
+            }
+            word = self.bitmap[w];
+        }
+    }
 }
 
 /// Hierarchical timing wheel ordered by `(time, key, seq)`.
-#[derive(Debug)]
+///
+/// `Clone` snapshots the whole pending set (including `next_seq`, so a
+/// restored clone replays insertion-order ties identically) — the
+/// optimistic engine's checkpoints ([`crate::network::timewarp`])
+/// depend on that.
+#[derive(Debug, Clone)]
 pub struct EventQueue<E> {
     /// Time of the last popped event (the run's instant). All stored
     /// entries satisfy `time > cur_time`, except run appendees at
@@ -317,6 +341,12 @@ impl<E> EventQueue<E> {
         if let Some(en) = self.run.front() {
             return Some(en.time);
         }
+        self.wheel_min_time()
+    }
+
+    /// Earliest timestamp stored in the wheel/overflow, ignoring the
+    /// live run.
+    fn wheel_min_time(&self) -> Option<Time> {
         // Level 0 slots hold a single instant: the bit index IS the time.
         if let Some(slot) = self.levels[0].first_occupied() {
             return Some((self.levels[0].epoch << LEVEL_BITS) | slot as u64);
@@ -329,6 +359,67 @@ impl<E> EventQueue<E> {
             }
         }
         self.overflow.peek().map(|Reverse(en)| en.time)
+    }
+
+    /// Earliest pending `(time, key)` without popping — the entry `pop`
+    /// would return next. The per-node horizon sharpening
+    /// ([`crate::network::sharded`]) reads the head's content key to
+    /// locate the event on the mesh.
+    pub fn peek_head(&self) -> Option<(Time, u64)> {
+        if let Some(en) = self.run.front() {
+            return Some((en.time, en.key));
+        }
+        if let Some(slot) = self.levels[0].first_occupied() {
+            let t = (self.levels[0].epoch << LEVEL_BITS) | slot as u64;
+            let en = self.levels[0].slots[slot].iter().min_by_key(|e| (e.key, e.seq))?;
+            return Some((t, en.key));
+        }
+        for level in &self.levels[1..] {
+            if let Some(slot) = level.first_occupied() {
+                let en = level.slots[slot].iter().min_by_key(|e| (e.time, e.key, e.seq))?;
+                return Some((en.time, en.key));
+            }
+        }
+        self.overflow.peek().map(|Reverse(en)| (en.time, en.key))
+    }
+
+    /// A lower bound on the timestamp of the *second*-earliest pending
+    /// entry — exact in the common cases (live run, level-0 wheel), and
+    /// conservatively equal to the head's own time when computing the
+    /// true value would mean walking coarse slots. `None` when fewer
+    /// than two entries are pending. Used by the per-node horizon
+    /// bounds: everything behind the head is bounded by this time plus
+    /// the pair lookahead.
+    pub fn peek_second_time_lb(&self) -> Option<Time> {
+        if self.len < 2 {
+            return None;
+        }
+        if self.run.len() >= 2 {
+            return Some(self.run[1].time);
+        }
+        if self.run.len() == 1 {
+            // Everything else is in the wheel; its minimum is exact.
+            return self.wheel_min_time().or(Some(self.cur_time));
+        }
+        if let Some(slot) = self.levels[0].first_occupied() {
+            let head_t = (self.levels[0].epoch << LEVEL_BITS) | slot as u64;
+            if self.levels[0].slots[slot].len() >= 2 {
+                return Some(head_t);
+            }
+            if let Some(s2) = self.levels[0].next_occupied(slot + 1) {
+                return Some((self.levels[0].epoch << LEVEL_BITS) | s2 as u64);
+            }
+            for level in &self.levels[1..] {
+                if let Some(s) = level.first_occupied() {
+                    return level.slots[s].iter().map(|e| e.time).min();
+                }
+            }
+            return self.overflow.peek().map(|Reverse(en)| en.time);
+        }
+        // Head in a coarse level or the overflow: fall back to the head
+        // time itself (a sound, if loose, bound — rare outside long
+        // idle gaps).
+        self.wheel_min_time()
     }
 
     #[inline]
@@ -525,6 +616,42 @@ mod tests {
         for i in 0..10u64 {
             assert_eq!(q.pop(), Some((7, i)));
         }
+    }
+
+    #[test]
+    fn peek_head_and_second_bound() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_head(), None);
+        assert_eq!(q.peek_second_time_lb(), None);
+        q.push_keyed(10, 7, 'a');
+        assert_eq!(q.peek_head(), Some((10, 7)));
+        assert_eq!(q.peek_second_time_lb(), None);
+        q.push_keyed(40, 3, 'b');
+        // Two level-0 slots: second bound is exact.
+        assert_eq!(q.peek_head(), Some((10, 7)));
+        assert_eq!(q.peek_second_time_lb(), Some(40));
+        q.push_keyed(10, 2, 'c'); // lower key takes over the head
+        assert_eq!(q.peek_head(), Some((10, 2)));
+        assert_eq!(q.peek_second_time_lb(), Some(10));
+        assert_eq!(q.pop(), Some((10, 'c')));
+        // Live run of one entry + wheel remainder.
+        assert_eq!(q.peek_head(), Some((10, 7)));
+        assert_eq!(q.peek_second_time_lb(), Some(40));
+        assert_eq!(q.pop(), Some((10, 'a')));
+        assert_eq!(q.pop(), Some((40, 'b')));
+        // The bound must never exceed the true second time, across
+        // levels and the overflow.
+        let mut q = EventQueue::new();
+        for t in [3_000_000u64, 3_000_001, 1 << 31] {
+            q.push(t, t);
+        }
+        let lb = q.peek_second_time_lb().unwrap();
+        assert!(lb <= 3_000_001, "lb {lb} exceeds true second");
+        let cloned = q.clone();
+        let a: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        let mut c = cloned;
+        let b: Vec<_> = std::iter::from_fn(|| c.pop()).collect();
+        assert_eq!(a, b, "clone replays identically");
     }
 
     #[test]

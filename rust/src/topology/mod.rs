@@ -366,6 +366,42 @@ impl Topology {
         m
     }
 
+    /// Minimum link-hop distance from every *card* to every shard, as a
+    /// flat `cards × shards` matrix indexed
+    /// `[card_index * shards + shard]` (0 for the card's own shard).
+    /// The per-node sharpening of [`Topology::shard_hop_matrix`]: a
+    /// node's distance to shard `j` is its card's distance (cards are
+    /// never split across shards), and the card-coordinate Manhattan
+    /// distance equals the true per-axis hop minimum by the same
+    /// argument as the pairwise matrix. Interior cards of a large shard
+    /// sit strictly farther from every neighbor than the shard-pair
+    /// minimum, which is what buys the sharded engine a longer horizon
+    /// when a shard's head event lives away from its boundary.
+    pub fn card_shard_distances(&self, owner: &[u32], shards: u32) -> Vec<u32> {
+        let s = shards as usize;
+        let all = self.cards();
+        let mut by_shard: Vec<Vec<(u32, u32, u32)>> = vec![Vec::new(); s];
+        for &card in &all {
+            let anchor =
+                self.id(Coord { x: card.0 * 3, y: card.1 * 3, z: card.2 * 3 });
+            by_shard[owner[anchor.0 as usize] as usize].push(card);
+        }
+        let mut m = vec![0u32; all.len() * s];
+        for (ci, &a) in all.iter().enumerate() {
+            for j in 0..s {
+                let mut best = u32::MAX;
+                for &b in &by_shard[j] {
+                    let d = a.0.abs_diff(b.0)
+                        + a.1.abs_diff(b.1)
+                        + a.2.abs_diff(b.2);
+                    best = best.min(d);
+                }
+                m[ci * s + j] = best;
+            }
+        }
+        m
+    }
+
     /// Number of unidirectional links a card presents to the rest of the
     /// system *by design* (its connector capacity): every node face link
     /// plus every multi-span link, regardless of whether a neighbor card
@@ -466,6 +502,35 @@ mod tests {
             .filter(|&&l| t.link(l).span == Span::Multi)
             .count();
         assert_eq!(multis, 6);
+    }
+
+    #[test]
+    fn card_shard_distances_refine_pair_matrix() {
+        let t = Topology::preset(SystemPreset::Inc9000);
+        let (owner, s) = t.partition(4);
+        let pair = t.shard_hop_matrix(&owner, s);
+        let per_card = t.card_shard_distances(&owner, s);
+        for n in t.nodes() {
+            let ci = t.card_index(n) as usize;
+            let i = owner[n.0 as usize] as usize;
+            assert_eq!(per_card[ci * s as usize + i], 0);
+            for j in 0..s as usize {
+                // A node is never closer to shard j than the
+                // shard-pair minimum — per-node bounds only lengthen
+                // the horizon, never shorten it.
+                assert!(per_card[ci * s as usize + j] >= pair[i * s as usize + j]);
+            }
+        }
+        // Some interior card must sit strictly farther from another
+        // shard than the pair minimum, or the sharpening buys nothing.
+        assert!(t.nodes().any(|n| {
+            let ci = t.card_index(n) as usize;
+            let i = owner[n.0 as usize] as usize;
+            (0..s as usize).any(|j| {
+                j != i
+                    && per_card[ci * s as usize + j] > pair[i * s as usize + j]
+            })
+        }));
     }
 
     #[test]

@@ -184,6 +184,7 @@ impl ChaosConfig {
 /// healthy flow cannot mask a stalled one; see the module docs).
 /// Messages are left unconsumed so the bounded receive buffers see
 /// every delivery.
+#[derive(Clone)]
 pub struct ChaosApp {
     /// Distinct scripted fault instants, ascending (shared, immutable).
     fault_at: Arc<Vec<Time>>,

@@ -99,6 +99,7 @@ pub struct StepStats {
 
 /// The receive/re-place half of the workload: counts landed records
 /// and, in reliable mode, re-places a dead peer's undelivered ones.
+#[derive(Clone)]
 pub struct LearnerApp {
     pub expected: u64,
     pub received: u64,

@@ -100,6 +100,7 @@ struct TreeNode {
 /// one owning the leader) carries them and reduction adopts that
 /// partition wholesale. Worker callbacks are pure functions of the
 /// task record plus the read-only `game`.
+#[derive(Clone)]
 pub struct DistributedMcts {
     pub game: Game,
     leader: NodeId,

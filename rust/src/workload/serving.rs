@@ -206,6 +206,7 @@ pub fn arrival_schedule(cfg: &ServingConfig, seed: u64) -> Vec<Time> {
 /// app partitions cleanly. Drive it to quiescence in a **single**
 /// [`Fabric::run`] call: in-flight request state lives in the shard
 /// partitions and does not survive a mid-flight reduce.
+#[derive(Clone)]
 pub struct ServingApp {
     comm: CommMode,
     fanout: usize,

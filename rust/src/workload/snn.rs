@@ -245,6 +245,7 @@ struct Neuron {
 /// keyed by the node whose callbacks mutate it, so the app partitions
 /// cleanly ([`ShardableApp`]). Drive it to quiescence in a **single**
 /// [`Fabric::run`] call.
+#[derive(Clone)]
 pub struct SnnApp {
     cfg: SnnConfig,
     seed: u64,

@@ -3,7 +3,7 @@
 //! explicitly; failures print the seed for reproduction).
 
 use inc_sim::channels::ethernet::RxMode;
-use inc_sim::channels::{CommMode, Endpoint, Message, ReliableParams};
+use inc_sim::channels::{CommMode, Endpoint, Message, ReliableParams, RELIABLE_HEADER_BYTES};
 use inc_sim::config::{SystemConfig, SystemPreset};
 use inc_sim::network::sharded::ShardedNetwork;
 use inc_sim::network::{App, Domain, Fabric, Network, NullApp};
@@ -581,6 +581,74 @@ fn prop_reliable_exactly_once_under_seeded_loss() {
     }
     assert!(total_loss > 0, "1% seeded loss never dropped a packet");
     assert!(total_retx > 0, "the retransmit path never engaged under loss");
+}
+
+/// Selective repeat strictly beats go-back-all: the same seeded-loss
+/// workload run twice, once per retransmit policy
+/// ([`ReliableParams::sack`]), must (a) deliver every record exactly
+/// once under **both** policies and (b) put strictly fewer
+/// retransmitted bytes on the wire with SACK — a random loss punches
+/// a gap, and only the gap should go back out, not everything the
+/// receiver already buffered behind it.
+#[test]
+fn prop_sack_retransmits_strictly_fewer_bytes_than_go_back_all() {
+    const TICK: u64 = 50_000;
+    const TICKS: u64 = 30;
+    const PAYLOAD: u64 = 2; // (sender, tick) key bytes
+    let participants = [0u32, 4, 8, 13, 17, 21, 24, 26].map(NodeId);
+    let run = |seed: u64, sack: bool| -> u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x5ac1);
+        let mut sys = SystemConfig::card();
+        sys.seed = seed;
+        sys.drop_probability = 0.01;
+        let mut net = Network::new(sys);
+        let eth = CommMode::Ethernet { rx: RxMode::Interrupt };
+        let params = ReliableParams { max_retries: 10, sack, ..ReliableParams::default() };
+        let eps: Vec<Endpoint> =
+            participants.iter().map(|&n| net.reliable_open(n, eth, params)).collect();
+        let mut app = ExactlyOnce::default();
+        let mut sent = std::collections::BTreeSet::new();
+        for tick in 0..TICKS {
+            let t0 = tick * TICK;
+            for (i, ep) in eps.iter().enumerate() {
+                let mut d = rng.gen_range(participants.len());
+                if d == i {
+                    d = (d + 1) % participants.len();
+                }
+                let key = (i as u8, tick as u8);
+                net.reliable_send_at(t0, ep, participants[d], Message::new(vec![key.0, key.1]));
+                sent.insert(key);
+            }
+            Fabric::run_until(&mut net, &mut app, t0 + TICK);
+        }
+        net.run_to_quiescence(&mut app);
+        let policy = if sack { "sack" } else { "go-back-all" };
+        for &key in &sent {
+            assert_eq!(
+                app.got.get(&key).copied().unwrap_or(0),
+                1,
+                "seed {seed} ({policy}): record {key:?} not delivered exactly once"
+            );
+        }
+        assert_eq!(app.got.len(), sent.len(), "seed {seed} ({policy}): phantom records");
+        assert_eq!(app.downs, 0, "seed {seed} ({policy}): loss falsely declared a peer down");
+        net.metrics.retransmits * (PAYLOAD + RELIABLE_HEADER_BYTES as u64)
+    };
+    // Per-seed the retransmit packets themselves draw different loss
+    // hashes, so the comparison is aggregated across seeds; exactly-once
+    // is asserted per seed per policy inside `run`.
+    let mut gba_bytes = 0u64;
+    let mut sack_bytes = 0u64;
+    for seed in 0..4u64 {
+        gba_bytes += run(seed, false);
+        sack_bytes += run(seed, true);
+    }
+    assert!(gba_bytes > 0, "go-back-all never retransmitted — loss path idle");
+    assert!(
+        sack_bytes < gba_bytes,
+        "selective repeat must retransmit strictly fewer bytes \
+         (sack {sack_bytes} vs go-back-all {gba_bytes})"
+    );
 }
 
 /// With a targeted two-phase death mid-run, every record a live sender
